@@ -1,0 +1,103 @@
+//! MD trajectory clustering (paper §4.5) — the flagship application.
+//!
+//! Simulates a ligand-binding trajectory (bead-chain ligand, C-shaped
+//! receptor, overdamped Langevin dynamics; every frame re-posed by a
+//! random rigid motion), clusters the frames with mini-batch kernel
+//! k-means under the roto-translationally invariant QCP-RMSD RBF kernel,
+//! and prints the Fig.7-style medoid summary: macro-state per medoid and
+//! the medoid-by-medoid RMSD matrix, ordered bound -> entrance -> unbound
+//! so the three macro-blocks are visible.
+//!
+//!     cargo run --release --example md_trajectory
+use dkkm::coordinator::runner::md_medoid_rmsd_matrix;
+use dkkm::coordinator::{DatasetSpec, RunConfig};
+use dkkm::sim::md::{simulate, MdConfig};
+use dkkm::sim::msm::estimate_msm;
+use dkkm::util::rng::Rng;
+
+fn main() {
+    let frames: usize = std::env::var("DKKM_MD_FRAMES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6_000);
+    let mut cfg = RunConfig::new(DatasetSpec::Md { frames });
+    cfg.c = Some(12);
+    cfg.b = 4; // the paper splits its ~1M frames into 4 mini-batches
+    cfg.restarts = 3; // paper: 5 k-means++ inits, min cost kept
+    cfg.seed = 7;
+
+    println!("== dkkm MD clustering: {frames} frames, C=12, B=4, QCP-RMSD kernel ==");
+    let (medoids, mat, macro_of) = md_medoid_rmsd_matrix(&cfg, frames).expect("md run");
+
+    let names = ["bound", "entrance", "unbound"];
+    println!("\nmedoid summary (Fig.7a analogue):");
+    for (i, &m) in medoids.iter().enumerate() {
+        println!(
+            "  cluster {i:>2}: medoid frame {m:>6}  macro-state {}",
+            names[macro_of[i]]
+        );
+    }
+
+    let mut order: Vec<usize> = (0..medoids.len()).collect();
+    order.sort_by_key(|&i| macro_of[i]);
+    println!("\nmedoid RMSD matrix (ordered bound -> entrance -> unbound):");
+    print!("  ");
+    for &i in &order {
+        print!("{:>7}", names[macro_of[i]].chars().next().unwrap());
+    }
+    println!();
+    for &i in &order {
+        print!("{} ", names[macro_of[i]].chars().next().unwrap());
+        for &j in &order {
+            print!("{:7.2}", mat.at(i, j));
+        }
+        println!();
+    }
+
+    // Fig.7b's claim: macro-blocks are visible — intra-macro medoid RMSD
+    // below cross-macro RMSD on average
+    let mut intra = (0.0f64, 0usize);
+    let mut cross = (0.0f64, 0usize);
+    for i in 0..medoids.len() {
+        for j in 0..medoids.len() {
+            if i == j {
+                continue;
+            }
+            if macro_of[i] == macro_of[j] {
+                intra = (intra.0 + mat.at(i, j) as f64, intra.1 + 1);
+            } else {
+                cross = (cross.0 + mat.at(i, j) as f64, cross.1 + 1);
+            }
+        }
+    }
+    if intra.1 > 0 && cross.1 > 0 {
+        let im = intra.0 / intra.1 as f64;
+        let cm = cross.0 / cross.1 as f64;
+        println!("\nmean intra-macro medoid RMSD : {im:.3}");
+        println!("mean cross-macro medoid RMSD : {cm:.3}");
+        println!(
+            "macro-block structure {}",
+            if im < cm { "RECOVERED (as in Fig.7b)" } else { "NOT visible" }
+        );
+    }
+
+    // ---- downstream MSM analysis (the paper's §1 motivation: "estimating
+    // kinetics rates via Markov State Models") over the macro-state
+    // sequence of the same trajectory
+    let mut rng = Rng::new(cfg.seed ^ 0x3D);
+    let traj = simulate(&mut rng, &MdConfig::default(), frames);
+    let labels: Vec<usize> = traj.labels.iter().map(|l| l.index()).collect();
+    let restart = (frames / 8).max(1);
+    let breaks: Vec<usize> = (1..8).map(|k| k * restart).collect();
+    let msm = estimate_msm(&labels, 3, 5, &breaks, true).expect("msm");
+    let pi = msm.stationary();
+    println!("\nMarkov state model (lag 5 frames, reversible, swarm breaks masked):");
+    println!(
+        "  stationary populations: bound {:.2} entrance {:.2} unbound {:.2}",
+        pi[0], pi[1], pi[2]
+    );
+    match msm.implied_timescales(2).first().copied().flatten() {
+        Some(t) => println!("  slowest implied timescale: {t:.0} frames (binding/unbinding)"),
+        None => println!("  no slow process resolved at this lag"),
+    }
+}

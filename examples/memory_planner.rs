@@ -1,0 +1,61 @@
+//! Memory planner walkthrough (paper Eq.19 + the §4.2 model-selection
+//! recipe).
+//!
+//! Given a machine (memory per node, node count) and a workload (N, C),
+//! the planner computes the minimum number of mini-batches B_min whose
+//! per-node footprint fits, then demonstrates the paper's tuning recipe:
+//! start at (B_min, s=1) and trade s down / B up for a target runtime.
+//!
+//!     cargo run --release --example memory_planner
+use dkkm::coordinator::{b_min, footprint_bytes, paper_b_min};
+
+fn mib(bytes: usize) -> f64 {
+    bytes as f64 / (1 << 20) as f64
+}
+
+fn main() {
+    println!("== Eq.19 memory planner ==\n");
+    // the paper's three platforms
+    let platforms: &[(&str, usize, usize)] = &[
+        ("IBM BG/Q node (16 GB, 16 cores)", 16, 16 << 30),
+        ("IBM NeXtScale node (8 GB/core, 16 cores)", 16, 8 << 30),
+        ("workstation (64 GB, 12 cores)", 12, 64 << 30),
+    ];
+    // the paper's workloads
+    let workloads: &[(&str, usize, usize)] = &[
+        ("MNIST", 60_000, 10),
+        ("RCV1", 188_000, 50),
+        ("noisy MNIST", 1_200_000, 10),
+    ];
+
+    for &(pname, p, r) in platforms {
+        println!("{pname}: R = {:.0} MiB/node, P = {p}", mib(r));
+        for &(wname, n, c) in workloads {
+            match b_min(n, p, c, r) {
+                Some(b) => {
+                    let fp = footprint_bytes(n, b, p, c);
+                    let printed = paper_b_min(n, p, c, r)
+                        .map(|v| format!("{v:.1}"))
+                        .unwrap_or_else(|| "n/a".into());
+                    println!(
+                        "  {wname:<12} N={n:<9} C={c:<3} -> B_min={b:<5} \
+                         (footprint {:.1} MiB; paper's printed Eq.19: {printed})",
+                        mib(fp)
+                    );
+                }
+                None => println!("  {wname:<12} N={n:<9} C={c:<3} -> does not fit"),
+            }
+        }
+        println!();
+    }
+
+    println!("tuning recipe (paper §4.2): fix the budget, start at (B_min, s=1),");
+    println!("then lower s toward 0.2 before raising B — footprints at N=1.2M, P=16:");
+    let (n, p, c) = (1_200_000usize, 16usize, 10usize);
+    for &(b, s) in &[(32usize, 1.0f64), (32, 0.5), (32, 0.2), (64, 1.0), (128, 1.0)] {
+        // landmark sparsification scales the K_NL slab by s
+        let full = footprint_bytes(n, b, p, c) as f64;
+        let approx = full * s;
+        println!("  B={b:<4} s={s:<4} -> ~{:.0} MiB/node", approx / (1 << 20) as f64);
+    }
+}

@@ -1,0 +1,75 @@
+//! Streaming ingestion with block sampling (paper §3.1 + Fig.4).
+//!
+//! Block sampling exists so clustering can start "as soon as the first
+//! N^0 samples are received" — i.e. a data stream. This example plays a
+//! synthetic-MNIST stream into the algorithm one mini-batch at a time
+//! (block sampling), with the Fig.3 offload pipeline prefetching the next
+//! block's kernel matrices, and compares against stride sampling on the
+//! same data — reproducing the §4.1 observation that the medoid
+//! displacement observable diagnoses concept drift under poor sampling.
+//!
+//!     cargo run --release --example streaming_blocks
+use dkkm::coordinator::runner::{build_dataset, gamma_for};
+use dkkm::coordinator::{DatasetSpec, RunConfig};
+use dkkm::cluster::minibatch::NativeBackend;
+use dkkm::cluster::{MiniBatchConfig, MiniBatchKernelKMeans};
+use dkkm::data::Sampling;
+use dkkm::kernels::{KernelFn, VecGram};
+use dkkm::metrics::{accuracy, nmi};
+
+fn main() {
+    let n: usize = std::env::var("DKKM_STREAM_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4_000);
+    let cfg = RunConfig::new(DatasetSpec::Mnist { train: n, test: 0 });
+    let (mut train, _) = build_dataset(&cfg.dataset, 3);
+    // make the stream adversarial for block sampling: sort by class, so
+    // early blocks never see late classes (concept drift)
+    let mut order: Vec<usize> = (0..train.n()).collect();
+    order.sort_by_key(|&i| train.y[i]);
+    train = train.subset(&order);
+
+    let gamma = gamma_for(&train, 4.0, 3);
+    let source = VecGram::new(train.x.clone(), KernelFn::Rbf { gamma }, 1);
+
+    println!("== streaming (class-sorted) synthetic MNIST, N={n}, B=8 ==\n");
+    for sampling in [Sampling::Block, Sampling::Stride] {
+        let mb = MiniBatchConfig {
+            c: 10,
+            b: 8,
+            s: 1.0,
+            sampling,
+            max_inner: 100,
+            seed: 11,
+            track_cost: true,
+            offload: true, // prefetch the next block while clustering
+            merge_rule: dkkm::cluster::minibatch::MergeRule::Convex,
+        };
+        let result = MiniBatchKernelKMeans::new(mb, &NativeBackend).run(&source);
+        let acc = accuracy(&result.labels, &train.y);
+        let m = nmi(&result.labels, &train.y);
+        println!("{sampling:?} sampling: accuracy {:.2}%  NMI {m:.4}", acc * 100.0);
+        println!("  medoid displacement per outer iteration (Fig.4b observable):");
+        print!("   ");
+        for rec in &result.history {
+            print!(" {:.3}", rec.medoid_displacement);
+        }
+        println!("\n  sampled global cost after each merge:");
+        print!("   ");
+        for rec in &result.history {
+            print!(" {:.0}", rec.global_cost);
+        }
+        if let Some(ov) = result.overlap {
+            println!(
+                "\n  offload: producer busy {:.2}s, consumer waited {:.2}s (overlap {:.0}%)",
+                ov.producer_busy_s,
+                ov.consumer_wait_s,
+                ov.overlap_efficiency() * 100.0
+            );
+        }
+        println!();
+    }
+    println!("expected: stride wins on accuracy, and block sampling shows larger");
+    println!("displacement spikes — the paper's §4.1 concept-drift diagnosis.");
+}

@@ -1,0 +1,235 @@
+# AOT export: lower every L2 graph variant to HLO *text* under artifacts/,
+# plus a manifest.json the Rust runtime uses to pick executables by shape.
+#
+# HLO text (NOT .serialize()): jax >= 0.5 emits HloModuleProto with 64-bit
+# instruction ids which xla_extension 0.5.1 (the version behind the `xla`
+# crate) rejects; the text parser reassigns ids and round-trips cleanly.
+# See /opt/xla-example/gen_hlo.py.
+#
+# Golden vectors: for a few variants we also dump deterministic input /
+# expected-output tensors (computed with the pure-jnp oracle in
+# kernels/ref.py, *not* the Pallas path) as little-endian binaries, so the
+# Rust integration tests can assert end-to-end PJRT numerics.
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+F32 = jnp.float32
+
+# ----------------------------------------------------------------------
+# Variant table. Shapes are chosen so that:
+#   * matrix dims are multiples of the 128-lane MXU tile,
+#   * C = 32 covers every experiment in the paper (C in {4, 10, 20}; Rust
+#     pads the one-hot with zero columns + valid mask),
+#   * L in {256, 1024} covers single-chunk landmark sets; larger L uses the
+#     chunk-accumulating f_partial/argmin pair.
+RBF_DIMS = [2, 64, 256, 784]
+RBF_TILE = 256
+ASSIGN_N = 1024
+ASSIGN_LS = [256, 1024]
+ASSIGN_C = 32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def to_hlo_text(fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def variants():
+    """Yield (name, fn, input_specs, params) for every artifact."""
+    for d in RBF_DIMS:
+        yield (
+            f"rbf_t{RBF_TILE}_d{d}",
+            model.kernel_block_rbf,
+            [spec((RBF_TILE, d)), spec((RBF_TILE, d)), spec((1, 1))],
+            {"kind": "rbf", "tile_m": RBF_TILE, "tile_n": RBF_TILE, "d": d},
+        )
+    yield (
+        f"linear_t{RBF_TILE}_d784",
+        model.kernel_block_linear,
+        [spec((RBF_TILE, 784)), spec((RBF_TILE, 784))],
+        {"kind": "linear", "tile_m": RBF_TILE, "tile_n": RBF_TILE, "d": 784},
+    )
+    for l in ASSIGN_LS:
+        n, c = ASSIGN_N, ASSIGN_C
+        yield (
+            f"inner_n{n}_l{l}_c{c}",
+            model.inner_iteration,
+            [spec((n, l)), spec((l, l)), spec((l, c)), spec((1, c)), spec((1, c))],
+            {"kind": "inner", "n": n, "l": l, "c": c},
+        )
+        yield (
+            f"assign_n{n}_l{l}_c{c}",
+            model.assign_step,
+            [spec((n, l)), spec((l, c)), spec((1, c)), spec((1, c)), spec((1, c))],
+            {"kind": "assign", "n": n, "l": l, "c": c},
+        )
+        yield (
+            f"gstep_l{l}_c{c}",
+            model.g_step,
+            [spec((l, l)), spec((l, c)), spec((1, c))],
+            {"kind": "gstep", "l": l, "c": c},
+        )
+    yield (
+        f"fpartial_n{ASSIGN_N}_l256_c{ASSIGN_C}",
+        model.f_partial,
+        [spec((ASSIGN_N, 256)), spec((256, ASSIGN_C))],
+        {"kind": "fpartial", "n": ASSIGN_N, "l": 256, "c": ASSIGN_C},
+    )
+    yield (
+        f"argmin_n{ASSIGN_N}_c{ASSIGN_C}",
+        model.argmin_step,
+        [
+            spec((ASSIGN_N, ASSIGN_C)),
+            spec((1, ASSIGN_C)),
+            spec((1, ASSIGN_C)),
+            spec((1, ASSIGN_C)),
+        ],
+        {"kind": "argmin", "n": ASSIGN_N, "c": ASSIGN_C},
+    )
+
+
+def shape_entry(s):
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(s.dtype)]
+    return [dt, list(s.shape)]
+
+
+def dump_bin(path, arr):
+    np.asarray(arr).astype(
+        np.int32 if arr.dtype in (jnp.int32, np.int32) else np.float32
+    ).tofile(path)
+
+
+def golden_rbf(outdir, d):
+    """Deterministic input/expected-output pair for the rbf_t256_d{d} artifact."""
+    rng = np.random.default_rng(1234 + d)
+    x = rng.standard_normal((RBF_TILE, d)).astype(np.float32)
+    y = rng.standard_normal((RBF_TILE, d)).astype(np.float32)
+    gamma = np.array([[0.05]], dtype=np.float32)
+    k = np.asarray(ref.rbf(jnp.asarray(x), jnp.asarray(y), 0.05))
+    base = os.path.join(outdir, "golden", f"rbf_t{RBF_TILE}_d{d}")
+    dump_bin(base + ".x.bin", x)
+    dump_bin(base + ".y.bin", y)
+    dump_bin(base + ".gamma.bin", gamma)
+    dump_bin(base + ".out.bin", k)
+    return {
+        "name": f"rbf_t{RBF_TILE}_d{d}",
+        "inputs": [
+            f"golden/rbf_t{RBF_TILE}_d{d}.x.bin",
+            f"golden/rbf_t{RBF_TILE}_d{d}.y.bin",
+            f"golden/rbf_t{RBF_TILE}_d{d}.gamma.bin",
+        ],
+        "outputs": [f"golden/rbf_t{RBF_TILE}_d{d}.out.bin"],
+        "atol": 2e-5,
+    }
+
+
+def golden_inner(outdir):
+    """Golden pair for inner_n1024_l256_c32 with realistic cluster structure."""
+    n, l, c_real, c = ASSIGN_N, 256, 10, ASSIGN_C
+    rng = np.random.default_rng(99)
+    centers = rng.standard_normal((c_real, 16)) * 3.0
+    xs = centers[rng.integers(0, c_real, n)] + rng.standard_normal((n, 16))
+    lm = centers[rng.integers(0, c_real, l)] + rng.standard_normal((l, 16))
+    gamma = 0.05
+    k_nl = np.asarray(ref.rbf(jnp.asarray(xs, F32), jnp.asarray(lm, F32), gamma))
+    k_ll = np.asarray(ref.rbf(jnp.asarray(lm, F32), jnp.asarray(lm, F32), gamma))
+    labels_l = rng.integers(0, c_real, l).astype(np.int32)
+    m = np.asarray(ref.onehot(jnp.asarray(labels_l), c))
+    inv = np.asarray(ref.inv_sizes(jnp.asarray(labels_l), c))[None, :]
+    valid = (np.asarray(ref.sizes(jnp.asarray(labels_l), c)) > 0).astype(
+        np.float32
+    )[None, :]
+    g = np.asarray(
+        ref.g_compactness(jnp.asarray(k_ll), jnp.asarray(m), jnp.asarray(inv[0]))
+    )[None, :]
+    labels = np.asarray(
+        ref.assign(
+            jnp.asarray(k_nl),
+            jnp.asarray(m),
+            jnp.asarray(inv[0]),
+            jnp.asarray(g[0]),
+            jnp.asarray(valid[0]),
+        )
+    )[:, None]
+    base = os.path.join(outdir, "golden", "inner_n1024_l256_c32")
+    for suffix, arr in [
+        (".knl.bin", k_nl),
+        (".kll.bin", k_ll),
+        (".m.bin", m),
+        (".inv.bin", inv),
+        (".valid.bin", valid),
+        (".labels.bin", labels.astype(np.int32)),
+        (".g.bin", g),
+    ]:
+        dump_bin(base + suffix, arr)
+    rel = "golden/inner_n1024_l256_c32"
+    return {
+        "name": "inner_n1024_l256_c32",
+        "inputs": [
+            f"{rel}.knl.bin",
+            f"{rel}.kll.bin",
+            f"{rel}.m.bin",
+            f"{rel}.inv.bin",
+            f"{rel}.valid.bin",
+        ],
+        "outputs": [f"{rel}.labels.bin", f"{rel}.g.bin"],
+        "atol": 2e-5,
+    }
+
+
+def main():
+    p = argparse.ArgumentParser(description="AOT-lower dkkm graphs to HLO text")
+    p.add_argument("--outdir", default="../artifacts")
+    p.add_argument("--skip-golden", action="store_true")
+    args = p.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    os.makedirs(os.path.join(args.outdir, "golden"), exist_ok=True)
+
+    entries = []
+    for name, fn, specs, params in variants():
+        text = to_hlo_text(fn, specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.outdir, fname), "w") as f:
+            f.write(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [shape_entry(s) for s in specs],
+                "outputs": [shape_entry(s) for s in out_specs],
+                "params": params,
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    golden = []
+    if not args.skip_golden:
+        golden.append(golden_rbf(args.outdir, 64))
+        golden.append(golden_inner(args.outdir))
+
+    manifest = {"version": 1, "entries": entries, "golden": golden}
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} entries, {len(golden)} golden sets")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#
+# The hot path of (distributed mini-batch) kernel k-means is dominated by
+# (Eq.4-6 of the paper):
+#   1. kernel-matrix tile evaluation        K[i,j] = k(x_i, y_j)
+#   2. cluster average similarity           f = K . onehot(U_L) / |w|
+#   3. cluster compactness                  g_j = onehot_j^T K_LL onehot_j/|w|^2
+#   4. label assignment                     u_i = argmin_j g_j - 2 f_ij
+#
+# Each is written as a Pallas kernel tiled for TPU VMEM (BlockSpec expresses
+# the HBM<->VMEM schedule; the pairwise-distance contraction targets the
+# MXU). All kernels run with interpret=True: the CPU PJRT client cannot
+# execute Mosaic custom-calls, so interpret mode is the correctness (and
+# AOT-export) path, and TPU efficiency is estimated statically (DESIGN.md
+# §Hardware-Adaptation, EXPERIMENTS.md §Perf).
+from .rbf import rbf_block, linear_block, TILE_M, TILE_N
+from .assign import assign_block, f_block, compactness, argmin_block
+
+__all__ = [
+    "rbf_block",
+    "linear_block",
+    "assign_block",
+    "f_block",
+    "compactness",
+    "argmin_block",
+    "TILE_M",
+    "TILE_N",
+]

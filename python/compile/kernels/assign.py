@@ -1,0 +1,153 @@
+# Pallas kernels for the kernel k-means inner-loop update (paper Eq.4-6 /
+# Eq.15-17 in the landmark-sparsified form).
+#
+# Cluster state is carried as a landmark one-hot membership matrix
+# M = onehot(U_L) of shape (L, C): column j selects the landmarks currently
+# assigned to cluster j, so
+#     f      = (K_NL . M) * inv_sizes          (cluster average similarity)
+#     g_j    = inv_sizes_j^2 * M_j^T K_LL M_j  (cluster compactness)
+#     labels = argmin_j  g_j - 2 f_ij          (Eq.4 / Eq.15)
+#
+# `valid` masks padded / empty cluster columns with +inf distance: AOT
+# artifacts have a fixed C (Rust pads the one-hot with zero columns), and
+# the paper's empty-cluster rule ("do not update, alpha = 0") also needs
+# empty clusters excluded from the argmin.
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row tile for the assignment sweep. L and C stay whole inside the block:
+# C <= 128 always, and the (L, C) one-hot tile is small (L <= 4096).
+TILE_R = 128
+
+# +inf stand-in that survives f32 round-trips (a plain Python float so it
+# inlines as a literal instead of a captured constant inside pallas_call).
+_BIG = 3.4e38
+
+
+def _dot(a, b):
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _assign_tile_kernel(k_ref, onehot_ref, inv_ref, g_ref, valid_ref, o_ref):
+    k = k_ref[...]            # (TILE_R, L)
+    onehot = onehot_ref[...]  # (L, C)
+    inv = inv_ref[...]        # (1, C)
+    g = g_ref[...]            # (1, C)
+    valid = valid_ref[...]    # (1, C)
+    f = _dot(k, onehot) * inv                      # (TILE_R, C)
+    dist = jnp.where(valid > 0.0, g - 2.0 * f, _BIG)
+    o_ref[...] = jnp.argmin(dist, axis=1).astype(jnp.int32)[:, None]
+
+
+def assign_block(k, onehot, inv_sizes, g, valid):
+    """Fused assignment step: labels = argmin_j g_j - 2 (K.M)_ij inv_j.
+
+    k: (n, l) kernel rows vs landmarks; onehot: (l, c) landmark membership;
+    inv_sizes, g, valid: (1, c). Returns (n, 1) i32 labels.
+    """
+    n, l = k.shape
+    _, c = onehot.shape
+    assert n % TILE_R == 0, n
+    return pl.pallas_call(
+        _assign_tile_kernel,
+        grid=(n // TILE_R,),
+        in_specs=[
+            pl.BlockSpec((TILE_R, l), lambda i: (i, 0)),
+            pl.BlockSpec((l, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=True,
+    )(k, onehot, inv_sizes, g, valid)
+
+
+def _f_tile_kernel(k_ref, onehot_ref, o_ref):
+    o_ref[...] = _dot(k_ref[...], onehot_ref[...])
+
+
+def f_block(k, onehot):
+    """Raw similarity partial sums (K.M) for one landmark chunk.
+
+    The general path when L exceeds the fused artifact's landmark tile:
+    Rust accumulates chunk results, then `argmin_block` finishes the update.
+    k: (n, l); onehot: (l, c). Returns (n, c) f32 (un-normalized).
+    """
+    n, l = k.shape
+    _, c = onehot.shape
+    assert n % TILE_R == 0, n
+    return pl.pallas_call(
+        _f_tile_kernel,
+        grid=(n // TILE_R,),
+        in_specs=[
+            pl.BlockSpec((TILE_R, l), lambda i: (i, 0)),
+            pl.BlockSpec((l, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=True,
+    )(k, onehot)
+
+
+def _compact_kernel(kll_ref, onehot_ref, inv_ref, o_ref):
+    kll = kll_ref[...]        # (L, L)
+    onehot = onehot_ref[...]  # (L, C)
+    inv = inv_ref[...]        # (1, C)
+    t = _dot(kll, onehot)     # (L, C)
+    # diag(M^T K M)_j = sum_m M[m, j] * (K M)[m, j]
+    quad = jnp.sum(onehot * t, axis=0, keepdims=True)  # (1, C)
+    o_ref[...] = quad * inv * inv
+
+
+def compactness(kll, onehot, inv_sizes):
+    """Cluster compactness g_j = inv_j^2 . M_j^T K_LL M_j  (Eq.5 / Eq.16).
+
+    kll: (l, l) landmark kernel block; onehot: (l, c); inv_sizes: (1, c).
+    Returns (1, c) f32. Single block: the landmark set is VMEM-resident.
+    """
+    l, c = onehot.shape
+    return pl.pallas_call(
+        _compact_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((l, l), lambda i: (0, 0)),
+            pl.BlockSpec((l, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, c), jnp.float32),
+        interpret=True,
+    )(kll, onehot, inv_sizes)
+
+
+def _argmin_tile_kernel(f_ref, inv_ref, g_ref, valid_ref, o_ref):
+    f = f_ref[...]            # (TILE_R, C) raw sums
+    inv = inv_ref[...]        # (1, C)
+    g = g_ref[...]            # (1, C)
+    valid = valid_ref[...]    # (1, C)
+    dist = jnp.where(valid > 0.0, g - 2.0 * f * inv, _BIG)
+    o_ref[...] = jnp.argmin(dist, axis=1).astype(jnp.int32)[:, None]
+
+
+def argmin_block(f_raw, inv_sizes, g, valid):
+    """Finish the update from accumulated raw f sums (general-L path)."""
+    n, c = f_raw.shape
+    assert n % TILE_R == 0, n
+    return pl.pallas_call(
+        _argmin_tile_kernel,
+        grid=(n // TILE_R,),
+        in_specs=[
+            pl.BlockSpec((TILE_R, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        interpret=True,
+    )(f_raw, inv_sizes, g, valid)

@@ -1,0 +1,93 @@
+# Pallas kernels for kernel-matrix tile evaluation (paper §3.3: the
+# accelerator-offloaded workload).
+#
+# The pairwise squared distance is computed as ||x||^2 + ||y||^2 - 2 x.y^T
+# so the dominant term is a dense contraction that maps onto the MXU
+# systolic array; row/col norms ride along in the same VMEM-resident tile.
+#
+# TPU sizing rationale (see EXPERIMENTS.md §Perf for the full estimate):
+# a (128, d<=784) f32 x-tile + y-tile + (128, 128) output tile occupy
+# < 1 MiB of the ~16 MiB VMEM, leaving room for double-buffering the HBM
+# pipeline that BlockSpec's index_map describes.
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tile edges: the systolic array is 128x128, so blocks are kept
+# at multiples of 128 on both matrix dimensions.
+TILE_M = 128
+TILE_N = 128
+
+
+def _sq_dists(x, y):
+    """Pairwise squared distances between row-tiles, MXU-friendly form."""
+    xx = jnp.sum(x * x, axis=1, keepdims=True)  # (TM, 1)
+    yy = jnp.sum(y * y, axis=1, keepdims=True)  # (TN, 1)
+    xy = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (TM, TN) — the MXU contraction
+    # Clamp: catastrophic cancellation can give tiny negatives for near-
+    # duplicate points, which exp() would happily accept but sqrt-based
+    # consumers would not.
+    return jnp.maximum(xx + yy.T - 2.0 * xy, 0.0)
+
+
+def _rbf_tile_kernel(x_ref, y_ref, gamma_ref, o_ref):
+    x = x_ref[...]  # (TILE_M, d) VMEM
+    y = y_ref[...]  # (TILE_N, d) VMEM
+    gamma = gamma_ref[0, 0]
+    o_ref[...] = jnp.exp(-gamma * _sq_dists(x, y))
+
+
+def _linear_tile_kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...]
+    y = y_ref[...]
+    o_ref[...] = jax.lax.dot_general(
+        x, y, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def rbf_block(x, y, gamma):
+    """RBF kernel-matrix block K[i,j] = exp(-gamma * ||x_i - y_j||^2).
+
+    x: (m, d) f32, y: (n, d) f32 with m % TILE_M == n % TILE_N == 0;
+    gamma: (1, 1) f32 (an operand, so one AOT artifact serves any sigma).
+    Returns (m, n) f32.
+    """
+    m, d = x.shape
+    n, _ = y.shape
+    assert m % TILE_M == 0 and n % TILE_N == 0, (m, n)
+    grid = (m // TILE_M, n // TILE_N)
+    return pl.pallas_call(
+        _rbf_tile_kernel,
+        grid=grid,
+        in_specs=[
+            # x rows stream with the i grid axis; y rows with j; the scalar
+            # gamma tile is broadcast (constant index_map).
+            pl.BlockSpec((TILE_M, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_N, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y, gamma)
+
+
+def linear_block(x, y):
+    """Linear kernel-matrix block K[i,j] = <x_i, y_j> (same tiling)."""
+    m, d = x.shape
+    n, _ = y.shape
+    assert m % TILE_M == 0 and n % TILE_N == 0, (m, n)
+    grid = (m // TILE_M, n // TILE_N)
+    return pl.pallas_call(
+        _linear_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_N, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)

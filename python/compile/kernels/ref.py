@@ -1,0 +1,84 @@
+# Pure-jnp correctness oracles for every Pallas kernel and for the full
+# kernel k-means update. pytest asserts allclose(kernel, ref) — this is the
+# CORE correctness signal for L1, and the Rust native path is in turn tested
+# against numbers exported from these functions.
+import jax.numpy as jnp
+
+BIG = jnp.float32(3.4e38)
+
+
+def sq_dists(x, y):
+    """Exact pairwise squared distances (no MXU re-association)."""
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def rbf(x, y, gamma):
+    """K[i,j] = exp(-gamma ||x_i - y_j||^2)."""
+    return jnp.exp(-gamma * sq_dists(x, y))
+
+
+def linear(x, y):
+    """K[i,j] = <x_i, y_j>."""
+    return x @ y.T
+
+
+def onehot(labels, c):
+    """(l,) int labels -> (l, c) f32 one-hot membership matrix."""
+    return (labels[:, None] == jnp.arange(c)[None, :]).astype(jnp.float32)
+
+
+def sizes(labels, c):
+    """Cluster cardinalities |w_j| from labels."""
+    return jnp.sum(onehot(labels, c), axis=0)
+
+
+def inv_sizes(labels, c):
+    """1/|w_j| with empty clusters mapped to 0 (paper's alpha=0 rule)."""
+    s = sizes(labels, c)
+    return jnp.where(s > 0, 1.0 / jnp.maximum(s, 1.0), 0.0)
+
+
+def f_similarity(k, m, inv):
+    """Cluster average similarity f_ij = inv_j sum_m K_im M_mj (Eq.6/17)."""
+    return (k @ m) * inv[None, :]
+
+
+def g_compactness(kll, m, inv):
+    """Cluster compactness g_j = inv_j^2 M_j^T K_LL M_j (Eq.5/16)."""
+    quad = jnp.einsum("mj,mn,nj->j", m, kll, m)
+    return quad * inv * inv
+
+
+def assign(k, m, inv, g, valid):
+    """Label update u_i = argmin_j g_j - 2 f_ij over valid clusters (Eq.4)."""
+    f = f_similarity(k, m, inv)
+    dist = jnp.where(valid[None, :] > 0, g[None, :] - 2.0 * f, BIG)
+    return jnp.argmin(dist, axis=1).astype(jnp.int32)
+
+
+def kernel_kmeans_iteration(k_nl, k_ll, labels_l, c):
+    """One full inner-loop iteration from landmark labels (Eq.15-17).
+
+    k_nl: (n, l) sample-vs-landmark kernel rows; k_ll: (l, l) landmark
+    block; labels_l: (l,) current landmark labels. Returns (n,) i32.
+    """
+    m = onehot(labels_l, c)
+    inv = inv_sizes(labels_l, c)
+    g = g_compactness(k_ll, m, inv)
+    valid = (sizes(labels_l, c) > 0).astype(jnp.float32)
+    return assign(k_nl, m, inv, g, valid)
+
+
+def cost(k, labels, c):
+    """Kernel k-means cost Omega(W) (Eq.1), expanded with the kernel trick:
+
+    Omega = sum_i K_ii - sum_j |w_j| g_j  (since sum_i ||phi_i - w_ui||^2
+    = sum_i K_ii - 2 sum_i f_{i,ui} + sum_j |w_j| g_j and
+    sum_i f_{i,ui} = sum_j |w_j| g_j when f, g come from the same labels).
+    """
+    m = onehot(labels, c)
+    s = jnp.sum(m, axis=0)
+    inv = jnp.where(s > 0, 1.0 / jnp.maximum(s, 1.0), 0.0)
+    g = g_compactness(k, m, inv)
+    return jnp.trace(k) - jnp.sum(s * g)

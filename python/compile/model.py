@@ -1,0 +1,69 @@
+# L2: the JAX compute graphs that the Rust coordinator executes through
+# PJRT. Each function here composes the L1 Pallas kernels (kernels/*) into
+# one AOT-exportable executable; aot.py lowers fixed-shape variants of them
+# to HLO text under artifacts/.
+#
+# Python never runs at clustering time: these graphs exist so that `make
+# artifacts` can freeze them once. Shapes are static per artifact; the Rust
+# runtime pads mini-batch blocks up to the nearest variant (runtime::tile).
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    rbf_block,
+    linear_block,
+    assign_block,
+    f_block,
+    compactness,
+    argmin_block,
+)
+
+
+def kernel_block_rbf(x, y, gamma):
+    """RBF Gram tile K(X, Y) — the offloaded producer workload (Fig.3).
+
+    x: (m, d); y: (n, d); gamma: (1, 1). Out: (m, n).
+    """
+    return (rbf_block(x, y, gamma),)
+
+
+def kernel_block_linear(x, y):
+    """Linear Gram tile <X, Y^T> (used with sigma = 4 d_max RBF disabled)."""
+    return (linear_block(x, y),)
+
+
+def assign_step(k, m, inv, g, valid):
+    """Fused label update for one row-block against one landmark chunk.
+
+    k: (n, l); m: (l, c) one-hot; inv/g/valid: (1, c). Out: (n, 1) i32.
+    """
+    return (assign_block(k, m, inv, g, valid),)
+
+
+def f_partial(k, m):
+    """Raw f partial sums K.M for landmark-chunked accumulation."""
+    return (f_block(k, m),)
+
+
+def g_step(kll, m, inv):
+    """Cluster compactness from the landmark Gram block."""
+    return (compactness(kll, m, inv),)
+
+
+def argmin_step(f_raw, inv, g, valid):
+    """Finish a chunk-accumulated update: argmin_j g_j - 2 f_ij inv_j."""
+    return (argmin_block(f_raw, inv, g, valid),)
+
+
+def inner_iteration(k_nl, k_ll, m, inv, valid):
+    """One whole inner-loop iteration as a single executable (Eq.15-17).
+
+    Fuses compactness + assignment so the Rust hot loop makes one PJRT
+    call per iteration per shard when L fits a single chunk:
+        g      = inv^2 diag(M^T K_LL M)
+        labels = argmin_j g_j - 2 (K_NL M)_ij inv_j
+    Returns (labels (n,1) i32, g (1,c) f32).
+    """
+    g = compactness(k_ll, m, inv)
+    labels = assign_block(k_nl, m, inv, g, valid)
+    return (labels, g)

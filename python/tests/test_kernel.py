@@ -1,0 +1,251 @@
+# pytest: Pallas kernels vs the pure-jnp oracle (ref.py) — the CORE
+# correctness signal for L1. Hypothesis sweeps shapes and value regimes.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    rbf_block,
+    linear_block,
+    assign_block,
+    f_block,
+    compactness,
+    argmin_block,
+    TILE_M,
+)
+from compile.kernels import ref
+
+
+def rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------- rbf
+
+
+class TestRbfBlock:
+    def test_matches_ref_basic(self):
+        rng = np.random.default_rng(0)
+        x, y = rand(rng, (256, 32)), rand(rng, (128, 32))
+        k = rbf_block(x, y, jnp.asarray([[0.1]], jnp.float32))
+        assert_allclose(np.asarray(k), np.asarray(ref.rbf(x, y, 0.1)), atol=1e-5)
+
+    def test_self_kernel_diagonal_is_one(self):
+        rng = np.random.default_rng(1)
+        x = rand(rng, (128, 8))
+        k = np.asarray(rbf_block(x, x, jnp.asarray([[0.3]], jnp.float32)))
+        assert_allclose(np.diag(k), np.ones(128), atol=1e-5)
+
+    def test_symmetry_on_self(self):
+        rng = np.random.default_rng(2)
+        x = rand(rng, (128, 5))
+        k = np.asarray(rbf_block(x, x, jnp.asarray([[0.2]], jnp.float32)))
+        assert_allclose(k, k.T, atol=1e-5)
+
+    def test_values_in_unit_interval(self):
+        rng = np.random.default_rng(3)
+        x, y = rand(rng, (128, 16), 5.0), rand(rng, (128, 16), 5.0)
+        k = np.asarray(rbf_block(x, y, jnp.asarray([[0.5]], jnp.float32)))
+        assert k.min() >= 0.0 and k.max() <= 1.0 + 1e-6
+
+    def test_gamma_zero_gives_ones(self):
+        rng = np.random.default_rng(4)
+        x, y = rand(rng, (128, 4)), rand(rng, (128, 4))
+        k = np.asarray(rbf_block(x, y, jnp.asarray([[0.0]], jnp.float32)))
+        assert_allclose(k, np.ones((128, 128)), atol=1e-6)
+
+    def test_duplicate_points_hit_one(self):
+        # near-duplicate rows exercise the negative-distance clamp. The
+        # ||x||^2+||y||^2-2xy form loses ~||x||^2 * eps_f32 to cancellation
+        # for large-norm points (here ~6e3 * 1e-7 ≈ 6e-4), so the tolerance
+        # reflects the MXU-friendly formulation, not a bug.
+        rng = np.random.default_rng(5)
+        x = rand(rng, (128, 64), 10.0)
+        k = np.asarray(rbf_block(x, x, jnp.asarray([[1.0]], jnp.float32)))
+        assert_allclose(np.diag(k), np.ones(128), atol=1e-2)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([128, 256, 384]),
+        n=st.sampled_from([128, 256]),
+        d=st.integers(min_value=1, max_value=96),
+        gamma=st.floats(min_value=1e-3, max_value=2.0),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, m, n, d, gamma, seed):
+        rng = np.random.default_rng(seed)
+        x, y = rand(rng, (m, d)), rand(rng, (n, d))
+        k = rbf_block(x, y, jnp.asarray([[gamma]], jnp.float32))
+        assert_allclose(
+            np.asarray(k), np.asarray(ref.rbf(x, y, gamma)), atol=3e-5, rtol=1e-4
+        )
+
+
+class TestLinearBlock:
+    def test_matches_matmul(self):
+        rng = np.random.default_rng(7)
+        x, y = rand(rng, (256, 48)), rand(rng, (128, 48))
+        assert_allclose(
+            np.asarray(linear_block(x, y)),
+            np.asarray(x @ y.T),
+            atol=1e-4,
+            rtol=1e-5,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        d=st.integers(min_value=1, max_value=64),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_matmul_hypothesis(self, d, seed):
+        rng = np.random.default_rng(seed)
+        x, y = rand(rng, (128, d)), rand(rng, (128, d))
+        assert_allclose(
+            np.asarray(linear_block(x, y)), np.asarray(x @ y.T), atol=1e-4, rtol=1e-4
+        )
+
+
+# ---------------------------------------------------------------- assignment
+
+
+def cluster_state(rng, l, c_real, c_pad):
+    """Random landmark labels -> (labels, onehot, inv, g-ready pieces)."""
+    labels = jnp.asarray(rng.integers(0, c_real, l), jnp.int32)
+    m = ref.onehot(labels, c_pad)
+    inv = ref.inv_sizes(labels, c_pad)
+    valid = (ref.sizes(labels, c_pad) > 0).astype(jnp.float32)
+    return labels, m, inv, valid
+
+
+class TestAssignBlock:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(10)
+        lm = rand(rng, (256, 16))
+        xs = rand(rng, (1024, 16))
+        labels, m, inv, valid = cluster_state(rng, 256, 10, 32)
+        kll = ref.rbf(lm, lm, 0.1)
+        knl = ref.rbf(xs, lm, 0.1)
+        g = ref.g_compactness(kll, m, inv)
+        got = assign_block(knl, m, inv[None, :], g[None, :], valid[None, :])
+        want = ref.assign(knl, m, inv, g, valid)
+        assert np.array_equal(np.asarray(got)[:, 0], np.asarray(want))
+
+    def test_never_assigns_invalid_cluster(self):
+        rng = np.random.default_rng(11)
+        lm, xs = rand(rng, (128, 8)), rand(rng, (256, 8))
+        labels, m, inv, valid = cluster_state(rng, 128, 4, 32)
+        kll = ref.rbf(lm, lm, 0.2)
+        knl = ref.rbf(xs, lm, 0.2)
+        g = ref.g_compactness(kll, m, inv)
+        got = np.asarray(
+            assign_block(knl, m, inv[None, :], g[None, :], valid[None, :])
+        )[:, 0]
+        assert set(got.tolist()) <= set(range(4))
+
+    def test_single_cluster_all_assigned(self):
+        rng = np.random.default_rng(12)
+        lm, xs = rand(rng, (128, 8)), rand(rng, (128, 8))
+        labels = jnp.zeros(128, jnp.int32)
+        m = ref.onehot(labels, 32)
+        inv = ref.inv_sizes(labels, 32)
+        valid = (ref.sizes(labels, 32) > 0).astype(jnp.float32)
+        kll = ref.rbf(lm, lm, 0.2)
+        knl = ref.rbf(xs, lm, 0.2)
+        g = ref.g_compactness(kll, m, inv)
+        got = np.asarray(
+            assign_block(knl, m, inv[None, :], g[None, :], valid[None, :])
+        )
+        assert np.all(got == 0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.sampled_from([128, 256, 512]),
+        l=st.sampled_from([64, 128, 256]),
+        c_real=st.integers(min_value=2, max_value=20),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, n, l, c_real, seed):
+        rng = np.random.default_rng(seed)
+        lm, xs = rand(rng, (l, 6)), rand(rng, (n, 6))
+        labels, m, inv, valid = cluster_state(rng, l, c_real, 32)
+        kll = ref.rbf(lm, lm, 0.15)
+        knl = ref.rbf(xs, lm, 0.15)
+        g = ref.g_compactness(kll, m, inv)
+        got = assign_block(knl, m, inv[None, :], g[None, :], valid[None, :])
+        want = ref.assign(knl, m, inv, g, valid)
+        assert np.array_equal(np.asarray(got)[:, 0], np.asarray(want))
+
+
+class TestFAndArgmin:
+    def test_f_block_is_matmul(self):
+        rng = np.random.default_rng(20)
+        k = rand(rng, (256, 128))
+        _, m, _, _ = cluster_state(rng, 128, 7, 32)
+        assert_allclose(
+            np.asarray(f_block(k, m)), np.asarray(k @ m), atol=1e-5, rtol=1e-5
+        )
+
+    def test_chunked_f_accumulation_equals_fused(self):
+        """Accumulating f over landmark chunks == one fused assignment."""
+        rng = np.random.default_rng(21)
+        lm, xs = rand(rng, (256, 8)), rand(rng, (256, 8))
+        labels, m, inv, valid = cluster_state(rng, 256, 6, 32)
+        kll = ref.rbf(lm, lm, 0.1)
+        knl = ref.rbf(xs, lm, 0.1)
+        g = ref.g_compactness(kll, m, inv)
+        f_total = np.zeros((256, 32), np.float32)
+        for lo in range(0, 256, 128):
+            f_total += np.asarray(
+                f_block(knl[:, lo : lo + 128], m[lo : lo + 128])
+            )
+        got = argmin_block(
+            jnp.asarray(f_total), inv[None, :], g[None, :], valid[None, :]
+        )
+        want = assign_block(knl, m, inv[None, :], g[None, :], valid[None, :])
+        assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestCompactness:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(30)
+        lm = rand(rng, (256, 12))
+        labels, m, inv, _ = cluster_state(rng, 256, 9, 32)
+        kll = ref.rbf(lm, lm, 0.25)
+        got = compactness(kll, m, inv[None, :])
+        want = ref.g_compactness(kll, m, inv)
+        assert_allclose(np.asarray(got)[0], np.asarray(want), atol=1e-5)
+
+    def test_empty_cluster_g_is_zero(self):
+        rng = np.random.default_rng(31)
+        lm = rand(rng, (128, 4))
+        labels, m, inv, valid = cluster_state(rng, 128, 3, 32)
+        kll = ref.rbf(lm, lm, 0.2)
+        g = np.asarray(compactness(kll, m, inv[None, :]))[0]
+        assert np.all(g[3:] == 0.0)
+
+    def test_g_positive_for_rbf(self):
+        # g_j is a normalized sum of RBF values: strictly positive when
+        # the cluster is non-empty.
+        rng = np.random.default_rng(32)
+        lm = rand(rng, (128, 4))
+        labels, m, inv, valid = cluster_state(rng, 128, 5, 32)
+        kll = ref.rbf(lm, lm, 0.2)
+        g = np.asarray(compactness(kll, m, inv[None, :]))[0]
+        assert np.all(g[np.asarray(valid) > 0] > 0.0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        l=st.sampled_from([64, 128, 256]),
+        c_real=st.integers(min_value=1, max_value=30),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_hypothesis(self, l, c_real, seed):
+        rng = np.random.default_rng(seed)
+        lm = rand(rng, (l, 5))
+        labels, m, inv, _ = cluster_state(rng, l, c_real, 32)
+        kll = ref.rbf(lm, lm, 0.15)
+        got = compactness(kll, m, inv[None, :])
+        want = ref.g_compactness(kll, m, inv)
+        assert_allclose(np.asarray(got)[0], np.asarray(want), atol=2e-5)

@@ -1,0 +1,117 @@
+# L2 graph tests: the composed inner iteration + a miniature kernel
+# k-means driver written against ref.py, checking the fixed point / cost
+# monotonicity properties the coordinator relies on.
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def blobs(rng, n, c, d=8, spread=4.0):
+    centers = rng.standard_normal((c, d)) * spread
+    labels = rng.integers(0, c, n)
+    return (
+        jnp.asarray(centers[labels] + rng.standard_normal((n, d)), jnp.float32),
+        labels,
+    )
+
+
+class TestInnerIteration:
+    def test_matches_ref_pipeline(self):
+        rng = np.random.default_rng(0)
+        xs, _ = blobs(rng, 1024, 10)
+        lm = xs[:256]
+        labels_l = jnp.asarray(rng.integers(0, 10, 256), jnp.int32)
+        knl = ref.rbf(xs, lm, 0.1)
+        kll = ref.rbf(lm, lm, 0.1)
+        m = ref.onehot(labels_l, 32)
+        inv = ref.inv_sizes(labels_l, 32)
+        valid = (ref.sizes(labels_l, 32) > 0).astype(jnp.float32)
+        labels, g = model.inner_iteration(
+            knl, kll, m, inv[None, :], valid[None, :]
+        )
+        want = ref.kernel_kmeans_iteration(knl, kll, labels_l, 32)
+        assert np.array_equal(np.asarray(labels)[:, 0], np.asarray(want))
+        assert_allclose(
+            np.asarray(g)[0],
+            np.asarray(ref.g_compactness(kll, m, inv)),
+            atol=2e-5,
+        )
+
+    def test_well_separated_blobs_reach_fixed_point(self):
+        """On trivially separable data, iterating to convergence recovers
+        the generating partition (up to label permutation)."""
+        rng = np.random.default_rng(1)
+        xs, true = blobs(rng, 512, 4, d=2, spread=50.0)
+        labels = jnp.asarray(rng.integers(0, 4, 512), jnp.int32)
+        k = ref.rbf(xs, xs, 0.02)
+        for _ in range(30):
+            new = ref.kernel_kmeans_iteration(k, k, labels, 32)
+            if np.array_equal(np.asarray(new), np.asarray(labels)):
+                break
+            labels = new
+        # each true blob maps to exactly one predicted cluster
+        for t in range(4):
+            got = np.asarray(labels)[true == t]
+            assert len(set(got.tolist())) == 1
+
+    def test_cost_nonincreasing_full_batch(self):
+        """Eq.4 iterations never increase Omega (Bottou-Bengio property)."""
+        rng = np.random.default_rng(2)
+        xs, _ = blobs(rng, 384, 6, d=4)
+        k = ref.rbf(xs, xs, 0.1)
+        labels = jnp.asarray(rng.integers(0, 6, 384), jnp.int32)
+        prev = float(ref.cost(k, labels, 32))
+        for _ in range(15):
+            labels = ref.kernel_kmeans_iteration(k, k, labels, 32)
+            cur = float(ref.cost(k, labels, 32))
+            assert cur <= prev + 1e-3
+            prev = cur
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_fixed_point_is_stable(self, seed):
+        """Once labels stop changing they stay fixed (self-consistency)."""
+        rng = np.random.default_rng(seed)
+        xs, _ = blobs(rng, 256, 5, d=3)
+        k = ref.rbf(xs, xs, 0.1)
+        labels = jnp.asarray(rng.integers(0, 5, 256), jnp.int32)
+        for _ in range(40):
+            new = ref.kernel_kmeans_iteration(k, k, labels, 32)
+            if np.array_equal(np.asarray(new), np.asarray(labels)):
+                break
+            labels = new
+        again = ref.kernel_kmeans_iteration(k, k, labels, 32)
+        assert np.array_equal(np.asarray(again), np.asarray(labels))
+
+
+class TestCost:
+    def test_cost_is_within_cluster_scatter(self):
+        """Omega from the kernel trick == explicit feature-space scatter
+        for the linear kernel."""
+        rng = np.random.default_rng(3)
+        xs, _ = blobs(rng, 200, 3, d=4)
+        # pad to nothing special; cost works on any square K
+        k = xs @ xs.T
+        labels = jnp.asarray(rng.integers(0, 3, 200), jnp.int32)
+        omega = float(ref.cost(k, labels, 8))
+        explicit = 0.0
+        xs_np = np.asarray(xs)
+        for j in range(3):
+            pts = xs_np[np.asarray(labels) == j]
+            if len(pts):
+                explicit += ((pts - pts.mean(0)) ** 2).sum()
+        assert_allclose(omega, explicit, rtol=1e-3)
+
+    def test_perfect_clustering_cost_lower_than_random(self):
+        rng = np.random.default_rng(4)
+        xs, true = blobs(rng, 300, 3, d=4, spread=20.0)
+        k = ref.rbf(xs, xs, 0.05)
+        rand_labels = jnp.asarray(rng.integers(0, 3, 300), jnp.int32)
+        assert float(ref.cost(k, jnp.asarray(true, jnp.int32), 8)) < float(
+            ref.cost(k, rand_labels, 8)
+        )

@@ -1,0 +1,80 @@
+//! Fig.7 — MD trajectory clustering: medoid table (a) and the medoid
+//! RMSD matrix (b) whose reordered rows/columns expose the bound /
+//! entrance-path / unbound macro-blocks.
+//!
+//! Paper protocol: ~1M frames, 4 mini-batches (~250k each), C = 20 from
+//! the elbow criterion on (4, 40), 5 k-means++ restarts keeping the
+//! minimum-cost solution, strided sampling. Here the trajectory comes
+//! from the Langevin binding simulator (DESIGN.md §3) at a scaled frame
+//! count; every frame carries a random rigid nuisance pose, so recovering
+//! the macro-blocks at all *requires* the QCP-RMSD invariant kernel.
+use dkkm::coordinator::runner::md_medoid_rmsd_matrix;
+use dkkm::coordinator::{DatasetSpec, RunConfig};
+use dkkm::util::stats::bench_scale;
+
+fn main() {
+    let frames = ((8000.0 * bench_scale()) as usize).max(1000);
+    println!("== Fig.7: MD binding trajectory, {frames} frames, B=4, C=12, 3 restarts ==");
+    println!("(paper: ~1M frames, C=20, 5 restarts; DKKM_SCALE=125 approaches full size)\n");
+
+    let mut cfg = RunConfig::new(DatasetSpec::Md { frames });
+    cfg.c = Some(12);
+    cfg.b = 4;
+    cfg.restarts = 3;
+    cfg.seed = 77;
+    let (medoids, mat, macro_of) = md_medoid_rmsd_matrix(&cfg, frames).expect("md");
+
+    let names = ["bound", "entrance", "unbound"];
+    println!("(a) medoid table:");
+    let mut counts = [0usize; 3];
+    for (i, &m) in medoids.iter().enumerate() {
+        counts[macro_of[i]] += 1;
+        println!("    cluster {i:>2} -> frame {m:>7}  {}", names[macro_of[i]]);
+    }
+    println!(
+        "    macro coverage: {} bound / {} entrance / {} unbound clusters",
+        counts[0], counts[1], counts[2]
+    );
+
+    let mut order: Vec<usize> = (0..medoids.len()).collect();
+    order.sort_by_key(|&i| macro_of[i]);
+    println!("\n(b) medoid RMSD matrix, reordered bound -> entrance -> unbound:");
+    print!("     ");
+    for &i in &order {
+        print!("{:>6}", names[macro_of[i]].chars().next().unwrap());
+    }
+    println!();
+    for &i in &order {
+        print!("  {}  ", names[macro_of[i]].chars().next().unwrap());
+        for &j in &order {
+            print!("{:6.2}", mat.at(i, j));
+        }
+        println!();
+    }
+
+    // quantitative macro-block check
+    let (mut intra, mut ni) = (0.0f64, 0usize);
+    let (mut cross, mut nc) = (0.0f64, 0usize);
+    for i in 0..medoids.len() {
+        for j in 0..medoids.len() {
+            if i == j {
+                continue;
+            }
+            if macro_of[i] == macro_of[j] {
+                intra += mat.at(i, j) as f64;
+                ni += 1;
+            } else {
+                cross += mat.at(i, j) as f64;
+                nc += 1;
+            }
+        }
+    }
+    if ni > 0 && nc > 0 {
+        let (im, cm) = (intra / ni as f64, cross / nc as f64);
+        println!("\nmean intra-macro RMSD {im:.3} vs cross-macro {cm:.3} (ratio {:.2})", im / cm);
+        println!(
+            "shape check: ratio < 1 reproduces Fig.7b's visible macro-sections: {}",
+            if im < cm { "PASS" } else { "FAIL" }
+        );
+    }
+}

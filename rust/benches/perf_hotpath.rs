@@ -1,0 +1,151 @@
+//! §Perf hot-path microbenchmarks (EXPERIMENTS.md §Perf feeds from this):
+//!
+//!   1. Gram-block evaluation throughput: native blocked CPU path vs the
+//!      PJRT artifact (Pallas rbf tile) per feature dimension,
+//!   2. inner-iteration latency: native vs PJRT fused executable vs the
+//!      row-sharded backend at several node counts,
+//!   3. collective costs of the in-process communicator,
+//!   4. offload pipeline overlap on a realistic mini-batch run.
+use dkkm::cluster::assign;
+use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend, StepBackend};
+use dkkm::coordinator::runner::{build_dataset, gamma_for, shared_pjrt};
+use dkkm::coordinator::DatasetSpec;
+use dkkm::distributed::comm::Communicator;
+use dkkm::distributed::ShardedBackend;
+use dkkm::kernels::{GramSource, KernelFn, VecGram};
+use dkkm::runtime::{PjrtBackend, PjrtGram};
+use dkkm::util::rng::Rng;
+use dkkm::util::stats::{Table, Timer};
+
+fn bench<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let t = Timer::start();
+    for _ in 0..reps {
+        f();
+    }
+    t.elapsed_s() / reps as f64
+}
+
+fn main() {
+    println!("== §Perf hot-path microbenchmarks ==\n");
+
+    // ---------------- 1. Gram tile throughput
+    println!("1) Gram block evaluation, 512x512 block (M kernel-elems/s):");
+    let mut table = Table::new(&["d", "native (1 thread)", "pjrt (artifact)"]);
+    for &d in &[64usize, 256, 784] {
+        let (data, _) = build_dataset(&DatasetSpec::Mnist { train: 512, test: 0 }, 1);
+        // re-project to d dims by truncation for the bench
+        let x = dkkm::linalg::Mat::from_fn(512, d, |r, c| data.x.at(r, c % 784));
+        let gamma = 0.01f32;
+        let rows: Vec<usize> = (0..512).collect();
+        let native = VecGram::new(x.clone(), KernelFn::Rbf { gamma }, 1);
+        let t_native = bench(1, 3, || {
+            let _ = native.block_mat(&rows, &rows);
+        });
+        let pjrt_cell = match shared_pjrt().and_then(|rt| PjrtGram::new(rt, x.clone(), gamma)) {
+            Ok(pj) => {
+                let t_pjrt = bench(1, 3, || {
+                    let _ = pj.block_mat(&rows, &rows);
+                });
+                format!("{:.1}", 512.0 * 512.0 / t_pjrt / 1e6)
+            }
+            Err(_) => "n/a".into(),
+        };
+        table.row(&[
+            d.to_string(),
+            format!("{:.1}", 512.0 * 512.0 / t_native / 1e6),
+            pjrt_cell,
+        ]);
+    }
+    println!("{}", table.render());
+
+    // ---------------- 2. inner iteration latency
+    println!("2) inner-loop iteration latency (ms), N=2048 rows, L=256, C=10:");
+    let mut rng = Rng::new(0);
+    let x = dkkm::linalg::Mat::from_fn(2048, 32, |_, _| rng.normal32(0.0, 1.0));
+    let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.1 }, 1);
+    let rows: Vec<usize> = (0..2048).collect();
+    let lms: Vec<usize> = (0..256).collect();
+    let k_nl = g.block_mat(&rows, &lms);
+    let k_ll = g.block_mat(&lms, &lms);
+    let labels: Vec<usize> = (0..256).map(|_| rng.below(10)).collect();
+    let mut table = Table::new(&["backend", "ms/iteration"]);
+    let t = bench(2, 10, || {
+        let _ = assign::inner_iteration(&k_nl, &k_ll, &labels, 10);
+    });
+    table.row(&["native".into(), format!("{:.2}", t * 1e3)]);
+    if let Ok(rt) = shared_pjrt() {
+        let backend = PjrtBackend::new(rt);
+        let t = bench(2, 10, || {
+            let _ = backend.iterate(&k_nl, &k_ll, &labels, 10);
+        });
+        table.row(&["pjrt (fused artifact)".into(), format!("{:.2}", t * 1e3)]);
+    }
+    for p in [2usize, 4, 8] {
+        let backend = ShardedBackend::new(p);
+        let t = bench(2, 10, || {
+            let _ = backend.iterate(&k_nl, &k_ll, &labels, 10);
+        });
+        table.row(&[format!("sharded p={p}"), format!("{:.2}", t * 1e3)]);
+    }
+    println!("{}", table.render());
+
+    // ---------------- 3. collectives
+    println!("3) in-process collectives (us/op, 8 nodes):");
+    let mut table = Table::new(&["op", "us"]);
+    for (name, msg) in [("allreduce g (C=32 f32)", 32usize), ("allreduce g (C=1024)", 1024)] {
+        let t = {
+            let comm = Communicator::new(8);
+            let reps = 200;
+            let t = Timer::start();
+            std::thread::scope(|scope| {
+                for _ in 0..8 {
+                    let mut node = comm.node();
+                    scope.spawn(move || {
+                        let local = vec![1.0f32; msg];
+                        for _ in 0..reps {
+                            let _ = node.allreduce_sum(&local);
+                        }
+                    });
+                }
+            });
+            t.elapsed_s() / reps as f64
+        };
+        table.row(&[name.into(), format!("{:.1}", t * 1e6)]);
+    }
+    println!("{}", table.render());
+
+    // ---------------- 4. offload overlap
+    println!("4) offload pipeline overlap (synthetic MNIST N=2000, B=8):");
+    let (data, _) = build_dataset(&DatasetSpec::Mnist { train: 2000, test: 0 }, 9);
+    let gamma = gamma_for(&data, 4.0, 9);
+    let source = VecGram::new(data.x.clone(), KernelFn::Rbf { gamma }, 1);
+    for offload in [false, true] {
+        let mb = MiniBatchConfig {
+            c: 10,
+            b: 8,
+            s: 1.0,
+            sampling: dkkm::data::Sampling::Stride,
+            max_inner: 100,
+            seed: 13,
+            track_cost: false,
+            offload,
+            merge_rule: dkkm::cluster::minibatch::MergeRule::Convex,
+        };
+        let t = Timer::start();
+        let res = MiniBatchKernelKMeans::new(mb, &NativeBackend).run(&source);
+        let total = t.elapsed_s();
+        match res.overlap {
+            Some(ov) => println!(
+                "   offload=on : {total:.2}s total, producer busy {:.2}s, \
+                 consumer waited {:.2}s (overlap {:.0}%)",
+                ov.producer_busy_s,
+                ov.consumer_wait_s,
+                ov.overlap_efficiency() * 100.0
+            ),
+            None => println!("   offload=off: {total:.2}s total"),
+        }
+    }
+}

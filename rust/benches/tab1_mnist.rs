@@ -1,0 +1,66 @@
+//! Tab.1 — MNIST: clustering accuracy, NMI and execution time for
+//! B in {1, 4, 16, 64}, plus the linear k-means baseline row.
+//!
+//! Paper (60000 train / 10000 test, C = 10, sigma = 4 d_max, stride,
+//! s = 1):
+//!   Baseline  84.5 ± 0.62    0.693 ± 0.012       —
+//!   B=1       86.47 ± 0.37   0.737 ± 0.006   655.23 ± 82.92 s
+//!   B=4       82.63 ± 0.91   0.680 ± 0.011   133.63 ± 4.40 s
+//!   B=16      81.45 ± 0.65   0.670 ± 0.010    32.17 ± 2.48 s
+//!   B=64      78.39 ± 0.95   0.626 ± 0.015     9.51 ± 0.58 s
+//!
+//! Expected *shape* on the synthetic substitute: accuracy/NMI highest at
+//! B=1 and decreasing gently with B; time dropping ~linearly in 1/B.
+//! Default N is scaled for this single-core host (DKKM_SCALE=12.5 for
+//! paper-size 60k).
+use dkkm::coordinator::runner::{run_experiment, run_lloyd_baseline};
+use dkkm::coordinator::{DatasetSpec, RunConfig};
+use dkkm::util::stats::{bench_repeats, bench_scale, mean_std, pm, Table};
+
+fn main() {
+    let scale = bench_scale();
+    let train = ((4800.0 * scale) as usize).max(500);
+    let test = train / 6;
+    let repeats = bench_repeats();
+    println!("== Tab.1: synthetic MNIST, N={train} train / {test} test, C=10, s=1, stride ==");
+    println!("(paper: N=60000; run with DKKM_SCALE=12.5 to reproduce at full size)\n");
+
+    let mut table = Table::new(&["B", "Clustering accuracy", "NMI", "Execution time (s)"]);
+
+    // baseline: linear k-means (scikit-learn stand-in)
+    let (mut acc, mut nm) = (Vec::new(), Vec::new());
+    for r in 0..repeats {
+        let (_, _, a, n) =
+            run_lloyd_baseline(&DatasetSpec::Mnist { train, test }, 10, 100 + r as u64);
+        acc.push(a.unwrap() * 100.0);
+        nm.push(n.unwrap());
+    }
+    let (am, astd) = mean_std(&acc);
+    let (nmn, nstd) = mean_std(&nm);
+    table.row(&[
+        "Baseline".into(),
+        pm(am, astd),
+        pm(nmn, nstd),
+        "—".into(),
+    ]);
+
+    for &b in &[1usize, 4, 16, 64] {
+        let (mut acc, mut nm, mut tm) = (Vec::new(), Vec::new(), Vec::new());
+        for r in 0..repeats {
+            let mut cfg = RunConfig::new(DatasetSpec::Mnist { train, test });
+            cfg.c = Some(10);
+            cfg.b = b;
+            cfg.seed = 100 + r as u64;
+            let rep = run_experiment(&cfg).expect("run");
+            acc.push(rep.test_accuracy.unwrap() * 100.0);
+            nm.push(rep.test_nmi.unwrap());
+            tm.push(rep.seconds);
+        }
+        let (am, astd) = mean_std(&acc);
+        let (nmn, nstd) = mean_std(&nm);
+        let (tmn, tstd) = mean_std(&tm);
+        table.row(&[b.to_string(), pm(am, astd), pm(nmn, nstd), pm(tmn, tstd)]);
+    }
+    println!("{}", table.render());
+    println!("shape check: accuracy decreases with B, time ~ 1/B (paper Tab.1).");
+}

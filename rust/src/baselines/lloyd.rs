@@ -1,0 +1,197 @@
+//! Standard (linear, feature-space) k-means: k-means++ seeding + Lloyd
+//! iterations, with restarts keeping the lowest-inertia solution — the
+//! same protocol as the scikit-learn baseline in the paper's Tab.1-2.
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Result of a Lloyd run.
+#[derive(Clone, Debug)]
+pub struct LloydResult {
+    pub labels: Vec<usize>,
+    pub centers: Mat,
+    /// Final within-cluster sum of squares.
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+fn plus_plus_centers(x: &Mat, c: usize, rng: &mut Rng) -> Mat {
+    let n = x.rows();
+    let mut centers = Mat::zeros(c, x.cols());
+    let first = rng.below(n);
+    centers.row_mut(0).copy_from_slice(x.row(first));
+    let mut d2: Vec<f64> = (0..n)
+        .map(|i| sq_dist(x.row(i), centers.row(0)) as f64)
+        .collect();
+    for j in 1..c {
+        let pick = rng.weighted(&d2);
+        let picked_row: Vec<f32> = x.row(pick).to_vec();
+        centers.row_mut(j).copy_from_slice(&picked_row);
+        for i in 0..n {
+            let d = sq_dist(x.row(i), &picked_row) as f64;
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centers
+}
+
+fn lloyd_once(x: &Mat, c: usize, max_iter: usize, rng: &mut Rng) -> LloydResult {
+    let n = x.rows();
+    let d = x.cols();
+    let mut centers = plus_plus_centers(x, c, rng);
+    let mut labels = vec![0usize; n];
+    let mut iterations = 0;
+    for _ in 0..max_iter {
+        iterations += 1;
+        // assignment
+        let mut changed = false;
+        for i in 0..n {
+            let xi = x.row(i);
+            let mut best = 0;
+            let mut best_d = f32::INFINITY;
+            for j in 0..c {
+                let dd = sq_dist(xi, centers.row(j));
+                if dd < best_d {
+                    best_d = dd;
+                    best = j;
+                }
+            }
+            if labels[i] != best {
+                labels[i] = best;
+                changed = true;
+            }
+        }
+        if !changed && iterations > 1 {
+            break;
+        }
+        // update
+        let mut sums = Mat::zeros(c, d);
+        let mut counts = vec![0usize; c];
+        for i in 0..n {
+            counts[labels[i]] += 1;
+            let row = sums.row_mut(labels[i]);
+            for (s, &v) in row.iter_mut().zip(x.row(i)) {
+                *s += v;
+            }
+        }
+        for j in 0..c {
+            if counts[j] > 0 {
+                let inv = 1.0 / counts[j] as f32;
+                for v in centers.row_mut(j) {
+                    *v = 0.0;
+                }
+                let (cr, sr) = (centers.row_mut(j), sums.row(j));
+                for (cv, &sv) in cr.iter_mut().zip(sr) {
+                    *cv = sv * inv;
+                }
+            } else {
+                // empty cluster: re-seed at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = sq_dist(x.row(a), centers.row(labels[a]));
+                        let db = sq_dist(x.row(b), centers.row(labels[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                let far_row: Vec<f32> = x.row(far).to_vec();
+                centers.row_mut(j).copy_from_slice(&far_row);
+            }
+        }
+    }
+    let inertia: f64 = (0..n)
+        .map(|i| sq_dist(x.row(i), centers.row(labels[i])) as f64)
+        .sum();
+    LloydResult { labels, centers, inertia, iterations }
+}
+
+/// k-means with `n_init` restarts, keeping the lowest inertia.
+pub fn lloyd_kmeans(
+    x: &Mat,
+    c: usize,
+    max_iter: usize,
+    n_init: usize,
+    rng: &mut Rng,
+) -> LloydResult {
+    assert!(n_init >= 1);
+    let mut best: Option<LloydResult> = None;
+    for _ in 0..n_init {
+        let r = lloyd_once(x, c, max_iter, rng);
+        if best.as_ref().map_or(true, |b| r.inertia < b.inertia) {
+            best = Some(r);
+        }
+    }
+    best.unwrap()
+}
+
+/// Assign new samples to the fitted centers.
+pub fn assign_to_centers(x: &Mat, centers: &Mat) -> Vec<usize> {
+    (0..x.rows())
+        .map(|i| {
+            let xi = x.row(i);
+            (0..centers.rows())
+                .min_by(|&a, &b| {
+                    sq_dist(xi, centers.row(a))
+                        .partial_cmp(&sq_dist(xi, centers.row(b)))
+                        .unwrap()
+                })
+                .unwrap()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::toy2d;
+
+    #[test]
+    fn recovers_toy_blobs() {
+        let mut rng = Rng::new(0);
+        let data = toy2d(&mut rng, 150);
+        let res = lloyd_kmeans(&data.x, 4, 100, 3, &mut rng);
+        // purity check
+        let mut table = vec![vec![0usize; 4]; 4];
+        for (&u, &y) in res.labels.iter().zip(&data.y) {
+            table[u][y] += 1;
+        }
+        let correct: usize = table.iter().map(|r| *r.iter().max().unwrap()).sum();
+        assert!(correct as f64 / 600.0 > 0.9);
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_clusters() {
+        let mut rng = Rng::new(1);
+        let data = toy2d(&mut rng, 80);
+        let i2 = lloyd_kmeans(&data.x, 2, 50, 2, &mut rng).inertia;
+        let i4 = lloyd_kmeans(&data.x, 4, 50, 2, &mut rng).inertia;
+        let i8 = lloyd_kmeans(&data.x, 8, 50, 2, &mut rng).inertia;
+        assert!(i4 < i2);
+        assert!(i8 < i4);
+    }
+
+    #[test]
+    fn restarts_never_hurt() {
+        let mut rng1 = Rng::new(2);
+        let mut rng2 = Rng::new(2);
+        let data = toy2d(&mut rng1, 60);
+        let _ = toy2d(&mut rng2, 60); // keep streams aligned
+        let single = lloyd_kmeans(&data.x, 4, 50, 1, &mut rng1).inertia;
+        let multi = lloyd_kmeans(&data.x, 4, 50, 5, &mut rng2).inertia;
+        assert!(multi <= single * 1.001);
+    }
+
+    #[test]
+    fn assign_matches_training_labels() {
+        let mut rng = Rng::new(3);
+        let data = toy2d(&mut rng, 60);
+        let res = lloyd_kmeans(&data.x, 4, 50, 2, &mut rng);
+        let re = assign_to_centers(&data.x, &res.centers);
+        let agree = re.iter().zip(&res.labels).filter(|(a, b)| a == b).count();
+        assert!(agree as f64 / 240.0 > 0.99);
+    }
+}

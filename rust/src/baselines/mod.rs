@@ -1,0 +1,11 @@
+//! Baseline algorithms the paper compares against:
+//!
+//! * [`lloyd`] — standard k-means (k-means++ init + Lloyd iterations),
+//!   standing in for the scikit-learn baseline rows of Tab.1-2.
+//! * [`sgd`] — Sculley's web-scale mini-batch SGD k-means [9], the
+//!   comparison of Fig.8.
+pub mod lloyd;
+pub mod sgd;
+
+pub use lloyd::{lloyd_kmeans, LloydResult};
+pub use sgd::{sgd_kmeans, SgdConfig};

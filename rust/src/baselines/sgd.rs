@@ -1,0 +1,139 @@
+//! Sculley's web-scale mini-batch SGD k-means [9] — the Fig.8 comparison.
+//!
+//! Protocol per Sculley (2010): small mini-batches (~10^3), a fixed
+//! a-priori number of iterations, per-center learning rate 1/count; each
+//! mini-batch point is assigned to its nearest center, then the center is
+//! dragged toward the point. The paper contrasts this with its own
+//! iterate-to-convergence inner loop: SGD accuracy is roughly flat in B
+//! and noisier, theirs degrades gently from a higher start.
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Configuration mirroring Sculley's defaults.
+#[derive(Clone, Debug)]
+pub struct SgdConfig {
+    pub c: usize,
+    /// Mini-batch size (~10^3 in the paper's discussion).
+    pub batch: usize,
+    /// Number of SGD iterations (mini-batches consumed).
+    pub iterations: usize,
+    pub seed: u64,
+}
+
+impl SgdConfig {
+    pub fn new(c: usize) -> SgdConfig {
+        SgdConfig { c, batch: 1000, iterations: 60, seed: 7 }
+    }
+}
+
+fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Run mini-batch SGD k-means; returns (labels for all samples, centers).
+pub fn sgd_kmeans(x: &Mat, cfg: &SgdConfig) -> (Vec<usize>, Mat) {
+    let n = x.rows();
+    let d = x.cols();
+    assert!(cfg.c <= n);
+    let mut rng = Rng::new(cfg.seed);
+    // init: random distinct samples (Sculley inits from random examples)
+    let init_idx = rng.sample_indices(n, cfg.c);
+    let mut centers = x.gather(&init_idx);
+    let mut counts = vec![1u64; cfg.c];
+
+    let batch = cfg.batch.min(n);
+    let mut cache = vec![0usize; batch];
+    for _it in 0..cfg.iterations {
+        // sample one mini-batch
+        let idx = rng.sample_indices(n, batch);
+        // assignment pass (cached per batch, per Sculley's Alg.1)
+        for (slot, &i) in idx.iter().enumerate() {
+            let xi = x.row(i);
+            let mut best = 0;
+            let mut best_d = f32::INFINITY;
+            for j in 0..cfg.c {
+                let dd = sq_dist(xi, centers.row(j));
+                if dd < best_d {
+                    best_d = dd;
+                    best = j;
+                }
+            }
+            cache[slot] = best;
+        }
+        // gradient pass
+        for (slot, &i) in idx.iter().enumerate() {
+            let j = cache[slot];
+            counts[j] += 1;
+            let eta = 1.0 / counts[j] as f32;
+            let (xi, cj) = (x.row(i), centers.row_mut(j));
+            for (cv, &xv) in cj.iter_mut().zip(xi) {
+                *cv += eta * (xv - *cv);
+            }
+        }
+    }
+    // final full assignment
+    let labels = (0..n)
+        .map(|i| {
+            let xi = x.row(i);
+            (0..cfg.c)
+                .min_by(|&a, &b| {
+                    sq_dist(xi, centers.row(a))
+                        .partial_cmp(&sq_dist(xi, centers.row(b)))
+                        .unwrap()
+                })
+                .unwrap()
+        })
+        .collect();
+    let _ = d;
+    (labels, centers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::toy2d;
+    use crate::metrics::accuracy;
+
+    #[test]
+    fn clusters_toy_reasonably() {
+        let mut rng = Rng::new(0);
+        let data = toy2d(&mut rng, 200);
+        let cfg = SgdConfig { c: 4, batch: 200, iterations: 80, seed: 1 };
+        let (labels, _) = sgd_kmeans(&data.x, &cfg);
+        let acc = accuracy(&labels, &data.y);
+        assert!(acc > 0.8, "accuracy {acc}");
+    }
+
+    #[test]
+    fn labels_in_range_and_total() {
+        let mut rng = Rng::new(1);
+        let data = toy2d(&mut rng, 50);
+        let cfg = SgdConfig { c: 4, batch: 64, iterations: 20, seed: 2 };
+        let (labels, centers) = sgd_kmeans(&data.x, &cfg);
+        assert_eq!(labels.len(), 200);
+        assert!(labels.iter().all(|&u| u < 4));
+        assert_eq!(centers.rows(), 4);
+        assert_eq!(centers.cols(), 2);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let mut rng = Rng::new(2);
+        let data = toy2d(&mut rng, 40);
+        let cfg = SgdConfig { c: 4, batch: 50, iterations: 10, seed: 3 };
+        let (a, _) = sgd_kmeans(&data.x, &cfg);
+        let (b, _) = sgd_kmeans(&data.x, &cfg);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn more_iterations_do_not_degrade() {
+        let mut rng = Rng::new(3);
+        let data = toy2d(&mut rng, 150);
+        let short = SgdConfig { c: 4, batch: 100, iterations: 3, seed: 4 };
+        let long = SgdConfig { c: 4, batch: 100, iterations: 100, seed: 4 };
+        let (ls, _) = sgd_kmeans(&data.x, &short);
+        let (ll, _) = sgd_kmeans(&data.x, &long);
+        assert!(accuracy(&ll, &data.y) >= accuracy(&ls, &data.y) - 0.05);
+    }
+}

@@ -1,0 +1,292 @@
+//! Shared kernel k-means update math (Eq.4-6 / Eq.15-17).
+//!
+//! Cluster state during the inner loop is the landmark label vector; this
+//! module turns kernel blocks + landmark labels into cluster sizes,
+//! compactness `g`, average similarity `f`, and argmin label updates.
+//! Both the serial mini-batch driver and the distributed shards call
+//! these; the PJRT runtime reproduces the same math inside one fused
+//! executable (`inner_n*_l*_c*` artifacts).
+use crate::linalg::Mat;
+
+/// Per-cluster statistics derived from landmark labels.
+#[derive(Clone, Debug)]
+pub struct ClusterStats {
+    /// |w_j| — landmark count per cluster.
+    pub counts: Vec<usize>,
+    /// 1/|w_j| with empty clusters mapped to 0 (paper's alpha = 0 rule).
+    pub inv: Vec<f32>,
+    /// Cluster compactness g_j (Eq.5/16).
+    pub g: Vec<f32>,
+}
+
+impl ClusterStats {
+    /// Compute counts, inv and g from the landmark-vs-landmark kernel
+    /// block and landmark labels. O(L^2) — L is small by construction.
+    pub fn compute(k_ll: &Mat, lm_labels: &[usize], c: usize) -> ClusterStats {
+        let l = lm_labels.len();
+        assert_eq!(k_ll.rows(), l);
+        assert_eq!(k_ll.cols(), l);
+        let mut counts = vec![0usize; c];
+        for &u in lm_labels {
+            assert!(u < c, "label {u} out of range {c}");
+            counts[u] += 1;
+        }
+        let inv: Vec<f32> = counts
+            .iter()
+            .map(|&s| if s > 0 { 1.0 / s as f32 } else { 0.0 })
+            .collect();
+        // g_j = inv_j^2 sum_{m,n in j} K_mn, accumulated row-wise:
+        // for each row m, add inv^2 * sum_{n in j(m)==j} ... grouped by
+        // (label(m), label(n)) pairs where only equal labels contribute.
+        let mut g = vec![0.0f64; c];
+        for m in 0..l {
+            let um = lm_labels[m];
+            if counts[um] == 0 {
+                continue;
+            }
+            let row = k_ll.row(m);
+            let mut acc = 0.0f64;
+            for (n, &kv) in row.iter().enumerate() {
+                if lm_labels[n] == um {
+                    acc += kv as f64;
+                }
+            }
+            g[um] += acc;
+        }
+        let g: Vec<f32> = g
+            .iter()
+            .zip(&inv)
+            .map(|(&q, &iv)| (q as f32) * iv * iv)
+            .collect();
+        ClusterStats { counts, inv, g }
+    }
+
+    /// True where the cluster is non-empty.
+    pub fn valid(&self) -> Vec<bool> {
+        self.counts.iter().map(|&s| s > 0).collect()
+    }
+}
+
+/// Cluster average similarity f (Eq.6/17): `f[r][j] = inv_j *
+/// sum_{m: label(m)=j} K[r][m]` for every row of the block.
+pub fn similarity_f(k_block: &Mat, lm_labels: &[usize], stats: &ClusterStats) -> Mat {
+    let c = stats.counts.len();
+    let rows = k_block.rows();
+    assert_eq!(k_block.cols(), lm_labels.len());
+    let mut f = Mat::zeros(rows, c);
+    for r in 0..rows {
+        let krow = k_block.row(r);
+        let frow = f.row_mut(r);
+        for (m, &kv) in krow.iter().enumerate() {
+            frow[lm_labels[m]] += kv;
+        }
+        for (j, v) in frow.iter_mut().enumerate() {
+            *v *= stats.inv[j];
+        }
+    }
+    f
+}
+
+/// Label update (Eq.4/15): `argmin_j g_j - 2 f_rj` over non-empty
+/// clusters. Returns one label per row of `f`.
+pub fn argmin_labels(f: &Mat, stats: &ClusterStats) -> Vec<usize> {
+    let c = stats.counts.len();
+    assert_eq!(f.cols(), c);
+    let mut labels = Vec::with_capacity(f.rows());
+    for r in 0..f.rows() {
+        let frow = f.row(r);
+        let mut best = usize::MAX;
+        let mut best_d = f32::INFINITY;
+        for j in 0..c {
+            if stats.counts[j] == 0 {
+                continue;
+            }
+            let d = stats.g[j] - 2.0 * frow[j];
+            if d < best_d {
+                best_d = d;
+                best = j;
+            }
+        }
+        debug_assert!(best != usize::MAX, "all clusters empty");
+        labels.push(best);
+    }
+    labels
+}
+
+/// One fused inner-loop iteration on the native path: compute stats from
+/// `k_ll`, then f and labels for `k_block` rows. Mirrors the PJRT
+/// `inner_*` artifact.
+pub fn inner_iteration(
+    k_block: &Mat,
+    k_ll: &Mat,
+    lm_labels: &[usize],
+    c: usize,
+) -> (Vec<usize>, ClusterStats) {
+    let stats = ClusterStats::compute(k_ll, lm_labels, c);
+    let f = similarity_f(k_block, lm_labels, &stats);
+    (argmin_labels(&f, &stats), stats)
+}
+
+/// Partial kernel k-means cost (Eq.1/9) of a labelled block:
+/// `sum_r K_rr - 2 f_{r, u_r} + g_{u_r}`.
+pub fn block_cost(
+    diag: &[f32],
+    f: &Mat,
+    labels: &[usize],
+    stats: &ClusterStats,
+) -> f64 {
+    assert_eq!(diag.len(), labels.len());
+    let mut total = 0.0f64;
+    for (r, &u) in labels.iter().enumerate() {
+        total += diag[r] as f64 - 2.0 * f.at(r, u) as f64 + stats.g[u] as f64;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{GramSource, KernelFn, VecGram};
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, n: usize, l: usize, c: usize) -> (VecGram, Vec<usize>, Vec<usize>, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, 4, |_, _| rng.normal32(0.0, 2.0));
+        let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.2 }, 2);
+        let rows: Vec<usize> = (0..n).collect();
+        let lms: Vec<usize> = (0..l).collect();
+        let labels: Vec<usize> = (0..l).map(|_| rng.below(c)).collect();
+        (g, rows, lms, labels)
+    }
+
+    #[test]
+    fn stats_counts_and_inv() {
+        let (g, _, lms, labels) = setup(0, 40, 20, 5);
+        let kll = g.block_mat(&lms, &lms);
+        let stats = ClusterStats::compute(&kll, &labels, 5);
+        assert_eq!(stats.counts.iter().sum::<usize>(), 20);
+        for j in 0..5 {
+            if stats.counts[j] > 0 {
+                assert!((stats.inv[j] - 1.0 / stats.counts[j] as f32).abs() < 1e-7);
+            } else {
+                assert_eq!(stats.inv[j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn g_matches_naive_quadratic_form() {
+        let (g, _, lms, labels) = setup(1, 30, 16, 4);
+        let kll = g.block_mat(&lms, &lms);
+        let stats = ClusterStats::compute(&kll, &labels, 4);
+        for j in 0..4 {
+            let mut want = 0.0f64;
+            for m in 0..16 {
+                for n in 0..16 {
+                    if labels[m] == j && labels[n] == j {
+                        want += kll.at(m, n) as f64;
+                    }
+                }
+            }
+            let sz = stats.counts[j] as f64;
+            let want = if sz > 0.0 { want / (sz * sz) } else { 0.0 };
+            assert!((stats.g[j] as f64 - want).abs() < 1e-4, "cluster {j}");
+        }
+    }
+
+    #[test]
+    fn f_matches_naive() {
+        let (g, rows, lms, labels) = setup(2, 25, 12, 3);
+        let kb = g.block_mat(&rows, &lms);
+        let kll = g.block_mat(&lms, &lms);
+        let stats = ClusterStats::compute(&kll, &labels, 3);
+        let f = similarity_f(&kb, &labels, &stats);
+        for r in 0..25 {
+            for j in 0..3 {
+                let mut want = 0.0f32;
+                for m in 0..12 {
+                    if labels[m] == j {
+                        want += kb.at(r, m);
+                    }
+                }
+                want *= stats.inv[j];
+                assert!((f.at(r, j) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn argmin_skips_empty_clusters() {
+        let (g, rows, lms, mut labels) = setup(3, 20, 10, 6);
+        labels.iter_mut().for_each(|u| *u %= 3); // clusters 3..6 empty
+        let kb = g.block_mat(&rows, &lms);
+        let kll = g.block_mat(&lms, &lms);
+        let (new_labels, stats) = inner_iteration(&kb, &kll, &labels, 6);
+        assert!(new_labels.iter().all(|&u| u < 3));
+        assert_eq!(&stats.counts[3..], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn iteration_reaches_fixed_point_on_separated_data() {
+        // two tight blobs far apart: one iteration from any init where
+        // both clusters are seeded recovers the partition
+        let mut rng = Rng::new(4);
+        let x = Mat::from_fn(40, 2, |r, _| {
+            let base = if r < 20 { 0.0 } else { 50.0 };
+            rng.normal32(base, 0.5)
+        });
+        let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.01 }, 1);
+        let rows: Vec<usize> = (0..40).collect();
+        let kb = g.block_mat(&rows, &rows);
+        // seed: alternate labels (both clusters present in both blobs)
+        let init: Vec<usize> = (0..40).map(|i| i % 2).collect();
+        let (l1, _) = inner_iteration(&kb, &kb, &init, 2);
+        let (l2, _) = inner_iteration(&kb, &kb, &l1, 2);
+        let (l3, _) = inner_iteration(&kb, &kb, &l2, 2);
+        assert_eq!(l2, l3, "not converged");
+        // blob membership must match
+        for w in l3[..20].windows(2) {
+            assert_eq!(w[0], w[1]);
+        }
+        for w in l3[20..].windows(2) {
+            assert_eq!(w[0], w[1]);
+        }
+        assert_ne!(l3[0], l3[39]);
+    }
+
+    #[test]
+    fn block_cost_is_nonnegative_for_psd_kernel() {
+        let (g, rows, lms, labels) = setup(5, 30, 30, 4);
+        // landmarks == rows here, so this is the exact full-batch cost
+        let kb = g.block_mat(&rows, &lms);
+        let stats = ClusterStats::compute(&kb, &labels, 4);
+        let f = similarity_f(&kb, &labels, &stats);
+        let mut diag = vec![0.0f32; 30];
+        g.diag(&rows, &mut diag);
+        // cost with *consistent* labels (f/g from same labels)
+        let cost = block_cost(&diag, &f, &labels, &stats);
+        assert!(cost >= -1e-3, "cost {cost}");
+    }
+
+    #[test]
+    fn cost_decreases_under_iteration() {
+        let (g, rows, lms, labels) = setup(6, 50, 50, 5);
+        let kb = g.block_mat(&rows, &lms);
+        let mut labels = labels;
+        let mut prev = f64::INFINITY;
+        let mut diag = vec![0.0f32; 50];
+        g.diag(&rows, &mut diag);
+        for _ in 0..10 {
+            let stats = ClusterStats::compute(&kb, &labels, 5);
+            let f = similarity_f(&kb, &labels, &stats);
+            let cost = block_cost(&diag, &f, &labels, &stats);
+            assert!(cost <= prev + 1e-3, "cost rose: {prev} -> {cost}");
+            prev = cost;
+            let new = argmin_labels(&f, &stats);
+            if new == labels {
+                break;
+            }
+            labels = new;
+        }
+    }
+}

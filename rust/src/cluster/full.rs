@@ -1,0 +1,129 @@
+//! Exact full-batch kernel k-means (paper §2) — the baseline every
+//! approximation is measured against, and the B=1, s=1 special case of
+//! the mini-batch algorithm.
+use crate::linalg::Mat;
+
+use super::assign::{argmin_labels, block_cost, similarity_f, ClusterStats};
+
+/// Result of a full-batch run.
+#[derive(Clone, Debug)]
+pub struct FullResult {
+    pub labels: Vec<usize>,
+    /// Cost Omega(W) after every iteration (kernel-trick form).
+    pub cost_history: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Iterate Eq.4 on a dense kernel matrix until the labels reach a fixed
+/// point (Bottou-Bengio guarantees monotone cost) or `max_iter`.
+pub fn full_kernel_kmeans(
+    k: &Mat,
+    init_labels: &[usize],
+    c: usize,
+    max_iter: usize,
+) -> FullResult {
+    let n = k.rows();
+    assert_eq!(k.cols(), n, "kernel matrix must be square");
+    assert_eq!(init_labels.len(), n);
+    let diag: Vec<f32> = (0..n).map(|i| k.at(i, i)).collect();
+    let mut labels = init_labels.to_vec();
+    let mut cost_history = Vec::new();
+    let mut converged = false;
+    let mut iterations = 0;
+    for _ in 0..max_iter {
+        iterations += 1;
+        let stats = ClusterStats::compute(k, &labels, c);
+        let f = similarity_f(k, &labels, &stats);
+        cost_history.push(block_cost(&diag, &f, &labels, &stats));
+        let new_labels = argmin_labels(&f, &stats);
+        if new_labels == labels {
+            converged = true;
+            break;
+        }
+        labels = new_labels;
+    }
+    FullResult { labels, cost_history, iterations, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{GramSource, KernelFn, VecGram};
+    use crate::util::rng::Rng;
+
+    fn blobs(seed: u64, per: usize, c: usize, spread: f32) -> (Mat, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let n = per * c;
+        let mut truth = vec![0usize; n];
+        let x = Mat::from_fn(n, 2, |r, col| {
+            let blob = r % c;
+            truth[r] = blob;
+            let center = [(blob % 2) as f32 * spread, (blob / 2) as f32 * spread];
+            rng.normal32(center[col], 1.0)
+        });
+        (x, truth)
+    }
+
+    fn gram(x: Mat) -> Mat {
+        let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.05 }, 2);
+        let idx: Vec<usize> = (0..g.n()).collect();
+        g.block_mat(&idx, &idx)
+    }
+
+    #[test]
+    fn converges_and_cost_monotone() {
+        let (x, _) = blobs(0, 30, 4, 20.0);
+        let k = gram(x);
+        let mut rng = Rng::new(1);
+        let init: Vec<usize> = (0..120).map(|_| rng.below(4)).collect();
+        let res = full_kernel_kmeans(&k, &init, 4, 50);
+        assert!(res.converged);
+        for w in res.cost_history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-3, "cost rose {w:?}");
+        }
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (x, truth) = blobs(2, 25, 4, 40.0);
+        let k = gram(x);
+        // seed with one point from each blob to avoid degenerate inits
+        let mut init = vec![0usize; 100];
+        for (i, item) in init.iter_mut().enumerate() {
+            *item = truth[i]; // start from truth perturbed
+        }
+        init[0] = 1;
+        init[50] = 3;
+        let res = full_kernel_kmeans(&k, &init, 4, 50);
+        // same-blob samples share a label
+        for i in 0..100 {
+            for j in 0..100 {
+                if truth[i] == truth[j] {
+                    assert_eq!(res.labels[i], res.labels[j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_point_is_stable() {
+        let (x, _) = blobs(3, 20, 3, 15.0);
+        let k = gram(x);
+        let mut rng = Rng::new(4);
+        let init: Vec<usize> = (0..60).map(|_| rng.below(3)).collect();
+        let res = full_kernel_kmeans(&k, &init, 3, 100);
+        let again = full_kernel_kmeans(&k, &res.labels, 3, 5);
+        assert_eq!(again.labels, res.labels);
+        assert_eq!(again.iterations, 1);
+    }
+
+    #[test]
+    fn single_cluster_degenerate() {
+        let (x, _) = blobs(5, 10, 2, 5.0);
+        let k = gram(x);
+        let res = full_kernel_kmeans(&k, &vec![0; 20], 1, 10);
+        assert!(res.converged);
+        assert!(res.labels.iter().all(|&u| u == 0));
+    }
+}

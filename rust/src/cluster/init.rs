@@ -1,0 +1,125 @@
+//! Kernel k-means++ seeding (paper §3.1 "i = 0" branch; kernelized
+//! Arthur & Vassilvitskii [8]).
+//!
+//! Medoids are picked from the candidate set with probability
+//! proportional to the squared kernel-space distance to the closest
+//! already-chosen medoid: d^2(x, m) = K_xx + K_mm - 2 K_xm.
+use crate::kernels::GramSource;
+use crate::util::rng::Rng;
+
+/// Pick `c` medoid indices from `candidates` (global sample indices).
+pub fn kernel_kmeans_pp(
+    source: &dyn GramSource,
+    candidates: &[usize],
+    c: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    let n = candidates.len();
+    assert!(c >= 1 && c <= n, "need 1 <= c={c} <= candidates={n}");
+    let mut diag = vec![0.0f32; n];
+    source.diag(candidates, &mut diag);
+
+    let mut chosen: Vec<usize> = Vec::with_capacity(c);
+    let first = rng.below(n);
+    chosen.push(candidates[first]);
+
+    // d2[i] = squared distance to nearest chosen medoid
+    let mut d2 = vec![f64::MAX; n];
+    let mut col = vec![0.0f32; n];
+    let mut latest = first;
+    for _round in 1..c {
+        // update d2 with the latest medoid's kernel column
+        source.block(candidates, &[candidates[latest]], &mut col);
+        let m_diag = diag[latest] as f64;
+        for i in 0..n {
+            let d = diag[i] as f64 + m_diag - 2.0 * col[i] as f64;
+            let d = d.max(0.0);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+        // weighted draw; previously chosen points have d2 = 0
+        latest = rng.weighted(&d2);
+        chosen.push(candidates[latest]);
+    }
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelFn, VecGram};
+    use crate::linalg::Mat;
+
+    fn blob_gram(seed: u64) -> (VecGram, Vec<usize>) {
+        // 4 well-separated blobs of 25 points
+        let mut rng = Rng::new(seed);
+        let centers = [[0.0f32, 0.0], [30.0, 0.0], [0.0, 30.0], [30.0, 30.0]];
+        let x = Mat::from_fn(100, 2, |r, c| {
+            let blob = r / 25;
+            rng.normal32(centers[blob][c], 0.2)
+        });
+        (
+            VecGram::new(x, KernelFn::Rbf { gamma: 0.05 }, 1),
+            (0..100).collect(),
+        )
+    }
+
+    #[test]
+    fn picks_requested_count_distinct() {
+        let (g, cand) = blob_gram(0);
+        let mut rng = Rng::new(1);
+        let m = kernel_kmeans_pp(&g, &cand, 4, &mut rng);
+        assert_eq!(m.len(), 4);
+        let mut s = m.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 4, "duplicate medoids {m:?}");
+    }
+
+    #[test]
+    fn spreads_across_blobs() {
+        // with 4 far blobs and c=4, k-means++ should hit all 4 blobs in
+        // the vast majority of seedings
+        let (g, cand) = blob_gram(1);
+        let mut hits_all = 0;
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let m = kernel_kmeans_pp(&g, &cand, 4, &mut rng);
+            let mut blobs: Vec<usize> = m.iter().map(|&i| i / 25).collect();
+            blobs.sort_unstable();
+            blobs.dedup();
+            if blobs.len() == 4 {
+                hits_all += 1;
+            }
+        }
+        // RBF distances saturate at 2 between far blobs, so covered-blob
+        // residual weight makes occasional misses legitimate
+        assert!(hits_all >= 17, "only {hits_all}/20 seedings covered all blobs");
+    }
+
+    #[test]
+    fn respects_candidate_subset() {
+        let (g, _) = blob_gram(2);
+        let cand: Vec<usize> = (0..50).collect(); // only blobs 0 and 1
+        let mut rng = Rng::new(3);
+        let m = kernel_kmeans_pp(&g, &cand, 3, &mut rng);
+        assert!(m.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn single_cluster_works() {
+        let (g, cand) = blob_gram(4);
+        let mut rng = Rng::new(5);
+        let m = kernel_kmeans_pp(&g, &cand, 1, &mut rng);
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (g, cand) = blob_gram(6);
+        let a = kernel_kmeans_pp(&g, &cand, 5, &mut Rng::new(42));
+        let b = kernel_kmeans_pp(&g, &cand, 5, &mut Rng::new(42));
+        assert_eq!(a, b);
+    }
+}

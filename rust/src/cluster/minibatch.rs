@@ -1,0 +1,755 @@
+//! Distributed mini-batch kernel k-means — the paper's Alg.1 (serial
+//! orchestration; the row-sharded distributed execution plugs in through
+//! [`StepBackend`], and the PJRT-accelerated path through the same trait).
+//!
+//! Outer loop over B disjoint mini-batches:
+//!   1. fetch mini-batch indices (stride or block sampling),
+//!   2. select landmarks (|L| = s N/B, Eq.18) — the a-priori sparse
+//!      centroid representation of Chitta et al.,
+//!   3. initialize labels from the global medoids (kernel k-means++ on
+//!      the first batch, Eq.8 afterwards),
+//!   4. inner GD loop (Eq.15-17) to a label fixed point,
+//!   5. per-cluster medoid extraction (Eq.7/10),
+//!   6. convex merge into the global medoids with
+//!      alpha = |w_j^i| / (|w_j^i| + |w_j|) (Eq.11-13), realized as a
+//!      second medoid approximation (Eq.12); empty clusters keep the old
+//!      prototype (alpha = 0).
+use crate::data::{minibatch_indices, Sampling};
+use crate::kernels::GramSource;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+
+use super::assign::{self, ClusterStats};
+use super::init::kernel_kmeans_pp;
+
+/// One inner-loop iteration strategy. The serial native implementation is
+/// [`NativeBackend`]; `runtime::PjrtBackend` runs the fused AOT artifact;
+/// `distributed::ShardedBackend` splits rows across worker nodes.
+pub trait StepBackend: Sync {
+    /// Given the mini-batch kernel blocks and current landmark labels,
+    /// produce new labels for every mini-batch row plus the cluster stats
+    /// used for the update.
+    fn iterate(
+        &self,
+        k_nl: &Mat,
+        k_ll: &Mat,
+        lm_labels: &[usize],
+        c: usize,
+    ) -> (Vec<usize>, ClusterStats);
+
+    /// Backend name for reports.
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Plain single-process implementation over `cluster::assign`.
+pub struct NativeBackend;
+
+impl StepBackend for NativeBackend {
+    fn iterate(
+        &self,
+        k_nl: &Mat,
+        k_ll: &Mat,
+        lm_labels: &[usize],
+        c: usize,
+    ) -> (Vec<usize>, ClusterStats) {
+        assign::inner_iteration(k_nl, k_ll, lm_labels, c)
+    }
+}
+
+/// How a batch medoid is merged into the global prototype.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergeRule {
+    /// Paper Eq.11-13: convex combination with
+    /// alpha = |w_j^i| / (|w_j^i| + |w_j|), realized via Eq.12.
+    Convex,
+    /// Ablation: alpha = 1 — the batch medoid replaces the global one
+    /// (no memory of earlier mini-batches beyond the init labels).
+    Replace,
+}
+
+/// Configuration for a mini-batch run.
+#[derive(Clone, Debug)]
+pub struct MiniBatchConfig {
+    /// Number of clusters C.
+    pub c: usize,
+    /// Number of mini-batches B.
+    pub b: usize,
+    /// Landmark fraction s (Eq.18): |L| = s * N / B per mini-batch.
+    pub s: f64,
+    pub sampling: Sampling,
+    /// Cap on inner GD iterations per mini-batch.
+    pub max_inner: usize,
+    pub seed: u64,
+    /// Record per-iteration partial costs and a sampled global cost
+    /// (Fig.4c/d observables). Adds kernel evaluations; off for timing runs.
+    pub track_cost: bool,
+    /// Fig.3 offload pipeline: a producer thread (the "device") computes
+    /// the kernel blocks of mini-batch i+1 while the host processes
+    /// mini-batch i.
+    pub offload: bool,
+    /// Medoid merge rule (paper Eq.11-13 by default; `Replace` is the
+    /// alpha = 1 ablation).
+    pub merge_rule: MergeRule,
+}
+
+impl MiniBatchConfig {
+    pub fn new(c: usize, b: usize) -> MiniBatchConfig {
+        MiniBatchConfig {
+            c,
+            b,
+            s: 1.0,
+            sampling: Sampling::Stride,
+            max_inner: 100,
+            seed: 0xD1CE,
+            track_cost: false,
+            offload: false,
+            merge_rule: MergeRule::Convex,
+        }
+    }
+}
+
+/// Per-outer-iteration record (Fig.4 observables + timings).
+#[derive(Clone, Debug)]
+pub struct OuterRecord {
+    pub batch_size: usize,
+    pub landmarks: usize,
+    pub inner_iterations: usize,
+    pub converged: bool,
+    /// Partial cost Omega(W^i) after each inner iteration (if track_cost).
+    pub partial_cost: Vec<f64>,
+    /// Sampled global cost Omega(W) after the merge (if track_cost).
+    pub global_cost: f64,
+    /// Mean kernel-space displacement of the global medoids in this merge.
+    pub medoid_displacement: f64,
+    /// Wall time of the outer iteration in seconds.
+    pub seconds: f64,
+}
+
+/// Producer/consumer overlap accounting for the offload pipeline.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OverlapStats {
+    /// Seconds the producer ("device") spent computing kernel blocks.
+    pub producer_busy_s: f64,
+    /// Seconds the consumer (host inner loop) waited on the queue.
+    pub consumer_wait_s: f64,
+}
+
+impl OverlapStats {
+    /// Fraction of block-production time hidden behind host compute.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.producer_busy_s <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - self.consumer_wait_s / self.producer_busy_s).clamp(0.0, 1.0)
+    }
+}
+
+/// Result of a full mini-batch run.
+#[derive(Clone, Debug)]
+pub struct MiniBatchResult {
+    /// Global medoids (sample indices into the source).
+    pub medoids: Vec<usize>,
+    /// Label of every sample, assigned during its mini-batch pass.
+    pub labels: Vec<usize>,
+    /// Accumulated per-cluster membership counts |w_j|.
+    pub counts: Vec<usize>,
+    pub history: Vec<OuterRecord>,
+    /// Total wall time (seconds).
+    pub seconds: f64,
+    /// Offload pipeline accounting (when `config.offload`).
+    pub overlap: Option<OverlapStats>,
+}
+
+/// The algorithm object: construct once, run on any [`GramSource`].
+pub struct MiniBatchKernelKMeans<'a, B: StepBackend> {
+    pub config: MiniBatchConfig,
+    pub backend: &'a B,
+}
+
+impl<'a, B: StepBackend> MiniBatchKernelKMeans<'a, B> {
+    pub fn new(config: MiniBatchConfig, backend: &'a B) -> Self {
+        MiniBatchKernelKMeans { config, backend }
+    }
+
+    /// Run Alg.1 over the whole source.
+    pub fn run(&self, source: &dyn GramSource) -> MiniBatchResult {
+        let cfg = &self.config;
+        let n = source.n();
+        assert!(cfg.b >= 1 && cfg.b * cfg.c <= n, "B={} C={} too large for N={n}", cfg.b, cfg.c);
+        assert!(cfg.s > 0.0 && cfg.s <= 1.0, "s must be in (0, 1]");
+        let mut rng = Rng::new(cfg.seed);
+        let total_timer = Timer::start();
+
+        // --- plan phase: batch + landmark positions for every outer
+        //     iteration, fixed up front so the offload producer can run
+        //     ahead of the host (and so offload on/off is bit-identical)
+        let mut plan: Vec<(Vec<usize>, Vec<usize>)> = Vec::with_capacity(cfg.b);
+        for i in 0..cfg.b {
+            let batch = minibatch_indices(n, cfg.b, i, cfg.sampling);
+            let nb = batch.len();
+            let l = ((cfg.s * nb as f64).round() as usize).clamp(cfg.c.min(nb), nb);
+            let lm_pos = rng.sample_indices(nb, l);
+            plan.push((batch, lm_pos));
+        }
+        let cost_sample: Vec<usize> = if cfg.track_cost {
+            rng.sample_indices(n, n.min(512))
+        } else {
+            Vec::new()
+        };
+
+        let mut state = RunState {
+            medoids: Vec::new(),
+            counts: vec![0usize; cfg.c],
+            labels: vec![usize::MAX; n],
+            history: Vec::with_capacity(cfg.b),
+            rng,
+            cost_sample,
+        };
+
+        let overlap = if cfg.offload {
+            // Fig.3: the producer thread stands in for the accelerator,
+            // computing mini-batch i+1's kernel blocks while the host
+            // consumes mini-batch i. Queue depth 1 = one batch ahead.
+            let mut overlap = OverlapStats::default();
+            std::thread::scope(|scope| {
+                let (tx, rx) = std::sync::mpsc::sync_channel::<(Mat, Mat, f64)>(1);
+                let plan_ref = &plan;
+                let producer = scope.spawn(move || {
+                    for (batch, lm_pos) in plan_ref.iter() {
+                        let t = Timer::start();
+                        let (k_nl, k_ll) = fetch_blocks(source, batch, lm_pos);
+                        let busy = t.elapsed_s();
+                        if tx.send((k_nl, k_ll, busy)).is_err() {
+                            break;
+                        }
+                    }
+                });
+                for i in 0..cfg.b {
+                    let t = Timer::start();
+                    let (k_nl, k_ll, busy) = rx.recv().expect("offload producer died");
+                    overlap.consumer_wait_s += t.elapsed_s();
+                    overlap.producer_busy_s += busy;
+                    self.process_batch(
+                        source, i, &plan[i].0, &plan[i].1, k_nl, k_ll, &mut state,
+                    );
+                }
+                producer.join().expect("offload producer panicked");
+            });
+            Some(overlap)
+        } else {
+            for i in 0..cfg.b {
+                let (batch, lm_pos) = &plan[i];
+                let (k_nl, k_ll) = fetch_blocks(source, batch, lm_pos);
+                self.process_batch(source, i, batch, lm_pos, k_nl, k_ll, &mut state);
+            }
+            None
+        };
+
+        MiniBatchResult {
+            medoids: state.medoids,
+            labels: state.labels,
+            counts: state.counts,
+            history: state.history,
+            seconds: total_timer.elapsed_s(),
+            overlap,
+        }
+    }
+
+    /// Steps 2-6 of the outer loop for one mini-batch: init labels from
+    /// the global medoids, inner GD loop, medoid extraction, convex merge.
+    #[allow(clippy::too_many_arguments)]
+    fn process_batch(
+        &self,
+        source: &dyn GramSource,
+        i: usize,
+        batch: &[usize],
+        lm_pos: &[usize],
+        k_nl: Mat,
+        k_ll: Mat,
+        state: &mut RunState,
+    ) {
+        let cfg = &self.config;
+        let timer = Timer::start();
+        let nb = batch.len();
+        let l = lm_pos.len();
+
+        // --- initialization (k-means++ on batch 0, Eq.8 afterwards)
+        if i == 0 {
+            state.medoids = kernel_kmeans_pp(source, batch, cfg.c, &mut state.rng);
+        }
+        let mut batch_labels = assign_to_medoids(source, batch, &state.medoids);
+
+        // --- inner GD loop to a label fixed point
+        let mut diag = vec![0.0f32; nb];
+        if cfg.track_cost {
+            source.diag(batch, &mut diag);
+        }
+        let mut partial_cost = Vec::new();
+        let mut inner_iterations = 0;
+        let mut converged = false;
+        let mut stats = ClusterStats::compute(
+            &k_ll,
+            &lm_pos.iter().map(|&p| batch_labels[p]).collect::<Vec<_>>(),
+            cfg.c,
+        );
+        for _t in 0..cfg.max_inner {
+            inner_iterations += 1;
+            let lm_labels: Vec<usize> =
+                lm_pos.iter().map(|&p| batch_labels[p]).collect();
+            let (new_labels, new_stats) =
+                self.backend.iterate(&k_nl, &k_ll, &lm_labels, cfg.c);
+            stats = new_stats;
+            if cfg.track_cost {
+                let f = assign::similarity_f(&k_nl, &lm_labels, &stats);
+                partial_cost.push(assign::block_cost(&diag, &f, &new_labels, &stats));
+            }
+            let fixed = new_labels == batch_labels;
+            batch_labels = new_labels;
+            if fixed {
+                converged = true;
+                break;
+            }
+        }
+
+        // --- per-cluster batch medoids (Eq.7/10): argmin over batch of
+        //     K_ll - 2 f_lj, skipping empty clusters
+        let lm_labels: Vec<usize> = lm_pos.iter().map(|&p| batch_labels[p]).collect();
+        let f = assign::similarity_f(&k_nl, &lm_labels, &stats);
+        let mut full_diag = vec![0.0f32; nb];
+        source.diag(batch, &mut full_diag);
+        let batch_medoids: Vec<Option<usize>> = (0..cfg.c)
+            .map(|j| {
+                if stats.counts[j] == 0 {
+                    return None;
+                }
+                let mut best = None;
+                let mut best_v = f32::INFINITY;
+                for r in 0..nb {
+                    let v = full_diag[r] - 2.0 * f.at(r, j);
+                    if v < best_v {
+                        best_v = v;
+                        best = Some(batch[r]);
+                    }
+                }
+                best
+            })
+            .collect();
+
+        // --- batch membership counts |w_j^i| over all batch rows
+        let mut batch_counts = vec![0usize; cfg.c];
+        for &u in &batch_labels {
+            batch_counts[u] += 1;
+        }
+
+        // --- convex merge (Eq.11-13) via second medoid approximation
+        let mut displacement = 0.0f64;
+        let mut displaced = 0usize;
+        for j in 0..cfg.c {
+            let Some(m_new) = batch_medoids[j] else {
+                continue; // empty in this batch: alpha = 0, keep global
+            };
+            let m_old = state.medoids[j];
+            if state.counts[j] == 0 || m_old == m_new || cfg.merge_rule == MergeRule::Replace {
+                // first real content for this cluster, no motion, or the
+                // alpha = 1 ablation rule
+                if m_old != m_new && state.counts[j] != 0 {
+                    displacement += kernel_distance(source, m_old, m_new);
+                    displaced += 1;
+                }
+                state.medoids[j] = m_new;
+            } else {
+                let alpha =
+                    batch_counts[j] as f64 / (batch_counts[j] + state.counts[j]) as f64;
+                let merged =
+                    merge_medoid(source, batch, &full_diag, m_old, m_new, alpha);
+                // displacement of the global prototype (kernel space)
+                displacement += kernel_distance(source, state.medoids[j], merged);
+                displaced += 1;
+                state.medoids[j] = merged;
+            }
+            state.counts[j] += batch_counts[j];
+        }
+        let displacement = if displaced > 0 {
+            displacement / displaced as f64
+        } else {
+            0.0
+        };
+
+        // write back the labels this batch received
+        for (r, &gidx) in batch.iter().enumerate() {
+            state.labels[gidx] = batch_labels[r];
+        }
+
+        let global_cost = if cfg.track_cost {
+            cost_vs_medoids(source, &state.cost_sample, &state.medoids)
+        } else {
+            0.0
+        };
+        state.history.push(OuterRecord {
+            batch_size: nb,
+            landmarks: l,
+            inner_iterations,
+            converged,
+            partial_cost,
+            global_cost,
+            medoid_displacement: displacement,
+            seconds: timer.elapsed_s(),
+        });
+    }
+}
+
+/// Mutable run state threaded through the outer loop.
+struct RunState {
+    medoids: Vec<usize>,
+    counts: Vec<usize>,
+    labels: Vec<usize>,
+    history: Vec<OuterRecord>,
+    rng: Rng,
+    cost_sample: Vec<usize>,
+}
+
+/// Fetch the two kernel blocks of one mini-batch (the producer workload).
+fn fetch_blocks(source: &dyn GramSource, batch: &[usize], lm_pos: &[usize]) -> (Mat, Mat) {
+    let lm_idx: Vec<usize> = lm_pos.iter().map(|&p| batch[p]).collect();
+    let k_nl = source.block_mat(batch, &lm_idx);
+    let k_ll = k_nl.gather(lm_pos);
+    (k_nl, k_ll)
+}
+
+/// Squared kernel-space distance between two samples, square-rooted.
+fn kernel_distance(source: &dyn GramSource, a: usize, b: usize) -> f64 {
+    let mut dd = [0.0f32; 2];
+    source.diag(&[a, b], &mut dd);
+    let mut cross = [0.0f32];
+    source.block(&[a], &[b], &mut cross);
+    ((dd[0] + dd[1] - 2.0 * cross[0]).max(0.0) as f64).sqrt()
+}
+
+/// Eq.12: medoid of the convex combination (1-alpha) phi(m_old) +
+/// alpha phi(m_new), restricted to the batch plus both current medoids
+/// (including them keeps alpha -> 0/1 exact).
+fn merge_medoid(
+    source: &dyn GramSource,
+    batch: &[usize],
+    batch_diag: &[f32],
+    m_old: usize,
+    m_new: usize,
+    alpha: f64,
+) -> usize {
+    let mut candidates: Vec<usize> = Vec::with_capacity(batch.len() + 2);
+    candidates.extend_from_slice(batch);
+    candidates.push(m_old);
+    candidates.push(m_new);
+    let cols = [m_old, m_new];
+    let mut block = vec![0.0f32; candidates.len() * 2];
+    source.block(&candidates, &cols, &mut block);
+    let mut diag = vec![0.0f32; candidates.len()];
+    diag[..batch.len()].copy_from_slice(batch_diag);
+    source.diag(&candidates[batch.len()..], &mut diag[batch.len()..]);
+    let mut best = m_old;
+    let mut best_v = f64::INFINITY;
+    for (r, &cand) in candidates.iter().enumerate() {
+        let k_old = block[r * 2] as f64;
+        let k_new = block[r * 2 + 1] as f64;
+        let v = diag[r] as f64 - 2.0 * ((1.0 - alpha) * k_old + alpha * k_new);
+        if v < best_v {
+            best_v = v;
+            best = cand;
+        }
+    }
+    best
+}
+
+/// Nearest-medoid assignment (Eq.8, with the medoid self-similarity term
+/// kept so non-constant-diagonal kernels are handled correctly).
+pub fn assign_to_medoids(
+    source: &dyn GramSource,
+    samples: &[usize],
+    medoids: &[usize],
+) -> Vec<usize> {
+    let k = source.block_mat(samples, medoids);
+    let mut m_diag = vec![0.0f32; medoids.len()];
+    source.diag(medoids, &mut m_diag);
+    (0..samples.len())
+        .map(|r| {
+            let row = k.row(r);
+            let mut best = 0;
+            let mut best_v = f32::INFINITY;
+            for (j, &kv) in row.iter().enumerate() {
+                let v = m_diag[j] - 2.0 * kv; // + K_xx (constant in j)
+                if v < best_v {
+                    best_v = v;
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Sampled global cost: sum over `samples` of the squared kernel-space
+/// distance to the nearest medoid.
+pub fn cost_vs_medoids(
+    source: &dyn GramSource,
+    samples: &[usize],
+    medoids: &[usize],
+) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let k = source.block_mat(samples, medoids);
+    let mut m_diag = vec![0.0f32; medoids.len()];
+    source.diag(medoids, &mut m_diag);
+    let mut s_diag = vec![0.0f32; samples.len()];
+    source.diag(samples, &mut s_diag);
+    let mut total = 0.0f64;
+    for r in 0..samples.len() {
+        let row = k.row(r);
+        let mut best = f64::INFINITY;
+        for (j, &kv) in row.iter().enumerate() {
+            let v = (s_diag[r] + m_diag[j] - 2.0 * kv) as f64;
+            if v < best {
+                best = v;
+            }
+        }
+        total += best.max(0.0);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::toy2d;
+    use crate::kernels::{KernelFn, VecGram};
+
+    fn toy_gram(seed: u64, per_cluster: usize) -> (VecGram, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let d = toy2d(&mut rng, per_cluster);
+        let truth = d.y.clone();
+        (VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2), truth)
+    }
+
+    fn purity(labels: &[usize], truth: &[usize], c: usize, classes: usize) -> f64 {
+        // majority-vote accuracy, computed locally to avoid depending on
+        // the metrics module in unit tests
+        let mut table = vec![vec![0usize; classes]; c];
+        for (&u, &y) in labels.iter().zip(truth) {
+            table[u][y] += 1;
+        }
+        let correct: usize = table.iter().map(|row| row.iter().max().unwrap()).sum();
+        correct as f64 / labels.len() as f64
+    }
+
+    #[test]
+    fn single_batch_recovers_toy_clusters() {
+        let (g, truth) = toy_gram(0, 100);
+        let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 1), &NativeBackend);
+        let res = algo.run(&g);
+        assert_eq!(res.labels.len(), 400);
+        assert!(res.labels.iter().all(|&u| u < 4));
+        let p = purity(&res.labels, &truth, 4, 4);
+        assert!(p > 0.9, "purity {p}");
+    }
+
+    #[test]
+    fn multi_batch_still_clusters() {
+        let (g, truth) = toy_gram(1, 100);
+        let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 4), &NativeBackend);
+        let res = algo.run(&g);
+        assert_eq!(res.history.len(), 4);
+        let p = purity(&res.labels, &truth, 4, 4);
+        assert!(p > 0.85, "purity {p}");
+    }
+
+    #[test]
+    fn landmarks_reduce_but_preserve_structure() {
+        let (g, truth) = toy_gram(2, 100);
+        let mut cfg = MiniBatchConfig::new(4, 2);
+        cfg.s = 0.5;
+        let algo = MiniBatchKernelKMeans::new(cfg, &NativeBackend);
+        let res = algo.run(&g);
+        for rec in &res.history {
+            assert_eq!(rec.landmarks, rec.batch_size / 2);
+        }
+        let p = purity(&res.labels, &truth, 4, 4);
+        assert!(p > 0.8, "purity {p}");
+    }
+
+    #[test]
+    fn counts_sum_to_n() {
+        let (g, _) = toy_gram(3, 50);
+        let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 4), &NativeBackend);
+        let res = algo.run(&g);
+        assert_eq!(res.counts.iter().sum::<usize>(), 200);
+    }
+
+    #[test]
+    fn all_samples_labelled() {
+        let (g, _) = toy_gram(4, 30);
+        for b in [1usize, 3, 5] {
+            let algo =
+                MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, b), &NativeBackend);
+            let res = algo.run(&g);
+            assert!(
+                res.labels.iter().all(|&u| u != usize::MAX),
+                "unlabelled samples with b={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn medoids_are_valid_indices_and_distinct_on_toy() {
+        let (g, _) = toy_gram(5, 50);
+        let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 2), &NativeBackend);
+        let res = algo.run(&g);
+        assert_eq!(res.medoids.len(), 4);
+        assert!(res.medoids.iter().all(|&m| m < 200));
+        let mut s = res.medoids.clone();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), 4, "degenerate medoids {:?}", res.medoids);
+    }
+
+    #[test]
+    fn track_cost_records_monotone_partial_costs() {
+        let (g, _) = toy_gram(6, 50);
+        let mut cfg = MiniBatchConfig::new(4, 2);
+        cfg.track_cost = true;
+        let algo = MiniBatchKernelKMeans::new(cfg, &NativeBackend);
+        let res = algo.run(&g);
+        for rec in &res.history {
+            assert!(!rec.partial_cost.is_empty());
+            for w in rec.partial_cost.windows(2) {
+                assert!(w[1] <= w[0] + 1e-2, "partial cost rose: {w:?}");
+            }
+            assert!(rec.global_cost > 0.0);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let (g, _) = toy_gram(7, 40);
+        let algo1 = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 3), &NativeBackend);
+        let algo2 = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 3), &NativeBackend);
+        let a = algo1.run(&g);
+        let b = algo2.run(&g);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.medoids, b.medoids);
+    }
+
+    #[test]
+    fn assign_to_medoids_is_nearest() {
+        let (g, truth) = toy_gram(8, 50);
+        let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 1), &NativeBackend);
+        let res = algo.run(&g);
+        // assigning training samples to final medoids should agree well
+        // with the training labels
+        let idx: Vec<usize> = (0..200).collect();
+        let assigned = assign_to_medoids(&g, &idx, &res.medoids);
+        // medoid-based assignment is not identical to the converged
+        // centroid memberships (medoid != centroid), but must agree on
+        // the bulk and preserve the cluster structure
+        let agree = assigned
+            .iter()
+            .zip(&res.labels)
+            .filter(|(a, b)| a == b)
+            .count();
+        assert!(agree as f64 / 200.0 > 0.7, "agreement {agree}/200");
+        let p = purity(&assigned, &truth, 4, 4);
+        assert!(p > 0.8, "purity {p}");
+    }
+
+    #[test]
+    fn block_sampling_works_too() {
+        let (g, truth) = toy_gram(9, 80);
+        let mut cfg = MiniBatchConfig::new(4, 4);
+        cfg.sampling = Sampling::Block;
+        let algo = MiniBatchKernelKMeans::new(cfg, &NativeBackend);
+        let res = algo.run(&g);
+        // toy2d shuffles samples, so block sampling is still representative
+        let p = purity(&res.labels, &truth, 4, 4);
+        assert!(p > 0.8, "purity {p}");
+    }
+
+    #[test]
+    #[should_panic(expected = "too large")]
+    fn rejects_b_times_c_over_n() {
+        let (g, _) = toy_gram(10, 5); // n = 20
+        let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 6), &NativeBackend);
+        let _ = algo.run(&g);
+    }
+}
+
+#[cfg(test)]
+mod offload_tests {
+    use super::*;
+    use crate::data::toy2d;
+    use crate::kernels::{KernelFn, VecGram};
+
+    #[test]
+    fn offload_matches_inline_exactly() {
+        // the Fig.3 pipeline must be a pure scheduling change
+        let mut rng = Rng::new(0);
+        let d = toy2d(&mut rng, 60);
+        let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
+        let mut cfg = MiniBatchConfig::new(4, 4);
+        cfg.offload = false;
+        let inline = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+        cfg.offload = true;
+        let off = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
+        assert_eq!(inline.labels, off.labels);
+        assert_eq!(inline.medoids, off.medoids);
+        assert_eq!(inline.counts, off.counts);
+        assert!(off.overlap.is_some());
+        assert!(inline.overlap.is_none());
+    }
+
+    #[test]
+    fn overlap_stats_populated() {
+        let mut rng = Rng::new(1);
+        let d = toy2d(&mut rng, 50);
+        let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
+        let mut cfg = MiniBatchConfig::new(4, 5);
+        cfg.offload = true;
+        let res = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
+        let ov = res.overlap.unwrap();
+        assert!(ov.producer_busy_s > 0.0);
+        assert!((0.0..=1.0).contains(&ov.overlap_efficiency()));
+    }
+}
+
+#[cfg(test)]
+mod merge_rule_tests {
+    use super::*;
+    use crate::data::toy2d;
+    use crate::kernels::{KernelFn, VecGram};
+
+    #[test]
+    fn replace_rule_runs_and_moves_more() {
+        let mut rng = Rng::new(0);
+        let d = toy2d(&mut rng, 80);
+        let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 1);
+        let mut cfg = MiniBatchConfig::new(4, 8);
+        cfg.track_cost = false;
+        let convex = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+        cfg.merge_rule = MergeRule::Replace;
+        let replace = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
+        let displ = |r: &MiniBatchResult| -> f64 {
+            r.history.iter().map(|h| h.medoid_displacement).sum()
+        };
+        // the alpha rule damps prototype motion (Eq.13's whole point)
+        assert!(
+            displ(&convex) <= displ(&replace) + 1e-9,
+            "convex {} vs replace {}",
+            displ(&convex),
+            displ(&replace)
+        );
+        // both remain valid clusterings
+        assert_eq!(replace.counts.iter().sum::<usize>(), 320);
+        assert!(replace.labels.iter().all(|&u| u < 4));
+    }
+}

@@ -1,0 +1,25 @@
+//! Kernel k-means: the paper's algorithms.
+//!
+//! * [`full`] — exact full-batch kernel k-means (Eq.4-6), the reference
+//!   the approximations are measured against.
+//! * [`minibatch`] — the paper's contribution (Alg.1, serial form): B
+//!   disjoint mini-batches, per-batch GD to convergence, medoid carry-over
+//!   (Eq.7/10), convex merge with alpha = |w_i|/(|w_i|+|w|) (Eq.11-13),
+//!   a-priori landmark sparsification (Eq.14-18), empty-cluster rule.
+//! * [`init`] — kernel k-means++ seeding (kernelized Arthur-Vassilvitskii).
+//! * [`assign`] — shared label-update math (f, g, argmin) used by the
+//!   serial driver, the distributed runtime, and the PJRT path.
+//! * [`elbow`] — the elbow criterion used to pick C in §4.4/4.5.
+pub mod assign;
+pub mod elbow;
+pub mod full;
+pub mod init;
+pub mod minibatch;
+
+pub use assign::ClusterStats;
+pub use full::{full_kernel_kmeans, FullResult};
+pub use init::kernel_kmeans_pp;
+pub use minibatch::{
+    assign_to_medoids, MergeRule, MiniBatchConfig, MiniBatchKernelKMeans,
+    MiniBatchResult, OuterRecord,
+};

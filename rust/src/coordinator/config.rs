@@ -1,0 +1,343 @@
+//! Run configuration: dataset, kernel, algorithm and backend selection.
+use std::str::FromStr;
+
+use crate::data::Sampling;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Which dataset substrate to generate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DatasetSpec {
+    /// Paper §4.1: 4 Gaussian clusters in 2D, `per_cluster` each.
+    Toy2d { per_cluster: usize },
+    /// Synthetic MNIST-like digits: `train` + `test` samples.
+    Mnist { train: usize, test: usize },
+    /// Synthetic RCV1-like corpus projected to `dim`.
+    Rcv1 { n: usize, classes: usize, dim: usize },
+    /// Noisy MNIST: `base` samples x `copies` perturbed replicas.
+    NoisyMnist { base: usize, copies: usize },
+    /// MD trajectory with `frames` recorded frames.
+    Md { frames: usize },
+}
+
+impl FromStr for DatasetSpec {
+    type Err = String;
+
+    /// `toy2d[:per]`, `mnist[:train[:test]]`, `rcv1[:n[:classes[:dim]]]`,
+    /// `noisy-mnist[:base[:copies]]`, `md[:frames]`.
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let num = |i: usize, default: usize| -> std::result::Result<usize, String> {
+            match parts.get(i) {
+                None => Ok(default),
+                Some(v) => v.parse().map_err(|_| format!("bad number '{v}' in '{s}'")),
+            }
+        };
+        match parts[0] {
+            "toy2d" => Ok(DatasetSpec::Toy2d { per_cluster: num(1, 10_000)? }),
+            "mnist" => Ok(DatasetSpec::Mnist { train: num(1, 60_000)?, test: num(2, 10_000)? }),
+            "rcv1" => Ok(DatasetSpec::Rcv1 {
+                n: num(1, 188_000)?,
+                classes: num(2, 50)?,
+                dim: num(3, 256)?,
+            }),
+            "noisy-mnist" => {
+                Ok(DatasetSpec::NoisyMnist { base: num(1, 60_000)?, copies: num(2, 20)? })
+            }
+            "md" => Ok(DatasetSpec::Md { frames: num(1, 100_000)? }),
+            other => Err(format!("unknown dataset '{other}'")),
+        }
+    }
+}
+
+/// Which execution backend runs the inner loop / kernel evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Native multithreaded CPU path.
+    Native,
+    /// PJRT artifacts (Pallas-lowered) for Gram blocks + inner iteration.
+    Pjrt,
+    /// Row-sharded across `p` in-process nodes (native math).
+    Sharded(usize),
+}
+
+impl FromStr for BackendChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        if s == "native" {
+            Ok(BackendChoice::Native)
+        } else if s == "pjrt" {
+            Ok(BackendChoice::Pjrt)
+        } else if let Some(p) = s.strip_prefix("sharded:") {
+            p.parse()
+                .map(BackendChoice::Sharded)
+                .map_err(|_| format!("bad node count '{p}'"))
+        } else {
+            Err(format!("unknown backend '{s}' (native|pjrt|sharded:<p>)"))
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: DatasetSpec,
+    /// Number of clusters; `None` = select via the elbow criterion.
+    pub c: Option<usize>,
+    pub b: usize,
+    pub s: f64,
+    pub sampling: Sampling,
+    pub backend: BackendChoice,
+    pub threads: usize,
+    pub seed: u64,
+    /// k-means++ restarts, keeping the minimum-cost solution (§4.5 uses 5).
+    pub restarts: usize,
+    /// sigma = sigma_factor * d_max (paper: 4 d_max).
+    pub sigma_factor: f32,
+    pub track_cost: bool,
+    /// Fig.3 offload pipeline.
+    pub offload: bool,
+}
+
+impl RunConfig {
+    pub fn new(dataset: DatasetSpec) -> RunConfig {
+        RunConfig {
+            dataset,
+            c: None,
+            b: 4,
+            s: 1.0,
+            sampling: Sampling::Stride,
+            backend: BackendChoice::Native,
+            threads: crate::util::threadpool::default_threads(),
+            seed: 42,
+            restarts: 1,
+            sigma_factor: 4.0,
+            track_cost: false,
+            offload: false,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.b == 0 {
+            return Err(Error::Config("b must be >= 1".into()));
+        }
+        if !(self.s > 0.0 && self.s <= 1.0) {
+            return Err(Error::Config(format!("s={} out of (0, 1]", self.s)));
+        }
+        if self.restarts == 0 {
+            return Err(Error::Config("restarts must be >= 1".into()));
+        }
+        if let Some(c) = self.c {
+            if c < 1 {
+                return Err(Error::Config("c must be >= 1".into()));
+            }
+        }
+        Ok(())
+    }
+
+    /// Load from a JSON object (the `--config file.json` path). Missing
+    /// fields keep their defaults; unknown fields are rejected so typos
+    /// fail loudly.
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| Error::Config("config root must be an object".into()))?;
+        const KNOWN: &[&str] = &[
+            "dataset", "c", "b", "s", "sampling", "backend", "threads", "seed",
+            "restarts", "sigma_factor", "track_cost", "offload",
+        ];
+        for key in obj.keys() {
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(Error::Config(format!("unknown config field '{key}'")));
+            }
+        }
+        let dataset: DatasetSpec = j
+            .req_str("dataset")?
+            .parse()
+            .map_err(Error::Config)?;
+        let mut cfg = RunConfig::new(dataset);
+        if let Some(v) = j.get("c") {
+            cfg.c = match v {
+                Json::Null => None,
+                Json::Str(s) if s == "elbow" => None,
+                other => Some(other.as_usize().ok_or_else(|| {
+                    Error::Config("'c' must be an integer, null or \"elbow\"".into())
+                })?),
+            };
+        }
+        if let Some(v) = j.get("b") {
+            cfg.b = v.as_usize().ok_or_else(|| Error::Config("'b' not an int".into()))?;
+        }
+        if let Some(v) = j.get("s") {
+            cfg.s = v.as_f64().ok_or_else(|| Error::Config("'s' not a number".into()))?;
+        }
+        if let Some(v) = j.get("sampling") {
+            cfg.sampling = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'sampling' not a string".into()))?
+                .parse()
+                .map_err(Error::Config)?;
+        }
+        if let Some(v) = j.get("backend") {
+            cfg.backend = v
+                .as_str()
+                .ok_or_else(|| Error::Config("'backend' not a string".into()))?
+                .parse()
+                .map_err(Error::Config)?;
+        }
+        if let Some(v) = j.get("threads") {
+            cfg.threads = v
+                .as_usize()
+                .ok_or_else(|| Error::Config("'threads' not an int".into()))?
+                .max(1);
+        }
+        if let Some(v) = j.get("seed") {
+            cfg.seed = v
+                .as_f64()
+                .ok_or_else(|| Error::Config("'seed' not a number".into()))?
+                as u64;
+        }
+        if let Some(v) = j.get("restarts") {
+            cfg.restarts =
+                v.as_usize().ok_or_else(|| Error::Config("'restarts' not an int".into()))?;
+        }
+        if let Some(v) = j.get("sigma_factor") {
+            cfg.sigma_factor = v
+                .as_f64()
+                .ok_or_else(|| Error::Config("'sigma_factor' not a number".into()))?
+                as f32;
+        }
+        if let Some(v) = j.get("track_cost") {
+            cfg.track_cost =
+                v.as_bool().ok_or_else(|| Error::Config("'track_cost' not a bool".into()))?;
+        }
+        if let Some(v) = j.get("offload") {
+            cfg.offload =
+                v.as_bool().ok_or_else(|| Error::Config("'offload' not a bool".into()))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Echo into the report JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("dataset", Json::str(&format!("{:?}", self.dataset))),
+            (
+                "c",
+                self.c.map(|c| Json::num(c as f64)).unwrap_or(Json::str("elbow")),
+            ),
+            ("b", Json::num(self.b as f64)),
+            ("s", Json::num(self.s)),
+            ("sampling", Json::str(&format!("{:?}", self.sampling))),
+            ("backend", Json::str(&format!("{:?}", self.backend))),
+            ("threads", Json::num(self.threads as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("restarts", Json::num(self.restarts as f64)),
+            ("sigma_factor", Json::num(self.sigma_factor as f64)),
+            ("offload", Json::Bool(self.offload)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_spec_parsing() {
+        assert_eq!(
+            "toy2d:500".parse::<DatasetSpec>().unwrap(),
+            DatasetSpec::Toy2d { per_cluster: 500 }
+        );
+        assert_eq!(
+            "mnist".parse::<DatasetSpec>().unwrap(),
+            DatasetSpec::Mnist { train: 60_000, test: 10_000 }
+        );
+        assert_eq!(
+            "rcv1:1000:12:64".parse::<DatasetSpec>().unwrap(),
+            DatasetSpec::Rcv1 { n: 1000, classes: 12, dim: 64 }
+        );
+        assert_eq!(
+            "noisy-mnist:200:5".parse::<DatasetSpec>().unwrap(),
+            DatasetSpec::NoisyMnist { base: 200, copies: 5 }
+        );
+        assert_eq!(
+            "md:5000".parse::<DatasetSpec>().unwrap(),
+            DatasetSpec::Md { frames: 5000 }
+        );
+        assert!("nope".parse::<DatasetSpec>().is_err());
+        assert!("mnist:abc".parse::<DatasetSpec>().is_err());
+    }
+
+    #[test]
+    fn backend_parsing() {
+        assert_eq!("native".parse::<BackendChoice>().unwrap(), BackendChoice::Native);
+        assert_eq!("pjrt".parse::<BackendChoice>().unwrap(), BackendChoice::Pjrt);
+        assert_eq!(
+            "sharded:8".parse::<BackendChoice>().unwrap(),
+            BackendChoice::Sharded(8)
+        );
+        assert!("sharded:x".parse::<BackendChoice>().is_err());
+    }
+
+    #[test]
+    fn validation() {
+        let mut cfg = RunConfig::new(DatasetSpec::Toy2d { per_cluster: 10 });
+        assert!(cfg.validate().is_ok());
+        cfg.s = 0.0;
+        assert!(cfg.validate().is_err());
+        cfg.s = 0.5;
+        cfg.b = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_full_roundtrip() {
+        let j = Json::parse(
+            r#"{"dataset": "mnist:500:100", "c": 10, "b": 8, "s": 0.5,
+                "sampling": "block", "backend": "sharded:4", "threads": 2,
+                "seed": 9, "restarts": 3, "sigma_factor": 2.0,
+                "track_cost": true, "offload": true}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.dataset, DatasetSpec::Mnist { train: 500, test: 100 });
+        assert_eq!(cfg.c, Some(10));
+        assert_eq!(cfg.b, 8);
+        assert_eq!(cfg.s, 0.5);
+        assert_eq!(cfg.sampling, Sampling::Block);
+        assert_eq!(cfg.backend, BackendChoice::Sharded(4));
+        assert_eq!(cfg.threads, 2);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.restarts, 3);
+        assert!(cfg.track_cost && cfg.offload);
+    }
+
+    #[test]
+    fn from_json_defaults_and_elbow() {
+        let j = Json::parse(r#"{"dataset": "toy2d:100", "c": "elbow"}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.c, None);
+        assert_eq!(cfg.b, 4); // default preserved
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_and_bad_fields() {
+        let j = Json::parse(r#"{"dataset": "toy2d", "bee": 4}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"dataset": "toy2d", "s": "half"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"b": 4}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err()); // dataset required
+    }
+
+    #[test]
+    fn json_echo_parses() {
+        let cfg = RunConfig::new(DatasetSpec::Mnist { train: 100, test: 10 });
+        let j = cfg.to_json();
+        assert_eq!(j.get("b").and_then(|v| v.as_usize()), Some(4));
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

@@ -1,0 +1,11 @@
+//! Top-level coordinator: configuration, the Eq.19 memory planner, and
+//! the end-to-end runner that wires datasets -> Gram sources -> the
+//! mini-batch algorithm -> metrics reports. This is what `main.rs` (the
+//! CLI), the examples and the benches drive.
+pub mod config;
+pub mod memory;
+pub mod runner;
+
+pub use config::{BackendChoice, DatasetSpec, RunConfig};
+pub use memory::{b_min, footprint_bytes, paper_b_min};
+pub use runner::{run_experiment, RunReport};

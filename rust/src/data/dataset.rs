@@ -1,0 +1,109 @@
+//! Labelled in-memory dataset container.
+use crate::linalg::Mat;
+
+/// A labelled dataset: `n x d` features + ground-truth class per sample
+/// (used only for evaluation — the clustering never sees labels).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Mat,
+    pub y: Vec<usize>,
+    /// Number of distinct ground-truth classes.
+    pub classes: usize,
+    /// Human-readable provenance for reports.
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn new(name: &str, x: Mat, y: Vec<usize>, classes: usize) -> Dataset {
+        assert_eq!(x.rows(), y.len(), "features/labels length mismatch");
+        debug_assert!(y.iter().all(|&c| c < classes));
+        Dataset { x, y, classes, name: name.to_string() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Subset by sample indices (used for train/test splits and
+    /// mini-batch extraction in tests).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.gather(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            classes: self.classes,
+            name: self.name.clone(),
+        }
+    }
+
+    /// Split into (first `n_train` samples, rest). Generators already
+    /// shuffle, so a prefix split is a random split.
+    pub fn split(&self, n_train: usize) -> (Dataset, Dataset) {
+        assert!(n_train <= self.n());
+        let train_idx: Vec<usize> = (0..n_train).collect();
+        let test_idx: Vec<usize> = (n_train..self.n()).collect();
+        (self.subset(&train_idx), self.subset(&test_idx))
+    }
+
+    /// Maximum pairwise squared distance, estimated from a sample. The
+    /// paper sets sigma = 4 d_max "to mimic a linear kernel behaviour";
+    /// computing the exact max is O(N^2), so we follow common practice and
+    /// estimate it from `sample` random pairs.
+    pub fn est_d2_max(&self, rng: &mut crate::util::rng::Rng, sample: usize) -> f32 {
+        let n = self.n();
+        let mut best = 0.0f32;
+        for _ in 0..sample {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            let d2: f32 = self
+                .x
+                .row(i)
+                .iter()
+                .zip(self.x.row(j))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            best = best.max(d2);
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy() -> Dataset {
+        let x = Mat::from_fn(10, 2, |r, c| (r * 2 + c) as f32);
+        let y = (0..10).map(|i| i % 3).collect();
+        Dataset::new("toy", x, y, 3)
+    }
+
+    #[test]
+    fn subset_picks_rows_and_labels() {
+        let d = toy();
+        let s = d.subset(&[3, 7]);
+        assert_eq!(s.n(), 2);
+        assert_eq!(s.x.row(0), &[6.0, 7.0]);
+        assert_eq!(s.y, vec![0, 1]);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let d = toy();
+        let (tr, te) = d.split(7);
+        assert_eq!(tr.n(), 7);
+        assert_eq!(te.n(), 3);
+        assert_eq!(te.y[0], d.y[7]);
+    }
+
+    #[test]
+    fn d2max_positive() {
+        let d = toy();
+        let mut rng = Rng::new(0);
+        assert!(d.est_d2_max(&mut rng, 200) > 0.0);
+    }
+}

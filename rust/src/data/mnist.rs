@@ -1,0 +1,236 @@
+//! Synthetic MNIST-like digits (substitution for MNIST — no network
+//! access; DESIGN.md §3).
+//!
+//! Ten 28x28 class prototypes are rendered from a classic 5x7 digit
+//! bitmap font, upscaled and blurred; each sample applies a random
+//! translation, per-pixel Gaussian noise, random intensity scaling and
+//! dropout. This preserves what the paper's MNIST experiments exercise:
+//! 784-dimensional dense features, 10 classes with real inter-class
+//! confusion (1/7, 3/8, 5/6 ...), and enough intra-class variation that
+//! clustering accuracy sits well below 100%.
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 28;
+pub const DIM: usize = SIDE * SIDE;
+
+/// 5x7 bitmap font for digits 0-9 (rows top->bottom, 5 bits each).
+const FONT: [[u8; 7]; 10] = [
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111], // 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+/// Render the blurred 28x28 prototype for one digit.
+fn prototype(digit: usize) -> Vec<f32> {
+    let mut img = vec![0.0f32; DIM];
+    // upscale 5x7 -> 20x28-ish: each font pixel becomes a 4x4 block,
+    // centred at (4, 4)
+    for (r, bits) in FONT[digit].iter().enumerate() {
+        for c in 0..5 {
+            if bits & (1 << (4 - c)) != 0 {
+                for dr in 0..4 {
+                    for dc in 0..4 {
+                        let rr = 2 + r * 3 + dr;
+                        let cc = 4 + c * 4 + dc;
+                        if rr < SIDE && cc < SIDE {
+                            img[rr * SIDE + cc] = 1.0;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // 3x3 box blur x2 for soft strokes
+    for _ in 0..2 {
+        let src = img.clone();
+        for r in 0..SIDE {
+            for c in 0..SIDE {
+                let mut acc = 0.0;
+                let mut cnt = 0.0;
+                for dr in -1i32..=1 {
+                    for dc in -1i32..=1 {
+                        let rr = r as i32 + dr;
+                        let cc = c as i32 + dc;
+                        if (0..SIDE as i32).contains(&rr) && (0..SIDE as i32).contains(&cc) {
+                            acc += src[rr as usize * SIDE + cc as usize];
+                            cnt += 1.0;
+                        }
+                    }
+                }
+                img[r * SIDE + c] = acc / cnt;
+            }
+        }
+    }
+    img
+}
+
+/// Generate one noisy sample of `digit` into `out`.
+fn sample_into(rng: &mut Rng, proto: &[f32], out: &mut [f32]) {
+    let dx = rng.range(0, 5) as i32 - 2;
+    let dy = rng.range(0, 5) as i32 - 2;
+    let gain = 0.8 + 0.4 * rng.f32();
+    let noise = 0.17f32;
+    for r in 0..SIDE {
+        for c in 0..SIDE {
+            let sr = r as i32 - dy;
+            let sc = c as i32 - dx;
+            let base = if (0..SIDE as i32).contains(&sr) && (0..SIDE as i32).contains(&sc)
+            {
+                proto[sr as usize * SIDE + sc as usize]
+            } else {
+                0.0
+            };
+            let mut v = base * gain + rng.normal32(0.0, noise);
+            // random dropout of bright pixels (stroke breaks)
+            if v > 0.5 && rng.f32() < 0.05 {
+                v = 0.0;
+            }
+            out[r * SIDE + c] = v.clamp(0.0, 1.0);
+        }
+    }
+}
+
+/// `n` synthetic digit samples, classes balanced, order shuffled.
+pub fn synthetic_mnist(rng: &mut Rng, n: usize) -> Dataset {
+    let protos: Vec<Vec<f32>> = (0..10).map(prototype).collect();
+    let mut x = Mat::zeros(n, DIM);
+    let mut y = vec![0usize; n];
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    for (slot, &i) in order.iter().enumerate() {
+        let digit = i % 10;
+        sample_into(rng, &protos[digit], x.row_mut(slot));
+        y[slot] = digit;
+    }
+    Dataset::new("synthetic-mnist", x, y, 10)
+}
+
+/// Noisy MNIST (paper §4): each base sample is replicated `copies` times
+/// with uniform noise added to 20% of the features, normalized layout kept.
+pub fn noisy_mnist(rng: &mut Rng, base: &Dataset, copies: usize) -> Dataset {
+    let n = base.n() * copies;
+    let d = base.d();
+    let mut x = Mat::zeros(n, d);
+    let mut y = vec![0usize; n];
+    let n_noisy = d / 5; // 20% of features
+    for i in 0..base.n() {
+        for k in 0..copies {
+            let row = i * copies + k;
+            x.row_mut(row).copy_from_slice(base.x.row(i));
+            y[row] = base.y[i];
+            for _ in 0..n_noisy {
+                let j = rng.below(d);
+                let v = x.at(row, j) + rng.f32();
+                x.set(row, j, v.min(1.0));
+            }
+        }
+    }
+    Dataset::new("noisy-mnist", x, y, base.classes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let mut rng = Rng::new(0);
+        let d = synthetic_mnist(&mut rng, 200);
+        assert_eq!(d.n(), 200);
+        assert_eq!(d.d(), 784);
+        assert_eq!(d.classes, 10);
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let mut rng = Rng::new(1);
+        let d = synthetic_mnist(&mut rng, 500);
+        for c in 0..10 {
+            assert_eq!(d.y.iter().filter(|&&v| v == c).count(), 50);
+        }
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        let mut rng = Rng::new(2);
+        let d = synthetic_mnist(&mut rng, 50);
+        assert!(d.x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn same_class_closer_than_cross_class() {
+        // the property clustering depends on: mean intra-class distance
+        // < mean inter-class distance
+        let mut rng = Rng::new(3);
+        let d = synthetic_mnist(&mut rng, 300);
+        let dist = |a: usize, b: usize| -> f32 {
+            d.x.row(a)
+                .iter()
+                .zip(d.x.row(b))
+                .map(|(u, v)| (u - v) * (u - v))
+                .sum()
+        };
+        let mut intra = (0.0f64, 0usize);
+        let mut inter = (0.0f64, 0usize);
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let dd = dist(i, j) as f64;
+                if d.y[i] == d.y[j] {
+                    intra = (intra.0 + dd, intra.1 + 1);
+                } else {
+                    inter = (inter.0 + dd, inter.1 + 1);
+                }
+            }
+        }
+        let intra_mean = intra.0 / intra.1 as f64;
+        let inter_mean = inter.0 / inter.1 as f64;
+        assert!(
+            intra_mean < inter_mean * 0.8,
+            "intra {intra_mean} vs inter {inter_mean}"
+        );
+    }
+
+    #[test]
+    fn prototypes_distinct() {
+        let protos: Vec<Vec<f32>> = (0..10).map(prototype).collect();
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let d2: f32 = protos[a]
+                    .iter()
+                    .zip(&protos[b])
+                    .map(|(u, v)| (u - v) * (u - v))
+                    .sum();
+                assert!(d2 > 1.0, "prototypes {a} and {b} too similar: {d2}");
+            }
+        }
+    }
+
+    #[test]
+    fn noisy_replicates() {
+        let mut rng = Rng::new(4);
+        let base = synthetic_mnist(&mut rng, 40);
+        let noisy = noisy_mnist(&mut rng, &base, 5);
+        assert_eq!(noisy.n(), 200);
+        assert_eq!(noisy.y[0..5], vec![base.y[0]; 5][..]);
+        // noise added: copies differ from each other
+        assert_ne!(noisy.x.row(0), noisy.x.row(1));
+        // but stay within [0, 1]
+        assert!(noisy.x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = synthetic_mnist(&mut Rng::new(9), 30);
+        let b = synthetic_mnist(&mut Rng::new(9), 30);
+        assert_eq!(a.x.data(), b.x.data());
+    }
+}

@@ -1,0 +1,19 @@
+//! Dataset substrates + mini-batch samplers.
+//!
+//! The paper evaluates on MNIST, RCV1, noisy MNIST, a 2D toy set, and an
+//! MD trajectory. No network access exists here, so each real dataset is
+//! replaced by a *synthetic generator that preserves the properties the
+//! algorithm is sensitive to* (DESIGN.md §3 documents each substitution).
+//! Generators are deterministic in their seed, so every EXPERIMENTS.md row
+//! is reproducible.
+mod dataset;
+mod mnist;
+mod rcv1;
+mod sampler;
+mod toy2d;
+
+pub use dataset::Dataset;
+pub use mnist::{synthetic_mnist, noisy_mnist};
+pub use rcv1::{random_projection, rcv1_vocab, synthetic_rcv1};
+pub use sampler::{Sampling, minibatch_indices};
+pub use toy2d::toy2d;

@@ -1,0 +1,120 @@
+//! Mini-batch sampling strategies (paper §3.1, Fig.1b).
+//!
+//! * **Stride**: X^i = { x_{i + jB} } — decorrelates samples within a
+//!   mini-batch; usable when the dataset is batch-available. The paper
+//!   recommends it whenever possible.
+//! * **Block**: X^i = { x_{i N/B + j} } — consecutive slices; the
+//!   streaming-friendly choice, vulnerable to concept drift (Fig.4a).
+use std::str::FromStr;
+
+/// Mini-batch sampling strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sampling {
+    Stride,
+    Block,
+}
+
+impl FromStr for Sampling {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "stride" => Ok(Sampling::Stride),
+            "block" => Ok(Sampling::Block),
+            other => Err(format!("unknown sampling '{other}' (stride|block)")),
+        }
+    }
+}
+
+/// Indices of mini-batch `i` out of `b`, over `n` samples.
+///
+/// Sizes differ by at most one when `b` does not divide `n`; every index
+/// appears in exactly one mini-batch (tested below as a property).
+pub fn minibatch_indices(n: usize, b: usize, i: usize, sampling: Sampling) -> Vec<usize> {
+    assert!(b > 0 && i < b, "bad mini-batch index {i}/{b}");
+    match sampling {
+        Sampling::Stride => (0..).map(|j| i + j * b).take_while(|&x| x < n).collect(),
+        Sampling::Block => {
+            // contiguous ranges with the remainder spread over the first
+            // (n % b) batches, matching the stride sizes
+            let base = n / b;
+            let rem = n % b;
+            let lo = i * base + i.min(rem);
+            let hi = lo + base + usize::from(i < rem);
+            (lo..hi.min(n)).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn check_partition(n: usize, b: usize, s: Sampling) {
+        let mut seen = vec![0u8; n];
+        for i in 0..b {
+            for idx in minibatch_indices(n, b, i, s) {
+                assert!(idx < n);
+                seen[idx] += 1;
+            }
+        }
+        assert!(
+            seen.iter().all(|&c| c == 1),
+            "partition violated for n={n} b={b} {s:?}"
+        );
+    }
+
+    #[test]
+    fn partition_property() {
+        // every (n, b, strategy) combination must partition [0, n)
+        for &n in &[1usize, 7, 100, 101, 1024, 999] {
+            for &b in &[1usize, 2, 3, 8, 64] {
+                if b <= n {
+                    check_partition(n, b, Sampling::Stride);
+                    check_partition(n, b, Sampling::Block);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sizes_balanced() {
+        for &(n, b) in &[(103usize, 4usize), (1000, 7), (64, 64)] {
+            for s in [Sampling::Stride, Sampling::Block] {
+                let sizes: Vec<usize> =
+                    (0..b).map(|i| minibatch_indices(n, b, i, s).len()).collect();
+                let min = sizes.iter().min().unwrap();
+                let max = sizes.iter().max().unwrap();
+                assert!(max - min <= 1, "unbalanced {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stride_interleaves() {
+        let idx = minibatch_indices(12, 3, 1, Sampling::Stride);
+        assert_eq!(idx, vec![1, 4, 7, 10]);
+    }
+
+    #[test]
+    fn block_is_contiguous() {
+        let idx = minibatch_indices(12, 3, 1, Sampling::Block);
+        assert_eq!(idx, vec![4, 5, 6, 7]);
+        for w in idx.windows(2) {
+            assert_eq!(w[1], w[0] + 1);
+        }
+    }
+
+    #[test]
+    fn parse_from_str() {
+        assert_eq!("stride".parse::<Sampling>().unwrap(), Sampling::Stride);
+        assert_eq!("block".parse::<Sampling>().unwrap(), Sampling::Block);
+        assert!("other".parse::<Sampling>().is_err());
+    }
+
+    #[test]
+    fn single_batch_is_identity() {
+        let idx = minibatch_indices(10, 1, 0, Sampling::Stride);
+        assert_eq!(idx, (0..10).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's distribution strategy (§3.3): row-wise sharding of the
+//! mini-batch kernel matrix across P nodes, with two collectives per inner
+//! iteration — allreduce(sum) of the C-vector `g` and allgather of the
+//! label slices. Kernel matrix elements never cross the network.
+//!
+//! Two execution modes:
+//! * [`ShardedBackend`] — real OS threads, one per node, exchanging data
+//!   through the in-process [`comm`] collectives; numerically identical
+//!   to the serial backend (tested), used to validate the distribution
+//!   strategy end-to-end.
+//! * [`ScalingSimulator`] — per-shard compute is *measured*, network time
+//!   is *modeled* ([`netmodel`], alpha-beta with per-topology parameters),
+//!   so the Fig.6 strong-scaling curves extend to P = 1024 nodes on a
+//!   single machine (DESIGN.md §3 substitutions).
+pub mod comm;
+pub mod netmodel;
+pub mod shard;
+pub mod sharded;
+pub mod scaling;
+
+pub use netmodel::{NetModel, Topology};
+pub use shard::row_shards;
+pub use sharded::ShardedBackend;
+pub use scaling::{ScalingReport, ScalingSimulator};

@@ -1,0 +1,151 @@
+//! Alpha-beta network cost model for the strong-scaling study (Fig.6).
+//!
+//! The paper measured on IBM BG/Q (5D torus, proprietary interconnect)
+//! and IBM NeXtScale (InfiniBand 4x QDR). Neither machine is available
+//! here, so per-node *compute* is measured on this host and *network*
+//! time comes from the standard alpha-beta model with per-topology
+//! parameters (DESIGN.md §3). What must survive the substitution is the
+//! scaling *shape*: near-ideal mid-range, Amdahl flattening when the
+//! serial fraction and collective latency dominate.
+use std::str::FromStr;
+
+/// Interconnect topology with alpha-beta parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Topology {
+    /// IBM BG/Q: 5D torus. Per-link latency is low and the torus gives
+    /// log-ish collective depth with high per-link bandwidth (2 GB/s).
+    BgqTorus5D,
+    /// InfiniBand 4x QDR fat tree (NeXtScale): 32 Gbit/s, ~1.3 us MPI
+    /// latency, tree collectives.
+    InfinibandQdr,
+}
+
+impl Topology {
+    /// Per-hop software+wire latency (seconds).
+    pub fn alpha(&self) -> f64 {
+        match self {
+            Topology::BgqTorus5D => 2.5e-6,
+            Topology::InfinibandQdr => 1.3e-6,
+        }
+    }
+
+    /// Per-byte transfer time (seconds/byte).
+    pub fn beta(&self) -> f64 {
+        match self {
+            Topology::BgqTorus5D => 1.0 / 2.0e9,
+            Topology::InfinibandQdr => 1.0 / 4.0e9, // 32 Gb/s
+        }
+    }
+
+    /// Collective tree depth for `p` nodes: the 5D torus has a slightly
+    /// higher effective depth constant than a fat-tree.
+    pub fn depth(&self, p: usize) -> f64 {
+        let lg = (p.max(1) as f64).log2().ceil().max(1.0);
+        match self {
+            Topology::BgqTorus5D => 1.25 * lg,
+            Topology::InfinibandQdr => lg,
+        }
+    }
+}
+
+impl FromStr for Topology {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "bgq" => Ok(Topology::BgqTorus5D),
+            "infiniband" | "ib" => Ok(Topology::InfinibandQdr),
+            other => Err(format!("unknown topology '{other}' (bgq|infiniband)")),
+        }
+    }
+}
+
+/// Cost model over a topology.
+#[derive(Clone, Copy, Debug)]
+pub struct NetModel {
+    pub topology: Topology,
+}
+
+impl NetModel {
+    pub fn new(topology: Topology) -> NetModel {
+        NetModel { topology }
+    }
+
+    /// Allreduce of `bytes` across `p` nodes (tree: up + down).
+    pub fn allreduce(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let t = self.topology;
+        2.0 * t.depth(p) * (t.alpha() + bytes as f64 * t.beta())
+    }
+
+    /// Allgather where each node contributes `bytes_per_node` (ring).
+    pub fn allgather(&self, p: usize, bytes_per_node: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let t = self.topology;
+        (p - 1) as f64 * (t.alpha() + bytes_per_node as f64 * t.beta())
+    }
+
+    /// Broadcast of `bytes` (tree).
+    pub fn broadcast(&self, p: usize, bytes: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let t = self.topology;
+        t.depth(p) * (t.alpha() + bytes as f64 * t.beta())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_free() {
+        let m = NetModel::new(Topology::BgqTorus5D);
+        assert_eq!(m.allreduce(1, 1024), 0.0);
+        assert_eq!(m.allgather(1, 1024), 0.0);
+    }
+
+    #[test]
+    fn allreduce_grows_logarithmically() {
+        let m = NetModel::new(Topology::InfinibandQdr);
+        let t16 = m.allreduce(16, 128);
+        let t256 = m.allreduce(256, 128);
+        // log2(256)/log2(16) = 2, so roughly doubles
+        assert!(t256 > t16 * 1.5 && t256 < t16 * 3.0, "{t16} {t256}");
+    }
+
+    #[test]
+    fn allgather_linear_in_p() {
+        let m = NetModel::new(Topology::InfinibandQdr);
+        let t4 = m.allgather(4, 1000);
+        let t8 = m.allgather(8, 1000);
+        assert!((t8 / t4 - 7.0 / 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_large_messages() {
+        let m = NetModel::new(Topology::BgqTorus5D);
+        let small = m.allreduce(64, 4);
+        let large = m.allreduce(64, 4 << 20);
+        assert!(large > small * 100.0);
+    }
+
+    #[test]
+    fn topologies_differ() {
+        let bgq = NetModel::new(Topology::BgqTorus5D);
+        let ib = NetModel::new(Topology::InfinibandQdr);
+        assert!(bgq.allreduce(128, 64) != ib.allreduce(128, 64));
+    }
+
+    #[test]
+    fn parse() {
+        assert_eq!("bgq".parse::<Topology>().unwrap(), Topology::BgqTorus5D);
+        assert_eq!("ib".parse::<Topology>().unwrap(), Topology::InfinibandQdr);
+        assert!("x".parse::<Topology>().is_err());
+    }
+}

@@ -1,0 +1,51 @@
+//! Row-wise partitioning across P nodes (paper §3.3: node p holds rows
+//! [p N/(BP), (p+1) N/(BP)) of K, K~, f and U).
+
+/// Split `n` rows into `p` contiguous shards whose sizes differ by at
+/// most one. Returns (lo, hi) per node; empty shards possible when p > n.
+pub fn row_shards(n: usize, p: usize) -> Vec<(usize, usize)> {
+    assert!(p > 0);
+    let base = n / p;
+    let rem = n % p;
+    let mut out = Vec::with_capacity(p);
+    let mut lo = 0;
+    for node in 0..p {
+        let size = base + usize::from(node < rem);
+        out.push((lo, lo + size));
+        lo += size;
+    }
+    debug_assert_eq!(lo, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_exactly_once_property() {
+        for &n in &[0usize, 1, 7, 100, 1023] {
+            for &p in &[1usize, 2, 3, 16, 64] {
+                let shards = row_shards(n, p);
+                assert_eq!(shards.len(), p);
+                let mut expected = 0;
+                for &(lo, hi) in &shards {
+                    assert_eq!(lo, expected, "gap at n={n} p={p}");
+                    assert!(hi >= lo);
+                    expected = hi;
+                }
+                assert_eq!(expected, n);
+            }
+        }
+    }
+
+    #[test]
+    fn balanced_within_one() {
+        for &(n, p) in &[(103usize, 4usize), (1000, 7), (5, 8)] {
+            let sizes: Vec<usize> = row_shards(n, p).iter().map(|(l, h)| h - l).collect();
+            let min = sizes.iter().min().unwrap();
+            let max = sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "{sizes:?}");
+        }
+    }
+}

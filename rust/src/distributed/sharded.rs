@@ -1,0 +1,191 @@
+//! Row-sharded inner loop over real node threads (paper §3.3, Fig.2).
+//!
+//! Each of the P node threads owns a contiguous row shard of the
+//! mini-batch kernel block (K rows never move); per iteration it
+//!
+//!   1. computes the partial compactness `g` from its *landmark* rows,
+//!   2. allreduce-sums `g` (the only float collective, C values),
+//!   3. computes `f` and the argmin labels for its row shard,
+//!   4. allgathers the label slices.
+//!
+//! The result is bit-identical to the serial backend (tested below),
+//! which is exactly the paper's point: the distribution touches only the
+//! schedule, not the math.
+use crate::cluster::assign::{argmin_labels, similarity_f, ClusterStats};
+use crate::cluster::minibatch::StepBackend;
+use crate::linalg::Mat;
+
+use super::comm::Communicator;
+use super::shard::row_shards;
+
+/// Sharded implementation of one inner-loop iteration.
+pub struct ShardedBackend {
+    pub nodes: usize,
+}
+
+impl ShardedBackend {
+    pub fn new(nodes: usize) -> ShardedBackend {
+        assert!(nodes > 0);
+        ShardedBackend { nodes }
+    }
+}
+
+impl StepBackend for ShardedBackend {
+    fn iterate(
+        &self,
+        k_nl: &Mat,
+        k_ll: &Mat,
+        lm_labels: &[usize],
+        c: usize,
+    ) -> (Vec<usize>, ClusterStats) {
+        let n = k_nl.rows();
+        let l = lm_labels.len();
+        let p = self.nodes.min(n.max(1));
+        let shards = row_shards(n, p);
+        let lm_shards = row_shards(l, p);
+        let comm = Communicator::new(p);
+
+        // landmark counts are cheap and label-only: every node derives
+        // them locally (the paper ships labels, not counts)
+        let mut counts = vec![0usize; c];
+        for &u in lm_labels {
+            counts[u] += 1;
+        }
+        let inv: Vec<f32> = counts
+            .iter()
+            .map(|&s| if s > 0 { 1.0 / s as f32 } else { 0.0 })
+            .collect();
+
+        let mut labels_out: Vec<usize> = vec![0; n];
+        let mut g_out: Vec<f32> = vec![0.0; c];
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for rank in 0..p {
+                let mut comm = comm.node();
+                let (lo, hi) = shards[rank];
+                let (llo, lhi) = lm_shards[rank];
+                let inv = &inv;
+                let counts = &counts;
+                handles.push(scope.spawn(move || {
+                    // --- partial g from this node's landmark rows:
+                    // g_j = inv_j^2 sum_{m in shard, n: u_n = u_m = j} K_mn
+                    let mut g_partial = vec![0.0f32; c];
+                    for m in llo..lhi {
+                        let um = lm_labels[m];
+                        if counts[um] == 0 {
+                            continue;
+                        }
+                        let row = k_ll.row(m);
+                        let mut acc = 0.0f64;
+                        for (nn, &kv) in row.iter().enumerate() {
+                            if lm_labels[nn] == um {
+                                acc += kv as f64;
+                            }
+                        }
+                        g_partial[um] += acc as f32 * inv[um] * inv[um];
+                    }
+                    // --- collective 1: allreduce(sum) of g
+                    let g = comm.allreduce_sum(&g_partial);
+                    let stats = ClusterStats {
+                        counts: counts.clone(),
+                        inv: inv.clone(),
+                        g: g.clone(),
+                    };
+                    // --- local f + argmin over this node's row shard
+                    let local_labels = if hi > lo {
+                        let block = k_nl.row_slice(lo, hi);
+                        let f = similarity_f(&block, lm_labels, &stats);
+                        argmin_labels(&f, &stats)
+                    } else {
+                        Vec::new()
+                    };
+                    // --- collective 2: allgather of label slices
+                    let all = comm.allgather_usize(lo, n, &local_labels);
+                    (all, g)
+                }));
+            }
+            let mut results: Vec<(Vec<usize>, Vec<f32>)> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            // every node received identical vectors; take rank 0's
+            let (labels, g) = results.swap_remove(0);
+            labels_out = labels;
+            g_out = g;
+        });
+
+        let stats = ClusterStats { counts, inv, g: g_out };
+        (labels_out, stats)
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::assign;
+    use crate::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
+    use crate::data::toy2d;
+    use crate::kernels::{GramSource, KernelFn, VecGram};
+    use crate::util::rng::Rng;
+
+    fn random_setup(seed: u64, n: usize, l: usize, c: usize) -> (Mat, Mat, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n.max(l), 3, |_, _| rng.normal32(0.0, 2.0));
+        let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.3 }, 2);
+        let rows: Vec<usize> = (0..n).collect();
+        let lms: Vec<usize> = (0..l).collect();
+        let k_nl = g.block_mat(&rows, &lms);
+        let k_ll = g.block_mat(&lms, &lms);
+        let labels: Vec<usize> = (0..l).map(|_| rng.below(c)).collect();
+        (k_nl, k_ll, labels)
+    }
+
+    #[test]
+    fn matches_serial_for_any_p_property() {
+        // the core distribution invariant: identical labels AND g for
+        // every node count, including p > rows
+        let (k_nl, k_ll, lm_labels) = random_setup(0, 37, 19, 5);
+        let (want_labels, want_stats) =
+            assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 5);
+        for p in [1usize, 2, 3, 4, 8, 16, 64] {
+            let backend = ShardedBackend::new(p);
+            let (labels, stats) = backend.iterate(&k_nl, &k_ll, &lm_labels, 5);
+            assert_eq!(labels, want_labels, "labels diverge at p={p}");
+            for j in 0..5 {
+                assert!(
+                    (stats.g[j] - want_stats.g[j]).abs() < 1e-4,
+                    "g[{j}] diverges at p={p}: {} vs {}",
+                    stats.g[j],
+                    want_stats.g[j]
+                );
+            }
+            assert_eq!(stats.counts, want_stats.counts);
+        }
+    }
+
+    #[test]
+    fn full_minibatch_run_matches_native() {
+        let mut rng = Rng::new(1);
+        let d = toy2d(&mut rng, 60);
+        let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
+        let cfg = MiniBatchConfig::new(4, 3);
+        let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+        let backend = ShardedBackend::new(4);
+        let sharded = MiniBatchKernelKMeans::new(cfg, &backend).run(&g);
+        assert_eq!(native.labels, sharded.labels);
+        assert_eq!(native.medoids, sharded.medoids);
+        assert_eq!(native.counts, sharded.counts);
+    }
+
+    #[test]
+    fn empty_clusters_handled() {
+        let (k_nl, k_ll, mut lm_labels) = random_setup(2, 20, 10, 6);
+        lm_labels.iter_mut().for_each(|u| *u %= 2);
+        let backend = ShardedBackend::new(3);
+        let (labels, stats) = backend.iterate(&k_nl, &k_ll, &lm_labels, 6);
+        assert!(labels.iter().all(|&u| u < 2));
+        assert_eq!(&stats.counts[2..], &[0, 0, 0, 0]);
+    }
+}

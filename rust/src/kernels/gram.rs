@@ -1,0 +1,309 @@
+//! Gram-block sources: the interface between data and the clusterer.
+use crate::linalg::{qcp_rmsd, Frame, Mat};
+use crate::util::threadpool;
+
+use super::KernelFn;
+
+/// Anything that can produce rectangular kernel blocks over sample
+/// indices. `block` fills `out` row-major with `K[rows[i], cols[j]]`.
+///
+/// Implementations must be `Sync`: the distributed runtime calls `block`
+/// from several worker shards concurrently.
+pub trait GramSource: Sync {
+    /// Number of samples.
+    fn n(&self) -> usize;
+
+    /// Fill `out` (len `rows.len() * cols.len()`) with the kernel block.
+    fn block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]);
+
+    /// Diagonal entries `K[i, i]` for the given indices (used by the
+    /// medoid rule Eq.7 and the k-means++ seeding).
+    fn diag(&self, idx: &[usize], out: &mut [f32]) {
+        // default: one-column blocks; implementations override with
+        // cheaper paths (RBF diag is identically 1)
+        let mut tmp = [0.0f32];
+        for (o, &i) in out.iter_mut().zip(idx) {
+            self.block(&[i], &[i], &mut tmp);
+            *o = tmp[0];
+        }
+    }
+
+    /// Convenience: allocate and fill a block as a `Mat`.
+    fn block_mat(&self, rows: &[usize], cols: &[usize]) -> Mat {
+        let mut out = vec![0.0f32; rows.len() * cols.len()];
+        self.block(rows, cols, &mut out);
+        Mat::from_vec(rows.len(), cols.len(), out).expect("shape by construction")
+    }
+}
+
+/// Vector-space data with a kernel function, evaluated natively
+/// (blocked + multithreaded). This is the CPU fallback / test oracle; the
+/// PJRT path (`runtime::PjrtGram`) produces the same numbers through the
+/// AOT Pallas artifacts.
+pub struct VecGram {
+    x: Mat,
+    kernel: KernelFn,
+    threads: usize,
+}
+
+impl VecGram {
+    pub fn new(x: Mat, kernel: KernelFn, threads: usize) -> VecGram {
+        VecGram { x, kernel, threads: threads.max(1) }
+    }
+
+    pub fn kernel(&self) -> KernelFn {
+        self.kernel
+    }
+
+    pub fn x(&self) -> &Mat {
+        &self.x
+    }
+}
+
+impl GramSource for VecGram {
+    fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), rows.len() * cols.len());
+        let d = self.x.cols();
+        let ncols = cols.len();
+        // gather column samples once (rows stream per chunk)
+        let ymat = self.x.gather(cols);
+        let yn: Vec<f32> = (0..ymat.rows())
+            .map(|r| ymat.row(r).iter().map(|v| v * v).sum())
+            .collect();
+        let kernel = self.kernel;
+        let rows_per_chunk = (128 * 1024 / (d.max(1) * 4)).clamp(4, 128);
+        threadpool::parallel_rows_mut(
+            self.threads,
+            out,
+            ncols,
+            rows_per_chunk,
+            |lo, _hi, blockbuf| {
+                for (r, out_row) in blockbuf.chunks_mut(ncols).enumerate() {
+                    let xi = self.x.row(rows[lo + r]);
+                    let xin: f32 = xi.iter().map(|v| v * v).sum();
+                    // 4-wide column micro-kernel: amortizes the x-row
+                    // stream across four dot products and breaks the
+                    // serial accumulator dependency (~2.5x over the naive
+                    // dot loop on this host; a 2x4 row-pair tile was
+                    // tried and *regressed* — see EXPERIMENTS.md §Perf
+                    // iteration log)
+                    let mut j = 0;
+                    while j + 4 <= ncols {
+                        let dots = dot4(
+                            xi,
+                            ymat.row(j),
+                            ymat.row(j + 1),
+                            ymat.row(j + 2),
+                            ymat.row(j + 3),
+                        );
+                        for t in 0..4 {
+                            let d2 = (xin + yn[j + t] - 2.0 * dots[t]).max(0.0);
+                            out_row[j + t] = kernel.from_parts(d2, dots[t]);
+                        }
+                        j += 4;
+                    }
+                    while j < ncols {
+                        let yj = ymat.row(j);
+                        let mut acc = [0.0f32; 4];
+                        let mut k = 0;
+                        while k + 4 <= d {
+                            acc[0] += xi[k] * yj[k];
+                            acc[1] += xi[k + 1] * yj[k + 1];
+                            acc[2] += xi[k + 2] * yj[k + 2];
+                            acc[3] += xi[k + 3] * yj[k + 3];
+                            k += 4;
+                        }
+                        let mut dot = acc[0] + acc[1] + acc[2] + acc[3];
+                        while k < d {
+                            dot += xi[k] * yj[k];
+                            k += 1;
+                        }
+                        let d2 = (xin + yn[j] - 2.0 * dot).max(0.0);
+                        out_row[j] = kernel.from_parts(d2, dot);
+                        j += 1;
+                    }
+                }
+            },
+        );
+    }
+
+    fn diag(&self, idx: &[usize], out: &mut [f32]) {
+        match self.kernel {
+            KernelFn::Rbf { .. } => out.fill(1.0),
+            _ => {
+                for (o, &i) in out.iter_mut().zip(idx) {
+                    let xi = self.x.row(i);
+                    *o = self.kernel.eval(xi, xi);
+                }
+            }
+        }
+    }
+}
+
+/// Four simultaneous dot products of `x` against y0..y3 (column
+/// micro-kernel of the native Gram path). Plain indexed code the
+/// autovectorizer turns into wide FMAs.
+#[inline]
+fn dot4(x: &[f32], y0: &[f32], y1: &[f32], y2: &[f32], y3: &[f32]) -> [f32; 4] {
+    let d = x.len();
+    let mut acc = [0.0f32; 4];
+    let mut k = 0;
+    // trust-region for the autovectorizer: fixed-width inner block
+    while k + 8 <= d {
+        let mut a0 = 0.0f32;
+        let mut a1 = 0.0f32;
+        let mut a2 = 0.0f32;
+        let mut a3 = 0.0f32;
+        for t in 0..8 {
+            let xv = x[k + t];
+            a0 += xv * y0[k + t];
+            a1 += xv * y1[k + t];
+            a2 += xv * y2[k + t];
+            a3 += xv * y3[k + t];
+        }
+        acc[0] += a0;
+        acc[1] += a1;
+        acc[2] += a2;
+        acc[3] += a3;
+        k += 8;
+    }
+    while k < d {
+        let xv = x[k];
+        acc[0] += xv * y0[k];
+        acc[1] += xv * y1[k];
+        acc[2] += xv * y2[k];
+        acc[3] += xv * y3[k];
+        k += 1;
+    }
+    acc
+}
+
+/// MD frames with the RMSD-RBF kernel `exp(-rmsd^2 / (2 sigma^2))`.
+pub struct RmsdGram {
+    frames: Vec<Frame>,
+    gamma: f64,
+    threads: usize,
+}
+
+impl RmsdGram {
+    pub fn new(frames: Vec<Frame>, sigma: f64, threads: usize) -> RmsdGram {
+        RmsdGram { frames, gamma: 1.0 / (2.0 * sigma * sigma), threads: threads.max(1) }
+    }
+
+    pub fn frames(&self) -> &[Frame] {
+        &self.frames
+    }
+}
+
+impl GramSource for RmsdGram {
+    fn n(&self) -> usize {
+        self.frames.len()
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), rows.len() * cols.len());
+        let ncols = cols.len();
+        threadpool::parallel_rows_mut(self.threads, out, ncols, 4, |lo, _hi, blockbuf| {
+            for (r, out_row) in blockbuf.chunks_mut(ncols).enumerate() {
+                let fi = &self.frames[rows[lo + r]];
+                for (j, o) in out_row.iter_mut().enumerate() {
+                    let rmsd = qcp_rmsd(fi, &self.frames[cols[j]]);
+                    *o = (-self.gamma * rmsd * rmsd).exp() as f32;
+                }
+            }
+        });
+    }
+
+    fn diag(&self, _idx: &[usize], out: &mut [f32]) {
+        out.fill(1.0); // rmsd(x, x) = 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal32(0.0, 1.0))
+    }
+
+    #[test]
+    fn vec_gram_matches_pointwise_eval() {
+        let mut rng = Rng::new(0);
+        let x = random_mat(&mut rng, 30, 7);
+        for kernel in [
+            KernelFn::Linear,
+            KernelFn::Rbf { gamma: 0.2 },
+            KernelFn::Poly { degree: 2, c: 1.0 },
+        ] {
+            let g = VecGram::new(x.clone(), kernel, 4);
+            let rows = [3usize, 17, 5];
+            let cols = [0usize, 8, 20, 29];
+            let block = g.block_mat(&rows, &cols);
+            for (bi, &i) in rows.iter().enumerate() {
+                for (bj, &j) in cols.iter().enumerate() {
+                    let want = kernel.eval(x.row(i), x.row(j));
+                    let got = block.at(bi, bj);
+                    assert!(
+                        (got - want).abs() < 1e-4,
+                        "{kernel:?} [{i},{j}]: {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vec_gram_diag() {
+        let mut rng = Rng::new(1);
+        let x = random_mat(&mut rng, 10, 3);
+        let g = VecGram::new(x.clone(), KernelFn::Rbf { gamma: 0.5 }, 2);
+        let mut d = vec![0.0; 10];
+        g.diag(&(0..10).collect::<Vec<_>>(), &mut d);
+        assert!(d.iter().all(|&v| v == 1.0));
+        let gl = VecGram::new(x.clone(), KernelFn::Linear, 2);
+        gl.diag(&[2, 4], &mut d[..2]);
+        let want: f32 = x.row(2).iter().map(|v| v * v).sum();
+        assert!((d[0] - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn thread_invariance() {
+        let mut rng = Rng::new(2);
+        let x = random_mat(&mut rng, 50, 5);
+        let rows: Vec<usize> = (0..50).collect();
+        let a = VecGram::new(x.clone(), KernelFn::Rbf { gamma: 0.1 }, 1)
+            .block_mat(&rows, &rows);
+        let b = VecGram::new(x, KernelFn::Rbf { gamma: 0.1 }, 8).block_mat(&rows, &rows);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn rmsd_gram_invariant_and_unit_diag() {
+        let mut rng = Rng::new(3);
+        let frames: Vec<Frame> = (0..8)
+            .map(|_| {
+                Frame::new(
+                    (0..5)
+                        .map(|_| [rng.normal(), rng.normal(), rng.normal()])
+                        .collect(),
+                )
+            })
+            .collect();
+        let g = RmsdGram::new(frames, 1.0, 2);
+        let idx: Vec<usize> = (0..8).collect();
+        let k = g.block_mat(&idx, &idx);
+        for i in 0..8 {
+            assert!((k.at(i, i) - 1.0).abs() < 1e-6);
+            for j in 0..8 {
+                assert!((k.at(i, j) - k.at(j, i)).abs() < 1e-5);
+                assert!(k.at(i, j) > 0.0 && k.at(i, j) <= 1.0 + 1e-6);
+            }
+        }
+    }
+}

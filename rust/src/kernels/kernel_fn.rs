@@ -1,0 +1,157 @@
+//! Kernel functions on vector-space samples.
+use std::str::FromStr;
+
+/// A Mercer kernel on `R^d`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelFn {
+    /// `<x, y>`
+    Linear,
+    /// `exp(-gamma ||x - y||^2)`; the paper parameterizes by sigma with
+    /// `gamma = 1 / (2 sigma^2)` and uses `sigma = 4 d_max` to mimic
+    /// linear behaviour.
+    Rbf { gamma: f32 },
+    /// `(<x, y> + c)^degree`
+    Poly { degree: u32, c: f32 },
+}
+
+impl KernelFn {
+    /// RBF from the paper's sigma convention.
+    pub fn rbf_from_sigma(sigma: f32) -> KernelFn {
+        KernelFn::Rbf { gamma: 1.0 / (2.0 * sigma * sigma) }
+    }
+
+    /// Evaluate on a pair of samples.
+    pub fn eval(&self, a: &[f32], b: &[f32]) -> f32 {
+        match *self {
+            KernelFn::Linear => dot(a, b),
+            KernelFn::Rbf { gamma } => {
+                let d2: f32 = a
+                    .iter()
+                    .zip(b)
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                (-gamma * d2).exp()
+            }
+            KernelFn::Poly { degree, c } => (dot(a, b) + c).powi(degree as i32),
+        }
+    }
+
+    /// Evaluate from a precomputed squared distance and dot product —
+    /// the blocked path computes those in bulk.
+    pub fn from_parts(&self, d2: f32, dot: f32) -> f32 {
+        match *self {
+            KernelFn::Linear => dot,
+            KernelFn::Rbf { gamma } => (-gamma * d2).exp(),
+            KernelFn::Poly { degree, c } => (dot + c).powi(degree as i32),
+        }
+    }
+
+    /// True if the blocked evaluator needs squared distances (RBF) rather
+    /// than dot products.
+    pub fn needs_d2(&self) -> bool {
+        matches!(self, KernelFn::Rbf { .. })
+    }
+
+    /// RBF gamma if applicable (PJRT artifacts take gamma as an operand).
+    pub fn gamma(&self) -> Option<f32> {
+        match *self {
+            KernelFn::Rbf { gamma } => Some(gamma),
+            _ => None,
+        }
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+impl FromStr for KernelFn {
+    type Err = String;
+
+    /// Parse "linear", "rbf:<gamma>", "rbf-sigma:<sigma>", or
+    /// "poly:<degree>:<c>".
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.as_slice() {
+            ["linear"] => Ok(KernelFn::Linear),
+            ["rbf", g] => g
+                .parse()
+                .map(|gamma| KernelFn::Rbf { gamma })
+                .map_err(|_| format!("bad gamma '{g}'")),
+            ["rbf-sigma", s] => s
+                .parse()
+                .map(KernelFn::rbf_from_sigma)
+                .map_err(|_| format!("bad sigma '{s}'")),
+            ["poly", d, c] => {
+                let degree = d.parse().map_err(|_| format!("bad degree '{d}'"))?;
+                let c = c.parse().map_err(|_| format!("bad c '{c}'"))?;
+                Ok(KernelFn::Poly { degree, c })
+            }
+            _ => Err(format!("unknown kernel '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_is_dot() {
+        let k = KernelFn::Linear;
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn rbf_bounds_and_identity() {
+        let k = KernelFn::Rbf { gamma: 0.5 };
+        assert!((k.eval(&[1.0, 2.0], &[1.0, 2.0]) - 1.0).abs() < 1e-7);
+        let v = k.eval(&[0.0, 0.0], &[10.0, 10.0]);
+        assert!(v > 0.0 && v < 1e-6);
+    }
+
+    #[test]
+    fn rbf_sigma_convention() {
+        let k = KernelFn::rbf_from_sigma(2.0);
+        // gamma = 1/8 -> at d2 = 8, k = e^-1
+        let v = k.eval(&[0.0], &[8.0f32.sqrt()]);
+        assert!((v - (-1.0f32).exp()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn poly_matches_manual() {
+        let k = KernelFn::Poly { degree: 2, c: 1.0 };
+        // (1*3 + 2*4 + 1)^2 = 144
+        assert_eq!(k.eval(&[1.0, 2.0], &[3.0, 4.0]), 144.0);
+    }
+
+    #[test]
+    fn from_parts_consistent_with_eval() {
+        let a = [0.5f32, -1.0, 2.0];
+        let b = [1.5f32, 0.0, -0.5];
+        let d2: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        let dp: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        for k in [
+            KernelFn::Linear,
+            KernelFn::Rbf { gamma: 0.3 },
+            KernelFn::Poly { degree: 3, c: 0.5 },
+        ] {
+            assert!((k.eval(&a, &b) - k.from_parts(d2, dp)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!("linear".parse::<KernelFn>().unwrap(), KernelFn::Linear);
+        assert_eq!(
+            "rbf:0.25".parse::<KernelFn>().unwrap(),
+            KernelFn::Rbf { gamma: 0.25 }
+        );
+        assert_eq!(
+            "poly:2:1.0".parse::<KernelFn>().unwrap(),
+            KernelFn::Poly { degree: 2, c: 1.0 }
+        );
+        assert!("rbf".parse::<KernelFn>().is_err());
+        assert!("nope:1".parse::<KernelFn>().is_err());
+    }
+}

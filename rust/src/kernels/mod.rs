@@ -1,0 +1,24 @@
+//! Mercer kernels + Gram-block evaluation.
+//!
+//! Kernel k-means never needs the full `N x N` Gram matrix at once — the
+//! mini-batch algorithm only ever touches rectangular blocks
+//! (mini-batch x landmarks, mini-batch x medoids). `GramSource` is the
+//! abstraction the clusterer consumes: "give me the kernel block for these
+//! row/column sample indices". Implementations:
+//!
+//! * [`VecGram`] — vector-space data + a [`KernelFn`] (linear, RBF,
+//!   polynomial), evaluated on the blocked multithreaded native path
+//!   (`linalg::pairwise`). The PJRT-accelerated implementation lives in
+//!   `runtime::` and is swapped in by the coordinator.
+//! * [`RmsdGram`] — MD frames with the QCP-RMSD RBF kernel
+//!   `exp(-rmsd^2 / (2 sigma^2))`, the roto-translationally invariant
+//!   similarity the paper's MD application requires.
+//! * [`DiskCachedGram`] — Zhang-Rudnicky-style disk caching layered over
+//!   any source (the §2 lineage of the f/g formalism).
+mod diskcache;
+mod gram;
+mod kernel_fn;
+
+pub use diskcache::DiskCachedGram;
+pub use gram::{GramSource, RmsdGram, VecGram};
+pub use kernel_fn::KernelFn;

@@ -1,0 +1,32 @@
+//! # dkkm — Distributed Kernel K-Means for Large Scale Clustering
+//!
+//! Reproduction of Ferrarotti, Decherchi & Rocchia (2017),
+//! "Distributed Kernel K-Means for Large Scale Clustering" (CS.DC 2017,
+//! DOI 10.5121/csit.2017.71015) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build time, Python): Pallas kernels for the compute
+//!   hot-spot — tiled RBF kernel-matrix blocks and the fused label
+//!   assignment step (`python/compile/kernels/`).
+//! * **Layer 2** (build time, Python): the JAX compute graph combining the
+//!   kernels into a full inner-loop iteration, AOT-lowered to HLO text
+//!   (`python/compile/model.py`, `python/compile/aot.py`).
+//! * **Layer 3** (this crate): the distributed coordinator — mini-batch
+//!   outer loop, row-wise sharding across worker nodes, collectives,
+//!   medoid merge, host/device offload pipeline — plus every substrate the
+//!   paper depends on (datasets, MD simulator, baselines, metrics).
+//!
+//! Python never runs on the clustering path: `make artifacts` lowers the
+//! HLO once, and the Rust binary loads it through PJRT (`runtime`).
+pub mod baselines;
+pub mod cluster;
+pub mod coordinator;
+pub mod data;
+pub mod distributed;
+pub mod kernels;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,217 @@
+//! Row-major dense `f32` matrix.
+//!
+//! Deliberately minimal: the coordinator moves row blocks around
+//! (mini-batches, shards, kernel tiles), so the core operations are row
+//! slicing, row gathering, and padded copies into PJRT tile buffers.
+use crate::util::error::{Error, Result};
+
+/// Row-major dense matrix of `f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Take ownership of a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Mat> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "from_vec: {rows}x{cols} != buffer len {}",
+                data.len()
+            )));
+        }
+        Ok(Mat { rows, cols, data })
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// New matrix holding rows `[lo, hi)`.
+    pub fn row_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Gather the given rows into a new matrix (mini-batch / landmark
+    /// extraction).
+    pub fn gather(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            assert!(i < self.rows, "gather index {i} out of {}", self.rows);
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Copy into a zero-padded `(pad_rows, pad_cols)` buffer (PJRT tiles
+    /// have fixed shapes; padding rows/cols are zeros).
+    pub fn padded(&self, pad_rows: usize, pad_cols: usize) -> Mat {
+        assert!(pad_rows >= self.rows && pad_cols >= self.cols);
+        let mut out = Mat::zeros(pad_rows, pad_cols);
+        for r in 0..self.rows {
+            out.data[r * pad_cols..r * pad_cols + self.cols].copy_from_slice(self.row(r));
+        }
+        out
+    }
+
+    /// `self @ other` (naive blocked; only used on small one-hot shaped
+    /// operands — the big contractions live in the Pallas/XLA layer or the
+    /// specialized pairwise kernels).
+    pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        if self.cols != other.rows {
+            return Err(Error::Shape(format!(
+                "matmul: {}x{} @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for r in 0..self.rows {
+            let a_row = self.row(r);
+            let out_row = &mut out.data[r * other.cols..(r + 1) * other.cols];
+            for (k, &a) in a_row.iter().enumerate() {
+                if a == 0.0 {
+                    continue; // one-hot operands are mostly zeros
+                }
+                let b_row = other.row(k);
+                for (o, &b) in out_row.iter_mut().zip(b_row) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Frobenius norm of the difference (test helper).
+    pub fn frob_dist(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_checks_shape() {
+        assert!(Mat::from_vec(2, 3, vec![0.0; 6]).is_ok());
+        assert!(Mat::from_vec(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let m = Mat::from_fn(3, 2, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.at(0, 0), 0.0);
+        assert_eq!(m.at(2, 1), 21.0);
+        assert_eq!(m.row(1), &[10.0, 11.0]);
+    }
+
+    #[test]
+    fn gather_picks_rows() {
+        let m = Mat::from_fn(5, 2, |r, _| r as f32);
+        let g = m.gather(&[4, 0, 2]);
+        assert_eq!(g.row(0), &[4.0, 4.0]);
+        assert_eq!(g.row(1), &[0.0, 0.0]);
+        assert_eq!(g.row(2), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn padded_zero_fills() {
+        let m = Mat::from_fn(2, 2, |_, _| 1.0);
+        let p = m.padded(3, 4);
+        assert_eq!(p.at(0, 0), 1.0);
+        assert_eq!(p.at(1, 1), 1.0);
+        assert_eq!(p.at(0, 2), 0.0);
+        assert_eq!(p.at(2, 0), 0.0);
+        assert_eq!((p.rows(), p.cols()), (3, 4));
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let b = Mat::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_shape_error() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn row_slice_copies() {
+        let m = Mat::from_fn(4, 2, |r, _| r as f32);
+        let s = m.row_slice(1, 3);
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.row(0), &[1.0, 1.0]);
+        assert_eq!(s.row(1), &[2.0, 2.0]);
+    }
+}

@@ -1,0 +1,399 @@
+//! Roto-translationally invariant frame comparison for MD clustering.
+//!
+//! The paper's flagship application clusters MD conformational frames
+//! where "roto-translational invariance is mandatory" (§1). We implement
+//! the minimal-RMSD distance two ways:
+//!
+//! * **Kabsch** via a cyclic Jacobi eigendecomposition of the 3x3
+//!   covariance Gram matrix (robust reference),
+//! * **QCP** (Theobald 2005): the minimal RMSD follows from the largest
+//!   eigenvalue of a 4x4 key matrix, found by Newton iteration on the
+//!   quartic characteristic polynomial — no eigenvectors needed, which is
+//!   what the kernel-matrix hot loop wants.
+//!
+//! Both operate on centred coordinates; `Frame` stores `natoms x 3`.
+
+/// One MD conformational frame: `natoms` rows of (x, y, z).
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub coords: Vec<[f64; 3]>,
+}
+
+impl Frame {
+    pub fn new(coords: Vec<[f64; 3]>) -> Frame {
+        Frame { coords }
+    }
+
+    pub fn natoms(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// Centre the frame at its centroid (in place), returning the centroid.
+    pub fn center(&mut self) -> [f64; 3] {
+        let c = centroid(&self.coords);
+        for p in &mut self.coords {
+            for k in 0..3 {
+                p[k] -= c[k];
+            }
+        }
+        c
+    }
+
+    /// Flatten to an `f32` feature row (used where a plain vector-space
+    /// embedding of the trajectory is needed, e.g. landmark medoids dump).
+    pub fn flat32(&self) -> Vec<f32> {
+        self.coords
+            .iter()
+            .flat_map(|p| p.iter().map(|&v| v as f32))
+            .collect()
+    }
+}
+
+/// Centroid of a coordinate set.
+pub fn centroid(coords: &[[f64; 3]]) -> [f64; 3] {
+    let n = coords.len() as f64;
+    let mut c = [0.0; 3];
+    for p in coords {
+        for k in 0..3 {
+            c[k] += p[k];
+        }
+    }
+    for k in 0..3 {
+        c[k] /= n;
+    }
+    c
+}
+
+fn centered(coords: &[[f64; 3]]) -> (Vec<[f64; 3]>, f64) {
+    let c = centroid(coords);
+    let mut out = Vec::with_capacity(coords.len());
+    let mut g = 0.0; // inner self-product (sum of squares)
+    for p in coords {
+        let q = [p[0] - c[0], p[1] - c[1], p[2] - c[2]];
+        g += q[0] * q[0] + q[1] * q[1] + q[2] * q[2];
+        out.push(q);
+    }
+    (out, g)
+}
+
+/// 3x3 covariance matrix A = X^T Y over centred coordinate sets.
+fn covariance(x: &[[f64; 3]], y: &[[f64; 3]]) -> [[f64; 3]; 3] {
+    let mut a = [[0.0; 3]; 3];
+    for (p, q) in x.iter().zip(y) {
+        for i in 0..3 {
+            for j in 0..3 {
+                a[i][j] += p[i] * q[j];
+            }
+        }
+    }
+    a
+}
+
+/// Minimal RMSD between two frames via QCP (Theobald 2005).
+///
+/// Builds the 4x4 key matrix's characteristic quartic from the covariance
+/// matrix and Newton-iterates from the upper bound (Ga+Gb)/2 down to the
+/// largest eigenvalue. Handles reflections correctly (unlike naive Kabsch
+/// without the determinant fix).
+pub fn qcp_rmsd(a: &Frame, b: &Frame) -> f64 {
+    assert_eq!(a.natoms(), b.natoms(), "frame size mismatch");
+    let n = a.natoms() as f64;
+    let (xa, ga) = centered(&a.coords);
+    let (xb, gb) = centered(&b.coords);
+    let m = covariance(&xa, &xb);
+
+    // Characteristic polynomial coefficients (Theobald's expansion).
+    let (sxx, sxy, sxz) = (m[0][0], m[0][1], m[0][2]);
+    let (syx, syy, syz) = (m[1][0], m[1][1], m[1][2]);
+    let (szx, szy, szz) = (m[2][0], m[2][1], m[2][2]);
+
+    let sxx2 = sxx * sxx;
+    let syy2 = syy * syy;
+    let szz2 = szz * szz;
+    let sxy2 = sxy * sxy;
+    let syz2 = syz * syz;
+    let sxz2 = sxz * sxz;
+    let syx2 = syx * syx;
+    let szy2 = szy * szy;
+    let szx2 = szx * szx;
+
+    let syzszymsyyszz2 = 2.0 * (syz * szy - syy * szz);
+    let sxx2syy2szz2syz2szy2 = syy2 + szz2 - sxx2 + syz2 + szy2;
+
+    let c2 = -2.0 * (sxx2 + syy2 + szz2 + sxy2 + syx2 + sxz2 + szx2 + syz2 + szy2);
+    let c1 = 8.0
+        * (sxx * syz * szy + syy * szx * sxz + szz * sxy * syx
+            - sxx * syy * szz
+            - syz * szx * sxy
+            - szy * syx * sxz);
+
+    let d = (sxy2 + sxz2 - syx2 - szx2) * (sxy2 + sxz2 - syx2 - szx2);
+    let e = (sxx2syy2szz2syz2szy2 + syzszymsyyszz2)
+        * (sxx2syy2szz2syz2szy2 - syzszymsyyszz2);
+    let f = (-(sxz + szx) * (syz - szy) + (sxy - syx) * (sxx - syy - szz))
+        * (-(sxz - szx) * (syz + szy) + (sxy - syx) * (sxx - syy + szz));
+    let g = (-(sxz + szx) * (syz + szy) - (sxy + syx) * (sxx + syy - szz))
+        * (-(sxz - szx) * (syz - szy) - (sxy + syx) * (sxx + syy + szz));
+    let h = ((sxy + syx) * (syz + szy) + (sxz + szx) * (sxx - syy + szz))
+        * (-(sxy - syx) * (syz - szy) + (sxz + szx) * (sxx + syy + szz));
+    let i = ((sxy + syx) * (syz - szy) + (sxz - szx) * (sxx - syy - szz))
+        * (-(sxy - syx) * (syz + szy) + (sxz - szx) * (sxx + syy - szz));
+    let c0 = d + e + f + g + h + i;
+
+    // Newton from the upper bound; the largest root is <= (Ga+Gb)/2.
+    let mut lambda = 0.5 * (ga + gb);
+    for _ in 0..64 {
+        let l2 = lambda * lambda;
+        let p = l2 * l2 + c2 * l2 + c1 * lambda + c0;
+        let dp = 4.0 * lambda * l2 + 2.0 * c2 * lambda + c1;
+        if dp.abs() < 1e-300 {
+            break;
+        }
+        let step = p / dp;
+        lambda -= step;
+        if step.abs() < 1e-11 * lambda.abs().max(1.0) {
+            break;
+        }
+    }
+    let msd = ((ga + gb - 2.0 * lambda) / n).max(0.0);
+    msd.sqrt()
+}
+
+/// Minimal RMSD via explicit Kabsch rotation (Jacobi eigendecomposition of
+/// A^T A). Slower but fully explicit; used as the test oracle for QCP.
+pub fn kabsch_rmsd(a: &Frame, b: &Frame) -> f64 {
+    assert_eq!(a.natoms(), b.natoms());
+    let n = a.natoms() as f64;
+    let (xa, ga) = centered(&a.coords);
+    let (xb, gb) = centered(&b.coords);
+    let m = covariance(&xa, &xb); // A = Xa^T Xb
+
+    // B = A^T A (symmetric PSD)
+    let mut bmat = [[0.0; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            for k in 0..3 {
+                bmat[i][j] += m[k][i] * m[k][j];
+            }
+        }
+    }
+    let (evals, _evecs) = jacobi3(bmat);
+    // singular values of A
+    let mut sv: Vec<f64> = evals.iter().map(|&l| l.max(0.0).sqrt()).collect();
+    sv.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    let det = det3(&m);
+    let trace = if det < 0.0 {
+        sv[0] + sv[1] - sv[2]
+    } else {
+        sv[0] + sv[1] + sv[2]
+    };
+    let msd = ((ga + gb - 2.0 * trace) / n).max(0.0);
+    msd.sqrt()
+}
+
+fn det3(m: &[[f64; 3]; 3]) -> f64 {
+    m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+        - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+        + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric 3x3 matrix.
+/// Returns (eigenvalues, eigenvectors-as-columns).
+fn jacobi3(mut a: [[f64; 3]; 3]) -> ([f64; 3], [[f64; 3]; 3]) {
+    let mut v = [[0.0; 3]; 3];
+    for (i, row) in v.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    for _sweep in 0..50 {
+        let off = a[0][1] * a[0][1] + a[0][2] * a[0][2] + a[1][2] * a[1][2];
+        if off < 1e-30 {
+            break;
+        }
+        for p in 0..2 {
+            for q in (p + 1)..3 {
+                if a[p][q].abs() < 1e-300 {
+                    continue;
+                }
+                let theta = (a[q][q] - a[p][p]) / (2.0 * a[p][q]);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate a
+                for k in 0..3 {
+                    let akp = a[k][p];
+                    let akq = a[k][q];
+                    a[k][p] = c * akp - s * akq;
+                    a[k][q] = s * akp + c * akq;
+                }
+                for k in 0..3 {
+                    let apk = a[p][k];
+                    let aqk = a[q][k];
+                    a[p][k] = c * apk - s * aqk;
+                    a[q][k] = s * apk + c * aqk;
+                }
+                for k in 0..3 {
+                    let vkp = v[k][p];
+                    let vkq = v[k][q];
+                    v[k][p] = c * vkp - s * vkq;
+                    v[k][q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    ([a[0][0], a[1][1], a[2][2]], v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_frame(rng: &mut Rng, natoms: usize) -> Frame {
+        Frame::new(
+            (0..natoms)
+                .map(|_| [rng.normal() * 2.0, rng.normal() * 2.0, rng.normal() * 2.0])
+                .collect(),
+        )
+    }
+
+    /// Random rotation matrix from a random unit quaternion.
+    fn random_rotation(rng: &mut Rng) -> [[f64; 3]; 3] {
+        let (mut q, mut norm) = ([0.0; 4], 0.0);
+        for v in &mut q {
+            *v = rng.normal();
+        }
+        for v in &q {
+            norm += v * v;
+        }
+        let norm = norm.sqrt();
+        for v in &mut q {
+            *v /= norm;
+        }
+        let (w, x, y, z) = (q[0], q[1], q[2], q[3]);
+        [
+            [1.0 - 2.0 * (y * y + z * z), 2.0 * (x * y - w * z), 2.0 * (x * z + w * y)],
+            [2.0 * (x * y + w * z), 1.0 - 2.0 * (x * x + z * z), 2.0 * (y * z - w * x)],
+            [2.0 * (x * z - w * y), 2.0 * (y * z + w * x), 1.0 - 2.0 * (x * x + y * y)],
+        ]
+    }
+
+    fn transform(f: &Frame, r: &[[f64; 3]; 3], t: &[f64; 3]) -> Frame {
+        Frame::new(
+            f.coords
+                .iter()
+                .map(|p| {
+                    let mut q = [0.0; 3];
+                    for i in 0..3 {
+                        q[i] = r[i][0] * p[0] + r[i][1] * p[1] + r[i][2] * p[2] + t[i];
+                    }
+                    q
+                })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn identical_frames_zero_rmsd() {
+        let mut rng = Rng::new(0);
+        let f = random_frame(&mut rng, 20);
+        assert!(qcp_rmsd(&f, &f) < 1e-7);
+        assert!(kabsch_rmsd(&f, &f) < 1e-7);
+    }
+
+    #[test]
+    fn invariant_under_rigid_motion_property() {
+        // property test: RMSD(a, R a + t) == 0 for 30 random rigid motions
+        let mut rng = Rng::new(1);
+        for case in 0..30 {
+            let f = random_frame(&mut rng, 15);
+            let r = random_rotation(&mut rng);
+            let t = [rng.normal() * 10.0, rng.normal() * 10.0, rng.normal() * 10.0];
+            let g = transform(&f, &r, &t);
+            let d = qcp_rmsd(&f, &g);
+            assert!(d < 1e-6, "case {case}: rmsd {d}");
+        }
+    }
+
+    #[test]
+    fn rmsd_of_rigidly_moved_pair_unchanged_property() {
+        // RMSD(a, b) == RMSD(Ra+t, b) — invariance in the first argument
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let a = random_frame(&mut rng, 12);
+            let b = random_frame(&mut rng, 12);
+            let base = qcp_rmsd(&a, &b);
+            let r = random_rotation(&mut rng);
+            let t = [rng.normal(), rng.normal(), rng.normal()];
+            let a2 = transform(&a, &r, &t);
+            let moved = qcp_rmsd(&a2, &b);
+            assert!((base - moved).abs() < 1e-6, "{base} vs {moved}");
+        }
+    }
+
+    #[test]
+    fn qcp_matches_kabsch_property() {
+        let mut rng = Rng::new(3);
+        for _ in 0..25 {
+            let a = random_frame(&mut rng, 18);
+            let b = random_frame(&mut rng, 18);
+            let q = qcp_rmsd(&a, &b);
+            let k = kabsch_rmsd(&a, &b);
+            assert!((q - k).abs() < 1e-6, "qcp {q} vs kabsch {k}");
+        }
+    }
+
+    #[test]
+    fn symmetric() {
+        let mut rng = Rng::new(4);
+        for _ in 0..10 {
+            let a = random_frame(&mut rng, 10);
+            let b = random_frame(&mut rng, 10);
+            assert!((qcp_rmsd(&a, &b) - qcp_rmsd(&b, &a)).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn known_displacement() {
+        // two atoms displaced along x by 2: after centering both frames
+        // are identical, so min RMSD is 0; but scaling one frame is not a
+        // rigid motion, so RMSD > 0.
+        let a = Frame::new(vec![[0.0, 0.0, 0.0], [1.0, 0.0, 0.0]]);
+        let shifted = Frame::new(vec![[2.0, 0.0, 0.0], [3.0, 0.0, 0.0]]);
+        assert!(qcp_rmsd(&a, &shifted) < 1e-7);
+        let scaled = Frame::new(vec![[0.0, 0.0, 0.0], [3.0, 0.0, 0.0]]);
+        assert!(qcp_rmsd(&a, &scaled) > 0.5);
+    }
+
+    #[test]
+    fn reflection_not_allowed() {
+        // a chiral 4-point set and its mirror image: proper rotations
+        // cannot superpose them, so RMSD must stay > 0.
+        let a = Frame::new(vec![
+            [0.0, 0.0, 0.0],
+            [1.0, 0.0, 0.0],
+            [0.0, 1.0, 0.0],
+            [0.0, 0.0, 1.0],
+        ]);
+        let mirror = Frame::new(
+            a.coords.iter().map(|p| [-p[0], p[1], p[2]]).collect(),
+        );
+        let d = qcp_rmsd(&a, &mirror);
+        let dk = kabsch_rmsd(&a, &mirror);
+        assert!(d > 0.1, "qcp treated mirror as rotation: {d}");
+        assert!((d - dk).abs() < 1e-6);
+    }
+
+    #[test]
+    fn triangle_inequality_sampled() {
+        let mut rng = Rng::new(5);
+        for _ in 0..15 {
+            let a = random_frame(&mut rng, 8);
+            let b = random_frame(&mut rng, 8);
+            let c = random_frame(&mut rng, 8);
+            let ab = qcp_rmsd(&a, &b);
+            let bc = qcp_rmsd(&b, &c);
+            let ac = qcp_rmsd(&a, &c);
+            assert!(ac <= ab + bc + 1e-6);
+        }
+    }
+}

@@ -1,0 +1,394 @@
+//! dkkm — distributed mini-batch kernel k-means CLI (L3 leader).
+//!
+//! Subcommands:
+//!   run       cluster a dataset with the paper's algorithm
+//!   baseline  linear k-means / SGD k-means baselines
+//!   scaling   Fig.6 strong-scaling simulation
+//!   bmin      Eq.19 memory planner
+//!   elbow     cost-vs-C scan
+//!   md        MD trajectory clustering + Fig.7 medoid RMSD matrix
+//!   info      artifact manifest summary
+use dkkm::baselines::{sgd_kmeans, SgdConfig};
+use dkkm::coordinator::runner::{self, run_lloyd_baseline};
+use dkkm::coordinator::{b_min, footprint_bytes, paper_b_min, DatasetSpec, RunConfig};
+use dkkm::distributed::{NetModel, ScalingSimulator, Topology};
+use dkkm::kernels::VecGram;
+use dkkm::metrics::{accuracy, nmi};
+use dkkm::util::cli::Cli;
+use dkkm::util::error::{Error, Result};
+use dkkm::util::json::Json;
+use dkkm::util::stats::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(Error::Config(msg)) if msg.starts_with("dkkm") || msg.contains("Flags:") => {
+            println!("{msg}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "dkkm — distributed mini-batch kernel k-means (CS.DC 2017 reproduction)
+
+Usage: dkkm <command> [flags]  (try `dkkm <command> --help`)
+
+Commands:
+  run       cluster a dataset (paper Alg.1)
+  baseline  linear k-means / SGD mini-batch k-means baselines
+  scaling   Fig.6 strong-scaling simulation
+  bmin      Eq.19 memory planner
+  elbow     cost-vs-C elbow scan
+  md        MD clustering + Fig.7 medoid RMSD matrix
+  info      artifact manifest summary
+";
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "baseline" => cmd_baseline(rest),
+        "scaling" => cmd_scaling(rest),
+        "bmin" => cmd_bmin(rest),
+        "elbow" => cmd_elbow(rest),
+        "md" => cmd_md(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}'\n{USAGE}"))),
+    }
+}
+
+fn parse_run_config(rest: &[String]) -> Result<(RunConfig, bool)> {
+    // --config file.json loads a base config; CLI flags then override
+    if let Some(pos) = rest.iter().position(|a| a == "--config") {
+        let path = rest
+            .get(pos + 1)
+            .ok_or_else(|| Error::Config("--config needs a path".into()))?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {path}: {e}")))?;
+        let base = RunConfig::from_json(&Json::parse(&text)?)?;
+        let mut remaining: Vec<String> = rest[..pos].to_vec();
+        remaining.extend_from_slice(&rest[pos + 2..]);
+        return apply_run_flags(base, &remaining);
+    }
+    let p = Cli::new("dkkm run — cluster a dataset with mini-batch kernel k-means")
+        .req("dataset", "toy2d[:per] | mnist[:train[:test]] | rcv1[:n[:cls[:dim]]] | noisy-mnist[:base[:copies]] | md[:frames]")
+        .opt("c", "0", "clusters (0 = elbow criterion)")
+        .opt("b", "4", "number of mini-batches B")
+        .opt("s", "1.0", "landmark fraction s (Eq.18)")
+        .opt("sampling", "stride", "stride | block (Fig.1b)")
+        .opt("backend", "native", "native | pjrt | sharded:<p>")
+        .opt("threads", "0", "worker threads (0 = auto)")
+        .opt("seed", "42", "rng seed")
+        .opt("restarts", "1", "k-means++ restarts, keep min cost")
+        .opt("sigma-factor", "4.0", "sigma = factor * d_max (paper: 4)")
+        .flag("track-cost", "record Fig.4 cost observables")
+        .flag("offload", "Fig.3 producer-consumer pipeline")
+        .flag("json", "emit machine-readable report")
+        .parse(rest)?;
+    let mut cfg = RunConfig::new(
+        p.str("dataset")
+            .parse::<DatasetSpec>()
+            .map_err(Error::Config)?,
+    );
+    let c: usize = p.get("c")?;
+    cfg.c = if c == 0 { None } else { Some(c) };
+    cfg.b = p.get("b")?;
+    cfg.s = p.get("s")?;
+    cfg.sampling = p.str("sampling").parse().map_err(Error::Config)?;
+    cfg.backend = p.str("backend").parse().map_err(Error::Config)?;
+    let threads: usize = p.get("threads")?;
+    if threads > 0 {
+        cfg.threads = threads;
+    }
+    cfg.seed = p.get("seed")?;
+    cfg.restarts = p.get("restarts")?;
+    cfg.sigma_factor = p.get("sigma-factor")?;
+    cfg.track_cost = p.get_bool("track-cost");
+    cfg.offload = p.get_bool("offload");
+    Ok((cfg, p.get_bool("json")))
+}
+
+/// Overlay CLI flags (all optional) onto a config-file base.
+fn apply_run_flags(mut cfg: RunConfig, rest: &[String]) -> Result<(RunConfig, bool)> {
+    let p = Cli::new("dkkm run --config <file.json> — flags override the file")
+        .opt("dataset", "", "override dataset spec")
+        .opt("c", "", "override clusters (0 = elbow)")
+        .opt("b", "", "override B")
+        .opt("s", "", "override landmark fraction")
+        .opt("sampling", "", "override sampling")
+        .opt("backend", "", "override backend")
+        .opt("seed", "", "override seed")
+        .opt("restarts", "", "override restarts")
+        .flag("offload", "enable offload")
+        .flag("json", "emit machine-readable report")
+        .parse(rest)?;
+    if !p.str("dataset").is_empty() {
+        cfg.dataset = p.str("dataset").parse().map_err(Error::Config)?;
+    }
+    if !p.str("c").is_empty() {
+        let c: usize = p.get("c")?;
+        cfg.c = if c == 0 { None } else { Some(c) };
+    }
+    if !p.str("b").is_empty() {
+        cfg.b = p.get("b")?;
+    }
+    if !p.str("s").is_empty() {
+        cfg.s = p.get("s")?;
+    }
+    if !p.str("sampling").is_empty() {
+        cfg.sampling = p.str("sampling").parse().map_err(Error::Config)?;
+    }
+    if !p.str("backend").is_empty() {
+        cfg.backend = p.str("backend").parse().map_err(Error::Config)?;
+    }
+    if !p.str("seed").is_empty() {
+        cfg.seed = p.get("seed")?;
+    }
+    if !p.str("restarts").is_empty() {
+        cfg.restarts = p.get("restarts")?;
+    }
+    if p.get_bool("offload") {
+        cfg.offload = true;
+    }
+    Ok((cfg, p.get_bool("json")))
+}
+
+fn cmd_run(rest: &[String]) -> Result<()> {
+    let (cfg, as_json) = parse_run_config(rest)?;
+    let report = runner::run_experiment(&cfg)?;
+    if as_json {
+        let j = Json::obj(vec![
+            ("config", cfg.to_json()),
+            ("report", report.to_json()),
+        ]);
+        println!("{j}");
+        return Ok(());
+    }
+    println!("dataset         : {:?}", cfg.dataset);
+    println!("backend         : {:?} (B={}, s={})", cfg.backend, cfg.b, cfg.s);
+    println!("clusters        : {} (gamma={:.3e})", report.c_used, report.gamma);
+    println!("train accuracy  : {:.2}%", report.train_accuracy * 100.0);
+    println!("train NMI       : {:.4}", report.train_nmi);
+    if let Some(a) = report.test_accuracy {
+        println!("test accuracy   : {:.2}%", a * 100.0);
+        println!("test NMI        : {:.4}", report.test_nmi.unwrap());
+    }
+    println!("clustering time : {:.2}s (best of {} restarts)", report.seconds, cfg.restarts);
+    if let Some(ov) = report.result.overlap {
+        println!(
+            "offload overlap : {:.0}% of block production hidden",
+            ov.overlap_efficiency() * 100.0
+        );
+    }
+    for (i, rec) in report.result.history.iter().enumerate() {
+        println!(
+            "  batch {i:>3}: n={:<6} L={:<6} inner={:<3} converged={} displ={:.4} {:.2}s",
+            rec.batch_size,
+            rec.landmarks,
+            rec.inner_iterations,
+            rec.converged,
+            rec.medoid_displacement,
+            rec.seconds
+        );
+    }
+    Ok(())
+}
+
+fn cmd_baseline(rest: &[String]) -> Result<()> {
+    let p = Cli::new("dkkm baseline — linear k-means / SGD k-means")
+        .req("dataset", "dataset spec (as in `run`)")
+        .opt("c", "10", "clusters")
+        .opt("algo", "lloyd", "lloyd | sgd")
+        .opt("seed", "42", "rng seed")
+        .opt("sgd-batch", "1000", "SGD mini-batch size")
+        .opt("sgd-iters", "60", "SGD iterations")
+        .parse(rest)?;
+    let spec: DatasetSpec = p.str("dataset").parse().map_err(Error::Config)?;
+    let c: usize = p.get("c")?;
+    let seed: u64 = p.get("seed")?;
+    match p.str("algo") {
+        "lloyd" => {
+            let (acc, n, test_acc, test_nmi) = run_lloyd_baseline(&spec, c, seed);
+            println!("lloyd k-means: train acc {:.2}% nmi {:.4}", acc * 100.0, n);
+            if let Some(a) = test_acc {
+                println!("               test  acc {:.2}% nmi {:.4}", a * 100.0, test_nmi.unwrap());
+            }
+        }
+        "sgd" => {
+            let (train, _) = runner::build_dataset(&spec, seed);
+            let cfg = SgdConfig {
+                c,
+                batch: p.get("sgd-batch")?,
+                iterations: p.get("sgd-iters")?,
+                seed,
+            };
+            let (labels, _) = sgd_kmeans(&train.x, &cfg);
+            println!(
+                "sgd k-means (Sculley): train acc {:.2}% nmi {:.4}",
+                accuracy(&labels, &train.y) * 100.0,
+                nmi(&labels, &train.y)
+            );
+        }
+        other => return Err(Error::Config(format!("unknown algo '{other}'"))),
+    }
+    Ok(())
+}
+
+fn cmd_scaling(rest: &[String]) -> Result<()> {
+    let p = Cli::new("dkkm scaling — Fig.6 strong-scaling simulation")
+        .opt("n", "60000", "dataset size N (MNIST-like)")
+        .opt("c", "10", "clusters")
+        .opt("iters", "20", "inner iterations")
+        .opt("topology", "bgq", "bgq | infiniband")
+        .opt("nodes", "16,32,64,128,256,512,1024", "node counts")
+        .opt("probe", "1024", "calibration probe edge")
+        .opt("seed", "42", "rng seed")
+        .parse(rest)?;
+    let n: usize = p.get("n")?;
+    let topology: Topology = p.str("topology").parse().map_err(Error::Config)?;
+    let sim = ScalingSimulator {
+        net: NetModel::new(topology),
+        n,
+        l: n,
+        c: p.get("c")?,
+        iters: p.get("iters")?,
+    };
+    // calibrate on a real synthetic-MNIST probe
+    let (train, _) = runner::build_dataset(
+        &DatasetSpec::Mnist { train: p.get("probe")?, test: 0 },
+        p.get("seed")?,
+    );
+    let gamma = runner::gamma_for(&train, 4.0, 1);
+    let probe = VecGram::new(train.x.clone(), dkkm::kernels::KernelFn::Rbf { gamma }, 1);
+    let cal = ScalingSimulator::calibrate(&probe, 512, 512, 7);
+    let report = sim.sweep(cal, &p.list::<usize>("nodes")?);
+    let mut table = Table::new(&["P", "total s", "compute s", "comm s", "speedup", "efficiency"]);
+    for pt in &report.points {
+        table.row(&[
+            pt.p.to_string(),
+            format!("{:.3}", pt.total_s),
+            format!("{:.3}", pt.compute_s),
+            format!("{:.4}", pt.comm_s),
+            format!("{:.1}", pt.speedup),
+            format!("{:.2}", pt.efficiency),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "calibration: t_kernel={:.2e}s/elem t_update={:.2e}s/elem",
+        report.calibration.t_kernel, report.calibration.t_update
+    );
+    Ok(())
+}
+
+fn cmd_bmin(rest: &[String]) -> Result<()> {
+    let p = Cli::new("dkkm bmin — Eq.19 memory planner")
+        .req("n", "dataset size N")
+        .opt("p", "16", "nodes P")
+        .opt("c", "10", "clusters C")
+        .opt("mem-gb", "16", "memory per node (GiB)")
+        .parse(rest)?;
+    let n: usize = p.get("n")?;
+    let nodes: usize = p.get("p")?;
+    let c: usize = p.get("c")?;
+    let r = (p.get::<f64>("mem-gb")? * (1u64 << 30) as f64) as usize;
+    match b_min(n, nodes, c, r) {
+        Some(b) => {
+            println!("B_min = {b} (exact solve of Eq.19's footprint)");
+            println!(
+                "footprint at B_min: {:.2} MiB/node (budget {:.2} MiB)",
+                footprint_bytes(n, b, nodes, c) as f64 / (1 << 20) as f64,
+                r as f64 / (1 << 20) as f64
+            );
+            if let Some(printed) = paper_b_min(n, nodes, c, r) {
+                println!("paper's printed Eq.19 gives {printed:.2} (see DESIGN.md note)");
+            }
+        }
+        None => println!("no feasible B: even single-sample batches exceed the budget"),
+    }
+    Ok(())
+}
+
+fn cmd_elbow(rest: &[String]) -> Result<()> {
+    let p = Cli::new("dkkm elbow — cost-vs-C scan")
+        .req("dataset", "dataset spec (as in `run`)")
+        .opt("c-min", "2", "scan start")
+        .opt("c-max", "16", "scan end")
+        .opt("b", "4", "mini-batches during the scan")
+        .opt("seed", "42", "rng seed")
+        .parse(rest)?;
+    let mut cfg = RunConfig::new(p.str("dataset").parse().map_err(Error::Config)?);
+    cfg.b = p.get("b")?;
+    cfg.seed = p.get("seed")?;
+    let (train, _) = runner::build_dataset(&cfg.dataset, cfg.seed);
+    let gamma = runner::gamma_for(&train, cfg.sigma_factor, cfg.seed);
+    let source = VecGram::new(
+        train.x.clone(),
+        dkkm::kernels::KernelFn::Rbf { gamma },
+        cfg.threads,
+    );
+    let c = runner::elbow_scan(&source, &cfg, (p.get("c-min")?, p.get("c-max")?));
+    println!("elbow criterion selects C = {c}");
+    Ok(())
+}
+
+fn cmd_md(rest: &[String]) -> Result<()> {
+    let p = Cli::new("dkkm md — MD trajectory clustering (Fig.7)")
+        .opt("frames", "20000", "trajectory frames")
+        .opt("c", "20", "clusters (paper's elbow choice)")
+        .opt("b", "4", "mini-batches")
+        .opt("restarts", "5", "k-means++ restarts (paper: 5)")
+        .opt("seed", "42", "rng seed")
+        .parse(rest)?;
+    let frames: usize = p.get("frames")?;
+    let mut cfg = RunConfig::new(DatasetSpec::Md { frames });
+    cfg.c = Some(p.get("c")?);
+    cfg.b = p.get("b")?;
+    cfg.restarts = p.get("restarts")?;
+    cfg.seed = p.get("seed")?;
+    let (medoids, mat, macro_of) = runner::md_medoid_rmsd_matrix(&cfg, frames)?;
+    // order medoids by macro-state (bound, entrance, unbound) as the
+    // paper orders Fig.7b by manual classification
+    let mut order: Vec<usize> = (0..medoids.len()).collect();
+    order.sort_by_key(|&i| macro_of[i]);
+    println!("medoid RMSD matrix (rows/cols ordered bound->entrance->unbound):");
+    let names = ["B", "E", "U"];
+    print!("      ");
+    for &i in &order {
+        print!("{:>6}", format!("{}{}", names[macro_of[i]], medoids[i] % 1000));
+    }
+    println!();
+    for &i in &order {
+        print!("{:>6}", format!("{}{}", names[macro_of[i]], medoids[i] % 1000));
+        for &j in &order {
+            print!("{:6.2}", mat.at(i, j));
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_info(rest: &[String]) -> Result<()> {
+    let _ = Cli::new("dkkm info — artifact summary").parse(rest)?;
+    let rt = runner::shared_pjrt()?;
+    println!("artifacts in {}:", rt.manifest().dir.display());
+    for e in &rt.manifest().entries {
+        let ins: Vec<String> = e.inputs.iter().map(|(_, s)| format!("{s:?}")).collect();
+        println!("  {:<28} {}", e.name, ins.join(" "));
+    }
+    Ok(())
+}

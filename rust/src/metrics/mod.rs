@@ -1,0 +1,198 @@
+//! Clustering quality measures (paper §4):
+//!
+//! * **Clustering accuracy** mu(y, u): majority-vote mapping psi from
+//!   cluster labels to ground-truth classes, then plain accuracy.
+//! * **Normalized Mutual Information** NMI(y, u), with the paper's
+//!   normalization sqrt(H(u) H(y)).
+//! * Confusion tables and helper invariants shared by tests.
+use std::collections::BTreeMap;
+
+/// Contingency table `o[i][j]` = #samples with cluster i and class j.
+pub fn contingency(u: &[usize], y: &[usize]) -> Vec<Vec<usize>> {
+    assert_eq!(u.len(), y.len());
+    let cu = u.iter().copied().max().map_or(0, |m| m + 1);
+    let cy = y.iter().copied().max().map_or(0, |m| m + 1);
+    let mut table = vec![vec![0usize; cy]; cu];
+    for (&ui, &yi) in u.iter().zip(y) {
+        table[ui][yi] += 1;
+    }
+    table
+}
+
+/// Majority-vote mapping psi: cluster -> most frequent class in it.
+pub fn majority_map(u: &[usize], y: &[usize]) -> BTreeMap<usize, usize> {
+    let table = contingency(u, y);
+    table
+        .iter()
+        .enumerate()
+        .filter(|(_, row)| row.iter().sum::<usize>() > 0)
+        .map(|(i, row)| {
+            let best = row
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &c)| c)
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            (i, best)
+        })
+        .collect()
+}
+
+/// Clustering accuracy mu(y, u) with the majority-vote mapping (the
+/// paper's choice). Returns a fraction in [0, 1].
+pub fn accuracy(u: &[usize], y: &[usize]) -> f64 {
+    if u.is_empty() {
+        return 0.0;
+    }
+    let psi = majority_map(u, y);
+    let correct = u
+        .iter()
+        .zip(y)
+        .filter(|(ui, yi)| psi.get(ui) == Some(yi))
+        .count();
+    correct as f64 / u.len() as f64
+}
+
+/// Normalized mutual information NMI(y, u) = I(u; y) / sqrt(H(u) H(y)).
+pub fn nmi(u: &[usize], y: &[usize]) -> f64 {
+    assert_eq!(u.len(), y.len());
+    let n = u.len() as f64;
+    if u.is_empty() {
+        return 0.0;
+    }
+    let table = contingency(u, y);
+    let nu: Vec<f64> = table.iter().map(|row| row.iter().sum::<usize>() as f64).collect();
+    let cy = table.first().map_or(0, |r| r.len());
+    let mut my = vec![0.0f64; cy];
+    for row in &table {
+        for (j, &c) in row.iter().enumerate() {
+            my[j] += c as f64;
+        }
+    }
+    let mut mi = 0.0f64;
+    for (i, row) in table.iter().enumerate() {
+        for (j, &c) in row.iter().enumerate() {
+            if c > 0 {
+                let o = c as f64;
+                mi += (o / n) * ((n * o) / (nu[i] * my[j])).ln();
+            }
+        }
+    }
+    let hu: f64 = nu
+        .iter()
+        .filter(|&&v| v > 0.0)
+        .map(|&v| -(v / n) * (v / n).ln())
+        .sum();
+    let hy: f64 = my
+        .iter()
+        .filter(|&&v| v > 0.0)
+        .map(|&v| -(v / n) * (v / n).ln())
+        .sum();
+    if hu <= 0.0 || hy <= 0.0 {
+        // one side constant: MI is 0; convention NMI = 0 (or 1 if both
+        // constant and equal — degenerate, call it 1 when identical)
+        return if hu <= 0.0 && hy <= 0.0 { 1.0 } else { 0.0 };
+    }
+    (mi / (hu * hy).sqrt()).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn perfect_clustering_scores_one() {
+        let y = vec![0, 0, 1, 1, 2, 2];
+        let u = vec![2, 2, 0, 0, 1, 1]; // permuted labels
+        assert!((accuracy(&u, &y) - 1.0).abs() < 1e-12);
+        assert!((nmi(&u, &y) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_labels_score_low() {
+        let mut rng = Rng::new(0);
+        let n = 5000;
+        let y: Vec<usize> = (0..n).map(|_| rng.below(10)).collect();
+        let u: Vec<usize> = (0..n).map(|_| rng.below(10)).collect();
+        let acc = accuracy(&u, &y);
+        assert!((0.08..0.18).contains(&acc), "acc {acc}");
+        let m = nmi(&u, &y);
+        assert!(m < 0.05, "nmi {m}");
+    }
+
+    #[test]
+    fn accuracy_invariant_to_cluster_relabelling() {
+        let mut rng = Rng::new(1);
+        let n = 500;
+        let y: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let u: Vec<usize> = (0..n).map(|_| rng.below(5)).collect();
+        let perm = [3usize, 0, 4, 1, 2];
+        let u2: Vec<usize> = u.iter().map(|&v| perm[v]).collect();
+        assert!((accuracy(&u, &y) - accuracy(&u2, &y)).abs() < 1e-12);
+        assert!((nmi(&u, &y) - nmi(&u2, &y)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nmi_symmetric() {
+        let mut rng = Rng::new(2);
+        let n = 300;
+        let y: Vec<usize> = (0..n).map(|_| rng.below(3)).collect();
+        let u: Vec<usize> = y
+            .iter()
+            .map(|&v| if rng.f64() < 0.8 { v } else { rng.below(3) })
+            .collect();
+        assert!((nmi(&u, &y) - nmi(&y, &u)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_many_clusters_overfits_up() {
+        // splitting clusters can only increase majority-vote accuracy
+        let mut rng = Rng::new(3);
+        let n = 400;
+        let y: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let u: Vec<usize> = (0..n).map(|_| rng.below(4)).collect();
+        let u_fine: Vec<usize> = u
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v * 2 + (i % 2))
+            .collect();
+        assert!(accuracy(&u_fine, &y) >= accuracy(&u, &y) - 1e-12);
+    }
+
+    #[test]
+    fn single_cluster_accuracy_is_majority_fraction() {
+        let y = vec![0, 0, 0, 1, 1, 2];
+        let u = vec![0; 6];
+        assert!((accuracy(&u, &y) - 0.5).abs() < 1e-12);
+        assert_eq!(nmi(&u, &y), 0.0);
+    }
+
+    #[test]
+    fn noisy_correlation_monotone_in_noise() {
+        let mut rng = Rng::new(4);
+        let n = 2000;
+        let y: Vec<usize> = (0..n).map(|_| rng.below(5)).collect();
+        let mut prev_nmi = 1.1;
+        for noise in [0.0, 0.3, 0.6, 0.9] {
+            let u: Vec<usize> = y
+                .iter()
+                .map(|&v| if rng.f64() < noise { rng.below(5) } else { v })
+                .collect();
+            let m = nmi(&u, &y);
+            assert!(m < prev_nmi + 0.02, "nmi not decreasing: {m} after {prev_nmi}");
+            prev_nmi = m;
+        }
+    }
+
+    #[test]
+    fn contingency_sums() {
+        let y = vec![0, 1, 1, 2];
+        let u = vec![1, 1, 0, 0];
+        let t = contingency(&u, &y);
+        let total: usize = t.iter().flat_map(|r| r.iter()).sum();
+        assert_eq!(total, 4);
+        assert_eq!(t[1][0], 1);
+        assert_eq!(t[0][2], 1);
+    }
+}

@@ -1,0 +1,192 @@
+//! PJRT inner-iteration backend: one fused artifact call per row chunk
+//! (`inner_n1024_l{256,1024}_c32` — compactness + similarity + argmin in
+//! a single XLA executable, the L2 graph built from the L1 Pallas
+//! kernels).
+//!
+//! Padding contract (matching python/compile/aot.py):
+//! * rows are processed in chunks of N_TILE = 1024, the last chunk
+//!   zero-padded (its labels are discarded);
+//! * landmarks pad to the artifact's L with all-zero one-hot rows, so
+//!   padded landmarks belong to no cluster and contribute nothing to
+//!   f or g;
+//! * clusters pad to C_PAD = 32 with `valid = 0` columns, masked to +inf
+//!   distance inside the kernel.
+//!
+//! Landmark sets above 1024 fall back to the native path (a chunked
+//! fpartial/argmin route exists in the artifact set but the native sweep
+//! is faster than the RPC overhead at that size on CPU).
+use std::sync::Arc;
+
+use crate::cluster::assign::{self, ClusterStats};
+use crate::cluster::minibatch::StepBackend;
+use crate::linalg::Mat;
+use crate::util::error::Result;
+
+use super::client::{PjrtRuntime, Tensor};
+
+const N_TILE: usize = 1024;
+const C_PAD: usize = 32;
+
+/// StepBackend over the fused PJRT artifact.
+pub struct PjrtBackend {
+    runtime: Arc<PjrtRuntime>,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: Arc<PjrtRuntime>) -> PjrtBackend {
+        PjrtBackend { runtime }
+    }
+
+    fn iterate_pjrt(
+        &self,
+        k_nl: &Mat,
+        k_ll: &Mat,
+        lm_labels: &[usize],
+        c: usize,
+    ) -> Result<Option<(Vec<usize>, ClusterStats)>> {
+        let l = lm_labels.len();
+        let Some(entry) = self.runtime.manifest().inner_for(l) else {
+            return Ok(None); // too many landmarks for the lowered variants
+        };
+        if c > C_PAD {
+            return Ok(None);
+        }
+        let l_pad = entry.param("l")?;
+        let name = entry.name.clone();
+
+        // --- cluster-state operands, shared across chunks
+        let mut counts = vec![0usize; c];
+        for &u in lm_labels {
+            counts[u] += 1;
+        }
+        let mut onehot = Mat::zeros(l_pad, C_PAD);
+        for (m, &u) in lm_labels.iter().enumerate() {
+            onehot.set(m, u, 1.0);
+        }
+        let mut inv = vec![0.0f32; C_PAD];
+        let mut valid = vec![0.0f32; C_PAD];
+        for j in 0..c {
+            if counts[j] > 0 {
+                inv[j] = 1.0 / counts[j] as f32;
+                valid[j] = 1.0;
+            }
+        }
+        let kll_pad = k_ll.padded(l_pad, l_pad);
+
+        let n = k_nl.rows();
+        let mut labels = Vec::with_capacity(n);
+        let mut g_out = vec![0.0f32; c];
+        for lo in (0..n).step_by(N_TILE) {
+            let hi = (lo + N_TILE).min(n);
+            let chunk = k_nl.row_slice(lo, hi).padded(N_TILE, l_pad);
+            let outputs = self.runtime.execute(
+                &name,
+                vec![
+                    Tensor::from_mat(&chunk),
+                    Tensor::from_mat(&kll_pad),
+                    Tensor::from_mat(&onehot),
+                    Tensor::row(inv.clone()),
+                    Tensor::row(valid.clone()),
+                ],
+            )?;
+            let chunk_labels = outputs[0].i32_data()?;
+            labels.extend(chunk_labels[..hi - lo].iter().map(|&v| v as usize));
+            if lo == 0 {
+                let g = outputs[1].f32_data()?;
+                g_out.copy_from_slice(&g[..c]);
+            }
+        }
+        let inv_c: Vec<f32> = inv[..c].to_vec();
+        Ok(Some((labels, ClusterStats { counts, inv: inv_c, g: g_out })))
+    }
+}
+
+impl StepBackend for PjrtBackend {
+    fn iterate(
+        &self,
+        k_nl: &Mat,
+        k_ll: &Mat,
+        lm_labels: &[usize],
+        c: usize,
+    ) -> (Vec<usize>, ClusterStats) {
+        match self.iterate_pjrt(k_nl, k_ll, lm_labels, c) {
+            Ok(Some(result)) => result,
+            // graceful fallback: shapes outside the lowered variants run
+            // natively (same math, tested for parity)
+            Ok(None) => assign::inner_iteration(k_nl, k_ll, lm_labels, c),
+            Err(e) => panic!("PJRT backend failed: {e}"),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{GramSource, KernelFn, VecGram};
+    use crate::runtime::client::tests::shared_runtime;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64, n: usize, l: usize, c: usize) -> (Mat, Mat, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n.max(l), 5, |_, _| rng.normal32(0.0, 2.0));
+        let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.2 }, 2);
+        let rows: Vec<usize> = (0..n).collect();
+        let lms: Vec<usize> = (0..l).collect();
+        let k_nl = g.block_mat(&rows, &lms);
+        let k_ll = g.block_mat(&lms, &lms);
+        let labels: Vec<usize> = (0..l).map(|_| rng.below(c)).collect();
+        (k_nl, k_ll, labels)
+    }
+
+    #[test]
+    fn matches_native_small() {
+        let (k_nl, k_ll, lm_labels) = setup(0, 500, 100, 7);
+        let (want, want_stats) = assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 7);
+        let backend = PjrtBackend::new(shared_runtime());
+        let (got, stats) = backend.iterate(&k_nl, &k_ll, &lm_labels, 7);
+        assert_eq!(got, want);
+        for j in 0..7 {
+            assert!(
+                (stats.g[j] - want_stats.g[j]).abs() < 2e-4,
+                "g[{j}]: {} vs {}",
+                stats.g[j],
+                want_stats.g[j]
+            );
+        }
+        assert_eq!(stats.counts, want_stats.counts);
+    }
+
+    #[test]
+    fn matches_native_multi_chunk_and_l1024() {
+        // n > N_TILE forces chunking; l > 256 forces the l1024 variant
+        let (k_nl, k_ll, lm_labels) = setup(1, 1500, 400, 10);
+        let (want, _) = assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 10);
+        let backend = PjrtBackend::new(shared_runtime());
+        let (got, _) = backend.iterate(&k_nl, &k_ll, &lm_labels, 10);
+        let diff = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+        assert_eq!(diff, 0, "{diff} label mismatches");
+    }
+
+    #[test]
+    fn empty_clusters_masked() {
+        let (k_nl, k_ll, mut lm_labels) = setup(2, 300, 80, 8);
+        lm_labels.iter_mut().for_each(|u| *u %= 3);
+        let backend = PjrtBackend::new(shared_runtime());
+        let (labels, stats) = backend.iterate(&k_nl, &k_ll, &lm_labels, 8);
+        assert!(labels.iter().all(|&u| u < 3));
+        assert_eq!(&stats.counts[3..], &[0; 5]);
+    }
+
+    #[test]
+    fn oversized_landmarks_fall_back_to_native() {
+        let (k_nl, k_ll, lm_labels) = setup(3, 100, 1100, 4);
+        let (want, _) = assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 4);
+        let backend = PjrtBackend::new(shared_runtime());
+        let (got, _) = backend.iterate(&k_nl, &k_ll, &lm_labels, 4);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,360 @@
+//! Device-thread PJRT runtime.
+//!
+//! The `xla` crate's PJRT handles wrap raw pointers (neither `Send` nor
+//! `Sync`), so all PJRT state lives on one dedicated **device thread** —
+//! which is also exactly the paper's offload architecture (Fig.3: "a CPU
+//! thread is bound to the device ... responsible for host-device data
+//! transfer and device control"). Host-side callers talk to it through a
+//! synchronous request channel carrying plain buffers; executables are
+//! compiled on first use and cached by artifact name.
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::linalg::Mat;
+use crate::util::error::{Error, Result};
+
+use super::manifest::{ArtifactEntry, DType, Manifest};
+
+/// A plain host tensor crossing the host/device channel.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32 { data: Vec<f32>, dims: Vec<usize> },
+    I32 { data: Vec<i32>, dims: Vec<usize> },
+}
+
+impl Tensor {
+    pub fn from_mat(m: &Mat) -> Tensor {
+        Tensor::F32 { data: m.data().to_vec(), dims: vec![m.rows(), m.cols()] }
+    }
+
+    pub fn scalar2d(v: f32) -> Tensor {
+        Tensor::F32 { data: vec![v], dims: vec![1, 1] }
+    }
+
+    pub fn row(v: Vec<f32>) -> Tensor {
+        let n = v.len();
+        Tensor::F32 { data: v, dims: vec![1, n] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { dims, .. } | Tensor::I32 { dims, .. } => dims,
+        }
+    }
+
+    pub fn f32_data(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(Error::Runtime("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn i32_data(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => Err(Error::Runtime("expected i32 tensor".into())),
+        }
+    }
+}
+
+struct Request {
+    name: String,
+    inputs: Vec<Tensor>,
+    reply: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+/// Handle to the device thread. Cheap to share (`Sync`); dropping the
+/// last handle shuts the thread down.
+pub struct PjrtRuntime {
+    tx: Mutex<Option<mpsc::Sender<Request>>>,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+    manifest: Manifest,
+}
+
+impl PjrtRuntime {
+    /// Spawn the device thread over the given artifact directory.
+    pub fn start(manifest: Manifest) -> Result<PjrtRuntime> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let entries = manifest.entries.clone();
+        let join = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || device_main(entries, rx))
+            .map_err(|e| Error::Runtime(format!("cannot spawn device thread: {e}")))?;
+        Ok(PjrtRuntime {
+            tx: Mutex::new(Some(tx)),
+            join: Mutex::new(Some(join)),
+            manifest,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact by name. Shapes are validated against the
+    /// manifest before crossing the channel.
+    pub fn execute(&self, name: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let entry = self.manifest.find(name)?;
+        validate_inputs(entry, &inputs)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let tx = guard
+                .as_ref()
+                .ok_or_else(|| Error::Runtime("runtime shut down".into()))?;
+            tx.send(Request { name: name.to_string(), inputs, reply: reply_tx })
+                .map_err(|_| Error::Runtime("device thread died".into()))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("device thread dropped reply".into()))?
+    }
+}
+
+impl Drop for PjrtRuntime {
+    fn drop(&mut self) {
+        // close the channel, then join so PJRT teardown happens cleanly
+        *self.tx.lock().unwrap() = None;
+        if let Some(join) = self.join.lock().unwrap().take() {
+            let _ = join.join();
+        }
+    }
+}
+
+fn validate_inputs(entry: &ArtifactEntry, inputs: &[Tensor]) -> Result<()> {
+    if inputs.len() != entry.inputs.len() {
+        return Err(Error::Runtime(format!(
+            "{}: expected {} inputs, got {}",
+            entry.name,
+            entry.inputs.len(),
+            inputs.len()
+        )));
+    }
+    for (i, (tensor, (dt, dims))) in inputs.iter().zip(&entry.inputs).enumerate() {
+        let ok_type = matches!(
+            (tensor, dt),
+            (Tensor::F32 { .. }, DType::F32) | (Tensor::I32 { .. }, DType::I32)
+        );
+        if !ok_type {
+            return Err(Error::Runtime(format!(
+                "{}: input {i} dtype mismatch",
+                entry.name
+            )));
+        }
+        if tensor.dims() != dims.as_slice() {
+            return Err(Error::Runtime(format!(
+                "{}: input {i} shape {:?} != manifest {:?}",
+                entry.name,
+                tensor.dims(),
+                dims
+            )));
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// device thread
+
+fn device_main(entries: Vec<ArtifactEntry>, rx: mpsc::Receiver<Request>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // reply with errors until the channel closes
+            for req in rx {
+                let _ = req
+                    .reply
+                    .send(Err(Error::Runtime(format!("PJRT client failed: {e}"))));
+            }
+            return;
+        }
+    };
+    let by_name: HashMap<String, ArtifactEntry> =
+        entries.into_iter().map(|e| (e.name.clone(), e)).collect();
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    for req in rx {
+        let result = serve(&client, &by_name, &mut cache, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn serve(
+    client: &xla::PjRtClient,
+    by_name: &HashMap<String, ArtifactEntry>,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    req: &Request,
+) -> Result<Vec<Tensor>> {
+    let entry = by_name
+        .get(&req.name)
+        .ok_or_else(|| Error::Runtime(format!("unknown artifact {}", req.name)))?;
+    if !cache.contains_key(&req.name) {
+        let path = entry.file.to_string_lossy().to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| Error::Runtime(format!("load {path}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", req.name)))?;
+        cache.insert(req.name.clone(), exe);
+    }
+    let exe = cache.get(&req.name).expect("just inserted");
+
+    let mut literals = Vec::with_capacity(req.inputs.len());
+    for t in &req.inputs {
+        let lit = match t {
+            Tensor::F32 { data, dims } => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?
+            }
+            Tensor::I32 { data, dims } => {
+                let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data)
+                    .reshape(&dims)
+                    .map_err(|e| Error::Runtime(format!("reshape input: {e}")))?
+            }
+        };
+        literals.push(lit);
+    }
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| Error::Runtime(format!("execute {}: {e}", req.name)))?;
+    let out_lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| Error::Runtime(format!("fetch result: {e}")))?;
+    // the AOT path lowers with return_tuple=True
+    let parts = out_lit
+        .to_tuple()
+        .map_err(|e| Error::Runtime(format!("untuple: {e}")))?;
+    let mut outputs = Vec::with_capacity(parts.len());
+    for (part, (dt, dims)) in parts.into_iter().zip(&entry.outputs) {
+        let t = match dt {
+            DType::F32 => Tensor::F32 {
+                data: part
+                    .to_vec::<f32>()
+                    .map_err(|e| Error::Runtime(format!("read f32 out: {e}")))?,
+                dims: dims.clone(),
+            },
+            DType::I32 => Tensor::I32 {
+                data: part
+                    .to_vec::<i32>()
+                    .map_err(|e| Error::Runtime(format!("read i32 out: {e}")))?,
+                dims: dims.clone(),
+            },
+        };
+        outputs.push(t);
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use std::path::PathBuf;
+    use std::sync::{Arc, OnceLock};
+
+    /// One shared runtime for all tests in the binary: PJRT CPU clients
+    /// are heavyweight and the device thread serializes access anyway.
+    pub fn shared_runtime() -> Arc<PjrtRuntime> {
+        static RT: OnceLock<Arc<PjrtRuntime>> = OnceLock::new();
+        RT.get_or_init(|| {
+            let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            let manifest = Manifest::load(&dir).expect("run `make artifacts`");
+            Arc::new(PjrtRuntime::start(manifest).expect("runtime start"))
+        })
+        .clone()
+    }
+
+    #[test]
+    fn executes_rbf_artifact_matches_native() {
+        let rt = shared_runtime();
+        let m = 256;
+        let d = 64;
+        let mut rng = crate::util::rng::Rng::new(0);
+        let x = Mat::from_fn(m, d, |_, _| rng.normal32(0.0, 1.0));
+        let y = Mat::from_fn(m, d, |_, _| rng.normal32(0.0, 1.0));
+        let gamma = 0.05f32;
+        let out = rt
+            .execute(
+                "rbf_t256_d64",
+                vec![Tensor::from_mat(&x), Tensor::from_mat(&y), Tensor::scalar2d(gamma)],
+            )
+            .unwrap();
+        let k = out[0].f32_data().unwrap();
+        // native oracle
+        for check in [(0usize, 0usize), (10, 200), (255, 255), (13, 77)] {
+            let (i, j) = check;
+            let d2: f32 = x
+                .row(i)
+                .iter()
+                .zip(y.row(j))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            let want = (-gamma * d2).exp();
+            let got = k[i * m + j];
+            assert!((got - want).abs() < 1e-4, "[{i},{j}] {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let rt = shared_runtime();
+        let bad = rt.execute(
+            "rbf_t256_d64",
+            vec![
+                Tensor::F32 { data: vec![0.0; 10], dims: vec![10, 1] },
+                Tensor::F32 { data: vec![0.0; 10], dims: vec![10, 1] },
+                Tensor::scalar2d(1.0),
+            ],
+        );
+        assert!(bad.is_err());
+        let msg = format!("{}", bad.unwrap_err());
+        assert!(msg.contains("shape"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_artifact_rejected() {
+        let rt = shared_runtime();
+        assert!(rt.execute("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn golden_vectors_roundtrip() {
+        // the aot.py golden set: inputs + oracle outputs dumped at
+        // artifact build time; full end-to-end PJRT numerics check
+        let rt = shared_runtime();
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let read_f32 = |p: &str| -> Vec<f32> {
+            let bytes = std::fs::read(dir.join(p)).expect(p);
+            bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect()
+        };
+        let x = read_f32("golden/rbf_t256_d64.x.bin");
+        let y = read_f32("golden/rbf_t256_d64.y.bin");
+        let gamma = read_f32("golden/rbf_t256_d64.gamma.bin");
+        let want = read_f32("golden/rbf_t256_d64.out.bin");
+        let out = rt
+            .execute(
+                "rbf_t256_d64",
+                vec![
+                    Tensor::F32 { data: x, dims: vec![256, 64] },
+                    Tensor::F32 { data: y, dims: vec![256, 64] },
+                    Tensor::F32 { data: gamma, dims: vec![1, 1] },
+                ],
+            )
+            .unwrap();
+        let got = out[0].f32_data().unwrap();
+        assert_eq!(got.len(), want.len());
+        let max_err = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 2e-5, "max err {max_err}");
+    }
+}

@@ -1,0 +1,157 @@
+//! PJRT-accelerated Gram source: RBF kernel blocks computed by the AOT
+//! Pallas tile artifact (`rbf_t256_d{d}`), with padding to the fixed tile
+//! shape. Drop-in [`GramSource`] replacement for the native `VecGram`;
+//! integration tests assert parity between the two.
+use std::sync::Arc;
+
+use crate::kernels::{GramSource, KernelFn, VecGram};
+use crate::linalg::Mat;
+use crate::util::error::{Error, Result};
+
+use super::client::{PjrtRuntime, Tensor};
+
+/// Vector-space data whose RBF Gram blocks run on the PJRT device thread.
+///
+/// Narrow blocks (fewer columns than half a tile edge — the k-means++
+/// seeding columns, medoid merges, displacement probes) are computed on
+/// the native path instead: padding a 1-column request to a 256x256 tile
+/// would cost ~256x the useful work (measured in EXPERIMENTS.md §Perf).
+pub struct PjrtGram {
+    runtime: Arc<PjrtRuntime>,
+    native: VecGram,
+    gamma: f32,
+    entry_name: String,
+    tile: usize,
+}
+
+impl PjrtGram {
+    /// Fails if no rbf artifact was lowered for this feature dimension
+    /// (the caller falls back to the native path).
+    pub fn new(runtime: Arc<PjrtRuntime>, x: Mat, gamma: f32) -> Result<PjrtGram> {
+        let d = x.cols();
+        let (entry_name, tile) = {
+            let entry = runtime.manifest().rbf_for_dim(d).ok_or_else(|| {
+                Error::Config(format!(
+                    "no rbf artifact for d={d}; lowered dims are fixed at AOT time"
+                ))
+            })?;
+            (entry.name.clone(), entry.param("tile_m")?)
+        };
+        let native = VecGram::new(x, KernelFn::Rbf { gamma }, 1);
+        Ok(PjrtGram { runtime, native, gamma, entry_name, tile })
+    }
+
+    pub fn x(&self) -> &Mat {
+        self.native.x()
+    }
+
+    /// Evaluate one padded tile: rows/cols are sample indices (possibly
+    /// fewer than the tile edge).
+    fn tile(&self, rows: &[usize], cols: &[usize]) -> Result<Mat> {
+        let t = self.tile;
+        let x = self.native.x();
+        let d = x.cols();
+        let xg = x.gather(rows).padded(t, d);
+        let yg = x.gather(cols).padded(t, d);
+        let out = self.runtime.execute(
+            &self.entry_name,
+            vec![
+                Tensor::from_mat(&xg),
+                Tensor::from_mat(&yg),
+                Tensor::scalar2d(self.gamma),
+            ],
+        )?;
+        let data = out[0].f32_data()?;
+        let mut block = Mat::zeros(rows.len(), cols.len());
+        for r in 0..rows.len() {
+            block
+                .row_mut(r)
+                .copy_from_slice(&data[r * t..r * t + cols.len()]);
+        }
+        Ok(block)
+    }
+}
+
+impl GramSource for PjrtGram {
+    fn n(&self) -> usize {
+        self.native.n()
+    }
+
+    fn block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), rows.len() * cols.len());
+        let t = self.tile;
+        // narrow or tiny requests: tile padding overhead dominates; the
+        // native path produces identical numbers (parity-tested)
+        if cols.len() < t / 2 || rows.len() * cols.len() < t * t / 2 {
+            self.native.block(rows, cols, out);
+            return;
+        }
+        let ncols = cols.len();
+        for r0 in (0..rows.len()).step_by(t) {
+            let r1 = (r0 + t).min(rows.len());
+            for c0 in (0..ncols).step_by(t) {
+                let c1 = (c0 + t).min(ncols);
+                let tile = self
+                    .tile(&rows[r0..r1], &cols[c0..c1])
+                    .expect("PJRT tile execution failed");
+                for (tr, r) in (r0..r1).enumerate() {
+                    out[r * ncols + c0..r * ncols + c1]
+                        .copy_from_slice(tile.row(tr));
+                }
+            }
+        }
+    }
+
+    fn diag(&self, _idx: &[usize], out: &mut [f32]) {
+        out.fill(1.0); // RBF diagonal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelFn, VecGram};
+    use crate::runtime::client::tests::shared_runtime;
+    use crate::util::rng::Rng;
+
+    fn random_mat(seed: u64, n: usize, d: usize) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.normal32(0.0, 1.0))
+    }
+
+    #[test]
+    fn parity_with_native_vecgram() {
+        let x = random_mat(0, 300, 64); // not a multiple of the tile
+        let gamma = 0.08f32;
+        let pjrt = PjrtGram::new(shared_runtime(), x.clone(), gamma).unwrap();
+        let native = VecGram::new(x, KernelFn::Rbf { gamma }, 2);
+        let rows: Vec<usize> = (0..300).step_by(7).collect();
+        let cols: Vec<usize> = (0..300).step_by(11).collect();
+        let a = pjrt.block_mat(&rows, &cols);
+        let b = native.block_mat(&rows, &cols);
+        let max_err = a
+            .data()
+            .iter()
+            .zip(b.data())
+            .map(|(p, q)| (p - q).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-4, "max err {max_err}");
+    }
+
+    #[test]
+    fn small_d_variant() {
+        let x = random_mat(1, 64, 2); // d=2 artifact (toy dataset shape)
+        let pjrt = PjrtGram::new(shared_runtime(), x.clone(), 1.0).unwrap();
+        let native = VecGram::new(x, KernelFn::Rbf { gamma: 1.0 }, 1);
+        let idx: Vec<usize> = (0..64).collect();
+        let a = pjrt.block_mat(&idx, &idx);
+        let b = native.block_mat(&idx, &idx);
+        assert!(a.frob_dist(&b) < 1e-3);
+    }
+
+    #[test]
+    fn unsupported_dim_is_config_error() {
+        let x = random_mat(2, 10, 33);
+        assert!(PjrtGram::new(shared_runtime(), x, 0.5).is_err());
+    }
+}

@@ -1,0 +1,177 @@
+//! `artifacts/manifest.json` schema (written by python/compile/aot.py).
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Tensor dtype in the manifest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One lowered executable.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<(DType, Vec<usize>)>,
+    pub outputs: Vec<(DType, Vec<usize>)>,
+    /// Free-form parameters (kind, tile sizes, d, l, c...).
+    pub params: Json,
+}
+
+impl ArtifactEntry {
+    /// Parameter lookup with error context.
+    pub fn param(&self, key: &str) -> Result<usize> {
+        self.params.req_usize(key)
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn parse_shape(j: &Json) -> Result<(DType, Vec<usize>)> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| Error::Config("shape entry not an array".into()))?;
+    let dt = match arr.first().and_then(|d| d.as_str()) {
+        Some("f32") => DType::F32,
+        Some("i32") => DType::I32,
+        other => return Err(Error::Config(format!("bad dtype {other:?}"))),
+    };
+    let dims = arr
+        .get(1)
+        .and_then(|d| d.as_arr())
+        .ok_or_else(|| Error::Config("missing dims".into()))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| Error::Config("bad dim".into())))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((dt, dims))
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Config(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let root = Json::parse(&text)?;
+        let version = root.req_usize("version")?;
+        if version != 1 {
+            return Err(Error::Config(format!("unsupported manifest version {version}")));
+        }
+        let mut entries = Vec::new();
+        for e in root
+            .req("entries")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("entries not an array".into()))?
+        {
+            let name = e.req_str("name")?.to_string();
+            let file = dir.join(e.req_str("file")?);
+            let inputs = e
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| Error::Config("inputs not an array".into()))?
+                .iter()
+                .map(parse_shape)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| Error::Config("outputs not an array".into()))?
+                .iter()
+                .map(parse_shape)
+                .collect::<Result<Vec<_>>>()?;
+            let params = e.req("params")?.clone();
+            entries.push(ArtifactEntry { name, file, inputs, outputs, params });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Config(format!("artifact '{name}' not in manifest")))
+    }
+
+    /// The rbf kernel-tile entry for feature dimension `d`, if lowered.
+    pub fn rbf_for_dim(&self, d: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.params.get("kind").and_then(|k| k.as_str()) == Some("rbf")
+                && e.params.get("d").and_then(|v| v.as_usize()) == Some(d)
+        })
+    }
+
+    /// Smallest fused inner-iteration entry whose landmark capacity fits
+    /// `l` (n rows are chunked, c is padded).
+    pub fn inner_for(&self, l: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.params.get("kind").and_then(|k| k.as_str()) == Some("inner"))
+            .filter(|e| e.params.get("l").and_then(|v| v.as_usize()).unwrap_or(0) >= l)
+            .min_by_key(|e| e.params.get("l").and_then(|v| v.as_usize()).unwrap_or(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("run `make artifacts` first");
+        assert!(m.entries.len() >= 10);
+        let rbf = m.find("rbf_t256_d784").unwrap();
+        assert_eq!(rbf.inputs.len(), 3);
+        assert_eq!(rbf.inputs[0].1, vec![256, 784]);
+        assert_eq!(rbf.outputs[0].1, vec![256, 256]);
+        assert_eq!(rbf.inputs[0].0, DType::F32);
+    }
+
+    #[test]
+    fn rbf_lookup_by_dim() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.rbf_for_dim(784).is_some());
+        assert!(m.rbf_for_dim(2).is_some());
+        assert!(m.rbf_for_dim(999).is_none());
+    }
+
+    #[test]
+    fn inner_lookup_picks_smallest_fitting() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let e = m.inner_for(100).unwrap();
+        assert_eq!(e.param("l").unwrap(), 256);
+        let e = m.inner_for(256).unwrap();
+        assert_eq!(e.param("l").unwrap(), 256);
+        let e = m.inner_for(257).unwrap();
+        assert_eq!(e.param("l").unwrap(), 1024);
+        assert!(m.inner_for(4096).is_none());
+    }
+
+    #[test]
+    fn missing_artifact_is_config_error() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.find("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_good_error() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

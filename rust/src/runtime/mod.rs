@@ -1,0 +1,26 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py` lowers the L2 JAX graphs — which embed the L1
+//! Pallas kernels — to HLO text) and execute them from the Rust hot path.
+//! Python never runs at clustering time.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` (shapes per variant).
+//! * [`client`] — `PjRtClient` wrapper: compile-on-first-use executable
+//!   cache keyed by artifact name, `Mat` <-> `Literal` conversion.
+//! * [`gram`] — [`PjrtGram`]: a `GramSource` whose RBF blocks are computed
+//!   by the `rbf_t256_d*` artifacts (tile padding included).
+//! * [`backend`] — [`PjrtBackend`]: a `StepBackend` running the fused
+//!   inner-iteration artifact (`inner_n1024_l{256,1024}_c32`).
+//! * [`offload`] — the Fig.3 producer-consumer pipeline: a device thread
+//!   prefetches the next mini-batch's kernel blocks while the host
+//!   consumes the current one.
+pub mod backend;
+pub mod client;
+pub mod gram;
+pub mod manifest;
+pub mod offload;
+
+pub use backend::PjrtBackend;
+pub use client::PjrtRuntime;
+pub use gram::PjrtGram;
+pub use manifest::{ArtifactEntry, Manifest};
+pub use offload::{OffloadStats, Prefetcher};

@@ -1,0 +1,5 @@
+//! Simulated substrates for experiments whose original inputs are not
+//! available: the molecular-dynamics trajectory generator (paper §4.5)
+//! and the Markov-state-model analysis the paper's intro motivates.
+pub mod md;
+pub mod msm;

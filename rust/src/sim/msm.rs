@@ -1,0 +1,314 @@
+//! Markov State Model estimation over clustered trajectory frames.
+//!
+//! The paper motivates MD clustering with "quantitively estimating
+//! kinetics rates via Markov State Models" (§1): once frames are
+//! clustered, the cluster-label sequence along the trajectory defines a
+//! discrete jump process whose transition matrix yields relaxation
+//! timescales and stationary populations. This module provides that
+//! downstream analysis: transition counts at a lag time, row-stochastic
+//! transition matrix (with a reversibility symmetrization option),
+//! stationary distribution and implied timescales via deflated power
+//! iteration.
+use crate::util::error::{Error, Result};
+
+/// A row-stochastic Markov state model.
+#[derive(Clone, Debug)]
+pub struct Msm {
+    /// Number of states (clusters).
+    pub n_states: usize,
+    /// Lag time (in frames) used for counting.
+    pub lag: usize,
+    /// Row-stochastic transition matrix, row-major `n_states^2`.
+    pub t: Vec<f64>,
+    /// Raw transition counts.
+    pub counts: Vec<f64>,
+}
+
+/// Count transitions `labels[t] -> labels[t + lag]`.
+///
+/// `breaks` marks trajectory restart points (swarm simulations — see
+/// `sim::md::simulate`): pairs spanning a break are skipped so restarts
+/// do not inject fake unbinding transitions.
+pub fn count_transitions(
+    labels: &[usize],
+    n_states: usize,
+    lag: usize,
+    breaks: &[usize],
+) -> Result<Vec<f64>> {
+    if lag == 0 || lag >= labels.len() {
+        return Err(Error::Config(format!(
+            "lag {lag} out of range for {} frames",
+            labels.len()
+        )));
+    }
+    if let Some(&bad) = labels.iter().find(|&&u| u >= n_states) {
+        return Err(Error::Config(format!("label {bad} >= n_states {n_states}")));
+    }
+    let mut is_break = vec![false; labels.len() + 1];
+    for &b in breaks {
+        if b < is_break.len() {
+            is_break[b] = true;
+        }
+    }
+    let mut counts = vec![0.0f64; n_states * n_states];
+    'outer: for t in 0..labels.len() - lag {
+        // skip pairs that straddle a restart
+        for k in (t + 1)..=(t + lag) {
+            if is_break[k] {
+                continue 'outer;
+            }
+        }
+        counts[labels[t] * n_states + labels[t + lag]] += 1.0;
+    }
+    Ok(counts)
+}
+
+/// Build a row-stochastic MSM from a label sequence.
+///
+/// `reversible` applies the standard symmetrization `C <- (C + C^T)/2`
+/// before normalization (detailed-balance estimator for equilibrium
+/// data), which also guarantees real eigenvalues.
+pub fn estimate_msm(
+    labels: &[usize],
+    n_states: usize,
+    lag: usize,
+    breaks: &[usize],
+    reversible: bool,
+) -> Result<Msm> {
+    let mut counts = count_transitions(labels, n_states, lag, breaks)?;
+    if reversible {
+        for i in 0..n_states {
+            for j in (i + 1)..n_states {
+                let m = 0.5 * (counts[i * n_states + j] + counts[j * n_states + i]);
+                counts[i * n_states + j] = m;
+                counts[j * n_states + i] = m;
+            }
+        }
+    }
+    let mut t = counts.clone();
+    for i in 0..n_states {
+        let row = &mut t[i * n_states..(i + 1) * n_states];
+        let total: f64 = row.iter().sum();
+        if total > 0.0 {
+            for v in row.iter_mut() {
+                *v /= total;
+            }
+        } else {
+            // unvisited state: self-loop keeps the matrix stochastic
+            row[i] = 1.0;
+        }
+    }
+    Ok(Msm { n_states, lag, t, counts })
+}
+
+impl Msm {
+    /// Stationary distribution via power iteration on `pi T = pi`.
+    pub fn stationary(&self) -> Vec<f64> {
+        let n = self.n_states;
+        let mut pi = vec![1.0 / n as f64; n];
+        for _ in 0..10_000 {
+            let mut next = vec![0.0f64; n];
+            for i in 0..n {
+                let pii = pi[i];
+                if pii == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    next[j] += pii * self.t[i * n + j];
+                }
+            }
+            let norm: f64 = next.iter().sum();
+            for v in &mut next {
+                *v /= norm;
+            }
+            let delta: f64 = next.iter().zip(&pi).map(|(a, b)| (a - b).abs()).sum();
+            pi = next;
+            if delta < 1e-12 {
+                break;
+            }
+        }
+        pi
+    }
+
+    /// Leading non-unit eigenvalues via pi-weighted deflated power
+    /// iteration (valid for reversible T), largest first.
+    pub fn eigenvalues(&self, k: usize) -> Vec<f64> {
+        let n = self.n_states;
+        let pi = self.stationary();
+        // reversible T is self-adjoint under the pi inner product
+        let dot_pi = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter().zip(b).zip(&pi).map(|((x, y), w)| x * y * w).sum()
+        };
+        let mut found: Vec<(f64, Vec<f64>)> = vec![(1.0, vec![1.0; n])];
+        let mut out = Vec::new();
+        let mut rng_state = 0x9E3779B97F4A7C15u64;
+        for _ in 0..k.min(n.saturating_sub(1)) {
+            // deterministic pseudo-random start vector
+            let mut v: Vec<f64> = (0..n)
+                .map(|_| {
+                    rng_state = rng_state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((rng_state >> 33) as f64 / (1u64 << 31) as f64) - 1.0
+                })
+                .collect();
+            let mut lambda = 0.0;
+            for _ in 0..5_000 {
+                // deflate previously found eigenvectors
+                for (_, u) in &found {
+                    let proj = dot_pi(&v, u) / dot_pi(u, u).max(1e-300);
+                    for (vv, uu) in v.iter_mut().zip(u) {
+                        *vv -= proj * uu;
+                    }
+                }
+                // w = T v
+                let mut w = vec![0.0f64; n];
+                for i in 0..n {
+                    let row = &self.t[i * n..(i + 1) * n];
+                    w[i] = row.iter().zip(&v).map(|(t, x)| t * x).sum();
+                }
+                let norm = dot_pi(&w, &w).sqrt().max(1e-300);
+                let new_lambda = dot_pi(&w, &v) / dot_pi(&v, &v).max(1e-300);
+                for x in &mut w {
+                    *x /= norm;
+                }
+                let delta = (new_lambda - lambda).abs();
+                lambda = new_lambda;
+                v = w;
+                if delta < 1e-13 {
+                    break;
+                }
+            }
+            found.push((lambda, v));
+            out.push(lambda);
+        }
+        out
+    }
+
+    /// Implied timescales t_i = -lag / ln(lambda_i) for the leading
+    /// non-unit eigenvalues (frames; multiply by the recording stride
+    /// for physical time). Negative/≈zero eigenvalues yield `None`.
+    pub fn implied_timescales(&self, k: usize) -> Vec<Option<f64>> {
+        self.eigenvalues(k)
+            .into_iter()
+            .map(|l| {
+                if l > 1e-9 && l < 1.0 - 1e-12 {
+                    Some(-(self.lag as f64) / l.ln())
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Two-state chain with known rates.
+    fn two_state_labels(rng: &mut Rng, n: usize, p01: f64, p10: f64) -> Vec<usize> {
+        let mut s = 0usize;
+        (0..n)
+            .map(|_| {
+                let p = if s == 0 { p01 } else { p10 };
+                if rng.f64() < p {
+                    s = 1 - s;
+                }
+                s
+            })
+            .collect()
+    }
+
+    #[test]
+    fn counts_simple_sequence() {
+        let labels = [0usize, 0, 1, 1, 0];
+        let c = count_transitions(&labels, 2, 1, &[]).unwrap();
+        assert_eq!(c, vec![1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn breaks_skip_spanning_pairs() {
+        let labels = [0usize, 0, 1, 1];
+        // break between index 1 and 2: the 0->1 transition is an artifact
+        let c = count_transitions(&labels, 2, 1, &[2]).unwrap();
+        assert_eq!(c, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn rows_stochastic() {
+        let mut rng = Rng::new(0);
+        let labels = two_state_labels(&mut rng, 5000, 0.1, 0.3);
+        let msm = estimate_msm(&labels, 2, 1, &[], false).unwrap();
+        for i in 0..2 {
+            let s: f64 = msm.t[i * 2..(i + 1) * 2].iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn recovers_two_state_rates() {
+        let mut rng = Rng::new(1);
+        let labels = two_state_labels(&mut rng, 200_000, 0.05, 0.15);
+        let msm = estimate_msm(&labels, 2, 1, &[], true).unwrap();
+        assert!((msm.t[1] - 0.05).abs() < 0.01, "p01 {}", msm.t[1]);
+        assert!((msm.t[2] - 0.15).abs() < 0.01, "p10 {}", msm.t[2]);
+        // stationary: pi0/pi1 = p10/p01 = 3
+        let pi = msm.stationary();
+        assert!((pi[0] / pi[1] - 3.0).abs() < 0.25, "{pi:?}");
+        // slowest eigenvalue = 1 - p01 - p10 = 0.8
+        let ev = msm.eigenvalues(1);
+        assert!((ev[0] - 0.8).abs() < 0.02, "{ev:?}");
+        // implied timescale = -1/ln(0.8) ~ 4.48 frames
+        let ts = msm.implied_timescales(1)[0].unwrap();
+        assert!((ts - 4.48).abs() < 0.5, "{ts}");
+    }
+
+    #[test]
+    fn unvisited_state_selfloop() {
+        let labels = [0usize, 0, 0, 0];
+        let msm = estimate_msm(&labels, 3, 1, &[], false).unwrap();
+        assert_eq!(msm.t[4], 1.0); // state 1 self-loop
+        assert_eq!(msm.t[8], 1.0); // state 2 self-loop
+    }
+
+    #[test]
+    fn lag_scaling_consistent() {
+        // for a Markov chain, lambda(lag k) ~ lambda(lag 1)^k, so the
+        // implied timescale is roughly lag-independent
+        let mut rng = Rng::new(2);
+        let labels = two_state_labels(&mut rng, 300_000, 0.04, 0.1);
+        let t1 = estimate_msm(&labels, 2, 1, &[], true)
+            .unwrap()
+            .implied_timescales(1)[0]
+            .unwrap();
+        let t3 = estimate_msm(&labels, 2, 3, &[], true)
+            .unwrap()
+            .implied_timescales(1)[0]
+            .unwrap();
+        assert!((t1 - t3).abs() / t1 < 0.2, "t1={t1} t3={t3}");
+    }
+
+    #[test]
+    fn invalid_inputs_rejected() {
+        assert!(count_transitions(&[0, 1], 2, 0, &[]).is_err());
+        assert!(count_transitions(&[0, 1], 2, 5, &[]).is_err());
+        assert!(count_transitions(&[0, 3], 2, 1, &[]).is_err());
+    }
+
+    #[test]
+    fn md_trajectory_timescale_separation() {
+        // end-to-end: macro-state labels from the Langevin simulator must
+        // show a slow process (binding/unbinding) well separated from the
+        // lag time
+        let mut rng = Rng::new(3);
+        let cfg = crate::sim::md::MdConfig { stride: 10, ..Default::default() };
+        let traj = crate::sim::md::simulate(&mut rng, &cfg, 4000);
+        let labels: Vec<usize> = traj.labels.iter().map(|l| l.index()).collect();
+        let restart = (4000 / 8).max(1);
+        let breaks: Vec<usize> = (1..8).map(|k| k * restart).collect();
+        let msm = estimate_msm(&labels, 3, 5, &breaks, true).unwrap();
+        let ts = msm.implied_timescales(1)[0];
+        let t = ts.expect("slow process exists");
+        assert!(t > 15.0, "no slow binding process: t = {t} frames");
+    }
+}

@@ -1,0 +1,250 @@
+//! Declarative command-line flag parser (clap substitute).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, typed getters
+//! with defaults, required flags, and auto-generated `--help` text. The
+//! binary (`rust/src/main.rs`) layers subcommands on top.
+use std::collections::BTreeMap;
+
+use super::error::{Error, Result};
+
+/// One declared flag.
+#[derive(Clone, Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// Textual default shown in help; `None` means required or boolean.
+    pub default: Option<&'static str>,
+    pub boolean: bool,
+}
+
+/// Declarative parser: declare flags, then `parse` the argv tail.
+#[derive(Default)]
+pub struct Cli {
+    about: &'static str,
+    flags: Vec<Flag>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(about: &'static str) -> Self {
+        Cli { about, ..Default::default() }
+    }
+
+    /// Declare a value-taking flag with a default.
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: Some(default), boolean: false });
+        self
+    }
+
+    /// Declare a required value-taking flag.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, boolean: false });
+        self
+    }
+
+    /// Declare a boolean flag (false unless present).
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, boolean: true });
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&Flag> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut out = format!("{}\n\nFlags:\n", self.about);
+        for f in &self.flags {
+            let kind = if f.boolean {
+                String::new()
+            } else if let Some(d) = f.default {
+                format!(" <value> (default: {d})")
+            } else {
+                " <value> (required)".to_string()
+            };
+            out.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        out
+    }
+
+    /// Parse an argv tail. Returns `Err` on unknown flags, missing values,
+    /// or missing required flags; `--help` yields a `Config` error carrying
+    /// the help text (the caller prints and exits 0).
+    pub fn parse(mut self, args: &[String]) -> Result<Parsed> {
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(Error::Config(self.help()));
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let flag = self
+                    .find(name)
+                    .ok_or_else(|| Error::Config(format!("unknown flag --{name}")))?
+                    .clone();
+                let value = if flag.boolean {
+                    if inline.is_some() {
+                        return Err(Error::Config(format!(
+                            "flag --{name} does not take a value"
+                        )));
+                    }
+                    "true".to_string()
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    args.get(i)
+                        .cloned()
+                        .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?
+                };
+                self.values.insert(name.to_string(), value);
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        // fill defaults, check required
+        let mut values = self.values;
+        for f in &self.flags {
+            if !values.contains_key(f.name) {
+                if let Some(d) = f.default {
+                    values.insert(f.name.to_string(), d.to_string());
+                } else if !f.boolean {
+                    return Err(Error::Config(format!("missing required flag --{}", f.name)));
+                }
+            }
+        }
+        Ok(Parsed { values, positional: self.positional })
+    }
+}
+
+/// Parse result with typed getters.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn str(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get<T: std::str::FromStr>(&self, name: &str) -> Result<T> {
+        let raw = self
+            .values
+            .get(name)
+            .ok_or_else(|| Error::Config(format!("flag --{name} not declared")))?;
+        raw.parse().map_err(|_| {
+            Error::Config(format!(
+                "flag --{name}: cannot parse '{raw}' as {}",
+                std::any::type_name::<T>()
+            ))
+        })
+    }
+
+    /// Comma-separated list of T.
+    pub fn list<T: std::str::FromStr>(&self, name: &str) -> Result<Vec<T>> {
+        let raw = self
+            .values
+            .get(name)
+            .ok_or_else(|| Error::Config(format!("flag --{name} not declared")))?;
+        raw.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse().map_err(|_| {
+                    Error::Config(format!("flag --{name}: bad list element '{s}'"))
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("test")
+            .opt("b", "4", "mini-batches")
+            .opt("s", "1.0", "sparsity")
+            .req("dataset", "dataset name")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = cli().parse(&args(&["--dataset", "mnist"])).unwrap();
+        assert_eq!(p.get::<usize>("b").unwrap(), 4);
+        assert_eq!(p.get::<f64>("s").unwrap(), 1.0);
+        assert_eq!(p.str("dataset"), "mnist");
+        assert!(!p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_bool() {
+        let p = cli()
+            .parse(&args(&["--dataset=rcv1", "--b=16", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get::<usize>("b").unwrap(), 16);
+        assert!(p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        assert!(cli().parse(&args(&["--b", "2"])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_fails() {
+        assert!(cli().parse(&args(&["--dataset", "x", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn value_missing_fails() {
+        assert!(cli().parse(&args(&["--dataset"])).is_err());
+    }
+
+    #[test]
+    fn bad_parse_type_fails() {
+        let p = cli().parse(&args(&["--dataset", "x", "--b", "abc"])).unwrap();
+        assert!(p.get::<usize>("b").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let c = Cli::new("t").opt("bs", "1,4,16,64", "B sweep");
+        let p = c.parse(&[]).unwrap();
+        assert_eq!(p.list::<usize>("bs").unwrap(), vec![1, 4, 16, 64]);
+    }
+
+    #[test]
+    fn positional_collected() {
+        let p = cli().parse(&args(&["--dataset", "x", "extra1", "extra2"])).unwrap();
+        assert_eq!(p.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn help_is_error_with_text() {
+        let err = cli().parse(&args(&["--help"])).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--dataset"));
+        assert!(msg.contains("mini-batches"));
+    }
+}

@@ -1,0 +1,22 @@
+//! Crate-wide error type.
+use thiserror::Error;
+
+/// Errors surfaced by the dkkm library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Invalid configuration or CLI arguments.
+    #[error("config error: {0}")]
+    Config(String),
+    /// Shape/dimension mismatch in a linear-algebra or clustering op.
+    #[error("shape error: {0}")]
+    Shape(String),
+    /// PJRT runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// I/O failure.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,7 @@
+//! Small self-contained substrates: error type, RNG, JSON, CLI, stats.
+pub mod error;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

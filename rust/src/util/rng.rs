@@ -1,0 +1,314 @@
+//! Deterministic, seedable PRNG + sampling helpers.
+//!
+//! The vendored registry has no `rand` crate, so this is a from-scratch
+//! substrate: SplitMix64 for seeding, Xoshiro256++ as the main generator
+//! (Blackman & Vigna, 2019), plus the distributions the paper's pipeline
+//! needs (normal draws for dataset generators and the MD integrator, Zipf
+//! for the synthetic RCV1 vocabulary, weighted choice for kernel
+//! k-means++ seeding).
+//!
+//! Everything downstream takes an explicit `&mut Rng`, so every experiment
+//! in EXPERIMENTS.md is reproducible from its seed.
+
+/// SplitMix64 step — used to expand a single `u64` seed into the Xoshiro
+/// state, per the reference implementation.
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Xoshiro256++ generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second output of the Box-Muller transform.
+    gauss_cache: Option<f64>,
+}
+
+impl Rng {
+    /// Create a generator from a 64-bit seed (SplitMix64-expanded).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = splitmix64(&mut sm);
+        }
+        // all-zero state is invalid for xoshiro; splitmix cannot produce it
+        // for four consecutive outputs, but guard anyway.
+        if s == [0, 0, 0, 0] {
+            s[0] = 0x9E3779B97F4A7C15;
+        }
+        Rng { s, gauss_cache: None }
+    }
+
+    /// Derive an independent child generator (for per-node / per-restart
+    /// streams). Uses a dedicated label so children never collide with the
+    /// parent's own output stream.
+    pub fn fork(&mut self, label: u64) -> Rng {
+        let mixed = self.next_u64() ^ label.wrapping_mul(0xA24BAED4963EE407);
+        Rng::new(mixed)
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 random bits.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's unbiased method).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal draw (Box-Muller, cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.gauss_cache.take() {
+            return v;
+        }
+        // avoid log(0)
+        let u1 = loop {
+            let u = self.f64();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.gauss_cache = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal draw with the given mean and standard deviation, as `f32`.
+    pub fn normal32(&mut self, mean: f32, std: f32) -> f32 {
+        (mean as f64 + std as f64 * self.normal()) as f32
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices sampled uniformly from `[0, n)` (partial
+    /// Fisher-Yates; O(n) memory, O(k) swaps).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = self.range(i, n);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Index drawn with probability proportional to `weights[i]`.
+    /// All-zero weights fall back to uniform (matches k-means++ behaviour
+    /// when every remaining point coincides with a chosen centre).
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 || !total.is_finite() {
+            return self.below(weights.len());
+        }
+        let mut target = self.f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            target -= w;
+            if target < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Zipf-distributed rank in `[0, n)` with exponent `s` (rejection-free
+    /// inverse-CDF on a precomputed table is overkill here; the synthetic
+    /// RCV1 generator caches its own table and calls `weighted`).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // inverse transform on the harmonic CDF via binary search over
+        // the analytic approximation; exact for the sizes we use.
+        let h = |k: f64| -> f64 {
+            if (s - 1.0).abs() < 1e-9 {
+                k.ln()
+            } else {
+                (k.powf(1.0 - s) - 1.0) / (1.0 - s)
+            }
+        };
+        let total = h(n as f64 + 0.5) - h(0.5);
+        let u = self.f64() * total + h(0.5);
+        // invert h
+        let k = if (s - 1.0).abs() < 1e-9 {
+            u.exp()
+        } else {
+            (u * (1.0 - s) + 1.0).powf(1.0 / (1.0 - s))
+        };
+        (k.round() as usize).clamp(1, n) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_roughly() {
+        let mut r = Rng::new(3);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Rng::new(9);
+        let s = r.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+        assert!(s.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn weighted_respects_weights() {
+        let mut r = Rng::new(13);
+        let w = [0.0, 0.0, 1.0, 3.0];
+        let mut counts = [0usize; 4];
+        for _ in 0..40_000 {
+            counts[r.weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert_eq!(counts[1], 0);
+        let ratio = counts[3] as f64 / counts[2] as f64;
+        assert!((2.6..3.4).contains(&ratio), "{counts:?}");
+    }
+
+    #[test]
+    fn weighted_all_zero_falls_back_to_uniform() {
+        let mut r = Rng::new(17);
+        let w = [0.0; 5];
+        let mut seen = [false; 5];
+        for _ in 0..200 {
+            seen[r.weighted(&w)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn zipf_is_heavy_headed() {
+        let mut r = Rng::new(23);
+        let mut counts = vec![0usize; 1000];
+        for _ in 0..100_000 {
+            counts[r.zipf(1000, 1.1)] += 1;
+        }
+        assert!(counts[0] > counts[9] && counts[9] > counts[99]);
+        assert!(counts[0] > 5_000, "head not heavy: {}", counts[0]);
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut parent = Rng::new(1);
+        let mut a = parent.fork(0);
+        let mut b = parent.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,279 @@
+//! Timing + descriptive statistics + table formatting for the bench
+//! harness (criterion substitute) and the experiment reports.
+use std::time::Instant;
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Online {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Online {
+    pub fn new() -> Self {
+        Online { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Collect all samples (for percentiles) while keeping Online moments.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    pub online: Online,
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples { online: Online::new(), xs: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.online.push(x);
+        self.xs.push(x);
+    }
+
+    /// Linear-interpolated percentile, p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.online.mean()
+    }
+
+    pub fn std(&self) -> f64 {
+        self.online.std()
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+}
+
+/// Wall-clock timer returning seconds.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    let s = t.elapsed_s();
+    (out, s)
+}
+
+/// `mean ± std` with sensible precision.
+pub fn pm(mean: f64, std: f64) -> String {
+    if mean.abs() >= 100.0 {
+        format!("{mean:.2} ± {std:.2}")
+    } else if mean.abs() >= 1.0 {
+        format!("{mean:.3} ± {std:.3}")
+    } else {
+        format!("{mean:.4} ± {std:.4}")
+    }
+}
+
+/// Monospace table renderer for bench output (paper-style rows).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        // widths in chars, not bytes: cells may contain "±"
+        let cw = |s: &String| s.chars().count();
+        let mut widths: Vec<usize> = self.headers.iter().map(cw).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cw(c));
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncols {
+                let pad = widths[i] - cells[i].chars().count();
+                line.push_str(&format!(" {}{} |", cells[i], " ".repeat(pad)));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn online_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut o = Online::new();
+        for &x in &xs {
+            o.push(x);
+        }
+        assert!((o.mean() - 5.0).abs() < 1e-12);
+        let naive_var =
+            xs.iter().map(|x| (x - 5.0) * (x - 5.0)).sum::<f64>() / (xs.len() - 1) as f64;
+        assert!((o.var() - naive_var).abs() < 1e-12);
+        assert_eq!(o.min(), 2.0);
+        assert_eq!(o.max(), 9.0);
+    }
+
+    #[test]
+    fn online_single_sample() {
+        let mut o = Online::new();
+        o.push(3.0);
+        assert_eq!(o.mean(), 3.0);
+        assert_eq!(o.std(), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert!((s.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((s.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((s.percentile(50.0) - 50.5).abs() < 1e-9);
+        assert!((s.percentile(90.0) - 90.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["B", "Accuracy", "Time"]);
+        t.row(&["1".into(), "86.47 ± 0.37".into(), "655.2".into()]);
+        t.row(&["64".into(), "78.39 ± 0.95".into(), "9.5".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // compare char counts: cells may contain multi-byte "±"
+        let w0 = lines[0].chars().count();
+        assert!(lines.iter().all(|l| l.chars().count() == w0));
+        assert!(r.contains("86.47"));
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+}
+
+/// Mean and sample standard deviation of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let mut o = Online::new();
+    for &x in xs {
+        o.push(x);
+    }
+    (o.mean(), o.std())
+}
+
+/// Bench-harness environment knobs: `DKKM_SCALE` multiplies workload
+/// sizes (default 1.0 = the scaled-for-this-host defaults documented in
+/// EXPERIMENTS.md), `DKKM_REPEATS` sets seeds per configuration.
+pub fn bench_scale() -> f64 {
+    std::env::var("DKKM_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0)
+}
+
+/// Number of repeated seeds per bench configuration.
+pub fn bench_repeats() -> usize {
+    std::env::var("DKKM_REPEATS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+}

@@ -1,0 +1,193 @@
+//! Data-parallel helpers over std scoped threads (rayon substitute).
+//!
+//! The native kernel-matrix path and the per-node shards of the simulated
+//! cluster both split row ranges across OS threads. Work is distributed by
+//! an atomic cursor over fixed-size chunks, which load-balances uneven
+//! rows (e.g. RBF over sparse-ish data) without a full work-stealing deque.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default: the physical parallelism
+/// reported by the OS, capped so tests behave on small CI boxes.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 64)
+}
+
+/// Run `body(start, end)` over `[0, n)` split into `chunk`-sized ranges,
+/// dynamically balanced across `threads` workers. `body` must be
+/// `Sync + Fn`: mutation happens through interior slices obtained by the
+/// caller (see `parallel_rows_mut`).
+pub fn parallel_chunks<F>(threads: usize, n: usize, chunk: usize, body: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    assert!(chunk > 0);
+    if n == 0 {
+        return;
+    }
+    let threads = threads.max(1).min(n.div_ceil(chunk));
+    if threads == 1 {
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + chunk).min(n);
+            body(lo, hi);
+            lo = hi;
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let nchunks = n.div_ceil(chunk);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let c = cursor.fetch_add(1, Ordering::Relaxed);
+                if c >= nchunks {
+                    break;
+                }
+                let lo = c * chunk;
+                let hi = (lo + chunk).min(n);
+                body(lo, hi);
+            });
+        }
+    });
+}
+
+/// Split `out` into disjoint row blocks of `row_len` floats and hand each
+/// worker `(row_index_range, &mut block)`. This is the mutation-friendly
+/// face of `parallel_chunks` used by the kernel-matrix evaluator: each
+/// chunk owns its output rows, so no synchronization is needed.
+pub fn parallel_rows_mut<F>(
+    threads: usize,
+    out: &mut [f32],
+    row_len: usize,
+    rows_per_chunk: usize,
+    body: F,
+) where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && out.len() % row_len == 0);
+    let nrows = out.len() / row_len;
+    if nrows == 0 {
+        return;
+    }
+    let threads = threads.max(1);
+    let nchunks = nrows.div_ceil(rows_per_chunk);
+    let cursor = AtomicUsize::new(0);
+    // SAFETY-free approach: carve disjoint &mut chunks up front.
+    let mut blocks: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(nchunks);
+    let mut rest = out;
+    let mut lo = 0;
+    while lo < nrows {
+        let hi = (lo + rows_per_chunk).min(nrows);
+        let (head, tail) = rest.split_at_mut((hi - lo) * row_len);
+        blocks.push((lo, hi, head));
+        rest = tail;
+        lo = hi;
+    }
+    // Hand out blocks through a lock-free cursor over an UnsafeCell-free
+    // Vec<Mutex<Option<...>>>: simplest correct structure without external
+    // crates is a mutex-wrapped iterator, and contention is negligible
+    // (one lock per chunk, chunks are >= thousands of kernel evals).
+    let queue = std::sync::Mutex::new(blocks.into_iter());
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(nchunks) {
+            scope.spawn(|| loop {
+                let next = queue.lock().unwrap().next();
+                match next {
+                    Some((lo, hi, block)) => body(lo, hi, block),
+                    None => break,
+                }
+            });
+        }
+    });
+    let _ = cursor;
+}
+
+/// Map `f` over `items` in parallel, preserving order of results.
+pub fn parallel_map<T, R, F>(threads: usize, items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<(usize, &mut Option<R>)> = out.iter_mut().enumerate().collect();
+        let queue = std::sync::Mutex::new(slots.into_iter());
+        std::thread::scope(|scope| {
+            for _ in 0..threads.max(1).min(n.max(1)) {
+                scope.spawn(|| loop {
+                    let next = queue.lock().unwrap().next();
+                    match next {
+                        Some((i, slot)) => *slot = Some(f(&items[i])),
+                        None => break,
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter().map(|o| o.expect("worker died")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn chunks_cover_range_exactly_once() {
+        let seen = AtomicU64::new(0);
+        let hits: Vec<AtomicU64> = (0..257).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(8, 257, 10, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+            seen.fetch_add((hi - lo) as u64, Ordering::Relaxed);
+        });
+        assert_eq!(seen.load(Ordering::Relaxed), 257);
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunks_zero_items_noop() {
+        parallel_chunks(4, 0, 16, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn rows_mut_writes_disjoint_blocks() {
+        let mut out = vec![0.0f32; 100 * 3];
+        parallel_rows_mut(4, &mut out, 3, 7, |lo, _hi, block| {
+            for (r, row) in block.chunks_mut(3).enumerate() {
+                let idx = (lo + r) as f32;
+                row.copy_from_slice(&[idx, idx * 2.0, idx * 3.0]);
+            }
+        });
+        for r in 0..100 {
+            assert_eq!(out[r * 3], r as f32);
+            assert_eq!(out[r * 3 + 2], r as f32 * 3.0);
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<usize> = (0..500).collect();
+        let got = parallel_map(8, &items, |&x| x * x);
+        assert_eq!(got, items.iter().map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let mut hits = vec![0u8; 30];
+        let cell = std::sync::Mutex::new(&mut hits);
+        parallel_chunks(1, 30, 4, |lo, hi| {
+            let mut guard = cell.lock().unwrap();
+            for i in lo..hi {
+                guard[i] += 1;
+            }
+        });
+        assert!(hits.iter().all(|&h| h == 1));
+    }
+}

@@ -1,0 +1,143 @@
+//! CLI smoke tests: every subcommand runs end-to-end through the real
+//! binary (`CARGO_BIN_EXE_dkkm`), with outputs sanity-checked.
+use std::process::Command;
+
+fn dkkm(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_dkkm"))
+        .args(args)
+        .output()
+        .expect("spawn dkkm");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (stdout, _, ok) = dkkm(&[]);
+    assert!(ok);
+    assert!(stdout.contains("Commands:"));
+}
+
+#[test]
+fn run_toy_reports_metrics() {
+    let (stdout, stderr, ok) = dkkm(&[
+        "run",
+        "--dataset",
+        "toy2d:100",
+        "--c",
+        "4",
+        "--b",
+        "2",
+        "--sigma-factor",
+        "0.1",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("train accuracy"), "{stdout}");
+    assert!(stdout.contains("batch   0"), "{stdout}");
+}
+
+#[test]
+fn run_json_output_parses() {
+    let (stdout, stderr, ok) = dkkm(&[
+        "run",
+        "--dataset",
+        "toy2d:80",
+        "--c",
+        "4",
+        "--b",
+        "2",
+        "--sigma-factor",
+        "0.1",
+        "--json",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    let parsed = dkkm::util::json::Json::parse(stdout.trim()).expect("valid json");
+    assert!(parsed.get("report").is_some());
+    assert!(parsed.get("config").is_some());
+}
+
+#[test]
+fn bmin_command() {
+    let (stdout, _, ok) = dkkm(&["bmin", "--n", "60000", "--p", "16", "--c", "10"]);
+    assert!(ok);
+    assert!(stdout.contains("B_min = 1"), "{stdout}");
+}
+
+#[test]
+fn scaling_command_produces_table() {
+    let (stdout, stderr, ok) = dkkm(&[
+        "scaling",
+        "--n",
+        "2000",
+        "--probe",
+        "256",
+        "--nodes",
+        "4,16,64",
+    ]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("efficiency"), "{stdout}");
+    assert!(stdout.lines().filter(|l| l.starts_with('|')).count() >= 4);
+}
+
+#[test]
+fn baseline_commands() {
+    let (stdout, _, ok) = dkkm(&[
+        "baseline", "--dataset", "toy2d:60", "--c", "4", "--algo", "lloyd",
+    ]);
+    assert!(ok);
+    assert!(stdout.contains("lloyd k-means"), "{stdout}");
+    let (stdout, _, ok) = dkkm(&[
+        "baseline", "--dataset", "toy2d:60", "--c", "4", "--algo", "sgd",
+        "--sgd-batch", "60", "--sgd-iters", "10",
+    ]);
+    assert!(ok);
+    assert!(stdout.contains("sgd k-means"), "{stdout}");
+}
+
+#[test]
+fn unknown_flag_fails_with_message() {
+    let (_, stderr, ok) = dkkm(&["run", "--dataset", "toy2d:50", "--nope", "1"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown flag"), "{stderr}");
+}
+
+#[test]
+fn help_flags_exit_zero() {
+    let (stdout, _, ok) = dkkm(&["run", "--help"]);
+    assert!(ok);
+    assert!(stdout.contains("--dataset"));
+    let (stdout, _, ok) = dkkm(&["--help"]);
+    assert!(ok);
+    assert!(stdout.contains("Commands:"));
+}
+
+#[test]
+fn info_lists_artifacts() {
+    let (stdout, stderr, ok) = dkkm(&["info"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("rbf_t256_d784"), "{stdout}");
+}
+
+#[test]
+fn config_file_with_overrides() {
+    let path = std::env::temp_dir().join(format!("dkkm_cfg_{}.json", std::process::id()));
+    std::fs::write(
+        &path,
+        r#"{"dataset": "toy2d:60", "c": 4, "b": 2, "sigma_factor": 0.1}"#,
+    )
+    .unwrap();
+    let (stdout, stderr, ok) =
+        dkkm(&["run", "--config", path.to_str().unwrap(), "--b", "3"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("B=3"), "override ignored: {stdout}");
+    assert!(stdout.contains("train accuracy"));
+    // unknown field fails loudly
+    std::fs::write(&path, r#"{"dataset": "toy2d:60", "bee": 2}"#).unwrap();
+    let (_, stderr, ok) = dkkm(&["run", "--config", path.to_str().unwrap()]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown config field"), "{stderr}");
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,89 @@
+//! Distribution-strategy invariants (paper §3.3): the row-sharded
+//! execution is a pure scheduling change — results must be identical to
+//! serial for every node count, on every dataset family.
+use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
+use dkkm::data::{synthetic_mnist, synthetic_rcv1, toy2d};
+use dkkm::distributed::{NetModel, ScalingSimulator, ShardedBackend, Topology};
+use dkkm::distributed::scaling::synthetic_calibration;
+use dkkm::kernels::{KernelFn, VecGram};
+use dkkm::util::rng::Rng;
+
+fn run_pair(g: &VecGram, c: usize, b: usize, p: usize) -> (Vec<usize>, Vec<usize>) {
+    let cfg = MiniBatchConfig::new(c, b);
+    let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(g);
+    let backend = ShardedBackend::new(p);
+    let sharded = MiniBatchKernelKMeans::new(cfg, &backend).run(g);
+    (native.labels, sharded.labels)
+}
+
+#[test]
+fn sharded_identical_on_toy_all_p() {
+    let mut rng = Rng::new(0);
+    let data = toy2d(&mut rng, 50);
+    let g = VecGram::new(data.x, KernelFn::Rbf { gamma: 15.0 }, 1);
+    for p in [1usize, 2, 3, 7, 16] {
+        let (a, b) = run_pair(&g, 4, 2, p);
+        assert_eq!(a, b, "labels diverge at p={p}");
+    }
+}
+
+#[test]
+fn sharded_identical_on_mnist() {
+    let mut rng = Rng::new(1);
+    let data = synthetic_mnist(&mut rng, 500);
+    let g = VecGram::new(data.x, KernelFn::rbf_from_sigma(30.0), 1);
+    let (a, b) = run_pair(&g, 10, 4, 5);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn sharded_identical_on_rcv1_with_landmarks() {
+    let mut rng = Rng::new(2);
+    let data = synthetic_rcv1(&mut rng, 600, 8, 3000, 32);
+    let g = VecGram::new(data.x, KernelFn::rbf_from_sigma(4.0), 1);
+    let mut cfg = MiniBatchConfig::new(8, 3);
+    cfg.s = 0.5; // landmark sparsification active
+    let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+    let backend = ShardedBackend::new(4);
+    let sharded = MiniBatchKernelKMeans::new(cfg, &backend).run(&g);
+    assert_eq!(native.labels, sharded.labels);
+    assert_eq!(native.medoids, sharded.medoids);
+    assert_eq!(native.counts, sharded.counts);
+}
+
+#[test]
+fn more_nodes_than_rows_degenerates_cleanly() {
+    let mut rng = Rng::new(3);
+    let data = toy2d(&mut rng, 10); // 40 samples
+    let g = VecGram::new(data.x, KernelFn::Rbf { gamma: 10.0 }, 1);
+    let (a, b) = run_pair(&g, 4, 1, 64);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn scaling_model_shape_invariants() {
+    // Fig.6's qualitative structure as a property of the model:
+    // total time decreasing in P until comm dominates, then flattening;
+    // efficiency monotone non-increasing
+    for topo in [Topology::BgqTorus5D, Topology::InfinibandQdr] {
+        let sim = ScalingSimulator {
+            net: NetModel::new(topo),
+            n: 60_000,
+            l: 60_000,
+            c: 10,
+            iters: 20,
+        };
+        let ps: Vec<usize> = (0..12).map(|k| 1usize << k).collect();
+        let rep = sim.sweep(synthetic_calibration(), &ps);
+        for w in rep.points.windows(2) {
+            assert!(
+                w[1].efficiency <= w[0].efficiency + 1e-9,
+                "efficiency rose: {w:?}"
+            );
+        }
+        // communication share strictly grows with P
+        let first = &rep.points[2];
+        let last = rep.points.last().unwrap();
+        assert!(last.comm_s / last.total_s > first.comm_s / first.total_s);
+    }
+}

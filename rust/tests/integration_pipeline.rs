@@ -1,0 +1,145 @@
+//! Whole-pipeline integration: runner-level experiments across dataset
+//! families, offload on/off equivalence under the PJRT backend, failure
+//! injection, and metric invariants end to end.
+use dkkm::coordinator::runner::{build_dataset, run_experiment};
+use dkkm::coordinator::{BackendChoice, DatasetSpec, RunConfig};
+use dkkm::metrics::{accuracy, nmi};
+use dkkm::util::rng::Rng;
+
+fn base(spec: DatasetSpec) -> RunConfig {
+    let mut cfg = RunConfig::new(spec);
+    cfg.c = Some(4);
+    cfg.b = 2;
+    cfg.sigma_factor = 0.1;
+    cfg
+}
+
+#[test]
+fn every_dataset_family_runs() {
+    // one cheap config per family; asserts basic report sanity
+    let cases: Vec<RunConfig> = vec![
+        base(DatasetSpec::Toy2d { per_cluster: 60 }),
+        {
+            let mut c = RunConfig::new(DatasetSpec::Mnist { train: 300, test: 60 });
+            c.c = Some(10);
+            c.b = 2;
+            c
+        },
+        {
+            let mut c = RunConfig::new(DatasetSpec::Rcv1 { n: 400, classes: 6, dim: 32 });
+            c.c = Some(6);
+            c.b = 2;
+            c
+        },
+        {
+            let mut c = RunConfig::new(DatasetSpec::NoisyMnist { base: 60, copies: 4 });
+            c.c = Some(10);
+            c.b = 2;
+            c
+        },
+        {
+            let mut c = RunConfig::new(DatasetSpec::Md { frames: 300 });
+            c.c = Some(5);
+            c.b = 2;
+            c
+        },
+    ];
+    for cfg in cases {
+        let rep = run_experiment(&cfg)
+            .unwrap_or_else(|e| panic!("{:?} failed: {e}", cfg.dataset));
+        assert!(rep.seconds >= 0.0);
+        assert!((0.0..=1.0).contains(&rep.train_accuracy), "{:?}", cfg.dataset);
+        assert!((0.0..=1.0).contains(&rep.train_nmi));
+        assert!(rep.result.labels.iter().all(|&u| u < rep.c_used));
+    }
+}
+
+#[test]
+fn offload_equals_inline_through_pjrt_backend() {
+    let mut cfg = RunConfig::new(DatasetSpec::Mnist { train: 400, test: 0 });
+    cfg.c = Some(10);
+    cfg.b = 4;
+    cfg.backend = BackendChoice::Pjrt;
+    cfg.offload = false;
+    let inline = run_experiment(&cfg).unwrap();
+    cfg.offload = true;
+    let offload = run_experiment(&cfg).unwrap();
+    assert_eq!(inline.result.labels, offload.result.labels);
+    assert_eq!(inline.result.medoids, offload.result.medoids);
+    assert!(offload.result.overlap.is_some());
+}
+
+#[test]
+fn pjrt_backend_quality_matches_native() {
+    let mut cfg = RunConfig::new(DatasetSpec::Mnist { train: 500, test: 100 });
+    cfg.c = Some(10);
+    cfg.b = 2;
+    let native = run_experiment(&cfg).unwrap();
+    cfg.backend = BackendChoice::Pjrt;
+    let pjrt = run_experiment(&cfg).unwrap();
+    assert!(
+        (native.train_accuracy - pjrt.train_accuracy).abs() < 0.05,
+        "native {} vs pjrt {}",
+        native.train_accuracy,
+        pjrt.train_accuracy
+    );
+}
+
+#[test]
+fn invalid_configs_rejected() {
+    let mut cfg = base(DatasetSpec::Toy2d { per_cluster: 40 });
+    cfg.s = 0.0;
+    assert!(run_experiment(&cfg).is_err());
+    let mut cfg = base(DatasetSpec::Toy2d { per_cluster: 40 });
+    cfg.b = 0;
+    assert!(run_experiment(&cfg).is_err());
+    let mut cfg = base(DatasetSpec::Toy2d { per_cluster: 40 });
+    cfg.restarts = 0;
+    assert!(run_experiment(&cfg).is_err());
+}
+
+#[test]
+fn seeds_reproduce_exactly() {
+    let cfg = base(DatasetSpec::Toy2d { per_cluster: 50 });
+    let a = run_experiment(&cfg).unwrap();
+    let b = run_experiment(&cfg).unwrap();
+    assert_eq!(a.result.labels, b.result.labels);
+    assert_eq!(a.train_accuracy, b.train_accuracy);
+    let mut cfg2 = cfg.clone();
+    cfg2.seed = 77;
+    let c = run_experiment(&cfg2).unwrap();
+    // different seed: almost surely different medoids
+    assert!(
+        c.result.medoids != a.result.medoids || c.result.labels != a.result.labels
+    );
+}
+
+#[test]
+fn metrics_are_permutation_invariant_end_to_end() {
+    let cfg = base(DatasetSpec::Toy2d { per_cluster: 50 });
+    let rep = run_experiment(&cfg).unwrap();
+    let (train, _) = build_dataset(&cfg.dataset, cfg.seed);
+    // permute cluster ids
+    let perm = [2usize, 0, 3, 1];
+    let permuted: Vec<usize> = rep.result.labels.iter().map(|&u| perm[u]).collect();
+    assert!((accuracy(&permuted, &train.y) - rep.train_accuracy).abs() < 1e-12);
+    assert!((nmi(&permuted, &train.y) - rep.train_nmi).abs() < 1e-9);
+}
+
+#[test]
+fn b_sweep_time_decreases() {
+    // Tab.1's cost claim as an invariant: more mini-batches => less work
+    let mut times = Vec::new();
+    for b in [1usize, 4, 8] {
+        let mut cfg = RunConfig::new(DatasetSpec::Mnist { train: 800, test: 0 });
+        cfg.c = Some(10);
+        cfg.b = b;
+        let mut rng = Rng::new(0);
+        let _ = &mut rng;
+        times.push(run_experiment(&cfg).unwrap().seconds);
+    }
+    assert!(
+        times[0] > times[1] && times[1] > times[2],
+        "time not decreasing in B: {times:?}"
+    );
+}

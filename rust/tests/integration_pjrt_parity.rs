@@ -1,0 +1,122 @@
+//! Native-vs-PJRT parity: the AOT artifacts (Pallas L1 kernels lowered
+//! through the L2 JAX graphs) must produce the same numbers as the native
+//! Rust math, end to end.
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use dkkm::cluster::assign;
+use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend, StepBackend};
+use dkkm::data::synthetic_mnist;
+use dkkm::kernels::{GramSource, KernelFn, VecGram};
+use dkkm::linalg::Mat;
+use dkkm::metrics::accuracy;
+use dkkm::runtime::{Manifest, PjrtBackend, PjrtGram, PjrtRuntime};
+use dkkm::util::rng::Rng;
+
+fn runtime() -> Arc<PjrtRuntime> {
+    static RT: OnceLock<Arc<PjrtRuntime>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let manifest = Manifest::load(&dir).expect("run `make artifacts` first");
+        Arc::new(PjrtRuntime::start(manifest).expect("PJRT runtime"))
+    })
+    .clone()
+}
+
+#[test]
+fn gram_blocks_match_native_on_real_data() {
+    let mut rng = Rng::new(0);
+    let data = synthetic_mnist(&mut rng, 600);
+    let gamma = 0.002f32;
+    let native = VecGram::new(data.x.clone(), KernelFn::Rbf { gamma }, 1);
+    let pjrt = PjrtGram::new(runtime(), data.x.clone(), gamma).expect("d=784 artifact");
+    // odd-sized, non-contiguous index sets exercise the padding path
+    let rows: Vec<usize> = (0..600).step_by(3).collect();
+    let cols: Vec<usize> = (1..600).step_by(7).collect();
+    let a = native.block_mat(&rows, &cols);
+    let b = pjrt.block_mat(&rows, &cols);
+    let max_err = a
+        .data()
+        .iter()
+        .zip(b.data())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_err < 5e-4, "gram parity broken: max err {max_err}");
+}
+
+#[test]
+fn inner_iteration_matches_native_across_shapes() {
+    let mut rng = Rng::new(1);
+    for (n, l, c) in [(100usize, 40usize, 3usize), (1024, 256, 10), (1500, 300, 25)] {
+        let x = Mat::from_fn(n.max(l), 8, |_, _| rng.normal32(0.0, 2.0));
+        let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.1 }, 1);
+        let rows: Vec<usize> = (0..n).collect();
+        let lms: Vec<usize> = (0..l).collect();
+        let k_nl = g.block_mat(&rows, &lms);
+        let k_ll = g.block_mat(&lms, &lms);
+        let labels: Vec<usize> = (0..l).map(|_| rng.below(c)).collect();
+        let (want, want_stats) = assign::inner_iteration(&k_nl, &k_ll, &labels, c);
+        let backend = PjrtBackend::new(runtime());
+        let (got, stats) = backend.iterate(&k_nl, &k_ll, &labels, c);
+        assert_eq!(got, want, "labels diverge at n={n} l={l} c={c}");
+        for j in 0..c {
+            assert!(
+                (stats.g[j] - want_stats.g[j]).abs() < 5e-4,
+                "g[{j}] diverges at n={n} l={l} c={c}"
+            );
+        }
+    }
+}
+
+#[test]
+fn full_clustering_run_parity() {
+    // whole-run comparison: same config, native vs PJRT backend + PJRT
+    // Gram. Argmin ties could flip individual labels, so compare the
+    // clustering quality and demand near-total label agreement.
+    let mut rng = Rng::new(2);
+    let data = synthetic_mnist(&mut rng, 800);
+    let gamma = 0.002f32;
+    let native_g = VecGram::new(data.x.clone(), KernelFn::Rbf { gamma }, 1);
+    let pjrt_g = PjrtGram::new(runtime(), data.x.clone(), gamma).unwrap();
+
+    let cfg = MiniBatchConfig::new(10, 2);
+    let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&native_g);
+    let backend = PjrtBackend::new(runtime());
+    let pjrt = MiniBatchKernelKMeans::new(cfg, &backend).run(&pjrt_g);
+
+    let agree = native
+        .labels
+        .iter()
+        .zip(&pjrt.labels)
+        .filter(|(a, b)| a == b)
+        .count();
+    assert!(
+        agree as f64 / 800.0 > 0.98,
+        "only {agree}/800 labels agree between native and PJRT"
+    );
+    let an = accuracy(&native.labels, &data.y);
+    let ap = accuracy(&pjrt.labels, &data.y);
+    assert!((an - ap).abs() < 0.03, "quality diverged: {an} vs {ap}");
+}
+
+#[test]
+fn hypothesis_style_shape_sweep() {
+    // randomized shapes through the padding machinery
+    let mut rng = Rng::new(3);
+    let backend = PjrtBackend::new(runtime());
+    for case in 0..6 {
+        let n = 50 + rng.below(400);
+        let l = 10 + rng.below(200);
+        let c = 2 + rng.below(20);
+        let x = Mat::from_fn(n.max(l), 4, |_, _| rng.normal32(0.0, 1.5));
+        let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.2 }, 1);
+        let rows: Vec<usize> = (0..n).collect();
+        let lms: Vec<usize> = (0..l).collect();
+        let k_nl = g.block_mat(&rows, &lms);
+        let k_ll = g.block_mat(&lms, &lms);
+        let labels: Vec<usize> = (0..l).map(|_| rng.below(c)).collect();
+        let (want, _) = assign::inner_iteration(&k_nl, &k_ll, &labels, c);
+        let (got, _) = backend.iterate(&k_nl, &k_ll, &labels, c);
+        assert_eq!(got, want, "case {case}: n={n} l={l} c={c}");
+    }
+}
