@@ -8,26 +8,31 @@
 //! the medoid-by-medoid RMSD matrix, ordered bound -> entrance -> unbound
 //! so the three macro-blocks are visible.
 //!
+//! The MD workload is not a special runner: it goes through the same
+//! `Experiment -> Session::fit()` path as the vector datasets, and the
+//! session keeps the trajectory so the medoid RMSD summary reuses it.
+//!
 //!     cargo run --release --example md_trajectory
-use dkkm::coordinator::runner::md_medoid_rmsd_matrix;
-use dkkm::coordinator::{DatasetSpec, RunConfig};
-use dkkm::sim::md::{simulate, MdConfig};
+use dkkm::prelude::*;
 use dkkm::sim::msm::estimate_msm;
-use dkkm::util::rng::Rng;
 
 fn main() {
     let frames: usize = std::env::var("DKKM_MD_FRAMES")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(6_000);
-    let mut cfg = RunConfig::new(DatasetSpec::Md { frames });
-    cfg.c = Some(12);
-    cfg.b = 4; // the paper splits its ~1M frames into 4 mini-batches
-    cfg.restarts = 3; // paper: 5 k-means++ inits, min cost kept
-    cfg.seed = 7;
+    let seed = 7u64;
 
     println!("== dkkm MD clustering: {frames} frames, C=12, B=4, QCP-RMSD kernel ==");
-    let (medoids, mat, macro_of) = md_medoid_rmsd_matrix(&cfg, frames).expect("md run");
+    let session = Experiment::on(DatasetSpec::Md { frames })
+        .clusters(12)
+        .batches(4) // the paper splits its ~1M frames into 4 mini-batches
+        .restarts(3) // paper: 5 k-means++ inits, min cost kept
+        .seed(seed)
+        .build()
+        .expect("build");
+    let report = session.fit().expect("md run");
+    let (medoids, mat, macro_of) = session.medoid_rmsd_matrix(&report).expect("summary");
 
     let names = ["bound", "entrance", "unbound"];
     println!("\nmedoid summary (Fig.7a analogue):");
@@ -83,10 +88,8 @@ fn main() {
 
     // ---- downstream MSM analysis (the paper's §1 motivation: "estimating
     // kinetics rates via Markov State Models") over the macro-state
-    // sequence of the same trajectory
-    let mut rng = Rng::new(cfg.seed ^ 0x3D);
-    let traj = simulate(&mut rng, &MdConfig::default(), frames);
-    let labels: Vec<usize> = traj.labels.iter().map(|l| l.index()).collect();
+    // sequence the session already holds — no re-simulation
+    let labels: Vec<usize> = session.truth().to_vec();
     let restart = (frames / 8).max(1);
     let breaks: Vec<usize> = (1..8).map(|k| k * restart).collect();
     let msm = estimate_msm(&labels, 3, 5, &breaks, true).expect("msm");

@@ -1,35 +1,42 @@
-//! End-to-end quickstart — the full three-layer stack on a real workload.
+//! End-to-end quickstart — the full three-layer stack on a real workload,
+//! driven through the public `Experiment` builder API.
 //!
 //! Clusters a 10k-sample synthetic-MNIST dataset (784-d, 10 classes) with
-//! the paper's distributed mini-batch kernel k-means, using the **PJRT
-//! backend**: kernel Gram tiles and the fused inner-loop iteration run as
-//! AOT-compiled XLA executables lowered from the Pallas/JAX layers by
-//! `make artifacts`. Python is not involved at any point of this run.
+//! the paper's distributed mini-batch kernel k-means, using the **pjrt
+//! engine**: kernel Gram tiles run as AOT-compiled XLA executables
+//! lowered from the Pallas/JAX layers by `make artifacts`. Python is not
+//! involved at any point of this run.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Reports clustering accuracy, NMI, and the timing breakdown; the run is
-//! recorded in EXPERIMENTS.md §End-to-end.
-use dkkm::coordinator::runner::run_experiment;
-use dkkm::coordinator::{BackendChoice, DatasetSpec, RunConfig};
+//! The staged builder validates the combination up front and the report
+//! says which engine *actually* executed: if no artifact matches the
+//! feature dimension, the session degrades to the native Gram path and
+//! `report.engine` carries the reason instead of hiding it.
+use dkkm::prelude::*;
 
 fn main() {
     let n: usize = std::env::var("DKKM_QUICKSTART_N")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(10_000);
-    let mut cfg = RunConfig::new(DatasetSpec::Mnist { train: n, test: n / 5 });
-    cfg.c = Some(10);
-    cfg.b = 4;
-    cfg.s = 1.0;
-    cfg.backend = BackendChoice::Pjrt;
-    cfg.offload = true; // Fig.3 pipeline: device computes batch i+1's Gram
-    cfg.restarts = 1;
-    cfg.track_cost = false;
 
-    println!("== dkkm quickstart: synthetic MNIST, N={n}, B=4, PJRT backend ==");
-    let report = run_experiment(&cfg).expect("run failed (did you `make artifacts`?)");
+    println!("== dkkm quickstart: synthetic MNIST, N={n}, B=4, pjrt engine ==");
+    let session = Experiment::on(DatasetSpec::Mnist { train: n, test: n / 5 })
+        .clusters(10)
+        .batches(4)
+        .landmark_fraction(1.0)
+        .backend("pjrt")
+        .offload(true) // Fig.3 pipeline: device computes batch i+1's Gram
+        .restarts(1)
+        .build()
+        .expect("build failed (did you `make artifacts`?)");
+    let report = session.fit().expect("fit failed");
 
+    println!("engine             : {} (requested {})", report.engine.used, report.engine.requested);
+    if let Some(reason) = &report.engine.fallback {
+        println!("  fallback reason  : {reason}");
+    }
     println!("clusters           : {}", report.c_used);
     println!("rbf gamma          : {:.3e} (sigma = 4 d_max)", report.gamma);
     println!("train accuracy     : {:.2}%", report.train_accuracy * 100.0);
@@ -39,7 +46,7 @@ fn main() {
         report.test_accuracy.unwrap() * 100.0
     );
     println!("test NMI           : {:.4}", report.test_nmi.unwrap());
-    println!("clustering time    : {:.2}s", report.seconds);
+    println!("clustering time    : {:.2}s", report.seconds.expect("timed run"));
     if let Some(ov) = report.result.overlap {
         println!(
             "offload overlap    : {:.0}% of Gram production hidden behind the host loop",

@@ -8,22 +8,23 @@
 //! same data — reproducing the §4.1 observation that the medoid
 //! displacement observable diagnoses concept drift under poor sampling.
 //!
+//! This drives the algorithm layer directly (custom data ordering needs
+//! raw `MiniBatchConfig` control); end-to-end runs belong to the
+//! `Experiment` builder instead — see `examples/quickstart.rs`.
+//!
 //!     cargo run --release --example streaming_blocks
-use dkkm::coordinator::runner::{build_dataset, gamma_for};
-use dkkm::coordinator::{DatasetSpec, RunConfig};
 use dkkm::cluster::minibatch::NativeBackend;
 use dkkm::cluster::{MiniBatchConfig, MiniBatchKernelKMeans};
-use dkkm::data::Sampling;
-use dkkm::kernels::{KernelFn, VecGram};
-use dkkm::metrics::{accuracy, nmi};
+use dkkm::coordinator::{build_dataset, gamma_for};
+use dkkm::kernels::VecGram;
+use dkkm::prelude::*;
 
 fn main() {
     let n: usize = std::env::var("DKKM_STREAM_N")
         .ok()
         .and_then(|v| v.parse().ok())
         .unwrap_or(4_000);
-    let cfg = RunConfig::new(DatasetSpec::Mnist { train: n, test: 0 });
-    let (mut train, _) = build_dataset(&cfg.dataset, 3);
+    let (mut train, _) = build_dataset(&DatasetSpec::Mnist { train: n, test: 0 }, 3);
     // make the stream adversarial for block sampling: sort by class, so
     // early blocks never see late classes (concept drift)
     let mut order: Vec<usize> = (0..train.n()).collect();
@@ -49,7 +50,7 @@ fn main() {
         let result = MiniBatchKernelKMeans::new(mb, &NativeBackend).run(&source);
         let acc = accuracy(&result.labels, &train.y);
         let m = nmi(&result.labels, &train.y);
-        println!("{sampling:?} sampling: accuracy {:.2}%  NMI {m:.4}", acc * 100.0);
+        println!("{sampling} sampling: accuracy {:.2}%  NMI {m:.4}", acc * 100.0);
         println!("  medoid displacement per outer iteration (Fig.4b observable):");
         print!("   ");
         for rec in &result.history {

@@ -9,8 +9,7 @@
 //!      doubled, which costs the same N^2 s / B evaluations).
 //!   C. k-means++ seeding vs uniform random seeding of the first batch.
 use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
-use dkkm::coordinator::runner::{build_dataset, gamma_for};
-use dkkm::coordinator::DatasetSpec;
+use dkkm::coordinator::{build_dataset, gamma_for, DatasetSpec};
 use dkkm::kernels::{GramSource, KernelFn, VecGram};
 use dkkm::metrics::{accuracy, nmi};
 use dkkm::util::rng::Rng;

@@ -9,8 +9,7 @@
 //!   * each mini-batch's inner loop also drives the *global* cost down.
 use dkkm::cluster::minibatch::NativeBackend;
 use dkkm::cluster::{MiniBatchConfig, MiniBatchKernelKMeans};
-use dkkm::coordinator::runner::{build_dataset, gamma_for};
-use dkkm::coordinator::{DatasetSpec, RunConfig};
+use dkkm::coordinator::{build_dataset, gamma_for, DatasetSpec};
 use dkkm::data::Sampling;
 use dkkm::kernels::{KernelFn, VecGram};
 use dkkm::metrics::accuracy;
@@ -21,8 +20,7 @@ fn main() {
     println!("== Fig.4: 2D toy, 4 Gaussian clusters x {per}, B=4 ==");
     println!("(paper: 10000 per cluster; DKKM_SCALE=4 for full size)\n");
 
-    let cfg = RunConfig::new(DatasetSpec::Toy2d { per_cluster: per });
-    let (mut data, _) = build_dataset(&cfg.dataset, 4);
+    let (mut data, _) = build_dataset(&DatasetSpec::Toy2d { per_cluster: per }, 4);
     let gamma = gamma_for(&data, 0.15, 4);
 
     // make the stream concept-drift for block sampling (paper Fig.4a top:

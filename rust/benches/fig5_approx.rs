@@ -8,8 +8,7 @@
 //!   * for fixed B accuracy decays with s and *drops sharply below
 //!     s ~ 0.2*,
 //!   * execution time falls with both knobs.
-use dkkm::coordinator::runner::run_experiment;
-use dkkm::coordinator::{DatasetSpec, RunConfig};
+use dkkm::prelude::*;
 use dkkm::util::stats::{bench_repeats, bench_scale, mean_std, pm, Table};
 
 fn main() {
@@ -30,14 +29,17 @@ fn main() {
         for &s in &s_values {
             let (mut acc, mut tm) = (Vec::new(), Vec::new());
             for r in 0..repeats {
-                let mut cfg = RunConfig::new(DatasetSpec::Mnist { train, test });
-                cfg.c = Some(10);
-                cfg.b = b;
-                cfg.s = s;
-                cfg.seed = 400 + r as u64;
-                let rep = run_experiment(&cfg).expect("run");
+                let rep = Experiment::on(DatasetSpec::Mnist { train, test })
+                    .clusters(10)
+                    .batches(b)
+                    .landmark_fraction(s)
+                    .seed(400 + r as u64)
+                    .build()
+                    .expect("build")
+                    .fit()
+                    .expect("run");
                 acc.push(rep.test_accuracy.unwrap() * 100.0);
-                tm.push(rep.seconds);
+                tm.push(rep.seconds.expect("timed run"));
             }
             let (am, astd) = mean_std(&acc);
             let (tmn, _) = mean_std(&tm);

@@ -7,8 +7,7 @@
 //! topology model (DESIGN.md §3 substitution). Paper's shape: near-ideal
 //! scaling 16 -> 1024 (BG/Q) / 16 -> 256 (NeXtScale), flattening beyond
 //! as Amdahl's serial fraction + collective latency take over.
-use dkkm::coordinator::runner::{build_dataset, gamma_for};
-use dkkm::coordinator::DatasetSpec;
+use dkkm::coordinator::{build_dataset, gamma_for, DatasetSpec};
 use dkkm::distributed::{NetModel, ScalingSimulator, Topology};
 use dkkm::kernels::{KernelFn, VecGram};
 use dkkm::util::stats::{bench_scale, Table};

@@ -8,8 +8,7 @@
 //! from the Langevin binding simulator (DESIGN.md §3) at a scaled frame
 //! count; every frame carries a random rigid nuisance pose, so recovering
 //! the macro-blocks at all *requires* the QCP-RMSD invariant kernel.
-use dkkm::coordinator::runner::md_medoid_rmsd_matrix;
-use dkkm::coordinator::{DatasetSpec, RunConfig};
+use dkkm::prelude::*;
 use dkkm::util::stats::bench_scale;
 
 fn main() {
@@ -17,12 +16,17 @@ fn main() {
     println!("== Fig.7: MD binding trajectory, {frames} frames, B=4, C=12, 3 restarts ==");
     println!("(paper: ~1M frames, C=20, 5 restarts; DKKM_SCALE=125 approaches full size)\n");
 
-    let mut cfg = RunConfig::new(DatasetSpec::Md { frames });
-    cfg.c = Some(12);
-    cfg.b = 4;
-    cfg.restarts = 3;
-    cfg.seed = 77;
-    let (medoids, mat, macro_of) = md_medoid_rmsd_matrix(&cfg, frames).expect("md");
+    // the MD workload runs through the same Session::fit() as the
+    // vector datasets; the session keeps the trajectory for the summary
+    let session = Experiment::on(DatasetSpec::Md { frames })
+        .clusters(12)
+        .batches(4)
+        .restarts(3)
+        .seed(77)
+        .build()
+        .expect("build");
+    let report = session.fit().expect("md");
+    let (medoids, mat, macro_of) = session.medoid_rmsd_matrix(&report).expect("summary");
 
     let names = ["bound", "entrance", "unbound"];
     println!("(a) medoid table:");

@@ -8,9 +8,8 @@
 //!   * SGD accuracy is roughly flat in B (it fixes its own batch size),
 //!   * our variance is visibly smaller than SGD's.
 use dkkm::baselines::{sgd_kmeans, SgdConfig};
-use dkkm::coordinator::runner::{build_dataset, run_experiment};
-use dkkm::coordinator::{DatasetSpec, RunConfig};
-use dkkm::metrics::accuracy;
+use dkkm::coordinator::build_dataset;
+use dkkm::prelude::*;
 use dkkm::util::stats::{bench_repeats, bench_scale, mean_std, pm, Table};
 
 fn main() {
@@ -27,16 +26,20 @@ fn main() {
     for &b in &bs {
         let (mut ours, mut sgd) = (Vec::new(), Vec::new());
         for r in 0..repeats {
-            let mut cfg = RunConfig::new(DatasetSpec::Mnist { train, test: 0 });
-            cfg.c = Some(10);
-            cfg.b = b;
-            cfg.seed = 500 + r as u64;
-            let rep = run_experiment(&cfg).expect("run");
+            let seed = 500 + r as u64;
+            let rep = Experiment::on(DatasetSpec::Mnist { train, test: 0 })
+                .clusters(10)
+                .batches(b)
+                .seed(seed)
+                .build()
+                .expect("build")
+                .fit()
+                .expect("run");
             ours.push(rep.train_accuracy * 100.0);
 
             // SGD consumes the same data volume: iterations scale with B
             // so both methods see the whole dataset once per comparison
-            let (data, _) = build_dataset(&DatasetSpec::Mnist { train, test: 0 }, cfg.seed);
+            let (data, _) = build_dataset(&DatasetSpec::Mnist { train, test: 0 }, seed);
             let scfg = SgdConfig {
                 c: 10,
                 batch: (train / b).clamp(50, 1000),

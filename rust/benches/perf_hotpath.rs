@@ -8,8 +8,7 @@
 //!   4. offload pipeline overlap on a realistic mini-batch run.
 use dkkm::cluster::assign;
 use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend, StepBackend};
-use dkkm::coordinator::runner::{build_dataset, gamma_for, shared_pjrt};
-use dkkm::coordinator::DatasetSpec;
+use dkkm::coordinator::{build_dataset, gamma_for, shared_pjrt, DatasetSpec};
 use dkkm::distributed::comm::Communicator;
 use dkkm::distributed::ShardedBackend;
 use dkkm::kernels::{GramSource, KernelFn, VecGram};

@@ -13,8 +13,8 @@
 //! B=1 and decreasing gently with B; time dropping ~linearly in 1/B.
 //! Default N is scaled for this single-core host (DKKM_SCALE=12.5 for
 //! paper-size 60k).
-use dkkm::coordinator::runner::{run_experiment, run_lloyd_baseline};
-use dkkm::coordinator::{DatasetSpec, RunConfig};
+use dkkm::coordinator::run_lloyd_baseline;
+use dkkm::prelude::*;
 use dkkm::util::stats::{bench_repeats, bench_scale, mean_std, pm, Table};
 
 fn main() {
@@ -47,14 +47,17 @@ fn main() {
     for &b in &[1usize, 4, 16, 64] {
         let (mut acc, mut nm, mut tm) = (Vec::new(), Vec::new(), Vec::new());
         for r in 0..repeats {
-            let mut cfg = RunConfig::new(DatasetSpec::Mnist { train, test });
-            cfg.c = Some(10);
-            cfg.b = b;
-            cfg.seed = 100 + r as u64;
-            let rep = run_experiment(&cfg).expect("run");
+            let rep = Experiment::on(DatasetSpec::Mnist { train, test })
+                .clusters(10)
+                .batches(b)
+                .seed(100 + r as u64)
+                .build()
+                .expect("build")
+                .fit()
+                .expect("run");
             acc.push(rep.test_accuracy.unwrap() * 100.0);
             nm.push(rep.test_nmi.unwrap());
-            tm.push(rep.seconds);
+            tm.push(rep.seconds.expect("timed run"));
         }
         let (am, astd) = mean_std(&acc);
         let (nmn, nstd) = mean_std(&nm);

@@ -11,8 +11,8 @@
 //! Expected shape on the synthetic corpus: low absolute accuracy (hard,
 //! imbalanced regime), kernel k-means ahead of the linear baseline on
 //! NMI, accuracy ~flat-to-slightly-decreasing in B, time ~ 1/B.
-use dkkm::coordinator::runner::{run_experiment, run_lloyd_baseline};
-use dkkm::coordinator::{DatasetSpec, RunConfig};
+use dkkm::coordinator::run_lloyd_baseline;
+use dkkm::prelude::*;
 use dkkm::util::stats::{bench_repeats, bench_scale, mean_std, pm, Table};
 
 fn main() {
@@ -44,14 +44,17 @@ fn main() {
     for &b in &[4usize, 16, 64] {
         let (mut acc, mut nm, mut tm) = (Vec::new(), Vec::new(), Vec::new());
         for r in 0..repeats {
-            let mut cfg = RunConfig::new(DatasetSpec::Rcv1 { n, classes, dim });
-            cfg.c = Some(c);
-            cfg.b = b;
-            cfg.seed = 200 + r as u64;
-            let rep = run_experiment(&cfg).expect("run");
+            let rep = Experiment::on(DatasetSpec::Rcv1 { n, classes, dim })
+                .clusters(c)
+                .batches(b)
+                .seed(200 + r as u64)
+                .build()
+                .expect("build")
+                .fit()
+                .expect("run");
             acc.push(rep.test_accuracy.unwrap() * 100.0);
             nm.push(rep.test_nmi.unwrap());
-            tm.push(rep.seconds);
+            tm.push(rep.seconds.expect("timed run"));
         }
         let (am, astd) = mean_std(&acc);
         let (nmn, nstd) = mean_std(&nm);

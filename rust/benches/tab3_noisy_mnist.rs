@@ -9,8 +9,7 @@
 //!
 //! Expected shape: noticeably lower accuracy than clean MNIST (the 20%
 //! uniform feature noise), B=32 above B=64, time ~ 1/B.
-use dkkm::coordinator::runner::run_experiment;
-use dkkm::coordinator::{DatasetSpec, RunConfig};
+use dkkm::prelude::*;
 use dkkm::util::stats::{bench_repeats, bench_scale, mean_std, pm, Table};
 
 fn main() {
@@ -27,14 +26,17 @@ fn main() {
     for &b in &[32usize, 64] {
         let (mut acc, mut nm, mut tm) = (Vec::new(), Vec::new(), Vec::new());
         for r in 0..repeats {
-            let mut cfg = RunConfig::new(DatasetSpec::NoisyMnist { base, copies });
-            cfg.c = Some(10);
-            cfg.b = b;
-            cfg.seed = 300 + r as u64;
-            let rep = run_experiment(&cfg).expect("run");
+            let rep = Experiment::on(DatasetSpec::NoisyMnist { base, copies })
+                .clusters(10)
+                .batches(b)
+                .seed(300 + r as u64)
+                .build()
+                .expect("build")
+                .fit()
+                .expect("run");
             acc.push(rep.train_accuracy * 100.0);
             nm.push(rep.train_nmi);
-            tm.push(rep.seconds);
+            tm.push(rep.seconds.expect("timed run"));
         }
         let (am, astd) = mean_std(&acc);
         let (nmn, nstd) = mean_std(&nm);

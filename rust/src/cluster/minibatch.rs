@@ -164,12 +164,15 @@ pub struct MiniBatchResult {
 }
 
 /// The algorithm object: construct once, run on any [`GramSource`].
-pub struct MiniBatchKernelKMeans<'a, B: StepBackend> {
+///
+/// `B` may be unsized (`dyn StepBackend`), so engine-driven callers can
+/// hold the backend behind a trait object.
+pub struct MiniBatchKernelKMeans<'a, B: StepBackend + ?Sized> {
     pub config: MiniBatchConfig,
     pub backend: &'a B,
 }
 
-impl<'a, B: StepBackend> MiniBatchKernelKMeans<'a, B> {
+impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
     pub fn new(config: MiniBatchConfig, backend: &'a B) -> Self {
         MiniBatchKernelKMeans { config, backend }
     }

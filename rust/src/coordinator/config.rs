@@ -1,4 +1,11 @@
-//! Run configuration: dataset, kernel, algorithm and backend selection.
+//! Run configuration: dataset, kernel, algorithm and engine selection.
+//!
+//! `RunConfig` is the coordinator's internal, fully-explicit record of an
+//! experiment. Code outside `coordinator/` should not assemble one field
+//! by field — go through [`super::Experiment`], which validates the
+//! combination at `build()` time; `RunConfig` remains public for
+//! config-file loading ([`RunConfig::from_json`]) and read-only echo.
+use std::fmt;
 use std::str::FromStr;
 
 use crate::data::Sampling;
@@ -18,6 +25,37 @@ pub enum DatasetSpec {
     NoisyMnist { base: usize, copies: usize },
     /// MD trajectory with `frames` recorded frames.
     Md { frames: usize },
+}
+
+impl DatasetSpec {
+    /// Number of training samples the spec will materialize (the size
+    /// the mini-batch plan partitions). Used by build-time validation.
+    pub fn train_len(&self) -> usize {
+        match self {
+            DatasetSpec::Toy2d { per_cluster } => per_cluster * 4,
+            DatasetSpec::Mnist { train, .. } => *train,
+            DatasetSpec::Rcv1 { n, .. } => *n,
+            DatasetSpec::NoisyMnist { base, copies } => base * copies,
+            DatasetSpec::Md { frames } => *frames,
+        }
+    }
+}
+
+impl fmt::Display for DatasetSpec {
+    /// Canonical spec string; `display -> parse` round-trips.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DatasetSpec::Toy2d { per_cluster } => write!(f, "toy2d:{per_cluster}"),
+            DatasetSpec::Mnist { train, test } => write!(f, "mnist:{train}:{test}"),
+            DatasetSpec::Rcv1 { n, classes, dim } => {
+                write!(f, "rcv1:{n}:{classes}:{dim}")
+            }
+            DatasetSpec::NoisyMnist { base, copies } => {
+                write!(f, "noisy-mnist:{base}:{copies}")
+            }
+            DatasetSpec::Md { frames } => write!(f, "md:{frames}"),
+        }
+    }
 }
 
 impl FromStr for DatasetSpec {
@@ -50,7 +88,9 @@ impl FromStr for DatasetSpec {
     }
 }
 
-/// Which execution backend runs the inner loop / kernel evaluation.
+/// Which execution engine runs the Gram pipeline / inner loop. Parsed
+/// from the registry names `native`, `pjrt`, `sharded:<p>`; resolved to
+/// an [`super::Engine`] at `Experiment::build()` time.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BackendChoice {
     /// Native multithreaded CPU path.
@@ -59,6 +99,17 @@ pub enum BackendChoice {
     Pjrt,
     /// Row-sharded across `p` in-process nodes (native math).
     Sharded(usize),
+}
+
+impl fmt::Display for BackendChoice {
+    /// Canonical engine name; `display -> parse` round-trips.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BackendChoice::Native => write!(f, "native"),
+            BackendChoice::Pjrt => write!(f, "pjrt"),
+            BackendChoice::Sharded(p) => write!(f, "sharded:{p}"),
+        }
+    }
 }
 
 impl FromStr for BackendChoice {
@@ -95,6 +146,8 @@ pub struct RunConfig {
     pub restarts: usize,
     /// sigma = sigma_factor * d_max (paper: 4 d_max).
     pub sigma_factor: f32,
+    /// Explicit RBF bandwidth; overrides the sigma_factor rule when set.
+    pub gamma: Option<f32>,
     pub track_cost: bool,
     /// Fig.3 offload pipeline.
     pub offload: bool,
@@ -113,6 +166,7 @@ impl RunConfig {
             seed: 42,
             restarts: 1,
             sigma_factor: 4.0,
+            gamma: None,
             track_cost: false,
             offload: false,
         }
@@ -133,6 +187,11 @@ impl RunConfig {
                 return Err(Error::Config("c must be >= 1".into()));
             }
         }
+        if let Some(g) = self.gamma {
+            if !(g > 0.0) {
+                return Err(Error::Config(format!("gamma={g} must be > 0")));
+            }
+        }
         Ok(())
     }
 
@@ -145,7 +204,7 @@ impl RunConfig {
             .ok_or_else(|| Error::Config("config root must be an object".into()))?;
         const KNOWN: &[&str] = &[
             "dataset", "c", "b", "s", "sampling", "backend", "threads", "seed",
-            "restarts", "sigma_factor", "track_cost", "offload",
+            "restarts", "sigma_factor", "gamma", "track_cost", "offload",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -208,6 +267,14 @@ impl RunConfig {
                 .ok_or_else(|| Error::Config("'sigma_factor' not a number".into()))?
                 as f32;
         }
+        if let Some(v) = j.get("gamma") {
+            cfg.gamma = match v {
+                Json::Null => None,
+                other => Some(other.as_f64().ok_or_else(|| {
+                    Error::Config("'gamma' must be a number or null".into())
+                })? as f32),
+            };
+        }
         if let Some(v) = j.get("track_cost") {
             cfg.track_cost =
                 v.as_bool().ok_or_else(|| Error::Config("'track_cost' not a bool".into()))?;
@@ -220,22 +287,26 @@ impl RunConfig {
         Ok(cfg)
     }
 
-    /// Echo into the report JSON.
+    /// Echo into the report JSON (canonical spec strings, parseable back).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("dataset", Json::str(&format!("{:?}", self.dataset))),
+            ("dataset", Json::str(&self.dataset.to_string())),
             (
                 "c",
                 self.c.map(|c| Json::num(c as f64)).unwrap_or(Json::str("elbow")),
             ),
             ("b", Json::num(self.b as f64)),
             ("s", Json::num(self.s)),
-            ("sampling", Json::str(&format!("{:?}", self.sampling))),
-            ("backend", Json::str(&format!("{:?}", self.backend))),
+            ("sampling", Json::str(&self.sampling.to_string())),
+            ("backend", Json::str(&self.backend.to_string())),
             ("threads", Json::num(self.threads as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("restarts", Json::num(self.restarts as f64)),
             ("sigma_factor", Json::num(self.sigma_factor as f64)),
+            (
+                "gamma",
+                self.gamma.map(|g| Json::num(g as f64)).unwrap_or(Json::Null),
+            ),
             ("offload", Json::Bool(self.offload)),
         ])
     }
@@ -272,6 +343,60 @@ mod tests {
     }
 
     #[test]
+    fn dataset_spec_display_round_trip() {
+        let specs = [
+            DatasetSpec::Toy2d { per_cluster: 123 },
+            DatasetSpec::Mnist { train: 500, test: 100 },
+            DatasetSpec::Rcv1 { n: 700, classes: 9, dim: 48 },
+            DatasetSpec::NoisyMnist { base: 60, copies: 3 },
+            DatasetSpec::Md { frames: 4242 },
+        ];
+        for spec in specs {
+            let s = spec.to_string();
+            assert_eq!(s.parse::<DatasetSpec>().unwrap(), spec, "via '{s}'");
+        }
+    }
+
+    #[test]
+    fn dataset_spec_partial_defaults() {
+        // one-field and zero-field forms keep the documented defaults
+        assert_eq!(
+            "toy2d".parse::<DatasetSpec>().unwrap(),
+            DatasetSpec::Toy2d { per_cluster: 10_000 }
+        );
+        assert_eq!(
+            "mnist:900".parse::<DatasetSpec>().unwrap(),
+            DatasetSpec::Mnist { train: 900, test: 10_000 }
+        );
+        assert_eq!(
+            "rcv1:1000".parse::<DatasetSpec>().unwrap(),
+            DatasetSpec::Rcv1 { n: 1000, classes: 50, dim: 256 }
+        );
+        assert_eq!(
+            "noisy-mnist".parse::<DatasetSpec>().unwrap(),
+            DatasetSpec::NoisyMnist { base: 60_000, copies: 20 }
+        );
+        assert_eq!("md".parse::<DatasetSpec>().unwrap(), DatasetSpec::Md { frames: 100_000 });
+    }
+
+    #[test]
+    fn dataset_spec_error_messages_name_the_culprit() {
+        let err = "hyperspace".parse::<DatasetSpec>().unwrap_err();
+        assert!(err.contains("hyperspace"), "{err}");
+        let err = "mnist:1k".parse::<DatasetSpec>().unwrap_err();
+        assert!(err.contains("1k") && err.contains("mnist:1k"), "{err}");
+    }
+
+    #[test]
+    fn dataset_train_len() {
+        assert_eq!(DatasetSpec::Toy2d { per_cluster: 100 }.train_len(), 400);
+        assert_eq!(DatasetSpec::Mnist { train: 300, test: 60 }.train_len(), 300);
+        assert_eq!(DatasetSpec::Rcv1 { n: 70, classes: 3, dim: 8 }.train_len(), 70);
+        assert_eq!(DatasetSpec::NoisyMnist { base: 50, copies: 4 }.train_len(), 200);
+        assert_eq!(DatasetSpec::Md { frames: 99 }.train_len(), 99);
+    }
+
+    #[test]
     fn backend_parsing() {
         assert_eq!("native".parse::<BackendChoice>().unwrap(), BackendChoice::Native);
         assert_eq!("pjrt".parse::<BackendChoice>().unwrap(), BackendChoice::Pjrt);
@@ -283,6 +408,24 @@ mod tests {
     }
 
     #[test]
+    fn backend_display_round_trip() {
+        for b in [BackendChoice::Native, BackendChoice::Pjrt, BackendChoice::Sharded(16)] {
+            assert_eq!(b.to_string().parse::<BackendChoice>().unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn backend_error_lists_registry_names() {
+        let err = "gpu".parse::<BackendChoice>().unwrap_err();
+        assert!(
+            err.contains("gpu") && err.contains("native|pjrt|sharded:<p>"),
+            "{err}"
+        );
+        let err = "sharded:many".parse::<BackendChoice>().unwrap_err();
+        assert!(err.contains("many"), "{err}");
+    }
+
+    #[test]
     fn validation() {
         let mut cfg = RunConfig::new(DatasetSpec::Toy2d { per_cluster: 10 });
         assert!(cfg.validate().is_ok());
@@ -290,6 +433,9 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg.s = 0.5;
         cfg.b = 0;
+        assert!(cfg.validate().is_err());
+        cfg.b = 2;
+        cfg.gamma = Some(0.0);
         assert!(cfg.validate().is_err());
     }
 
@@ -321,6 +467,16 @@ mod tests {
         let cfg = RunConfig::from_json(&j).unwrap();
         assert_eq!(cfg.c, None);
         assert_eq!(cfg.b, 4); // default preserved
+        assert_eq!(cfg.gamma, None);
+    }
+
+    #[test]
+    fn from_json_gamma_override() {
+        let j = Json::parse(r#"{"dataset": "toy2d:100", "gamma": 0.25}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.gamma, Some(0.25));
+        let j = Json::parse(r#"{"dataset": "toy2d:100", "gamma": "auto"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
     }
 
     #[test]
@@ -334,10 +490,17 @@ mod tests {
     }
 
     #[test]
-    fn json_echo_parses() {
+    fn json_echo_parses_and_round_trips() {
         let cfg = RunConfig::new(DatasetSpec::Mnist { train: 100, test: 10 });
         let j = cfg.to_json();
         assert_eq!(j.get("b").and_then(|v| v.as_usize()), Some(4));
         assert!(Json::parse(&j.to_string()).is_ok());
+        // the echoed spec strings are canonical: feeding the echo back
+        // through from_json reproduces the config
+        let echoed = Json::parse(&j.to_string()).unwrap();
+        let back = RunConfig::from_json(&echoed).unwrap();
+        assert_eq!(back.dataset, cfg.dataset);
+        assert_eq!(back.backend, cfg.backend);
+        assert_eq!(back.sampling, cfg.sampling);
     }
 }

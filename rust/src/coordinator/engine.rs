@@ -1,0 +1,296 @@
+//! Execution engines: the seam every backend plugs into.
+//!
+//! The paper's central claim is that one algorithm (Alg.1) runs
+//! unchanged across execution substrates — serial CPU, an accelerator
+//! that produces the Gram blocks (§3.3, Fig.3), row-sharded nodes
+//! (Fig.2). An [`Engine`] bundles the two substrate-dependent pieces —
+//! how kernel Gram blocks are evaluated ([`GramSource`] construction)
+//! and how one inner-loop iteration executes ([`StepBackend`]) — into a
+//! single pluggable, object-safe unit. Everything else (mini-batch
+//! schedule, medoid merge, metrics) is substrate-independent and lives
+//! in [`super::Session`].
+//!
+//! Registry names: `native`, `pjrt`, `sharded:<p>`. Adding an engine
+//! means implementing the trait and extending [`create_engine`] — no
+//! other file changes.
+use std::path::PathBuf;
+use std::sync::{Arc, OnceLock};
+
+use crate::cluster::minibatch::{NativeBackend, StepBackend};
+use crate::distributed::ShardedBackend;
+use crate::kernels::{GramSource, KernelFn, RmsdGram, VecGram};
+use crate::linalg::{Frame, Mat};
+use crate::runtime::{Manifest, PjrtGram, PjrtRuntime};
+use crate::util::error::{Error, Result};
+
+use super::config::BackendChoice;
+
+/// Shared PJRT runtime (device thread) for the whole process.
+pub fn shared_pjrt() -> Result<Arc<PjrtRuntime>> {
+    static RT: OnceLock<std::result::Result<Arc<PjrtRuntime>, String>> = OnceLock::new();
+    RT.get_or_init(|| {
+        let dir = std::env::var("DKKM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+        Manifest::load(&dir)
+            .and_then(|m| PjrtRuntime::start(m).map(Arc::new))
+            .map_err(|e| e.to_string())
+    })
+    .clone()
+    .map_err(Error::Runtime)
+}
+
+/// A constructed Gram pipeline, with honest provenance: when an engine
+/// cannot serve a request with its accelerated path it degrades to the
+/// native one and says so, instead of silently swapping substrates.
+pub struct GramBuild {
+    pub source: Box<dyn GramSource>,
+    /// Why the engine degraded to the native path, if it did. `None`
+    /// means the engine's own path served the request; `Some` means the
+    /// blocks run natively and the report must say so.
+    pub fallback: Option<String>,
+}
+
+impl GramBuild {
+    fn direct(source: Box<dyn GramSource>) -> GramBuild {
+        GramBuild { source, fallback: None }
+    }
+
+    fn degraded(source: Box<dyn GramSource>, reason: String) -> GramBuild {
+        GramBuild { source, fallback: Some(reason) }
+    }
+}
+
+/// One execution substrate: Gram-block evaluation + inner-loop step.
+///
+/// Object-safe so sessions can hold `Box<dyn Engine>` from the registry.
+pub trait Engine: Send + Sync {
+    /// Registry name (`native`, `pjrt`, `sharded:<p>`).
+    fn name(&self) -> &str;
+
+    /// Gram source over vector-space data with the RBF kernel.
+    fn vec_gram(&self, x: Mat, gamma: f32, threads: usize) -> GramBuild;
+
+    /// Gram source over MD frames with the QCP-RMSD RBF kernel. The
+    /// default serves the native implementation; engines with an RMSD
+    /// accelerator path override it.
+    fn rmsd_gram(&self, frames: Arc<Vec<Frame>>, sigma: f64, threads: usize) -> GramBuild {
+        GramBuild::direct(Box::new(RmsdGram::shared(frames, sigma, threads)))
+    }
+
+    /// The inner-loop iteration strategy (Eq.15-17).
+    fn step(&self) -> &dyn StepBackend;
+
+    /// Whether the Fig.3 offload pipeline composes with this engine.
+    /// Checked at `Experiment::build()` time; unsupported combinations
+    /// are a structured config error, never silently ignored.
+    fn supports_offload(&self) -> bool {
+        true
+    }
+}
+
+/// Plain multithreaded CPU engine — the reference substrate.
+pub struct NativeEngine {
+    step: NativeBackend,
+}
+
+impl NativeEngine {
+    pub fn new() -> NativeEngine {
+        NativeEngine { step: NativeBackend }
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Engine for NativeEngine {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn vec_gram(&self, x: Mat, gamma: f32, threads: usize) -> GramBuild {
+        GramBuild::direct(Box::new(VecGram::new(x, KernelFn::Rbf { gamma }, threads)))
+    }
+
+    fn step(&self) -> &dyn StepBackend {
+        &self.step
+    }
+}
+
+/// Accelerator engine: Gram blocks run as AOT Pallas/XLA artifacts on
+/// the PJRT device thread.
+///
+/// Paper §3.3: the accelerator's job is the kernel matrix ("the
+/// evaluation of a large kernel matrix perfectly fits the massively
+/// parallel architecture of nowadays accelerators"); the inner GD loop
+/// stays on the host CPUs, so `step()` is the native backend. The fused
+/// inner-iteration artifact remains exercised through
+/// `runtime::PjrtBackend` in tests and perf benches, where it wins only
+/// at large per-call volumes.
+pub struct PjrtEngine {
+    runtime: Arc<PjrtRuntime>,
+    step: NativeBackend,
+}
+
+impl PjrtEngine {
+    pub fn new(runtime: Arc<PjrtRuntime>) -> PjrtEngine {
+        PjrtEngine { runtime, step: NativeBackend }
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn vec_gram(&self, x: Mat, gamma: f32, threads: usize) -> GramBuild {
+        // artifact dims are fixed at AOT time; degrade honestly when the
+        // feature dimension was never lowered
+        let d = x.cols();
+        if self.runtime.manifest().rbf_for_dim(d).is_none() {
+            return GramBuild::degraded(
+                Box::new(VecGram::new(x, KernelFn::Rbf { gamma }, threads)),
+                format!("no rbf artifact for d={d}; lowered dims are fixed at AOT time"),
+            );
+        }
+        match PjrtGram::new(self.runtime.clone(), x.clone(), gamma) {
+            Ok(g) => GramBuild::direct(Box::new(g)),
+            Err(e) => GramBuild::degraded(
+                Box::new(VecGram::new(x, KernelFn::Rbf { gamma }, threads)),
+                e.to_string(),
+            ),
+        }
+    }
+
+    fn rmsd_gram(&self, frames: Arc<Vec<Frame>>, sigma: f64, threads: usize) -> GramBuild {
+        GramBuild::degraded(
+            Box::new(RmsdGram::shared(frames, sigma, threads)),
+            "no QCP-RMSD artifact is lowered; MD Gram blocks run on the host".into(),
+        )
+    }
+
+    fn step(&self) -> &dyn StepBackend {
+        &self.step
+    }
+}
+
+/// Row-sharded engine over `p` in-process node threads (paper §3.3,
+/// Fig.2). Gram blocks are computed natively — distribution changes only
+/// the inner-loop schedule, not the math.
+pub struct ShardedEngine {
+    name: String,
+    step: ShardedBackend,
+}
+
+impl ShardedEngine {
+    pub fn new(nodes: usize) -> ShardedEngine {
+        ShardedEngine {
+            name: format!("sharded:{nodes}"),
+            step: ShardedBackend::new(nodes),
+        }
+    }
+}
+
+impl Engine for ShardedEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn vec_gram(&self, x: Mat, gamma: f32, threads: usize) -> GramBuild {
+        GramBuild::direct(Box::new(VecGram::new(x, KernelFn::Rbf { gamma }, threads)))
+    }
+
+    fn step(&self) -> &dyn StepBackend {
+        &self.step
+    }
+
+    /// The Fig.3 pipeline dedicates a producer thread to Gram blocks;
+    /// the sharded engine's node threads already saturate the host, so
+    /// the combination is rejected at build() rather than run with
+    /// misleading overlap numbers.
+    fn supports_offload(&self) -> bool {
+        false
+    }
+}
+
+/// Engine registry. `native` and `sharded:<p>` always construct;
+/// `pjrt` requires the artifact manifest (an actionable `Runtime` error
+/// otherwise — run `make artifacts` or set `DKKM_ARTIFACTS`).
+pub fn create_engine(choice: &BackendChoice) -> Result<Box<dyn Engine>> {
+    match choice {
+        BackendChoice::Native => Ok(Box::new(NativeEngine::new())),
+        BackendChoice::Pjrt => Ok(Box::new(PjrtEngine::new(shared_pjrt()?))),
+        BackendChoice::Sharded(p) => {
+            if *p == 0 {
+                return Err(Error::Config(
+                    "sharded engine needs at least 1 node (sharded:<p>, p >= 1)".into(),
+                ));
+            }
+            Ok(Box::new(ShardedEngine::new(*p)))
+        }
+    }
+}
+
+/// Registry lookup by name string (`native` | `pjrt` | `sharded:<p>`).
+pub fn engine_for_name(name: &str) -> Result<Box<dyn Engine>> {
+    let choice: BackendChoice = name.parse().map_err(Error::Config)?;
+    create_engine(&choice)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_mat(seed: u64, n: usize, d: usize) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.normal32(0.0, 1.0))
+    }
+
+    #[test]
+    fn native_engine_builds_vec_gram() {
+        let e = NativeEngine::new();
+        let build = e.vec_gram(random_mat(0, 20, 3), 0.5, 1);
+        assert!(build.fallback.is_none());
+        assert_eq!(build.source.n(), 20);
+        assert_eq!(e.step().name(), "native");
+        assert!(e.supports_offload());
+    }
+
+    #[test]
+    fn sharded_engine_names_node_count_and_rejects_offload() {
+        let e = ShardedEngine::new(7);
+        assert_eq!(e.name(), "sharded:7");
+        assert_eq!(e.step().name(), "sharded");
+        assert!(!e.supports_offload());
+    }
+
+    #[test]
+    fn registry_rejects_zero_nodes() {
+        assert!(create_engine(&BackendChoice::Sharded(0)).is_err());
+        assert!(create_engine(&BackendChoice::Sharded(2)).is_ok());
+    }
+
+    #[test]
+    fn registry_by_name() {
+        assert_eq!(engine_for_name("native").unwrap().name(), "native");
+        assert_eq!(engine_for_name("sharded:3").unwrap().name(), "sharded:3");
+        assert!(engine_for_name("warp-drive").is_err());
+    }
+
+    #[test]
+    fn default_rmsd_gram_is_native() {
+        let e = NativeEngine::new();
+        let frames: Arc<Vec<Frame>> = Arc::new(
+            (0..4)
+                .map(|i| Frame::new(vec![[i as f64, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]]))
+                .collect(),
+        );
+        let build = e.rmsd_gram(frames, 1.0, 1);
+        assert!(build.fallback.is_none());
+        assert_eq!(build.source.n(), 4);
+    }
+}

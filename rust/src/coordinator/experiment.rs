@@ -1,0 +1,307 @@
+//! Staged experiment builder — the public entry point of the crate.
+//!
+//! ```text
+//! Experiment::on(spec) -> .kernel()/.backend()/.clusters()/...
+//!     -> .build()? -> Session -> session.fit()? -> RunReport
+//! ```
+//!
+//! Every knob is optional with paper defaults; every invalid value or
+//! unsupported engine/option combination is a structured
+//! [`Error::Config`] at `build()` time, never a mid-run panic or a
+//! silently ignored flag. `build()` materializes the dataset and Gram
+//! source once into a [`Session`], which `fit()` can then drive
+//! repeatedly.
+use crate::data::Sampling;
+use crate::util::error::{Error, Result};
+
+use super::config::{BackendChoice, DatasetSpec, RunConfig};
+use super::engine::create_engine;
+use super::session::Session;
+
+/// Kernel selection for the builder.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum KernelSpec {
+    /// Paper rule: sigma = sigma_factor * d_max estimated from the data
+    /// (vector workloads) or from an RMSD probe (MD workloads).
+    RbfAuto { sigma_factor: f32 },
+    /// Fixed RBF bandwidth `exp(-gamma d^2)`.
+    Rbf { gamma: f32 },
+}
+
+/// Builder for one experiment. See the module docs for the staged flow.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    cfg: RunConfig,
+    /// Engine name as given; parsed (and rejected) at `build()`.
+    backend_raw: Option<String>,
+}
+
+impl Experiment {
+    /// Start an experiment on a dataset spec (paper defaults for
+    /// everything else: B=4, s=1, stride sampling, native engine,
+    /// sigma = 4 d_max, elbow-selected C, one restart).
+    pub fn on(dataset: DatasetSpec) -> Experiment {
+        Experiment { cfg: RunConfig::new(dataset), backend_raw: None }
+    }
+
+    /// Start from a dataset spec string (`toy2d:100`, `mnist:60000`,
+    /// `md:20000`, ...).
+    pub fn parse(spec: &str) -> Result<Experiment> {
+        spec.parse::<DatasetSpec>()
+            .map(Experiment::on)
+            .map_err(Error::Config)
+    }
+
+    /// Start from a complete configuration (the `--config file.json`
+    /// path); builder methods then act as overrides.
+    pub fn from_config(cfg: RunConfig) -> Experiment {
+        Experiment { cfg, backend_raw: None }
+    }
+
+    /// The configuration as currently staged (pre-validation echo).
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Replace the dataset spec.
+    pub fn dataset(mut self, spec: DatasetSpec) -> Experiment {
+        self.cfg.dataset = spec;
+        self
+    }
+
+    /// Fix the number of clusters C.
+    pub fn clusters(mut self, c: usize) -> Experiment {
+        self.cfg.c = Some(c);
+        self
+    }
+
+    /// Select C via the elbow criterion at fit time (paper §4.4).
+    pub fn auto_clusters(mut self) -> Experiment {
+        self.cfg.c = None;
+        self
+    }
+
+    /// Number of mini-batches B.
+    pub fn batches(mut self, b: usize) -> Experiment {
+        self.cfg.b = b;
+        self
+    }
+
+    /// Landmark fraction s in (0, 1] (Eq.18).
+    pub fn landmark_fraction(mut self, s: f64) -> Experiment {
+        self.cfg.s = s;
+        self
+    }
+
+    /// Mini-batch sampling strategy (Fig.1b).
+    pub fn sampling(mut self, sampling: Sampling) -> Experiment {
+        self.cfg.sampling = sampling;
+        self
+    }
+
+    /// Kernel selection (auto-sigma rule or pinned gamma).
+    pub fn kernel(mut self, spec: KernelSpec) -> Experiment {
+        match spec {
+            KernelSpec::RbfAuto { sigma_factor } => {
+                self.cfg.sigma_factor = sigma_factor;
+                self.cfg.gamma = None;
+            }
+            KernelSpec::Rbf { gamma } => self.cfg.gamma = Some(gamma),
+        }
+        self
+    }
+
+    /// Shorthand for `kernel(KernelSpec::RbfAuto { sigma_factor })`.
+    pub fn sigma_factor(mut self, sigma_factor: f32) -> Experiment {
+        self.cfg.sigma_factor = sigma_factor;
+        self.cfg.gamma = None;
+        self
+    }
+
+    /// Execution engine by registry name: `native`, `pjrt`,
+    /// `sharded:<p>`. Unknown names fail at `build()`.
+    pub fn backend(mut self, name: &str) -> Experiment {
+        // reflect valid names into the staged config immediately so
+        // `config()` echoes honestly; invalid ones are kept raw and
+        // rejected with their message at build()
+        if let Ok(choice) = name.parse::<BackendChoice>() {
+            self.cfg.backend = choice;
+        }
+        self.backend_raw = Some(name.to_string());
+        self
+    }
+
+    /// Worker threads for native Gram evaluation.
+    pub fn threads(mut self, threads: usize) -> Experiment {
+        self.cfg.threads = threads.max(1);
+        self
+    }
+
+    /// RNG seed (drives dataset generation and clustering alike).
+    pub fn seed(mut self, seed: u64) -> Experiment {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// k-means++ restarts, keeping the minimum-cost solution.
+    pub fn restarts(mut self, restarts: usize) -> Experiment {
+        self.cfg.restarts = restarts;
+        self
+    }
+
+    /// Record Fig.4 cost observables (adds kernel evaluations).
+    pub fn track_cost(mut self, on: bool) -> Experiment {
+        self.cfg.track_cost = on;
+        self
+    }
+
+    /// Fig.3 offload pipeline (producer thread prefetches Gram blocks).
+    pub fn offload(mut self, on: bool) -> Experiment {
+        self.cfg.offload = on;
+        self
+    }
+
+    /// Validate the combination, resolve the engine, and materialize
+    /// the dataset + Gram source into a reusable [`Session`].
+    pub fn build(mut self) -> Result<Session> {
+        if let Some(raw) = &self.backend_raw {
+            self.cfg.backend = raw.parse::<BackendChoice>().map_err(Error::Config)?;
+        }
+        self.cfg.validate()?;
+        // infeasible (B, C, N) combinations die here, not as a panic in
+        // the mini-batch planner
+        if let Some(c) = self.cfg.c {
+            let n = self.cfg.dataset.train_len();
+            if self.cfg.b * c > n {
+                return Err(Error::Config(format!(
+                    "B={} x C={c} needs more than the {n} training samples of '{}'",
+                    self.cfg.b, self.cfg.dataset
+                )));
+            }
+        }
+        let engine = create_engine(&self.cfg.backend)?;
+        if self.cfg.offload && !engine.supports_offload() {
+            return Err(Error::Config(format!(
+                "engine '{}' does not support the offload pipeline (its node \
+                 threads already saturate the host); drop offload or use \
+                 native/pjrt",
+                engine.name()
+            )));
+        }
+        Session::materialize(self.cfg, engine)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Experiment {
+        Experiment::on(DatasetSpec::Toy2d { per_cluster: 50 })
+            .clusters(4)
+            .batches(2)
+            .sigma_factor(0.1)
+    }
+
+    #[test]
+    fn defaults_match_run_config() {
+        let exp = Experiment::on(DatasetSpec::Toy2d { per_cluster: 10 });
+        let cfg = exp.config();
+        assert_eq!(cfg.b, 4);
+        assert_eq!(cfg.c, None);
+        assert_eq!(cfg.restarts, 1);
+        assert_eq!(cfg.backend, BackendChoice::Native);
+    }
+
+    #[test]
+    fn parse_entry_point() {
+        let exp = Experiment::parse("mnist:300:60").unwrap();
+        assert_eq!(
+            exp.config().dataset,
+            DatasetSpec::Mnist { train: 300, test: 60 }
+        );
+        let err = Experiment::parse("marsdata").unwrap_err();
+        assert!(err.to_string().contains("marsdata"), "{err}");
+    }
+
+    #[test]
+    fn bad_engine_name_fails_at_build() {
+        let err = toy().backend("gpu").build().unwrap_err();
+        assert!(err.to_string().contains("unknown backend"), "{err}");
+    }
+
+    #[test]
+    fn backend_setter_reflects_into_config_echo() {
+        let exp = toy().backend("sharded:8");
+        assert_eq!(exp.config().backend, BackendChoice::Sharded(8));
+        // invalid names stay pending (default echo) and fail at build
+        let exp = toy().backend("gpu");
+        assert_eq!(exp.config().backend, BackendChoice::Native);
+        assert!(exp.build().is_err());
+    }
+
+    #[test]
+    fn sharded_zero_nodes_fails_at_build() {
+        assert!(toy().backend("sharded:0").build().is_err());
+    }
+
+    #[test]
+    fn sharded_offload_combo_is_a_structured_build_error() {
+        let err = toy().backend("sharded:2").offload(true).build().unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("sharded:2") && msg.contains("offload"),
+            "unhelpful error: {msg}"
+        );
+        // the same options without offload build fine
+        assert!(toy().backend("sharded:2").build().is_ok());
+    }
+
+    #[test]
+    fn infeasible_b_times_c_fails_at_build_not_mid_run() {
+        // 40 samples cannot host B=6 x C=8
+        let err = Experiment::on(DatasetSpec::Toy2d { per_cluster: 10 })
+            .clusters(8)
+            .batches(6)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("40"), "{err}");
+    }
+
+    #[test]
+    fn invalid_knobs_fail_at_build() {
+        assert!(toy().batches(0).build().is_err());
+        assert!(toy().landmark_fraction(0.0).build().is_err());
+        assert!(toy().landmark_fraction(1.5).build().is_err());
+        assert!(toy().restarts(0).build().is_err());
+        assert!(toy().kernel(KernelSpec::Rbf { gamma: -1.0 }).build().is_err());
+    }
+
+    #[test]
+    fn pinned_gamma_flows_into_the_report() {
+        let report = toy()
+            .kernel(KernelSpec::Rbf { gamma: 20.0 })
+            .build()
+            .unwrap()
+            .fit()
+            .unwrap();
+        assert_eq!(report.gamma, 20.0);
+        // switching back to the auto rule clears the pin
+        let session = toy()
+            .kernel(KernelSpec::Rbf { gamma: 20.0 })
+            .kernel(KernelSpec::RbfAuto { sigma_factor: 0.1 })
+            .build()
+            .unwrap();
+        assert_ne!(session.gamma(), 20.0);
+    }
+
+    #[test]
+    fn from_config_overrides_compose() {
+        let base = RunConfig::new(DatasetSpec::Toy2d { per_cluster: 50 });
+        let exp = Experiment::from_config(base).clusters(4).batches(3).seed(7);
+        let cfg = exp.config();
+        assert_eq!(cfg.c, Some(4));
+        assert_eq!(cfg.b, 3);
+        assert_eq!(cfg.seed, 7);
+    }
+}

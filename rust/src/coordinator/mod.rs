@@ -1,11 +1,24 @@
-//! Top-level coordinator: configuration, the Eq.19 memory planner, and
-//! the end-to-end runner that wires datasets -> Gram sources -> the
-//! mini-batch algorithm -> metrics reports. This is what `main.rs` (the
-//! CLI), the examples and the benches drive.
+//! Top-level coordinator: the staged [`Experiment`] builder, the
+//! pluggable [`Engine`] registry, the materialized [`Session`], the
+//! Eq.19 memory planner, and the run reports. This is what `main.rs`
+//! (the CLI), the examples and the benches drive.
+//!
+//! The flow: `Experiment::on(spec)` stages knobs, `build()` validates
+//! the combination and materializes dataset + Gram source + engine into
+//! a `Session`, and `session.fit()` runs Alg.1 (restarts, elbow,
+//! metrics) on whatever substrate the engine provides.
 pub mod config;
+pub mod engine;
+pub mod experiment;
 pub mod memory;
-pub mod runner;
+pub mod report;
+pub mod session;
 
 pub use config::{BackendChoice, DatasetSpec, RunConfig};
+pub use engine::{create_engine, engine_for_name, shared_pjrt, Engine, GramBuild};
+pub use experiment::{Experiment, KernelSpec};
 pub use memory::{b_min, footprint_bytes, paper_b_min};
-pub use runner::{run_experiment, RunReport};
+pub use report::{EngineReport, RunReport};
+pub use session::{
+    assign_test_set, build_dataset, gamma_for, run_lloyd_baseline, Session,
+};

@@ -1,0 +1,121 @@
+//! Experiment reports: metrics, timings, and honest engine provenance.
+use crate::cluster::MiniBatchResult;
+use crate::util::json::Json;
+
+/// Which engine a session ran on — requested vs actually used, plus the
+/// reason whenever the two differ (e.g. the PJRT Gram path degraded to
+/// native because no artifact matches the feature dimension).
+#[derive(Clone, Debug, PartialEq)]
+pub struct EngineReport {
+    /// Engine the configuration asked for (registry name).
+    pub requested: String,
+    /// Engine that actually evaluated the Gram blocks.
+    pub used: String,
+    /// Why the engine degraded, when `used != requested`.
+    pub fallback: Option<String>,
+}
+
+impl EngineReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requested", Json::str(&self.requested)),
+            ("used", Json::str(&self.used)),
+            (
+                "fallback",
+                self.fallback
+                    .as_deref()
+                    .map(Json::str)
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// Everything a bench or the CLI needs from one experiment.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub c_used: usize,
+    pub gamma: f32,
+    pub train_accuracy: f64,
+    pub train_nmi: f64,
+    pub test_accuracy: Option<f64>,
+    pub test_nmi: Option<f64>,
+    /// Clustering wall time of the best restart (seconds, excludes
+    /// dataset generation). `None` only if no restart produced a timing
+    /// — `restarts >= 1` is validated at build, so a fitted report
+    /// always carries `Some`; the type stays honest instead of smuggling
+    /// `f64::MAX` through an empty fold.
+    pub seconds: Option<f64>,
+    /// Per-restart clustering times.
+    pub restart_seconds: Vec<f64>,
+    pub best_cost: f64,
+    /// Engine provenance, including any fallback reason.
+    pub engine: EngineReport,
+    pub result: MiniBatchResult,
+}
+
+impl RunReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("c", Json::num(self.c_used as f64)),
+            ("gamma", Json::num(self.gamma as f64)),
+            ("train_accuracy", Json::num(self.train_accuracy)),
+            ("train_nmi", Json::num(self.train_nmi)),
+            (
+                "test_accuracy",
+                self.test_accuracy.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("test_nmi", self.test_nmi.map(Json::num).unwrap_or(Json::Null)),
+            (
+                "seconds",
+                self.seconds.map(Json::num).unwrap_or(Json::Null),
+            ),
+            ("best_cost", Json::num(self.best_cost)),
+            ("engine", self.engine.to_json()),
+            (
+                "outer_iterations",
+                Json::num(self.result.history.len() as f64),
+            ),
+            (
+                "inner_iterations",
+                Json::num(
+                    self.result
+                        .history
+                        .iter()
+                        .map(|h| h.inner_iterations)
+                        .sum::<usize>() as f64,
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_report_json_reflects_fallback() {
+        let direct = EngineReport {
+            requested: "pjrt".into(),
+            used: "pjrt".into(),
+            fallback: None,
+        };
+        let j = direct.to_json();
+        assert_eq!(j.get("used").and_then(|v| v.as_str()), Some("pjrt"));
+        assert_eq!(j.get("fallback"), Some(&Json::Null));
+
+        let degraded = EngineReport {
+            requested: "pjrt".into(),
+            used: "native".into(),
+            fallback: Some("no rbf artifact for d=33".into()),
+        };
+        let j = degraded.to_json();
+        assert_eq!(j.get("used").and_then(|v| v.as_str()), Some("native"));
+        assert!(j
+            .get("fallback")
+            .and_then(|v| v.as_str())
+            .unwrap()
+            .contains("d=33"));
+    }
+}

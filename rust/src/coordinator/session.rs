@@ -1,0 +1,565 @@
+//! A built experiment: materialized dataset, Gram source and engine,
+//! owned together so restarts, elbow scans and benches reuse them
+//! instead of rebuilding per call.
+//!
+//! `Session::fit()` is the single execution path for every workload —
+//! vector datasets and the MD/RMSD trajectory alike run the same
+//! protocol (optional elbow scan, k-means++ restarts keeping the
+//! minimum-cost solution, metrics vs ground truth). The MD workload is
+//! not a forked runner anymore: it is just another Gram source
+//! ([`crate::kernels::RmsdGram`]) over another materialization.
+use std::sync::{Arc, OnceLock};
+
+use crate::baselines;
+use crate::cluster::{
+    elbow::elbow_from_curve, minibatch::cost_vs_medoids, minibatch::MergeRule,
+    minibatch::NativeBackend, minibatch::StepBackend, MiniBatchConfig,
+    MiniBatchKernelKMeans, MiniBatchResult,
+};
+use crate::data::{
+    noisy_mnist, synthetic_mnist, synthetic_rcv1, toy2d, Dataset,
+};
+use crate::kernels::{GramSource, KernelFn};
+use crate::linalg::{qcp_rmsd, Frame, Mat};
+use crate::metrics::{accuracy, nmi};
+use crate::sim::md::{simulate, MdConfig};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+
+use super::config::{DatasetSpec, RunConfig};
+use super::engine::{Engine, GramBuild};
+use super::report::{EngineReport, RunReport};
+
+/// What a dataset spec materialized into. Vector workloads carry the
+/// train/test split and the kernel used for held-out assignment; frame
+/// workloads carry the trajectory and its macro-state ground truth.
+enum Workload {
+    Vectors {
+        train: Dataset,
+        test: Option<Dataset>,
+        kernel: KernelFn,
+    },
+    Frames {
+        frames: Arc<Vec<Frame>>,
+        truth: Vec<usize>,
+    },
+}
+
+/// A built, reusable experiment (see module docs). Construct through
+/// [`super::Experiment::build`].
+pub struct Session {
+    cfg: RunConfig,
+    engine: Box<dyn Engine>,
+    source: Box<dyn GramSource>,
+    workload: Workload,
+    gamma: f32,
+    engine_report: EngineReport,
+    /// Default elbow scan range when `cfg.c` is None (paper §4.4/4.5).
+    elbow_range: (usize, usize),
+}
+
+impl Session {
+    /// Materialize dataset + Gram source + engine state. Called by
+    /// `Experiment::build()` after validation.
+    pub(super) fn materialize(cfg: RunConfig, engine: Box<dyn Engine>) -> Result<Session> {
+        let (workload, build, gamma, elbow_range) = match cfg.dataset {
+            DatasetSpec::Md { frames: n_frames } => {
+                let mut rng = Rng::new(cfg.seed ^ 0x3D);
+                let traj = simulate(&mut rng, &MdConfig::default(), n_frames);
+                let truth: Vec<usize> = traj.labels.iter().map(|l| l.index()).collect();
+                let frames = Arc::new(traj.frames);
+                let sigma = match cfg.gamma {
+                    Some(g) => (0.5 / g as f64).sqrt(),
+                    None => {
+                        // sigma from the RMSD scale: sample pairs, take
+                        // sigma_factor * max/4 (skipped when gamma is
+                        // pinned — the probe costs 512 QCP solves)
+                        let mut probe_rng = Rng::new(cfg.seed ^ 0x3E);
+                        let mut d_max = 0.0f64;
+                        for _ in 0..512.min(n_frames * 2) {
+                            let i = probe_rng.below(n_frames);
+                            let j = probe_rng.below(n_frames);
+                            d_max = d_max.max(qcp_rmsd(&frames[i], &frames[j]));
+                        }
+                        (cfg.sigma_factor as f64) * d_max.max(1e-6) / 4.0
+                    }
+                };
+                let gamma = (1.0 / (2.0 * sigma * sigma)) as f32;
+                let build = engine.rmsd_gram(frames.clone(), sigma, cfg.threads);
+                // the paper's MD elbow range
+                (Workload::Frames { frames, truth }, build, gamma, (4, 40))
+            }
+            _ => {
+                let (train, test) = build_dataset(&cfg.dataset, cfg.seed);
+                let gamma = cfg
+                    .gamma
+                    .unwrap_or_else(|| gamma_for(&train, cfg.sigma_factor, cfg.seed));
+                let kernel = KernelFn::Rbf { gamma };
+                let build = engine.vec_gram(train.x.clone(), gamma, cfg.threads);
+                let c_hi = (train.classes * 2).clamp(8, 40);
+                (Workload::Vectors { train, test, kernel }, build, gamma, (2, c_hi))
+            }
+        };
+        let GramBuild { source, fallback } = build;
+        let requested = engine.name().to_string();
+        // every degraded path serves native blocks; no fallback = the
+        // engine's own path ran
+        let used = if fallback.is_some() { "native".to_string() } else { requested.clone() };
+        if let Some(reason) = &fallback {
+            log_fallback_once(&requested, reason);
+        }
+        Ok(Session {
+            engine_report: EngineReport { requested, used, fallback },
+            cfg,
+            engine,
+            source,
+            workload,
+            gamma,
+            elbow_range,
+        })
+    }
+
+    /// Run the full protocol: elbow scan when no cluster count is set,
+    /// then restarts keeping the minimum-cost solution, then metrics.
+    /// Deterministic in the session seed; callable repeatedly.
+    pub fn fit(&self) -> Result<RunReport> {
+        let c = match self.cfg.c {
+            Some(c) => c,
+            None => self.elbow(self.elbow_range.0, self.elbow_range.1),
+        };
+        self.fit_clusters(c)
+    }
+
+    /// Fit with an explicit cluster count, reusing the materialized
+    /// dataset and Gram source (C sweeps without rebuild).
+    pub fn fit_clusters(&self, c: usize) -> Result<RunReport> {
+        if c == 0 {
+            return Err(Error::Config("c must be >= 1".into()));
+        }
+        // the mini-batch plan needs C seeds per batch; fail structurally
+        // instead of reaching the planner's assert
+        let n = self.source.n();
+        if self.cfg.b * c > n {
+            return Err(Error::Config(format!(
+                "B={} x C={c} needs more than the {n} training samples",
+                self.cfg.b
+            )));
+        }
+        let (result, best_cost, restart_seconds) =
+            run_restarts(self.source.as_ref(), &self.cfg, c, self.engine.step());
+        let truth = self.truth();
+        let train_accuracy = accuracy(&result.labels, truth);
+        let train_nmi = nmi(&result.labels, truth);
+        let (test_accuracy, test_nmi) = match &self.workload {
+            Workload::Vectors { train, test: Some(te), kernel } => {
+                let labels = assign_test_set(te, train, &result.medoids, *kernel);
+                (Some(accuracy(&labels, &te.y)), Some(nmi(&labels, &te.y)))
+            }
+            _ => (None, None),
+        };
+        let seconds = restart_seconds.iter().cloned().reduce(f64::min);
+        Ok(RunReport {
+            c_used: c,
+            gamma: self.gamma,
+            train_accuracy,
+            train_nmi,
+            test_accuracy,
+            test_nmi,
+            seconds,
+            restart_seconds,
+            best_cost,
+            engine: self.engine_report.clone(),
+            result,
+        })
+    }
+
+    /// Elbow scan over `[c_min, c_max]` (paper §4.4/4.5), reusing the
+    /// session's Gram source. Short inner loops keep the scan tractable.
+    pub fn elbow(&self, c_min: usize, c_max: usize) -> usize {
+        let source = self.source.as_ref();
+        let n = source.n();
+        let mut eval_rng = Rng::new(self.cfg.seed ^ 0x318);
+        let sample = eval_rng.sample_indices(n, n.min(1024));
+        let mut curve = Vec::new();
+        let start = c_min.max(2);
+        // cap the scan where the mini-batch plan stays feasible (C seeds
+        // per batch), so small datasets never panic mid-scan
+        let c_max = c_max.min(n / self.cfg.b.max(1));
+        let mut c = start;
+        while c <= c_max {
+            let mut mb_cfg = minibatch_config(&self.cfg, c, self.cfg.seed);
+            mb_cfg.max_inner = 30;
+            let result = MiniBatchKernelKMeans::new(mb_cfg, &NativeBackend).run(source);
+            curve.push((c, cost_vs_medoids(source, &sample, &result.medoids)));
+            // geometric-ish steps keep the scan tractable on big ranges
+            c += ((c / 4).max(1)).min(4);
+        }
+        if curve.len() < 2 {
+            // range collapsed (tiny dataset or aggressive B): the
+            // smallest feasible C is the only honest answer
+            return curve.first().map(|&(c, _)| c).unwrap_or(start);
+        }
+        elbow_from_curve(&curve)
+    }
+
+    /// Fig.7 medoid summary (MD workload only): medoid frame indices,
+    /// their pairwise QCP-RMSD matrix, and each medoid's macro-state.
+    pub fn medoid_rmsd_matrix(
+        &self,
+        report: &RunReport,
+    ) -> Result<(Vec<usize>, Mat, Vec<usize>)> {
+        let Workload::Frames { frames, truth } = &self.workload else {
+            return Err(Error::Config(
+                "medoid RMSD matrix needs an MD workload (dataset spec `md:<frames>`)".into(),
+            ));
+        };
+        let m = report.result.medoids.clone();
+        let mut mat = Mat::zeros(m.len(), m.len());
+        for (a, &ma) in m.iter().enumerate() {
+            for (b, &mb) in m.iter().enumerate() {
+                mat.set(a, b, qcp_rmsd(&frames[ma], &frames[mb]) as f32);
+            }
+        }
+        let macro_of_medoid: Vec<usize> = m.iter().map(|&i| truth[i]).collect();
+        Ok((m, mat, macro_of_medoid))
+    }
+
+    /// The validated configuration this session was built from.
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Engine provenance (requested vs used, fallback reason).
+    pub fn engine(&self) -> &EngineReport {
+        &self.engine_report
+    }
+
+    /// The materialized Gram source (for algorithm-level drivers).
+    pub fn gram(&self) -> &dyn GramSource {
+        self.source.as_ref()
+    }
+
+    /// RBF bandwidth in effect (derived via the sigma rule or pinned).
+    pub fn gamma(&self) -> f32 {
+        self.gamma
+    }
+
+    /// Number of training samples.
+    pub fn n(&self) -> usize {
+        self.source.n()
+    }
+
+    /// Training dataset (vector workloads only).
+    pub fn train(&self) -> Option<&Dataset> {
+        match &self.workload {
+            Workload::Vectors { train, .. } => Some(train),
+            Workload::Frames { .. } => None,
+        }
+    }
+
+    /// Held-out dataset, when the spec carries one.
+    pub fn test(&self) -> Option<&Dataset> {
+        match &self.workload {
+            Workload::Vectors { test, .. } => test.as_ref(),
+            Workload::Frames { .. } => None,
+        }
+    }
+
+    /// Ground-truth labels of the training samples (class labels for
+    /// vector data, macro-states for MD frames).
+    pub fn truth(&self) -> &[usize] {
+        match &self.workload {
+            Workload::Vectors { train, .. } => &train.y,
+            Workload::Frames { truth, .. } => truth,
+        }
+    }
+}
+
+fn log_fallback_once(engine: &str, reason: &str) {
+    static LOGGED: OnceLock<()> = OnceLock::new();
+    LOGGED.get_or_init(|| {
+        eprintln!("dkkm: engine '{engine}' degraded to the native path: {reason}");
+    });
+}
+
+/// Generated train/test datasets for a vector spec. MD specs have no
+/// vector materialization — they are served by `Session` directly.
+pub fn build_dataset(spec: &DatasetSpec, seed: u64) -> (Dataset, Option<Dataset>) {
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    match spec {
+        DatasetSpec::Toy2d { per_cluster } => (toy2d(&mut rng, *per_cluster), None),
+        DatasetSpec::Mnist { train, test } => {
+            let all = synthetic_mnist(&mut rng, train + test);
+            let (tr, te) = all.split(*train);
+            (tr, if *test > 0 { Some(te) } else { None })
+        }
+        DatasetSpec::Rcv1 { n, classes, dim } => {
+            // paper keeps ~3% of RCV1 for testing
+            let test = (n / 33).max(1);
+            let vocab = crate::data::rcv1_vocab().min(n * 10);
+            let all = synthetic_rcv1(&mut rng, n + test, *classes, vocab, *dim);
+            let (tr, te) = all.split(*n);
+            (tr, Some(te))
+        }
+        DatasetSpec::NoisyMnist { base, copies } => {
+            let b = synthetic_mnist(&mut rng, *base);
+            (noisy_mnist(&mut rng, &b, *copies), None)
+        }
+        DatasetSpec::Md { .. } => {
+            unreachable!("MD frames are materialized by Session, not build_dataset")
+        }
+    }
+}
+
+/// RBF gamma following the paper's sigma = sigma_factor * d_max rule.
+pub fn gamma_for(dataset: &Dataset, sigma_factor: f32, seed: u64) -> f32 {
+    let mut rng = Rng::new(seed ^ 0x516);
+    let d2max = dataset.est_d2_max(&mut rng, 2048.min(dataset.n() * 4));
+    let sigma = sigma_factor * d2max.sqrt().max(1e-6);
+    1.0 / (2.0 * sigma * sigma)
+}
+
+fn minibatch_config(cfg: &RunConfig, c: usize, seed: u64) -> MiniBatchConfig {
+    MiniBatchConfig {
+        c,
+        b: cfg.b,
+        s: cfg.s,
+        sampling: cfg.sampling,
+        max_inner: 100,
+        seed,
+        track_cost: cfg.track_cost,
+        offload: cfg.offload,
+        merge_rule: MergeRule::Convex,
+    }
+}
+
+fn run_restarts(
+    source: &dyn GramSource,
+    cfg: &RunConfig,
+    c: usize,
+    backend: &dyn StepBackend,
+) -> (MiniBatchResult, f64, Vec<f64>) {
+    let n = source.n();
+    let mut eval_rng = Rng::new(cfg.seed ^ 0xE7A1);
+    let sample = eval_rng.sample_indices(n, n.min(2048));
+    let mut best: Option<(MiniBatchResult, f64)> = None;
+    let mut times = Vec::with_capacity(cfg.restarts);
+    for r in 0..cfg.restarts {
+        let mb_cfg = minibatch_config(cfg, c, cfg.seed.wrapping_add(r as u64 * 7919));
+        let timer = Timer::start();
+        let result = MiniBatchKernelKMeans::new(mb_cfg, backend).run(source);
+        times.push(timer.elapsed_s());
+        let cost = cost_vs_medoids(source, &sample, &result.medoids);
+        if best.as_ref().map_or(true, |(_, bc)| cost < *bc) {
+            best = Some((result, cost));
+        }
+    }
+    let (result, cost) = best.expect("restarts >= 1");
+    (result, cost, times)
+}
+
+/// Assign held-out vector samples to the trained medoids.
+pub fn assign_test_set(
+    test: &Dataset,
+    train: &Dataset,
+    medoids: &[usize],
+    kernel: KernelFn,
+) -> Vec<usize> {
+    let med: Vec<&[f32]> = medoids.iter().map(|&m| train.x.row(m)).collect();
+    (0..test.n())
+        .map(|i| {
+            let xi = test.x.row(i);
+            let mut best = 0;
+            let mut best_v = f32::INFINITY;
+            for (j, m) in med.iter().enumerate() {
+                let d = kernel.eval(m, m) - 2.0 * kernel.eval(xi, m);
+                if d < best_v {
+                    best_v = d;
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Linear k-means baseline on the same dataset (Tab.1/2 "Baseline" rows).
+pub fn run_lloyd_baseline(
+    spec: &DatasetSpec,
+    c: usize,
+    seed: u64,
+) -> (f64, f64, Option<f64>, Option<f64>) {
+    let (train, test) = build_dataset(spec, seed);
+    let mut rng = Rng::new(seed);
+    let res = baselines::lloyd_kmeans(&train.x, c, 100, 3, &mut rng);
+    let train_acc = accuracy(&res.labels, &train.y);
+    let train_n = nmi(&res.labels, &train.y);
+    match test {
+        Some(te) => {
+            let labels = baselines::lloyd::assign_to_centers(&te.x, &res.centers);
+            (
+                train_acc,
+                train_n,
+                Some(accuracy(&labels, &te.y)),
+                Some(nmi(&labels, &te.y)),
+            )
+        }
+        None => (train_acc, train_n, None, None),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::experiment::Experiment;
+    use super::*;
+
+    fn toy_exp() -> Experiment {
+        Experiment::on(DatasetSpec::Toy2d { per_cluster: 100 })
+            .clusters(4)
+            .batches(2)
+            .sigma_factor(0.1) // tighter kernel for the tiny toy set
+            .restarts(2)
+    }
+
+    #[test]
+    fn toy_run_end_to_end() {
+        let report = toy_exp().build().unwrap().fit().unwrap();
+        assert!(report.train_accuracy > 0.8, "acc {}", report.train_accuracy);
+        assert!(report.train_nmi > 0.6, "nmi {}", report.train_nmi);
+        assert_eq!(report.c_used, 4);
+        assert!(report.seconds.expect("timed restarts") > 0.0);
+        assert_eq!(report.engine.used, "native");
+        assert!(report.engine.fallback.is_none());
+    }
+
+    #[test]
+    fn restarts_pick_best_cost() {
+        let multi = toy_exp().restarts(3).build().unwrap().fit().unwrap();
+        assert_eq!(multi.restart_seconds.len(), 3);
+        let single = toy_exp().restarts(1).build().unwrap().fit().unwrap();
+        assert!(multi.best_cost <= single.best_cost * 1.001);
+    }
+
+    #[test]
+    fn session_fit_is_repeatable() {
+        // one materialization, many fits: the whole point of Session
+        let session = toy_exp().build().unwrap();
+        let a = session.fit().unwrap();
+        let b = session.fit().unwrap();
+        assert_eq!(a.result.labels, b.result.labels);
+        assert_eq!(a.result.medoids, b.result.medoids);
+        assert_eq!(a.best_cost, b.best_cost);
+    }
+
+    #[test]
+    fn sharded_backend_matches_native_metrics() {
+        let native = toy_exp().build().unwrap().fit().unwrap();
+        let sharded = toy_exp().backend("sharded:3").build().unwrap().fit().unwrap();
+        assert_eq!(native.result.labels, sharded.result.labels);
+        assert_eq!(native.result.medoids, sharded.result.medoids);
+        assert_eq!(sharded.engine.used, "sharded:3");
+    }
+
+    #[test]
+    fn mnist_small_with_test_set() {
+        let report = Experiment::on(DatasetSpec::Mnist { train: 400, test: 100 })
+            .clusters(10)
+            .batches(2)
+            .build()
+            .unwrap()
+            .fit()
+            .unwrap();
+        assert!(report.test_accuracy.is_some());
+        // digits are confusable but far above the 10% chance level
+        assert!(report.train_accuracy > 0.3, "acc {}", report.train_accuracy);
+    }
+
+    #[test]
+    fn elbow_autoselects_reasonable_c_on_toy() {
+        let report = toy_exp().auto_clusters().build().unwrap().fit().unwrap();
+        assert!(
+            (3..=8).contains(&report.c_used),
+            "elbow picked {}",
+            report.c_used
+        );
+    }
+
+    #[test]
+    fn md_runs_through_the_same_session_path() {
+        let session = Experiment::on(DatasetSpec::Md { frames: 400 })
+            .clusters(6)
+            .batches(2)
+            .build()
+            .unwrap();
+        let report = session.fit().unwrap();
+        // 3 macro-states from 6 clusters: NMI must clearly beat random
+        assert!(report.train_nmi > 0.1, "nmi {}", report.train_nmi);
+        assert!(session.train().is_none());
+        assert_eq!(session.truth().len(), 400);
+        // the Fig.7 summary comes from the same session, no re-simulation
+        let (medoids, mat, macro_of) = session.medoid_rmsd_matrix(&report).unwrap();
+        assert_eq!(medoids.len(), 6);
+        assert_eq!(macro_of.len(), 6);
+        assert_eq!(mat.rows(), 6);
+        for i in 0..6 {
+            assert!(mat.at(i, i) < 1e-6, "nonzero self-RMSD at {i}");
+        }
+    }
+
+    #[test]
+    fn medoid_rmsd_matrix_rejects_vector_workloads() {
+        let session = toy_exp().build().unwrap();
+        let report = session.fit().unwrap();
+        assert!(session.medoid_rmsd_matrix(&report).is_err());
+    }
+
+    #[test]
+    fn fit_clusters_reuses_the_session() {
+        let session = toy_exp().auto_clusters().build().unwrap();
+        let at3 = session.fit_clusters(3).unwrap();
+        let at4 = session.fit_clusters(4).unwrap();
+        assert_eq!(at3.c_used, 3);
+        assert_eq!(at4.c_used, 4);
+        assert!(session.fit_clusters(0).is_err());
+        // infeasible C at fit time is a structured error, not the
+        // mini-batch planner's assert (n=400, B=2, C=250 -> 500 seeds)
+        let err = session.fit_clusters(250).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+    }
+
+    #[test]
+    fn elbow_never_panics_on_tiny_datasets() {
+        // 40 samples, B=4: the feasible C range collapses to [2, 10];
+        // the scan must cap itself instead of tripping the planner
+        let session = Experiment::on(DatasetSpec::Toy2d { per_cluster: 10 })
+            .auto_clusters()
+            .batches(4)
+            .sigma_factor(0.1)
+            .build()
+            .unwrap();
+        let c = session.elbow(2, 64);
+        assert!((2..=10).contains(&c), "elbow picked {c}");
+        assert!(session.fit_clusters(c).is_ok());
+    }
+
+    #[test]
+    fn lloyd_baseline_on_toy() {
+        let (acc, n, _, _) =
+            run_lloyd_baseline(&DatasetSpec::Toy2d { per_cluster: 100 }, 4, 1);
+        assert!(acc > 0.85, "acc {acc}");
+        assert!(n > 0.6, "nmi {n}");
+    }
+
+    #[test]
+    fn report_json_valid() {
+        let report = toy_exp().build().unwrap().fit().unwrap();
+        let j = report.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_string()).unwrap();
+        // engine provenance is part of the machine-readable report
+        assert_eq!(
+            parsed.get("engine").and_then(|e| e.get("used")).and_then(|v| v.as_str()),
+            Some("native")
+        );
+    }
+}

@@ -5,6 +5,7 @@
 //!   recommends it whenever possible.
 //! * **Block**: X^i = { x_{i N/B + j} } — consecutive slices; the
 //!   streaming-friendly choice, vulnerable to concept drift (Fig.4a).
+use std::fmt;
 use std::str::FromStr;
 
 /// Mini-batch sampling strategy.
@@ -12,6 +13,16 @@ use std::str::FromStr;
 pub enum Sampling {
     Stride,
     Block,
+}
+
+impl fmt::Display for Sampling {
+    /// Canonical spec string; `display -> parse` round-trips.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Sampling::Stride => write!(f, "stride"),
+            Sampling::Block => write!(f, "block"),
+        }
+    }
 }
 
 impl FromStr for Sampling {
@@ -110,6 +121,19 @@ mod tests {
         assert_eq!("stride".parse::<Sampling>().unwrap(), Sampling::Stride);
         assert_eq!("block".parse::<Sampling>().unwrap(), Sampling::Block);
         assert!("other".parse::<Sampling>().is_err());
+    }
+
+    #[test]
+    fn display_parse_round_trip() {
+        for s in [Sampling::Stride, Sampling::Block] {
+            assert_eq!(s.to_string().parse::<Sampling>().unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn malformed_parse_names_alternatives() {
+        let err = "zigzag".parse::<Sampling>().unwrap_err();
+        assert!(err.contains("zigzag") && err.contains("stride|block"), "{err}");
     }
 
     #[test]

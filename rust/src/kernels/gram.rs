@@ -1,4 +1,6 @@
 //! Gram-block sources: the interface between data and the clusterer.
+use std::sync::Arc;
+
 use crate::linalg::{qcp_rmsd, Frame, Mat};
 use crate::util::threadpool;
 
@@ -183,14 +185,22 @@ fn dot4(x: &[f32], y0: &[f32], y1: &[f32], y2: &[f32], y3: &[f32]) -> [f32; 4] {
 }
 
 /// MD frames with the RMSD-RBF kernel `exp(-rmsd^2 / (2 sigma^2))`.
+///
+/// Frames are held behind an `Arc` so a session can keep the trajectory
+/// (for medoid RMSD summaries) without duplicating it.
 pub struct RmsdGram {
-    frames: Vec<Frame>,
+    frames: Arc<Vec<Frame>>,
     gamma: f64,
     threads: usize,
 }
 
 impl RmsdGram {
     pub fn new(frames: Vec<Frame>, sigma: f64, threads: usize) -> RmsdGram {
+        RmsdGram::shared(Arc::new(frames), sigma, threads)
+    }
+
+    /// Build over an already-shared trajectory.
+    pub fn shared(frames: Arc<Vec<Frame>>, sigma: f64, threads: usize) -> RmsdGram {
         RmsdGram { frames, gamma: 1.0 / (2.0 * sigma * sigma), threads: threads.max(1) }
     }
 

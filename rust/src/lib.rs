@@ -17,6 +17,42 @@
 //!
 //! Python never runs on the clustering path: `make artifacts` lowers the
 //! HLO once, and the Rust binary loads it through PJRT (`runtime`).
+//!
+//! ## Public API
+//!
+//! The paper's point is that one algorithm (Alg.1) runs unchanged across
+//! execution substrates. The API mirrors that: a staged
+//! [`Experiment`](coordinator::Experiment) builder describes *what* to
+//! cluster, an [`Engine`](coordinator::Engine) (registry names `native`,
+//! `pjrt`, `sharded:<p>`) decides *where* the Gram blocks and inner
+//! iterations run, and [`build()`](coordinator::Experiment::build)
+//! materializes dataset + Gram source + engine into a reusable
+//! [`Session`](coordinator::Session):
+//!
+//! ```no_run
+//! use dkkm::prelude::*;
+//!
+//! let session = Experiment::on(DatasetSpec::Mnist { train: 10_000, test: 2_000 })
+//!     .clusters(10)
+//!     .batches(4)
+//!     .backend("pjrt") // or "native", "sharded:8"
+//!     .offload(true)   // Fig.3 pipeline
+//!     .build()?;       // invalid combinations fail here, not mid-run
+//! let report = session.fit()?;
+//! println!(
+//!     "accuracy {:.1}% on engine {}",
+//!     report.train_accuracy * 100.0,
+//!     report.engine.used, // honest: records PJRT fallback + reason
+//! );
+//! # Ok::<(), dkkm::Error>(())
+//! ```
+//!
+//! `Session` owns the materialized data, so elbow scans
+//! ([`Session::elbow`](coordinator::Session::elbow)), cluster-count
+//! sweeps ([`Session::fit_clusters`](coordinator::Session::fit_clusters))
+//! and repeated fits reuse the Gram source instead of rebuilding per
+//! call. The MD/RMSD trajectory workload (paper §4.5) runs through the
+//! same `fit()` path — it is just another Gram source.
 pub mod baselines;
 pub mod cluster;
 pub mod coordinator;
@@ -30,3 +66,15 @@ pub mod sim;
 pub mod util;
 
 pub use util::error::{Error, Result};
+
+/// One-import surface for driving experiments.
+pub mod prelude {
+    pub use crate::coordinator::{
+        BackendChoice, DatasetSpec, Engine, EngineReport, Experiment, KernelSpec,
+        RunConfig, RunReport, Session,
+    };
+    pub use crate::data::Sampling;
+    pub use crate::kernels::{GramSource, KernelFn};
+    pub use crate::metrics::{accuracy, nmi};
+    pub use crate::util::error::{Error, Result};
+}

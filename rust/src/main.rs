@@ -8,9 +8,16 @@
 //!   elbow     cost-vs-C scan
 //!   md        MD trajectory clustering + Fig.7 medoid RMSD matrix
 //!   info      artifact manifest summary
+//!
+//! Every clustering command goes through the `Experiment` builder:
+//! flags stage knobs, `build()` validates the combination (unknown
+//! engines, sharded+offload, infeasible B x C all fail before any work),
+//! and the resulting `Session` runs the unified `fit()` path.
 use dkkm::baselines::{sgd_kmeans, SgdConfig};
-use dkkm::coordinator::runner::{self, run_lloyd_baseline};
-use dkkm::coordinator::{b_min, footprint_bytes, paper_b_min, DatasetSpec, RunConfig};
+use dkkm::coordinator::{
+    b_min, build_dataset, footprint_bytes, gamma_for, paper_b_min, run_lloyd_baseline,
+    shared_pjrt, DatasetSpec, Experiment, RunConfig, Session,
+};
 use dkkm::distributed::{NetModel, ScalingSimulator, Topology};
 use dkkm::kernels::VecGram;
 use dkkm::metrics::{accuracy, nmi};
@@ -71,7 +78,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     }
 }
 
-fn parse_run_config(rest: &[String]) -> Result<(RunConfig, bool)> {
+fn parse_run_experiment(rest: &[String]) -> Result<(Experiment, bool)> {
     // --config file.json loads a base config; CLI flags then override
     if let Some(pos) = rest.iter().position(|a| a == "--config") {
         let path = rest
@@ -82,7 +89,7 @@ fn parse_run_config(rest: &[String]) -> Result<(RunConfig, bool)> {
         let base = RunConfig::from_json(&Json::parse(&text)?)?;
         let mut remaining: Vec<String> = rest[..pos].to_vec();
         remaining.extend_from_slice(&rest[pos + 2..]);
-        return apply_run_flags(base, &remaining);
+        return apply_run_flags(Experiment::from_config(base), &remaining);
     }
     let p = Cli::new("dkkm run — cluster a dataset with mini-batch kernel k-means")
         .req("dataset", "toy2d[:per] | mnist[:train[:test]] | rcv1[:n[:cls[:dim]]] | noisy-mnist[:base[:copies]] | md[:frames]")
@@ -99,31 +106,27 @@ fn parse_run_config(rest: &[String]) -> Result<(RunConfig, bool)> {
         .flag("offload", "Fig.3 producer-consumer pipeline")
         .flag("json", "emit machine-readable report")
         .parse(rest)?;
-    let mut cfg = RunConfig::new(
-        p.str("dataset")
-            .parse::<DatasetSpec>()
-            .map_err(Error::Config)?,
-    );
+    let mut exp = Experiment::parse(p.str("dataset"))?
+        .batches(p.get("b")?)
+        .landmark_fraction(p.get("s")?)
+        .sampling(p.str("sampling").parse().map_err(Error::Config)?)
+        .backend(p.str("backend"))
+        .seed(p.get("seed")?)
+        .restarts(p.get("restarts")?)
+        .sigma_factor(p.get("sigma-factor")?)
+        .track_cost(p.get_bool("track-cost"))
+        .offload(p.get_bool("offload"));
     let c: usize = p.get("c")?;
-    cfg.c = if c == 0 { None } else { Some(c) };
-    cfg.b = p.get("b")?;
-    cfg.s = p.get("s")?;
-    cfg.sampling = p.str("sampling").parse().map_err(Error::Config)?;
-    cfg.backend = p.str("backend").parse().map_err(Error::Config)?;
+    exp = if c == 0 { exp.auto_clusters() } else { exp.clusters(c) };
     let threads: usize = p.get("threads")?;
     if threads > 0 {
-        cfg.threads = threads;
+        exp = exp.threads(threads);
     }
-    cfg.seed = p.get("seed")?;
-    cfg.restarts = p.get("restarts")?;
-    cfg.sigma_factor = p.get("sigma-factor")?;
-    cfg.track_cost = p.get_bool("track-cost");
-    cfg.offload = p.get_bool("offload");
-    Ok((cfg, p.get_bool("json")))
+    Ok((exp, p.get_bool("json")))
 }
 
 /// Overlay CLI flags (all optional) onto a config-file base.
-fn apply_run_flags(mut cfg: RunConfig, rest: &[String]) -> Result<(RunConfig, bool)> {
+fn apply_run_flags(mut exp: Experiment, rest: &[String]) -> Result<(Experiment, bool)> {
     let p = Cli::new("dkkm run --config <file.json> — flags override the file")
         .opt("dataset", "", "override dataset spec")
         .opt("c", "", "override clusters (0 = elbow)")
@@ -137,39 +140,41 @@ fn apply_run_flags(mut cfg: RunConfig, rest: &[String]) -> Result<(RunConfig, bo
         .flag("json", "emit machine-readable report")
         .parse(rest)?;
     if !p.str("dataset").is_empty() {
-        cfg.dataset = p.str("dataset").parse().map_err(Error::Config)?;
+        exp = exp.dataset(p.str("dataset").parse().map_err(Error::Config)?);
     }
     if !p.str("c").is_empty() {
         let c: usize = p.get("c")?;
-        cfg.c = if c == 0 { None } else { Some(c) };
+        exp = if c == 0 { exp.auto_clusters() } else { exp.clusters(c) };
     }
     if !p.str("b").is_empty() {
-        cfg.b = p.get("b")?;
+        exp = exp.batches(p.get("b")?);
     }
     if !p.str("s").is_empty() {
-        cfg.s = p.get("s")?;
+        exp = exp.landmark_fraction(p.get("s")?);
     }
     if !p.str("sampling").is_empty() {
-        cfg.sampling = p.str("sampling").parse().map_err(Error::Config)?;
+        exp = exp.sampling(p.str("sampling").parse().map_err(Error::Config)?);
     }
     if !p.str("backend").is_empty() {
-        cfg.backend = p.str("backend").parse().map_err(Error::Config)?;
+        exp = exp.backend(p.str("backend"));
     }
     if !p.str("seed").is_empty() {
-        cfg.seed = p.get("seed")?;
+        exp = exp.seed(p.get("seed")?);
     }
     if !p.str("restarts").is_empty() {
-        cfg.restarts = p.get("restarts")?;
+        exp = exp.restarts(p.get("restarts")?);
     }
     if p.get_bool("offload") {
-        cfg.offload = true;
+        exp = exp.offload(true);
     }
-    Ok((cfg, p.get_bool("json")))
+    Ok((exp, p.get_bool("json")))
 }
 
 fn cmd_run(rest: &[String]) -> Result<()> {
-    let (cfg, as_json) = parse_run_config(rest)?;
-    let report = runner::run_experiment(&cfg)?;
+    let (exp, as_json) = parse_run_experiment(rest)?;
+    let session = exp.build()?;
+    let report = session.fit()?;
+    let cfg = session.config();
     if as_json {
         let j = Json::obj(vec![
             ("config", cfg.to_json()),
@@ -178,8 +183,11 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         println!("{j}");
         return Ok(());
     }
-    println!("dataset         : {:?}", cfg.dataset);
-    println!("backend         : {:?} (B={}, s={})", cfg.backend, cfg.b, cfg.s);
+    println!("dataset         : {}", cfg.dataset);
+    println!("engine          : {} (B={}, s={})", report.engine.used, cfg.b, cfg.s);
+    if let Some(reason) = &report.engine.fallback {
+        println!("  (requested '{}': {reason})", report.engine.requested);
+    }
     println!("clusters        : {} (gamma={:.3e})", report.c_used, report.gamma);
     println!("train accuracy  : {:.2}%", report.train_accuracy * 100.0);
     println!("train NMI       : {:.4}", report.train_nmi);
@@ -187,7 +195,11 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         println!("test accuracy   : {:.2}%", a * 100.0);
         println!("test NMI        : {:.4}", report.test_nmi.unwrap());
     }
-    println!("clustering time : {:.2}s (best of {} restarts)", report.seconds, cfg.restarts);
+    println!(
+        "clustering time : {:.2}s (best of {} restarts)",
+        report.seconds.unwrap_or(f64::NAN),
+        cfg.restarts
+    );
     if let Some(ov) = report.result.overlap {
         println!(
             "offload overlap : {:.0}% of block production hidden",
@@ -229,7 +241,7 @@ fn cmd_baseline(rest: &[String]) -> Result<()> {
             }
         }
         "sgd" => {
-            let (train, _) = runner::build_dataset(&spec, seed);
+            let (train, _) = build_dataset(&spec, seed);
             let cfg = SgdConfig {
                 c,
                 batch: p.get("sgd-batch")?,
@@ -268,11 +280,11 @@ fn cmd_scaling(rest: &[String]) -> Result<()> {
         iters: p.get("iters")?,
     };
     // calibrate on a real synthetic-MNIST probe
-    let (train, _) = runner::build_dataset(
+    let (train, _) = build_dataset(
         &DatasetSpec::Mnist { train: p.get("probe")?, test: 0 },
         p.get("seed")?,
     );
-    let gamma = runner::gamma_for(&train, 4.0, 1);
+    let gamma = gamma_for(&train, 4.0, 1);
     let probe = VecGram::new(train.x.clone(), dkkm::kernels::KernelFn::Rbf { gamma }, 1);
     let cal = ScalingSimulator::calibrate(&probe, 512, 512, 7);
     let report = sim.sweep(cal, &p.list::<usize>("nodes")?);
@@ -331,17 +343,12 @@ fn cmd_elbow(rest: &[String]) -> Result<()> {
         .opt("b", "4", "mini-batches during the scan")
         .opt("seed", "42", "rng seed")
         .parse(rest)?;
-    let mut cfg = RunConfig::new(p.str("dataset").parse().map_err(Error::Config)?);
-    cfg.b = p.get("b")?;
-    cfg.seed = p.get("seed")?;
-    let (train, _) = runner::build_dataset(&cfg.dataset, cfg.seed);
-    let gamma = runner::gamma_for(&train, cfg.sigma_factor, cfg.seed);
-    let source = VecGram::new(
-        train.x.clone(),
-        dkkm::kernels::KernelFn::Rbf { gamma },
-        cfg.threads,
-    );
-    let c = runner::elbow_scan(&source, &cfg, (p.get("c-min")?, p.get("c-max")?));
+    let session: Session = Experiment::parse(p.str("dataset"))?
+        .batches(p.get("b")?)
+        .seed(p.get("seed")?)
+        .auto_clusters()
+        .build()?;
+    let c = session.elbow(p.get("c-min")?, p.get("c-max")?);
     println!("elbow criterion selects C = {c}");
     Ok(())
 }
@@ -355,12 +362,16 @@ fn cmd_md(rest: &[String]) -> Result<()> {
         .opt("seed", "42", "rng seed")
         .parse(rest)?;
     let frames: usize = p.get("frames")?;
-    let mut cfg = RunConfig::new(DatasetSpec::Md { frames });
-    cfg.c = Some(p.get("c")?);
-    cfg.b = p.get("b")?;
-    cfg.restarts = p.get("restarts")?;
-    cfg.seed = p.get("seed")?;
-    let (medoids, mat, macro_of) = runner::md_medoid_rmsd_matrix(&cfg, frames)?;
+    // the MD workload is just another dataset spec: same builder, same
+    // Session::fit() as the vector datasets
+    let session = Experiment::on(DatasetSpec::Md { frames })
+        .clusters(p.get("c")?)
+        .batches(p.get("b")?)
+        .restarts(p.get("restarts")?)
+        .seed(p.get("seed")?)
+        .build()?;
+    let report = session.fit()?;
+    let (medoids, mat, macro_of) = session.medoid_rmsd_matrix(&report)?;
     // order medoids by macro-state (bound, entrance, unbound) as the
     // paper orders Fig.7b by manual classification
     let mut order: Vec<usize> = (0..medoids.len()).collect();
@@ -384,7 +395,7 @@ fn cmd_md(rest: &[String]) -> Result<()> {
 
 fn cmd_info(rest: &[String]) -> Result<()> {
     let _ = Cli::new("dkkm info — artifact summary").parse(rest)?;
-    let rt = runner::shared_pjrt()?;
+    let rt = shared_pjrt()?;
     println!("artifacts in {}:", rt.manifest().dir.display());
     for e in &rt.manifest().entries {
         let ins: Vec<String> = e.inputs.iter().map(|(_, s)| format!("{s:?}")).collect();

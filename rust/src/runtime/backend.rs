@@ -127,7 +127,7 @@ impl StepBackend for PjrtBackend {
 mod tests {
     use super::*;
     use crate::kernels::{GramSource, KernelFn, VecGram};
-    use crate::runtime::client::tests::shared_runtime;
+    use crate::runtime::client::tests::try_shared_runtime;
     use crate::util::rng::Rng;
 
     fn setup(seed: u64, n: usize, l: usize, c: usize) -> (Mat, Mat, Vec<usize>) {
@@ -146,7 +146,11 @@ mod tests {
     fn matches_native_small() {
         let (k_nl, k_ll, lm_labels) = setup(0, 500, 100, 7);
         let (want, want_stats) = assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 7);
-        let backend = PjrtBackend::new(shared_runtime());
+        let Some(rt) = try_shared_runtime() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let backend = PjrtBackend::new(rt);
         let (got, stats) = backend.iterate(&k_nl, &k_ll, &lm_labels, 7);
         assert_eq!(got, want);
         for j in 0..7 {
@@ -165,7 +169,11 @@ mod tests {
         // n > N_TILE forces chunking; l > 256 forces the l1024 variant
         let (k_nl, k_ll, lm_labels) = setup(1, 1500, 400, 10);
         let (want, _) = assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 10);
-        let backend = PjrtBackend::new(shared_runtime());
+        let Some(rt) = try_shared_runtime() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let backend = PjrtBackend::new(rt);
         let (got, _) = backend.iterate(&k_nl, &k_ll, &lm_labels, 10);
         let diff = got.iter().zip(&want).filter(|(a, b)| a != b).count();
         assert_eq!(diff, 0, "{diff} label mismatches");
@@ -175,7 +183,11 @@ mod tests {
     fn empty_clusters_masked() {
         let (k_nl, k_ll, mut lm_labels) = setup(2, 300, 80, 8);
         lm_labels.iter_mut().for_each(|u| *u %= 3);
-        let backend = PjrtBackend::new(shared_runtime());
+        let Some(rt) = try_shared_runtime() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let backend = PjrtBackend::new(rt);
         let (labels, stats) = backend.iterate(&k_nl, &k_ll, &lm_labels, 8);
         assert!(labels.iter().all(|&u| u < 3));
         assert_eq!(&stats.counts[3..], &[0; 5]);
@@ -185,7 +197,11 @@ mod tests {
     fn oversized_landmarks_fall_back_to_native() {
         let (k_nl, k_ll, lm_labels) = setup(3, 100, 1100, 4);
         let (want, _) = assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 4);
-        let backend = PjrtBackend::new(shared_runtime());
+        let Some(rt) = try_shared_runtime() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let backend = PjrtBackend::new(rt);
         let (got, _) = backend.iterate(&k_nl, &k_ll, &lm_labels, 4);
         assert_eq!(got, want);
     }

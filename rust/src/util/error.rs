@@ -1,21 +1,44 @@
-//! Crate-wide error type.
-use thiserror::Error;
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls keep the
+//! crate dependency-free).
+use std::fmt;
 
 /// Errors surfaced by the dkkm library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Invalid configuration or CLI arguments.
-    #[error("config error: {0}")]
     Config(String),
     /// Shape/dimension mismatch in a linear-algebra or clustering op.
-    #[error("shape error: {0}")]
     Shape(String),
     /// PJRT runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// I/O failure.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Shape(msg) => write!(f, "shape error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.

@@ -1,0 +1,153 @@
+//! Public-API contract tests for the staged builder, the engine
+//! registry, and the session: everything a downstream caller relies on
+//! reaches through `dkkm::prelude`.
+use dkkm::coordinator::shared_pjrt;
+use dkkm::prelude::*;
+
+fn toy() -> Experiment {
+    Experiment::on(DatasetSpec::Toy2d { per_cluster: 60 })
+        .clusters(4)
+        .batches(2)
+        .sigma_factor(0.1)
+}
+
+#[test]
+fn staged_builder_happy_path() {
+    let session = toy().build().expect("build");
+    let report = session.fit().expect("fit");
+    assert_eq!(report.c_used, 4);
+    assert_eq!(report.engine.requested, "native");
+    assert_eq!(report.engine.used, "native");
+    assert!(report.engine.fallback.is_none());
+    assert!(report.train_accuracy > 0.5);
+}
+
+#[test]
+fn session_exposes_materialized_state() {
+    let session = toy().build().unwrap();
+    assert_eq!(session.n(), 240);
+    assert_eq!(session.gram().n(), 240);
+    assert!(session.gamma() > 0.0);
+    let train = session.train().expect("vector workload");
+    assert_eq!(train.n(), 240);
+    assert!(session.test().is_none());
+    assert_eq!(session.truth().len(), 240);
+    assert_eq!(session.config().c, Some(4));
+}
+
+#[test]
+fn session_gram_source_is_usable_directly() {
+    // algorithm-level drivers can run on the session's Gram source
+    let session = toy().build().unwrap();
+    let idx: Vec<usize> = (0..10).collect();
+    let block = session.gram().block_mat(&idx, &idx);
+    for i in 0..10 {
+        assert!((block.at(i, i) - 1.0).abs() < 1e-6, "RBF diag");
+        for j in 0..10 {
+            assert!((block.at(i, j) - block.at(j, i)).abs() < 1e-5);
+        }
+    }
+}
+
+#[test]
+fn elbow_scan_reuses_the_session() {
+    let session = toy().auto_clusters().build().unwrap();
+    let c = session.elbow(2, 8);
+    assert!((2..=8).contains(&c), "elbow picked {c}");
+    // and the fit at that C flows through the same session
+    let report = session.fit_clusters(c).unwrap();
+    assert_eq!(report.c_used, c);
+}
+
+#[test]
+fn engine_names_round_trip_through_reports() {
+    let sharded = toy().backend("sharded:3").build().unwrap();
+    assert_eq!(sharded.engine().requested, "sharded:3");
+    assert_eq!(sharded.engine().used, "sharded:3");
+    let report = sharded.fit().unwrap();
+    assert_eq!(report.engine.used, "sharded:3");
+}
+
+#[test]
+fn build_failures_are_structured_config_errors() {
+    let err = toy().backend("abacus").build().unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "wrong error kind: {err:?}");
+    let err = toy().backend("sharded:2").offload(true).build().unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "wrong error kind: {err:?}");
+    let err = toy().clusters(200).build().unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "wrong error kind: {err:?}");
+}
+
+#[test]
+fn pjrt_fallback_is_recorded_not_silent() {
+    // d=33 has no lowered rbf artifact, so the pjrt engine must degrade
+    // to the native Gram path AND say so in the report. Skip when the
+    // artifact manifest itself is absent (pjrt engine cannot construct).
+    if shared_pjrt().is_err() {
+        eprintln!("skipping: no artifact manifest (run `make artifacts`)");
+        return;
+    }
+    let session = Experiment::on(DatasetSpec::Rcv1 { n: 200, classes: 4, dim: 33 })
+        .clusters(4)
+        .batches(2)
+        .backend("pjrt")
+        .build()
+        .unwrap();
+    assert_eq!(session.engine().requested, "pjrt");
+    assert_eq!(session.engine().used, "native");
+    let reason = session.engine().fallback.as_deref().expect("fallback reason");
+    assert!(reason.contains("d=33"), "unhelpful reason: {reason}");
+    // the run itself still succeeds, and the report carries provenance
+    let report = session.fit().unwrap();
+    assert_eq!(report.engine.used, "native");
+    let j = report.to_json();
+    let parsed = dkkm::util::json::Json::parse(&j.to_string()).unwrap();
+    let engine = parsed.get("engine").expect("engine in report json");
+    assert_eq!(engine.get("used").and_then(|v| v.as_str()), Some("native"));
+    assert!(engine
+        .get("fallback")
+        .and_then(|v| v.as_str())
+        .unwrap()
+        .contains("d=33"));
+}
+
+#[test]
+fn md_workload_is_not_a_fork() {
+    // same builder, same fit(), no dedicated runner: the MD workload is
+    // engine + RmsdGram composition
+    let session = Experiment::on(DatasetSpec::Md { frames: 300 })
+        .clusters(5)
+        .batches(2)
+        .build()
+        .unwrap();
+    let report = session.fit().unwrap();
+    assert_eq!(report.c_used, 5);
+    assert!(report.test_accuracy.is_none(), "MD has no held-out split");
+    let (medoids, mat, macro_of) = session.medoid_rmsd_matrix(&report).unwrap();
+    assert_eq!(medoids.len(), 5);
+    assert_eq!(mat.rows(), 5);
+    assert!(macro_of.iter().all(|&m| m < 3));
+}
+
+#[test]
+fn sharded_md_composes() {
+    // orthogonal axes: the distributed inner loop composes with the
+    // RMSD Gram source, no special-casing anywhere
+    let native = Experiment::on(DatasetSpec::Md { frames: 200 })
+        .clusters(4)
+        .batches(2)
+        .build()
+        .unwrap()
+        .fit()
+        .unwrap();
+    let sharded = Experiment::on(DatasetSpec::Md { frames: 200 })
+        .clusters(4)
+        .batches(2)
+        .backend("sharded:3")
+        .build()
+        .unwrap()
+        .fit()
+        .unwrap();
+    assert_eq!(native.result.labels, sharded.result.labels);
+    assert_eq!(native.result.medoids, sharded.result.medoids);
+}
