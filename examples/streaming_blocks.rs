@@ -36,17 +36,11 @@ fn main() {
 
     println!("== streaming (class-sorted) synthetic MNIST, N={n}, B=8 ==\n");
     for sampling in [Sampling::Block, Sampling::Stride] {
-        let mb = MiniBatchConfig {
-            c: 10,
-            b: 8,
-            s: 1.0,
-            sampling,
-            max_inner: 100,
-            seed: 11,
-            track_cost: true,
-            offload: true, // prefetch the next block while clustering
-            merge_rule: dkkm::cluster::minibatch::MergeRule::Convex,
-        };
+        let mut mb = MiniBatchConfig::new(10, 8);
+        mb.sampling = sampling;
+        mb.seed = 11;
+        mb.track_cost = true;
+        mb.offload = true; // prefetch the next block while clustering
         let result = MiniBatchKernelKMeans::new(mb, &NativeBackend).run(&source);
         let acc = accuracy(&result.labels, &train.y);
         let m = nmi(&result.labels, &train.y);

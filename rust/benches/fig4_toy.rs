@@ -31,17 +31,10 @@ fn main() {
     let source = VecGram::new(data.x.clone(), KernelFn::Rbf { gamma }, 1);
 
     for sampling in [Sampling::Stride, Sampling::Block] {
-        let mb = MiniBatchConfig {
-            c: 4,
-            b: 4,
-            s: 1.0,
-            sampling,
-            max_inner: 100,
-            seed: 21,
-            track_cost: true,
-            offload: false,
-            merge_rule: dkkm::cluster::minibatch::MergeRule::Convex,
-        };
+        let mut mb = MiniBatchConfig::new(4, 4);
+        mb.sampling = sampling;
+        mb.seed = 21;
+        mb.track_cost = true;
         let res = MiniBatchKernelKMeans::new(mb, &NativeBackend).run(&source);
         println!("--- {sampling:?} sampling ---");
         println!("final accuracy: {:.2}%", accuracy(&res.labels, &data.y) * 100.0);

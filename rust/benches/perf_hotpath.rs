@@ -78,14 +78,14 @@ fn main() {
     if let Ok(rt) = shared_pjrt() {
         let backend = PjrtBackend::new(rt);
         let t = bench(2, 10, || {
-            let _ = backend.iterate(&k_nl, &k_ll, &labels, 10);
+            let _ = backend.iterate_mat(&k_nl, &k_ll, &labels, 10);
         });
         table.row(&["pjrt (fused artifact)".into(), format!("{:.2}", t * 1e3)]);
     }
     for p in [2usize, 4, 8] {
         let backend = ShardedBackend::new(p);
         let t = bench(2, 10, || {
-            let _ = backend.iterate(&k_nl, &k_ll, &labels, 10);
+            let _ = backend.iterate_mat(&k_nl, &k_ll, &labels, 10);
         });
         table.row(&[format!("sharded p={p}"), format!("{:.2}", t * 1e3)]);
     }
@@ -122,17 +122,9 @@ fn main() {
     let gamma = gamma_for(&data, 4.0, 9);
     let source = VecGram::new(data.x.clone(), KernelFn::Rbf { gamma }, 1);
     for offload in [false, true] {
-        let mb = MiniBatchConfig {
-            c: 10,
-            b: 8,
-            s: 1.0,
-            sampling: dkkm::data::Sampling::Stride,
-            max_inner: 100,
-            seed: 13,
-            track_cost: false,
-            offload,
-            merge_rule: dkkm::cluster::minibatch::MergeRule::Convex,
-        };
+        let mut mb = MiniBatchConfig::new(10, 8);
+        mb.seed = 13;
+        mb.offload = offload;
         let t = Timer::start();
         let res = MiniBatchKernelKMeans::new(mb, &NativeBackend).run(&source);
         let total = t.elapsed_s();

@@ -1,0 +1,120 @@
+//! bench-json harness: machine-readable timings for the Gram pipeline.
+//!
+//! Runs the same clustering workload through the panel/offload/tiled
+//! pipeline configurations and emits `BENCH_pipeline.json` (override the
+//! path with `DKKM_BENCH_OUT`), so the perf trajectory — panel vs tiled
+//! throughput, overlap efficiency, peak resident bytes — is tracked as a
+//! machine-readable artifact from PR to PR instead of scraped stdout.
+//!
+//!     cargo bench --bench pipeline_json
+//!
+//! Knobs: `DKKM_SCALE` multiplies N, `DKKM_REPEATS` sets seeds per
+//! configuration.
+use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
+use dkkm::coordinator::{build_dataset, gamma_for, pipeline_json, DatasetSpec};
+use dkkm::kernels::{KernelFn, PipelineStats, VecGram};
+use dkkm::util::json::Json;
+use dkkm::util::stats::{bench_repeats, bench_scale, mean_std, Table, Timer};
+
+struct ModeResult {
+    name: &'static str,
+    seconds: Vec<f64>,
+    pipeline: PipelineStats,
+}
+
+fn main() {
+    let n = ((4_000.0 * bench_scale()) as usize).max(400);
+    let b = 8usize;
+    let c = 10usize;
+    let repeats = bench_repeats();
+    println!("== Gram pipeline bench: synthetic MNIST N={n}, B={b}, C={c}, {repeats} seeds ==\n");
+
+    let (data, _) = build_dataset(&DatasetSpec::Mnist { train: n, test: 0 }, 17);
+    let gamma = gamma_for(&data, 4.0, 17);
+    let source = VecGram::new(data.x.clone(), KernelFn::Rbf { gamma }, 1);
+    let panel_bytes = (n / b) * (n / b) * 4;
+
+    // panel vs offload vs two budget tiers (quarter / tenth of a panel)
+    let modes: Vec<(&'static str, Option<usize>, bool)> = vec![
+        ("panel-inline", None, false),
+        ("panel-offload", None, true),
+        ("tiled-quarter", Some((panel_bytes / 4).max(64 * 1024)), false),
+        ("tiled-tenth", Some((panel_bytes / 10).max(16 * 1024)), false),
+    ];
+
+    let mut results: Vec<ModeResult> = Vec::new();
+    for (name, budget, offload) in &modes {
+        let mut seconds = Vec::with_capacity(repeats);
+        let mut pipeline = PipelineStats::default();
+        for rep in 0..repeats {
+            let mut cfg = MiniBatchConfig::new(c, b);
+            cfg.seed = 1000 + rep as u64;
+            cfg.offload = *offload;
+            cfg.memory_budget = *budget;
+            let t = Timer::start();
+            let res = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&source);
+            seconds.push(t.elapsed_s());
+            pipeline = res.pipeline.clone();
+        }
+        results.push(ModeResult { name, seconds, pipeline });
+    }
+
+    // equivalence spot-check across modes at a fixed seed
+    let check = |budget: Option<usize>, offload: bool| {
+        let mut cfg = MiniBatchConfig::new(c, b);
+        cfg.seed = 1000;
+        cfg.offload = offload;
+        cfg.memory_budget = budget;
+        MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&source).labels
+    };
+    let reference = check(None, false);
+    for (name, budget, offload) in &modes[1..] {
+        assert_eq!(
+            reference,
+            check(*budget, *offload),
+            "{name} diverged from the whole-panel reference"
+        );
+    }
+
+    let mut table = Table::new(&[
+        "mode",
+        "seconds",
+        "tiles",
+        "spilled",
+        "peak MiB",
+        "overlap %",
+    ]);
+    let mut rows = Vec::new();
+    for r in &results {
+        let (mean, std) = mean_std(&r.seconds);
+        let p = &r.pipeline;
+        table.row(&[
+            r.name.into(),
+            format!("{mean:.3} ± {std:.3}"),
+            format!("{}", p.tiles),
+            format!("{}", p.spilled_tiles),
+            format!("{:.2}", p.peak_resident_bytes as f64 / (1 << 20) as f64),
+            format!("{:.0}", p.overlap_efficiency() * 100.0),
+        ]);
+        rows.push(Json::obj(vec![
+            ("mode", Json::str(r.name)),
+            ("seconds_mean", Json::num(mean)),
+            ("seconds_std", Json::num(std)),
+            ("pipeline", pipeline_json(p)),
+        ]));
+    }
+    println!("{}", table.render());
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("pipeline")),
+        ("n", Json::num(n as f64)),
+        ("b", Json::num(b as f64)),
+        ("c", Json::num(c as f64)),
+        ("repeats", Json::num(repeats as f64)),
+        ("panel_bytes", Json::num(panel_bytes as f64)),
+        ("modes", Json::arr(rows)),
+    ]);
+    let out = std::env::var("DKKM_BENCH_OUT").unwrap_or_else(|_| "BENCH_pipeline.json".into());
+    std::fs::write(&out, report.to_string()).expect("write bench json");
+    println!("\nwrote {out}");
+}

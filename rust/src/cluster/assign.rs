@@ -6,6 +6,12 @@
 //! Both the serial mini-batch driver and the distributed shards call
 //! these; the PJRT runtime reproduces the same math inside one fused
 //! executable (`inner_n*_l*_c*` artifacts).
+//!
+//! The kernel block arrives as a [`GramView`]: either a whole `Mat` or a
+//! stream of budget-sized tiles (`kernels::tiles`). Every per-row value
+//! is computed from that row's kernel entries alone, so the tile-wise
+//! sweep is bit-identical to the whole-panel one.
+use crate::kernels::GramView;
 use crate::linalg::Mat;
 
 /// Per-cluster statistics derived from landmark labels.
@@ -113,18 +119,49 @@ pub fn argmin_labels(f: &Mat, stats: &ClusterStats) -> Vec<usize> {
     labels
 }
 
+/// Cluster average similarity f over a tiled view: assembles the full
+/// `rows x C` matrix tile by tile (C is small, so f always fits).
+pub fn similarity_f_view(view: &GramView<'_>, lm_labels: &[usize], stats: &ClusterStats) -> Mat {
+    let c = stats.counts.len();
+    let mut f = Mat::zeros(view.rows(), c);
+    for t in 0..view.n_tiles() {
+        let (lo, _hi) = view.tile_range(t);
+        let tile = view.tile(t);
+        let ft = similarity_f(tile.mat(), lm_labels, stats);
+        for r in 0..ft.rows() {
+            f.row_mut(lo + r).copy_from_slice(ft.row(r));
+        }
+    }
+    f
+}
+
 /// One fused inner-loop iteration on the native path: compute stats from
-/// `k_ll`, then f and labels for `k_block` rows. Mirrors the PJRT
+/// `k_ll`, then f and labels tile-wise over the view. Mirrors the PJRT
 /// `inner_*` artifact.
+pub fn inner_iteration_view(
+    view: &GramView<'_>,
+    k_ll: &Mat,
+    lm_labels: &[usize],
+    c: usize,
+) -> (Vec<usize>, ClusterStats) {
+    let stats = ClusterStats::compute(k_ll, lm_labels, c);
+    let mut labels = Vec::with_capacity(view.rows());
+    for t in 0..view.n_tiles() {
+        let tile = view.tile(t);
+        let f = similarity_f(tile.mat(), lm_labels, &stats);
+        labels.extend(argmin_labels(&f, &stats));
+    }
+    (labels, stats)
+}
+
+/// Whole-matrix convenience wrapper over [`inner_iteration_view`].
 pub fn inner_iteration(
     k_block: &Mat,
     k_ll: &Mat,
     lm_labels: &[usize],
     c: usize,
 ) -> (Vec<usize>, ClusterStats) {
-    let stats = ClusterStats::compute(k_ll, lm_labels, c);
-    let f = similarity_f(k_block, lm_labels, &stats);
-    (argmin_labels(&f, &stats), stats)
+    inner_iteration_view(&GramView::Whole(k_block), k_ll, lm_labels, c)
 }
 
 /// Partial kernel k-means cost (Eq.1/9) of a labelled block:

@@ -14,8 +14,19 @@
 //!      alpha = |w_j^i| / (|w_j^i| + |w_j|) (Eq.11-13), realized as a
 //!      second medoid approximation (Eq.12); empty clusters keep the old
 //!      prototype (alpha = 0).
+//!
+//! Kernel blocks stream through the memory-budgeted tile pipeline
+//! (`kernels::tiles`): with no budget the panels stay whole (and the
+//! Fig.3 `offload` flag is the pipeline's one-worker, one-tile-per-panel
+//! configuration); with [`MiniBatchConfig::memory_budget`] set, `K_nl`
+//! is produced as row tiles by a producer pool, pinned in memory up to
+//! the budget and spilled to disk beyond, while the inner GD loop
+//! consumes a [`GramView`] — bit-identical to the whole-panel path.
 use crate::data::{minibatch_indices, Sampling};
-use crate::kernels::GramSource;
+use crate::kernels::tiles;
+use crate::kernels::{
+    run_pipeline, GramPanel, GramSource, GramView, PanelSpec, PipelineConfig, PipelineStats,
+};
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
@@ -25,18 +36,30 @@ use super::init::kernel_kmeans_pp;
 
 /// One inner-loop iteration strategy. The serial native implementation is
 /// [`NativeBackend`]; `runtime::PjrtBackend` runs the fused AOT artifact;
-/// `distributed::ShardedBackend` splits rows across worker nodes.
+/// `distributed::ShardedBackend` splits work across worker nodes (rows of
+/// a whole panel, tiles of a tiled one).
 pub trait StepBackend: Sync {
-    /// Given the mini-batch kernel blocks and current landmark labels,
+    /// Given the mini-batch kernel view and current landmark labels,
     /// produce new labels for every mini-batch row plus the cluster stats
     /// used for the update.
     fn iterate(
+        &self,
+        k_nl: &GramView<'_>,
+        k_ll: &Mat,
+        lm_labels: &[usize],
+        c: usize,
+    ) -> (Vec<usize>, ClusterStats);
+
+    /// Whole-matrix convenience (tests, benches, direct drivers).
+    fn iterate_mat(
         &self,
         k_nl: &Mat,
         k_ll: &Mat,
         lm_labels: &[usize],
         c: usize,
-    ) -> (Vec<usize>, ClusterStats);
+    ) -> (Vec<usize>, ClusterStats) {
+        self.iterate(&GramView::Whole(k_nl), k_ll, lm_labels, c)
+    }
 
     /// Backend name for reports.
     fn name(&self) -> &'static str {
@@ -50,12 +73,12 @@ pub struct NativeBackend;
 impl StepBackend for NativeBackend {
     fn iterate(
         &self,
-        k_nl: &Mat,
+        k_nl: &GramView<'_>,
         k_ll: &Mat,
         lm_labels: &[usize],
         c: usize,
     ) -> (Vec<usize>, ClusterStats) {
-        assign::inner_iteration(k_nl, k_ll, lm_labels, c)
+        assign::inner_iteration_view(k_nl, k_ll, lm_labels, c)
     }
 }
 
@@ -84,15 +107,34 @@ pub struct MiniBatchConfig {
     pub max_inner: usize,
     pub seed: u64,
     /// Record per-iteration partial costs and a sampled global cost
-    /// (Fig.4c/d observables). Adds kernel evaluations; off for timing runs.
+    /// (Fig.4c/d observables). Adds kernel evaluations — and, under a
+    /// `memory_budget`, a second tile sweep per GD iteration (spilled
+    /// tiles are re-read from disk for the cost's `f`). Off for timing
+    /// runs.
     pub track_cost: bool,
     /// Fig.3 offload pipeline: a producer thread (the "device") computes
     /// the kernel blocks of mini-batch i+1 while the host processes
-    /// mini-batch i.
+    /// mini-batch i. Equivalent to the tile pipeline with one worker and
+    /// one tile per panel.
     pub offload: bool,
     /// Medoid merge rule (paper Eq.11-13 by default; `Replace` is the
     /// alpha = 1 ablation).
     pub merge_rule: MergeRule,
+    /// Resident-byte budget for `K_nl` panels. `None` materializes each
+    /// panel whole (historical behavior); `Some(bytes)` streams the
+    /// panel as row tiles whose pinned cache + pipeline buffers stay
+    /// under the budget, spilling the excess to disk. Must be at least
+    /// `kernels::tiles::min_pipeline_budget(L, workers)` — the
+    /// `Experiment` builder validates this at `build()` and at
+    /// `fit_clusters()`.
+    pub memory_budget: Option<usize>,
+    /// Producer pool size for the tile pipeline. `None` = automatic
+    /// (one async producer when `offload` or a memory budget is set);
+    /// `Some(0)` forces synchronous production in the consumer thread
+    /// (what the coordinator picks for engines whose node threads
+    /// already saturate the host, e.g. `sharded:<p>`); `Some(k)` runs a
+    /// pool of `k` workers.
+    pub pipeline_workers: Option<usize>,
 }
 
 impl MiniBatchConfig {
@@ -107,6 +149,8 @@ impl MiniBatchConfig {
             track_cost: false,
             offload: false,
             merge_rule: MergeRule::Convex,
+            memory_budget: None,
+            pipeline_workers: None,
         }
     }
 }
@@ -159,8 +203,12 @@ pub struct MiniBatchResult {
     pub history: Vec<OuterRecord>,
     /// Total wall time (seconds).
     pub seconds: f64,
-    /// Offload pipeline accounting (when `config.offload`).
+    /// Producer/consumer overlap (when the pipeline ran asynchronously,
+    /// i.e. offload or a memory budget).
     pub overlap: Option<OverlapStats>,
+    /// Tile pipeline accounting: tiles produced/pinned/spilled, peak
+    /// resident `K_nl` bytes, production/wait seconds.
+    pub pipeline: PipelineStats,
 }
 
 /// The algorithm object: construct once, run on any [`GramSource`].
@@ -187,8 +235,9 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
         let total_timer = Timer::start();
 
         // --- plan phase: batch + landmark positions for every outer
-        //     iteration, fixed up front so the offload producer can run
-        //     ahead of the host (and so offload on/off is bit-identical)
+        //     iteration, fixed up front so the pipeline producers can run
+        //     ahead of the host (and so offload/budget on/off is
+        //     bit-identical)
         let mut plan: Vec<(Vec<usize>, Vec<usize>)> = Vec::with_capacity(cfg.b);
         for i in 0..cfg.b {
             let batch = minibatch_indices(n, cfg.b, i, cfg.sampling);
@@ -212,44 +261,45 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
             cost_sample,
         };
 
-        let overlap = if cfg.offload {
-            // Fig.3: the producer thread stands in for the accelerator,
-            // computing mini-batch i+1's kernel blocks while the host
-            // consumes mini-batch i. Queue depth 1 = one batch ahead.
-            let mut overlap = OverlapStats::default();
-            std::thread::scope(|scope| {
-                let (tx, rx) = std::sync::mpsc::sync_channel::<(Mat, Mat, f64)>(1);
-                let plan_ref = &plan;
-                let producer = scope.spawn(move || {
-                    for (batch, lm_pos) in plan_ref.iter() {
-                        let t = Timer::start();
-                        let (k_nl, k_ll) = fetch_blocks(source, batch, lm_pos);
-                        let busy = t.elapsed_s();
-                        if tx.send((k_nl, k_ll, busy)).is_err() {
-                            break;
-                        }
-                    }
-                });
-                for i in 0..cfg.b {
-                    let t = Timer::start();
-                    let (k_nl, k_ll, busy) = rx.recv().expect("offload producer died");
-                    overlap.consumer_wait_s += t.elapsed_s();
-                    overlap.producer_busy_s += busy;
-                    self.process_batch(
-                        source, i, &plan[i].0, &plan[i].1, k_nl, k_ll, &mut state,
-                    );
+        // --- pipeline shape: offload and memory budget are both
+        //     configurations of the same tile pipeline (Fig.3 offload =
+        //     whole tiles, one producer, lookahead 1). An explicit
+        //     Some(0) keeps production inline even under a budget.
+        let workers = match cfg.pipeline_workers {
+            Some(w) => {
+                if cfg.offload {
+                    w.max(1)
+                } else {
+                    w
                 }
-                producer.join().expect("offload producer panicked");
-            });
-            Some(overlap)
-        } else {
-            for i in 0..cfg.b {
-                let (batch, lm_pos) = &plan[i];
-                let (k_nl, k_ll) = fetch_blocks(source, batch, lm_pos);
-                self.process_batch(source, i, batch, lm_pos, k_nl, k_ll, &mut state);
             }
-            None
+            None => usize::from(cfg.offload || cfg.memory_budget.is_some()),
         };
+        if let Some(mb) = cfg.memory_budget {
+            let max_l = plan.iter().map(|(_, lm)| lm.len()).max().unwrap_or(1);
+            let min = tiles::min_pipeline_budget(max_l, workers);
+            assert!(
+                mb >= min,
+                "memory_budget {mb} B below the pipeline minimum {min} B for L={max_l}; \
+                 raise the budget, B, or lower s"
+            );
+        }
+        let specs: Vec<PanelSpec<'_>> = plan
+            .iter()
+            .map(|(batch, lm_pos)| PanelSpec::new(batch, lm_pos))
+            .collect();
+        let pipe_cfg = PipelineConfig { budget: cfg.memory_budget, workers };
+        let ((), pstats) = run_pipeline(source, &specs, &pipe_cfg, |feed| {
+            for i in 0..cfg.b {
+                let (panel, k_ll) = feed.next_panel();
+                let (batch, lm_pos) = &plan[i];
+                self.process_batch(source, i, batch, lm_pos, panel, k_ll, &mut state);
+            }
+        });
+        let overlap = (workers > 0).then(|| OverlapStats {
+            producer_busy_s: pstats.producer_busy_s,
+            consumer_wait_s: pstats.consumer_wait_s,
+        });
 
         MiniBatchResult {
             medoids: state.medoids,
@@ -258,6 +308,7 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
             history: state.history,
             seconds: total_timer.elapsed_s(),
             overlap,
+            pipeline: pstats,
         }
     }
 
@@ -270,7 +321,7 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
         i: usize,
         batch: &[usize],
         lm_pos: &[usize],
-        k_nl: Mat,
+        panel: GramPanel,
         k_ll: Mat,
         state: &mut RunState,
     ) {
@@ -285,28 +336,28 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
         }
         let mut batch_labels = assign_to_medoids(source, batch, &state.medoids);
 
-        // --- inner GD loop to a label fixed point
+        // --- diagonal entries, computed once: the partial-cost
+        //     observable and the medoid rule (Eq.7/10) share the buffer
         let mut diag = vec![0.0f32; nb];
-        if cfg.track_cost {
-            source.diag(batch, &mut diag);
-        }
+        source.diag(batch, &mut diag);
+
+        // --- inner GD loop to a label fixed point; the landmark-label
+        //     buffer is refreshed in place instead of re-collected
         let mut partial_cost = Vec::new();
         let mut inner_iterations = 0;
         let mut converged = false;
-        let mut stats = ClusterStats::compute(
-            &k_ll,
-            &lm_pos.iter().map(|&p| batch_labels[p]).collect::<Vec<_>>(),
-            cfg.c,
-        );
+        let mut lm_labels = vec![0usize; l];
+        refresh_lm_labels(&mut lm_labels, lm_pos, &batch_labels);
+        let mut stats = ClusterStats::compute(&k_ll, &lm_labels, cfg.c);
+        let view = panel.view();
         for _t in 0..cfg.max_inner {
             inner_iterations += 1;
-            let lm_labels: Vec<usize> =
-                lm_pos.iter().map(|&p| batch_labels[p]).collect();
+            refresh_lm_labels(&mut lm_labels, lm_pos, &batch_labels);
             let (new_labels, new_stats) =
-                self.backend.iterate(&k_nl, &k_ll, &lm_labels, cfg.c);
+                self.backend.iterate(&view, &k_ll, &lm_labels, cfg.c);
             stats = new_stats;
             if cfg.track_cost {
-                let f = assign::similarity_f(&k_nl, &lm_labels, &stats);
+                let f = assign::similarity_f_view(&view, &lm_labels, &stats);
                 partial_cost.push(assign::block_cost(&diag, &f, &new_labels, &stats));
             }
             let fixed = new_labels == batch_labels;
@@ -319,10 +370,11 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
 
         // --- per-cluster batch medoids (Eq.7/10): argmin over batch of
         //     K_ll - 2 f_lj, skipping empty clusters
-        let lm_labels: Vec<usize> = lm_pos.iter().map(|&p| batch_labels[p]).collect();
-        let f = assign::similarity_f(&k_nl, &lm_labels, &stats);
-        let mut full_diag = vec![0.0f32; nb];
-        source.diag(batch, &mut full_diag);
+        refresh_lm_labels(&mut lm_labels, lm_pos, &batch_labels);
+        let f = assign::similarity_f_view(&view, &lm_labels, &stats);
+        // the K_nl panel is no longer needed: release its resident bytes
+        // (and any spill file) before the merge's own kernel evaluations
+        drop(panel);
         let batch_medoids: Vec<Option<usize>> = (0..cfg.c)
             .map(|j| {
                 if stats.counts[j] == 0 {
@@ -331,7 +383,7 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
                 let mut best = None;
                 let mut best_v = f32::INFINITY;
                 for r in 0..nb {
-                    let v = full_diag[r] - 2.0 * f.at(r, j);
+                    let v = diag[r] - 2.0 * f.at(r, j);
                     if v < best_v {
                         best_v = v;
                         best = Some(batch[r]);
@@ -367,7 +419,7 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
                 let alpha =
                     batch_counts[j] as f64 / (batch_counts[j] + state.counts[j]) as f64;
                 let merged =
-                    merge_medoid(source, batch, &full_diag, m_old, m_new, alpha);
+                    merge_medoid(source, batch, &diag, m_old, m_new, alpha);
                 // displacement of the global prototype (kernel space)
                 displacement += kernel_distance(source, state.medoids[j], merged);
                 displaced += 1;
@@ -404,6 +456,13 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
     }
 }
 
+/// Refresh the landmark-label buffer from the current batch labels.
+fn refresh_lm_labels(buf: &mut [usize], lm_pos: &[usize], batch_labels: &[usize]) {
+    for (dst, &p) in buf.iter_mut().zip(lm_pos) {
+        *dst = batch_labels[p];
+    }
+}
+
 /// Mutable run state threaded through the outer loop.
 struct RunState {
     medoids: Vec<usize>,
@@ -412,14 +471,6 @@ struct RunState {
     history: Vec<OuterRecord>,
     rng: Rng,
     cost_sample: Vec<usize>,
-}
-
-/// Fetch the two kernel blocks of one mini-batch (the producer workload).
-fn fetch_blocks(source: &dyn GramSource, batch: &[usize], lm_pos: &[usize]) -> (Mat, Mat) {
-    let lm_idx: Vec<usize> = lm_pos.iter().map(|&p| batch[p]).collect();
-    let k_nl = source.block_mat(batch, &lm_idx);
-    let k_ll = k_nl.gather(lm_pos);
-    (k_nl, k_ll)
 }
 
 /// Squared kernel-space distance between two samples, square-rooted.
@@ -722,6 +773,54 @@ mod offload_tests {
         let ov = res.overlap.unwrap();
         assert!(ov.producer_busy_s > 0.0);
         assert!((0.0..=1.0).contains(&ov.overlap_efficiency()));
+        // one whole-panel tile per mini-batch
+        assert_eq!(res.pipeline.tiles, 5);
+        assert_eq!(res.pipeline.workers, 1);
+    }
+}
+
+#[cfg(test)]
+mod budget_tests {
+    use super::*;
+    use crate::data::toy2d;
+    use crate::kernels::{KernelFn, VecGram};
+
+    #[test]
+    fn memory_budget_is_bit_identical_and_respected() {
+        let mut rng = Rng::new(2);
+        let d = toy2d(&mut rng, 80); // n = 320, B = 2 -> 160x160 panels
+        let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
+        let cfg = MiniBatchConfig::new(4, 2);
+        let whole = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+        // a budget well below the 102 KiB panel forces tiling + spills
+        let budget = 24 * 1024;
+        let mut tiled_cfg = cfg;
+        tiled_cfg.memory_budget = Some(budget);
+        let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g);
+        assert_eq!(whole.labels, tiled.labels);
+        assert_eq!(whole.medoids, tiled.medoids);
+        assert_eq!(whole.counts, tiled.counts);
+        assert!(tiled.pipeline.tiles > 2, "{:?}", tiled.pipeline);
+        assert!(
+            tiled.pipeline.peak_resident_bytes <= budget,
+            "peak {} over budget {budget}",
+            tiled.pipeline.peak_resident_bytes
+        );
+        assert!(tiled.overlap.is_some());
+        // the whole-panel run records its own honest accounting too
+        assert_eq!(whole.pipeline.tiles, 2);
+        assert_eq!(whole.pipeline.budget_bytes, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "below the pipeline minimum")]
+    fn rejects_infeasible_budget() {
+        let mut rng = Rng::new(3);
+        let d = toy2d(&mut rng, 50);
+        let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 1);
+        let mut cfg = MiniBatchConfig::new(4, 1);
+        cfg.memory_budget = Some(16); // cannot hold even 1-row tiles
+        let _ = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
     }
 }
 

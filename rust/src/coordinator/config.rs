@@ -151,6 +151,11 @@ pub struct RunConfig {
     pub track_cost: bool,
     /// Fig.3 offload pipeline.
     pub offload: bool,
+    /// Resident-byte budget for the `K_nl` tile pipeline. `None` keeps
+    /// whole panels; `Some(bytes)` streams each panel as row tiles whose
+    /// pinned cache + ring buffers stay under the budget (excess spills
+    /// to disk). Validated against the B x C plan at `build()`.
+    pub memory_budget: Option<usize>,
 }
 
 impl RunConfig {
@@ -169,6 +174,7 @@ impl RunConfig {
             gamma: None,
             track_cost: false,
             offload: false,
+            memory_budget: None,
         }
     }
 
@@ -192,6 +198,11 @@ impl RunConfig {
                 return Err(Error::Config(format!("gamma={g} must be > 0")));
             }
         }
+        if self.memory_budget == Some(0) {
+            return Err(Error::Config(
+                "memory_budget must be > 0 bytes (omit it for whole panels)".into(),
+            ));
+        }
         Ok(())
     }
 
@@ -205,6 +216,7 @@ impl RunConfig {
         const KNOWN: &[&str] = &[
             "dataset", "c", "b", "s", "sampling", "backend", "threads", "seed",
             "restarts", "sigma_factor", "gamma", "track_cost", "offload",
+            "memory_budget",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -283,6 +295,14 @@ impl RunConfig {
             cfg.offload =
                 v.as_bool().ok_or_else(|| Error::Config("'offload' not a bool".into()))?;
         }
+        if let Some(v) = j.get("memory_budget") {
+            cfg.memory_budget = match v {
+                Json::Null => None,
+                other => Some(other.as_usize().ok_or_else(|| {
+                    Error::Config("'memory_budget' must be bytes (integer) or null".into())
+                })?),
+            };
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -308,6 +328,12 @@ impl RunConfig {
                 self.gamma.map(|g| Json::num(g as f64)).unwrap_or(Json::Null),
             ),
             ("offload", Json::Bool(self.offload)),
+            (
+                "memory_budget",
+                self.memory_budget
+                    .map(|b| Json::num(b as f64))
+                    .unwrap_or(Json::Null),
+            ),
         ])
     }
 }
@@ -477,6 +503,24 @@ mod tests {
         assert_eq!(cfg.gamma, Some(0.25));
         let j = Json::parse(r#"{"dataset": "toy2d:100", "gamma": "auto"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_memory_budget() {
+        let j = Json::parse(r#"{"dataset": "toy2d:100", "memory_budget": 65536}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.memory_budget, Some(65536));
+        let j = Json::parse(r#"{"dataset": "toy2d:100", "memory_budget": null}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().memory_budget, None);
+        let j = Json::parse(r#"{"dataset": "toy2d:100", "memory_budget": 0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"dataset": "toy2d:100", "memory_budget": "lots"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        // the echo carries the knob and round-trips
+        let mut cfg = RunConfig::new(DatasetSpec::Toy2d { per_cluster: 10 });
+        cfg.memory_budget = Some(1 << 20);
+        let echoed = Json::parse(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(RunConfig::from_json(&echoed).unwrap().memory_budget, Some(1 << 20));
     }
 
     #[test]

@@ -161,6 +161,23 @@ impl Experiment {
         self
     }
 
+    /// Resident-byte budget for the `K_nl` tile pipeline: each
+    /// mini-batch panel is streamed as row tiles whose pinned cache and
+    /// ring buffers stay under `bytes`, spilling the excess to disk.
+    /// Validated at `build()` against the B x C plan; runs are
+    /// bit-identical to the whole-panel path.
+    pub fn memory_budget(mut self, bytes: usize) -> Experiment {
+        self.cfg.memory_budget = Some(bytes);
+        self
+    }
+
+    /// Clear a memory budget (e.g. one loaded from a config file):
+    /// panels are materialized whole again.
+    pub fn no_memory_budget(mut self) -> Experiment {
+        self.cfg.memory_budget = None;
+        self
+    }
+
     /// Validate the combination, resolve the engine, and materialize
     /// the dataset + Gram source into a reusable [`Session`].
     pub fn build(mut self) -> Result<Session> {
@@ -180,6 +197,31 @@ impl Experiment {
             }
         }
         let engine = create_engine(&self.cfg.backend)?;
+        // the budget must admit at least 1-row tiles for the largest
+        // panel the plan will produce (one tile per pipeline slot). The
+        // slot count depends on the engine: offload-capable engines run
+        // one async producer, the rest produce inline.
+        if let Some(mb) = self.cfg.memory_budget {
+            let n = self.cfg.dataset.train_len();
+            let nb_max = n.div_ceil(self.cfg.b);
+            let mut l_max = ((self.cfg.s * nb_max as f64).round() as usize).clamp(1, nb_max);
+            match self.cfg.c {
+                // the plan takes at least C landmarks per batch
+                Some(c) => l_max = l_max.max(c.min(nb_max)),
+                // elbow-selected C can reach 40 (both scan ranges cap there)
+                None => l_max = l_max.max(40.min(nb_max)),
+            }
+            let workers = usize::from(engine.supports_offload());
+            let min = crate::kernels::tiles::min_pipeline_budget(l_max, workers);
+            if mb < min {
+                return Err(Error::Config(format!(
+                    "memory_budget {mb} B cannot hold the pipeline for B={}, s={} on \
+                     '{}': the largest panel has L={l_max} landmark columns and needs \
+                     at least {min} B (one 1-row tile per pipeline slot)",
+                    self.cfg.b, self.cfg.s, self.cfg.dataset
+                )));
+            }
+        }
         if self.cfg.offload && !engine.supports_offload() {
             return Err(Error::Config(format!(
                 "engine '{}' does not support the offload pipeline (its node \
@@ -275,6 +317,19 @@ mod tests {
         assert!(toy().landmark_fraction(1.5).build().is_err());
         assert!(toy().restarts(0).build().is_err());
         assert!(toy().kernel(KernelSpec::Rbf { gamma: -1.0 }).build().is_err());
+    }
+
+    #[test]
+    fn memory_budget_validated_at_build() {
+        // toy: 200 samples, B=2 -> 100x100 panels; 16 B cannot host the
+        // pipeline, a workable budget builds fine
+        let err = toy().memory_budget(16).build().unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("memory_budget") && msg.contains("L="),
+            "unhelpful error: {msg}"
+        );
+        assert!(toy().memory_budget(16 * 1024).build().is_ok());
     }
 
     #[test]

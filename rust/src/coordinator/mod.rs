@@ -18,7 +18,7 @@ pub use config::{BackendChoice, DatasetSpec, RunConfig};
 pub use engine::{create_engine, engine_for_name, shared_pjrt, Engine, GramBuild};
 pub use experiment::{Experiment, KernelSpec};
 pub use memory::{b_min, footprint_bytes, paper_b_min};
-pub use report::{EngineReport, RunReport};
+pub use report::{pipeline_json, EngineReport, RunReport};
 pub use session::{
     assign_test_set, build_dataset, gamma_for, run_lloyd_baseline, Session,
 };

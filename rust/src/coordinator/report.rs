@@ -1,5 +1,6 @@
 //! Experiment reports: metrics, timings, and honest engine provenance.
 use crate::cluster::MiniBatchResult;
+use crate::kernels::PipelineStats;
 use crate::util::json::Json;
 
 /// Which engine a session ran on — requested vs actually used, plus the
@@ -51,6 +52,9 @@ pub struct RunReport {
     pub best_cost: f64,
     /// Engine provenance, including any fallback reason.
     pub engine: EngineReport,
+    /// Tile-pipeline accounting of the best restart: tiles produced /
+    /// pinned / spilled, peak resident `K_nl` bytes, overlap efficiency.
+    pub pipeline: PipelineStats,
     pub result: MiniBatchResult,
 }
 
@@ -72,6 +76,7 @@ impl RunReport {
             ),
             ("best_cost", Json::num(self.best_cost)),
             ("engine", self.engine.to_json()),
+            ("pipeline", pipeline_json(&self.pipeline)),
             (
                 "outer_iterations",
                 Json::num(self.result.history.len() as f64),
@@ -90,9 +95,49 @@ impl RunReport {
     }
 }
 
+/// Machine-readable echo of the tile-pipeline accounting.
+pub fn pipeline_json(p: &PipelineStats) -> Json {
+    Json::obj(vec![
+        ("tiles", Json::num(p.tiles as f64)),
+        ("pinned_tiles", Json::num(p.pinned_tiles as f64)),
+        ("spilled_tiles", Json::num(p.spilled_tiles as f64)),
+        ("peak_resident_bytes", Json::num(p.peak_resident_bytes as f64)),
+        (
+            "budget_bytes",
+            p.budget_bytes.map(|b| Json::num(b as f64)).unwrap_or(Json::Null),
+        ),
+        ("producer_busy_s", Json::num(p.producer_busy_s)),
+        ("consumer_wait_s", Json::num(p.consumer_wait_s)),
+        ("workers", Json::num(p.workers as f64)),
+        ("overlap_efficiency", Json::num(p.overlap_efficiency())),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn pipeline_json_carries_budget_and_peak() {
+        let p = PipelineStats {
+            tiles: 12,
+            pinned_tiles: 3,
+            spilled_tiles: 9,
+            peak_resident_bytes: 4096,
+            budget_bytes: Some(8192),
+            producer_busy_s: 1.0,
+            consumer_wait_s: 0.25,
+            workers: 2,
+        };
+        let j = pipeline_json(&p);
+        assert_eq!(j.get("tiles").and_then(|v| v.as_usize()), Some(12));
+        assert_eq!(j.get("peak_resident_bytes").and_then(|v| v.as_usize()), Some(4096));
+        assert_eq!(j.get("budget_bytes").and_then(|v| v.as_usize()), Some(8192));
+        let eff = j.get("overlap_efficiency").and_then(|v| v.as_f64()).unwrap();
+        assert!((eff - 0.75).abs() < 1e-12);
+        let none = pipeline_json(&PipelineStats::default());
+        assert_eq!(none.get("budget_bytes"), Some(&Json::Null));
+    }
 
     #[test]
     fn engine_report_json_reflects_fallback() {

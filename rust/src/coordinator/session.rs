@@ -146,8 +146,31 @@ impl Session {
                 self.cfg.b
             )));
         }
-        let (result, best_cost, restart_seconds) =
-            run_restarts(self.source.as_ref(), &self.cfg, c, self.engine.step());
+        // the plan takes L = max(round(s*nb), C) landmarks per batch, so
+        // a C larger than build() anticipated can outgrow the memory
+        // budget; fail structurally instead of tripping the pipeline's
+        // runtime assert
+        if let Some(mb) = self.cfg.memory_budget {
+            let nb_max = n.div_ceil(self.cfg.b);
+            let l_max = ((self.cfg.s * nb_max as f64).round() as usize)
+                .clamp(c.min(nb_max), nb_max);
+            let workers = usize::from(self.engine.supports_offload());
+            let min = crate::kernels::tiles::min_pipeline_budget(l_max, workers);
+            if mb < min {
+                return Err(Error::Config(format!(
+                    "memory_budget {mb} B cannot hold the pipeline at C={c}: the \
+                     largest panel has L={l_max} landmark columns and needs at \
+                     least {min} B"
+                )));
+            }
+        }
+        let (result, best_cost, restart_seconds) = run_restarts(
+            self.source.as_ref(),
+            &self.cfg,
+            c,
+            self.engine.step(),
+            self.engine.supports_offload(),
+        );
         let truth = self.truth();
         let train_accuracy = accuracy(&result.labels, truth);
         let train_nmi = nmi(&result.labels, truth);
@@ -170,6 +193,7 @@ impl Session {
             restart_seconds,
             best_cost,
             engine: self.engine_report.clone(),
+            pipeline: result.pipeline.clone(),
             result,
         })
     }
@@ -185,10 +209,18 @@ impl Session {
         let start = c_min.max(2);
         // cap the scan where the mini-batch plan stays feasible (C seeds
         // per batch), so small datasets never panic mid-scan
-        let c_max = c_max.min(n / self.cfg.b.max(1));
+        let mut c_max = c_max.min(n / self.cfg.b.max(1));
+        // a memory budget caps L = max(round(s*nb), C): don't scan C
+        // values whose panels the pipeline could not hold. The scan uses
+        // the same production policy as fit(), so the cap matches.
+        let async_production = self.engine.supports_offload();
+        if let Some(mb) = self.cfg.memory_budget {
+            let workers = usize::from(async_production);
+            c_max = c_max.min(crate::kernels::tiles::max_budget_cols(mb, workers));
+        }
         let mut c = start;
         while c <= c_max {
-            let mut mb_cfg = minibatch_config(&self.cfg, c, self.cfg.seed);
+            let mut mb_cfg = minibatch_config(&self.cfg, c, self.cfg.seed, async_production);
             mb_cfg.max_inner = 30;
             let result = MiniBatchKernelKMeans::new(mb_cfg, &NativeBackend).run(source);
             curve.push((c, cost_vs_medoids(source, &sample, &result.medoids)));
@@ -320,7 +352,15 @@ pub fn gamma_for(dataset: &Dataset, sigma_factor: f32, seed: u64) -> f32 {
     1.0 / (2.0 * sigma * sigma)
 }
 
-fn minibatch_config(cfg: &RunConfig, c: usize, seed: u64) -> MiniBatchConfig {
+/// `async_production = false` forces inline tile production (engines
+/// whose node threads already saturate the host, i.e. the same engines
+/// that reject the offload flag).
+fn minibatch_config(
+    cfg: &RunConfig,
+    c: usize,
+    seed: u64,
+    async_production: bool,
+) -> MiniBatchConfig {
     MiniBatchConfig {
         c,
         b: cfg.b,
@@ -331,6 +371,8 @@ fn minibatch_config(cfg: &RunConfig, c: usize, seed: u64) -> MiniBatchConfig {
         track_cost: cfg.track_cost,
         offload: cfg.offload,
         merge_rule: MergeRule::Convex,
+        memory_budget: cfg.memory_budget,
+        pipeline_workers: if async_production { None } else { Some(0) },
     }
 }
 
@@ -339,6 +381,7 @@ fn run_restarts(
     cfg: &RunConfig,
     c: usize,
     backend: &dyn StepBackend,
+    async_production: bool,
 ) -> (MiniBatchResult, f64, Vec<f64>) {
     let n = source.n();
     let mut eval_rng = Rng::new(cfg.seed ^ 0xE7A1);
@@ -346,7 +389,12 @@ fn run_restarts(
     let mut best: Option<(MiniBatchResult, f64)> = None;
     let mut times = Vec::with_capacity(cfg.restarts);
     for r in 0..cfg.restarts {
-        let mb_cfg = minibatch_config(cfg, c, cfg.seed.wrapping_add(r as u64 * 7919));
+        let mb_cfg = minibatch_config(
+            cfg,
+            c,
+            cfg.seed.wrapping_add(r as u64 * 7919),
+            async_production,
+        );
         let timer = Timer::start();
         let result = MiniBatchKernelKMeans::new(mb_cfg, backend).run(source);
         times.push(timer.elapsed_s());

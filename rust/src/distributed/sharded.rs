@@ -1,11 +1,13 @@
 //! Row-sharded inner loop over real node threads (paper §3.3, Fig.2).
 //!
-//! Each of the P node threads owns a contiguous row shard of the
-//! mini-batch kernel block (K rows never move); per iteration it
+//! Each of the P node threads owns a contiguous slice of the mini-batch
+//! kernel block — rows of a whole panel, tiles of a memory-budgeted
+//! tiled panel (the tile is the shard work unit, so a spilled tile is
+//! re-loaded by exactly the node that owns it); per iteration a node
 //!
 //!   1. computes the partial compactness `g` from its *landmark* rows,
 //!   2. allreduce-sums `g` (the only float collective, C values),
-//!   3. computes `f` and the argmin labels for its row shard,
+//!   3. computes `f` and the argmin labels for its row slice,
 //!   4. allgathers the label slices.
 //!
 //! The result is bit-identical to the serial backend (tested below),
@@ -13,6 +15,7 @@
 //! schedule, not the math.
 use crate::cluster::assign::{argmin_labels, similarity_f, ClusterStats};
 use crate::cluster::minibatch::StepBackend;
+use crate::kernels::GramView;
 use crate::linalg::Mat;
 
 use super::comm::Communicator;
@@ -33,7 +36,7 @@ impl ShardedBackend {
 impl StepBackend for ShardedBackend {
     fn iterate(
         &self,
-        k_nl: &Mat,
+        k_nl: &GramView<'_>,
         k_ll: &Mat,
         lm_labels: &[usize],
         c: usize,
@@ -41,7 +44,14 @@ impl StepBackend for ShardedBackend {
         let n = k_nl.rows();
         let l = lm_labels.len();
         let p = self.nodes.min(n.max(1));
-        let shards = row_shards(n, p);
+        // whole panels shard by rows (historical layout); tiled panels
+        // shard by tiles, which are contiguous row ranges, so each node
+        // still owns a contiguous label slice for the allgather
+        let tile_shards = match k_nl {
+            GramView::Whole(_) => None,
+            GramView::Tiled(_) => Some(row_shards(k_nl.n_tiles(), p)),
+        };
+        let row_shards_whole = row_shards(n, p);
         let lm_shards = row_shards(l, p);
         let comm = Communicator::new(p);
 
@@ -62,8 +72,10 @@ impl StepBackend for ShardedBackend {
             let mut handles = Vec::new();
             for rank in 0..p {
                 let mut comm = comm.node();
-                let (lo, hi) = shards[rank];
+                let view = *k_nl;
                 let (llo, lhi) = lm_shards[rank];
+                let tile_shards = tile_shards.as_deref();
+                let row_shards_whole = &row_shards_whole;
                 let inv = &inv;
                 let counts = &counts;
                 handles.push(scope.spawn(move || {
@@ -91,13 +103,34 @@ impl StepBackend for ShardedBackend {
                         inv: inv.clone(),
                         g: g.clone(),
                     };
-                    // --- local f + argmin over this node's row shard
-                    let local_labels = if hi > lo {
-                        let block = k_nl.row_slice(lo, hi);
-                        let f = similarity_f(&block, lm_labels, &stats);
-                        argmin_labels(&f, &stats)
-                    } else {
-                        Vec::new()
+                    // --- local f + argmin over this node's slice
+                    let (lo, local_labels) = match (&view, tile_shards) {
+                        (GramView::Whole(mat), _) => {
+                            let (lo, hi) = row_shards_whole[rank];
+                            if hi > lo {
+                                let block = mat.row_slice(lo, hi);
+                                let f = similarity_f(&block, lm_labels, &stats);
+                                (lo, argmin_labels(&f, &stats))
+                            } else {
+                                (lo, Vec::new())
+                            }
+                        }
+                        (GramView::Tiled(_), Some(shards)) => {
+                            let (tlo, thi) = shards[rank];
+                            if thi > tlo {
+                                let lo = view.tile_range(tlo).0;
+                                let mut local = Vec::new();
+                                for t in tlo..thi {
+                                    let tile = view.tile(t);
+                                    let f = similarity_f(tile.mat(), lm_labels, &stats);
+                                    local.extend(argmin_labels(&f, &stats));
+                                }
+                                (lo, local)
+                            } else {
+                                (n, Vec::new())
+                            }
+                        }
+                        (GramView::Tiled(_), None) => unreachable!("tile shards computed above"),
                     };
                     // --- collective 2: allgather of label slices
                     let all = comm.allgather_usize(lo, n, &local_labels);
@@ -151,7 +184,7 @@ mod tests {
             assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 5);
         for p in [1usize, 2, 3, 4, 8, 16, 64] {
             let backend = ShardedBackend::new(p);
-            let (labels, stats) = backend.iterate(&k_nl, &k_ll, &lm_labels, 5);
+            let (labels, stats) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 5);
             assert_eq!(labels, want_labels, "labels diverge at p={p}");
             for j in 0..5 {
                 assert!(
@@ -180,11 +213,31 @@ mod tests {
     }
 
     #[test]
+    fn tiled_minibatch_run_matches_native_whole() {
+        // tiles as shard work units: sharded + memory budget must equal
+        // the serial whole-panel reference bit for bit
+        let mut rng = Rng::new(2);
+        let d = toy2d(&mut rng, 60);
+        let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
+        let cfg = MiniBatchConfig::new(4, 2);
+        let reference = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+        let mut budget_cfg = cfg;
+        budget_cfg.memory_budget = Some(16 * 1024); // 120x120 panel = 56 KiB
+        let backend = ShardedBackend::new(3);
+        let sharded = MiniBatchKernelKMeans::new(budget_cfg, &backend).run(&g);
+        assert_eq!(reference.labels, sharded.labels);
+        assert_eq!(reference.medoids, sharded.medoids);
+        assert_eq!(reference.counts, sharded.counts);
+        assert!(sharded.pipeline.tiles > 2, "{:?}", sharded.pipeline);
+        assert!(sharded.pipeline.peak_resident_bytes <= 16 * 1024);
+    }
+
+    #[test]
     fn empty_clusters_handled() {
         let (k_nl, k_ll, mut lm_labels) = random_setup(2, 20, 10, 6);
         lm_labels.iter_mut().for_each(|u| *u %= 2);
         let backend = ShardedBackend::new(3);
-        let (labels, stats) = backend.iterate(&k_nl, &k_ll, &lm_labels, 6);
+        let (labels, stats) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 6);
         assert!(labels.iter().all(|&u| u < 2));
         assert_eq!(&stats.counts[2..], &[0, 0, 0, 0]);
     }

@@ -9,10 +9,12 @@
 //! This gives the mini-batch algorithm its re-read pattern (the inner GD
 //! loop touches the same K^i panel every iteration) at RAM cost O(cache)
 //! instead of O((N/B)^2) — the knob the paper replaces with B itself.
+//! The on-disk rows live in the same [`SpillFile`] tier the tile
+//! pipeline (`kernels::tiles`) spills into, not a parallel format.
 use std::collections::HashMap;
-use std::io::{Read, Seek, SeekFrom, Write};
 use std::sync::Mutex;
 
+use super::tiles::SpillFile;
 use super::GramSource;
 
 /// One cached panel: a fixed column set and per-row kernel values.
@@ -24,8 +26,7 @@ struct Panel {
     /// In-memory LRU of hot rows.
     hot: HashMap<usize, Vec<f32>>,
     hot_order: Vec<usize>,
-    file: std::fs::File,
-    len: u64,
+    spill: SpillFile,
 }
 
 /// Disk-backed cache over an inner Gram source.
@@ -88,13 +89,7 @@ impl GramSource for DiskCachedGram<'_> {
         let ncols = cols.len();
         let mut st = self.state.lock().unwrap();
         if !st.panels.contains_key(&key) {
-            let path = self.dir.join(format!("panel_{key:016x}.bin"));
-            let file = std::fs::OpenOptions::new()
-                .create(true)
-                .truncate(true)
-                .read(true)
-                .write(true)
-                .open(&path)
+            let spill = SpillFile::create_in(&self.dir, &format!("panel_{key:016x}.bin"))
                 .expect("open spill file");
             st.panels.insert(
                 key,
@@ -103,8 +98,7 @@ impl GramSource for DiskCachedGram<'_> {
                     row_offsets: HashMap::new(),
                     hot: HashMap::new(),
                     hot_order: Vec::new(),
-                    file,
-                    len: 0,
+                    spill,
                 },
             );
         }
@@ -117,14 +111,11 @@ impl GramSource for DiskCachedGram<'_> {
                 if let Some(vals) = panel.hot.get(&r) {
                     out[slot * ncols..(slot + 1) * ncols].copy_from_slice(vals);
                 } else if let Some(&off) = panel.row_offsets.get(&r) {
-                    // disk hit
-                    let mut buf = vec![0u8; ncols * 4];
-                    panel.file.seek(SeekFrom::Start(off)).expect("seek");
-                    panel.file.read_exact(&mut buf).expect("read row");
-                    for (k, chunk) in buf.chunks_exact(4).enumerate() {
-                        out[slot * ncols + k] =
-                            f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
-                    }
+                    // disk hit: read straight into the caller's block
+                    panel
+                        .spill
+                        .read(off, &mut out[slot * ncols..(slot + 1) * ncols])
+                        .expect("read spilled row");
                 } else {
                     missing.push((slot, r));
                     continue;
@@ -149,12 +140,7 @@ impl GramSource for DiskCachedGram<'_> {
             out[slot * ncols..(slot + 1) * ncols].copy_from_slice(vals);
             // spill to disk
             if !panel.row_offsets.contains_key(&r) {
-                let off = panel.len;
-                panel.file.seek(SeekFrom::Start(off)).expect("seek");
-                let bytes: Vec<u8> =
-                    vals.iter().flat_map(|v| v.to_le_bytes()).collect();
-                panel.file.write_all(&bytes).expect("write row");
-                panel.len += bytes.len() as u64;
+                let off = panel.spill.append(vals).expect("append spilled row");
                 panel.row_offsets.insert(r, off);
             }
             // hot LRU insert

@@ -14,11 +14,23 @@
 //!   `exp(-rmsd^2 / (2 sigma^2))`, the roto-translationally invariant
 //!   similarity the paper's MD application requires.
 //! * [`DiskCachedGram`] — Zhang-Rudnicky-style disk caching layered over
-//!   any source (the §2 lineage of the f/g formalism).
+//!   any source (the §2 lineage of the f/g formalism), riding on the
+//!   same [`SpillFile`] tier as the tile pipeline.
+//!
+//! [`tiles`] is the memory-budgeted execution layer over any
+//! `GramSource`: panels stream through a producer pool as row tiles
+//! sized to an explicit byte budget, pinned in memory while the budget
+//! allows and spilled to disk beyond, and every `StepBackend` consumes
+//! the resulting [`GramView`] instead of a materialized `Mat`.
 mod diskcache;
 mod gram;
 mod kernel_fn;
+pub mod tiles;
 
 pub use diskcache::DiskCachedGram;
 pub use gram::{GramSource, RmsdGram, VecGram};
 pub use kernel_fn::KernelFn;
+pub use tiles::{
+    run_pipeline, GramPanel, GramView, PanelFeed, PanelSpec, PipelineConfig, PipelineStats,
+    SpillFile, TilePlan, TileRef, TiledPanel,
+};

@@ -1,0 +1,963 @@
+//! Memory-budgeted tiled Gram pipeline.
+//!
+//! The paper promises that "the trade-off between accuracy and velocity
+//! is automatically ruled by the available system memory", but the only
+//! memory knob the mini-batch driver used to have was B itself: every
+//! `K_nl` panel (`(N/B) x sN/B` f32s) was materialized whole before the
+//! inner GD loop started. This module is the explicit knob:
+//!
+//! * [`TilePlan`] splits a `(rows x cols)` panel into row tiles sized to
+//!   a byte budget, reserving ring/read slots so the *peak resident*
+//!   `K_nl` bytes stay under the budget.
+//! * [`run_pipeline`] runs a pool of producer workers (generalizing the
+//!   Fig.3 single offload thread; work is handed out through
+//!   [`crate::util::threadpool::WorkQueue`]) that fill a bounded ring of
+//!   tile buffers while the consumer iterates.
+//! * [`TiledPanel`] is the pinned-tile cache the inner GD loop re-reads:
+//!   tiles that fit the budget stay resident, the rest spill to a
+//!   [`SpillFile`] — the same spill tier `DiskCachedGram` rides on —
+//!   and are re-loaded through a bounded number of read buffers.
+//! * [`GramView`] is what `StepBackend::iterate` consumes: either a
+//!   whole `Mat` (historical path, bit-identical) or a tile stream.
+//!
+//! The legacy `offload` flag is the degenerate configuration of this
+//! pipeline — one tile = one panel, one worker, lookahead 1 — so offload
+//! on/off stays bit-identical by construction.
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+use crate::linalg::Mat;
+use crate::util::stats::Timer;
+use crate::util::threadpool::WorkQueue;
+
+use super::GramSource;
+
+/// Read buffers reserved for re-loading spilled tiles during the inner
+/// GD loop (bounds concurrent loads from sharded node threads).
+pub const READ_PERMITS: usize = 2;
+
+/// How many tiles the producer side may hold in flight (computing +
+/// queued + stashed) ahead of the consumer: each worker gets lookahead 1.
+pub fn lookahead_tiles(workers: usize) -> usize {
+    workers + 1
+}
+
+/// Resident tiles the budget must reserve beyond the pinned cache:
+/// producer lookahead plus spill read buffers.
+pub fn reserve_tiles(workers: usize) -> usize {
+    lookahead_tiles(workers) + READ_PERMITS
+}
+
+/// Smallest accepted budget for a panel with `cols` columns: every
+/// reserve slot plus at least one pinned slot must fit a 1-row tile.
+pub fn min_pipeline_budget(cols: usize, workers: usize) -> usize {
+    4 * cols.max(1) * (reserve_tiles(workers) + 1)
+}
+
+/// Inverse of [`min_pipeline_budget`]: the widest landmark-column count
+/// a budget admits (used to cap elbow scans under a memory budget).
+pub fn max_budget_cols(budget: usize, workers: usize) -> usize {
+    budget / (4 * (reserve_tiles(workers) + 1))
+}
+
+fn mat_bytes(m: &Mat) -> usize {
+    m.rows() * m.cols() * 4
+}
+
+/// How a `(rows x cols)` panel is split into row tiles.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TilePlan {
+    pub rows: usize,
+    pub cols: usize,
+    /// Rows per tile (the last tile may be shorter).
+    pub tile_rows: usize,
+    pub n_tiles: usize,
+}
+
+impl TilePlan {
+    /// One tile covering the whole panel (the historical layout).
+    pub fn whole(rows: usize, cols: usize) -> TilePlan {
+        let tile_rows = rows.max(1);
+        TilePlan { rows, cols, tile_rows, n_tiles: rows.div_ceil(tile_rows).max(1) }
+    }
+
+    /// Tiles sized so that pinned cache + producer lookahead + spill
+    /// read buffers all fit in `budget` bytes.
+    pub fn for_budget(rows: usize, cols: usize, budget: usize, workers: usize) -> TilePlan {
+        let row_bytes = 4 * cols.max(1);
+        let denom = row_bytes * (reserve_tiles(workers) + 1);
+        let tile_rows = (budget / denom.max(1)).clamp(1, rows.max(1));
+        TilePlan { rows, cols, tile_rows, n_tiles: rows.div_ceil(tile_rows).max(1) }
+    }
+
+    /// Row range `[lo, hi)` of tile `t`.
+    pub fn tile_range(&self, t: usize) -> (usize, usize) {
+        assert!(t < self.n_tiles, "tile {t} out of {}", self.n_tiles);
+        let lo = t * self.tile_rows;
+        let hi = (lo + self.tile_rows).min(self.rows);
+        (lo, hi)
+    }
+
+    /// Bytes of a full tile (the last tile may be smaller).
+    pub fn tile_bytes(&self) -> usize {
+        self.tile_rows * self.cols * 4
+    }
+
+    /// Bytes of the whole panel.
+    pub fn panel_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+}
+
+/// Atomic resident-byte meter: every live tile buffer is accounted here,
+/// so `peak()` is the honest high-water mark the reports surface.
+#[derive(Debug, Default)]
+pub struct ResidentMeter {
+    cur: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl ResidentMeter {
+    pub fn new() -> ResidentMeter {
+        ResidentMeter::default()
+    }
+
+    pub fn add(&self, bytes: usize) {
+        let now = self.cur.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, bytes: usize) {
+        self.cur.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    pub fn current(&self) -> usize {
+        self.cur.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+/// Tiny counting semaphore (std has none): bounds producer lookahead and
+/// concurrent spill-read buffers.
+struct Permits {
+    avail: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Permits {
+    fn new(n: usize) -> Permits {
+        Permits { avail: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn acquire(&self) {
+        let mut avail = self.avail.lock().unwrap();
+        while *avail == 0 {
+            avail = self.cv.wait(avail).unwrap();
+        }
+        *avail -= 1;
+    }
+
+    fn release(&self) {
+        *self.avail.lock().unwrap() += 1;
+        self.cv.notify_one();
+    }
+}
+
+/// RAII handle on one producer lookahead slot; dropping it (on placement
+/// or on any abnormal unwind) frees the slot, so the pipeline cannot
+/// deadlock on lost permits.
+struct PermitGuard {
+    permits: Arc<Permits>,
+}
+
+impl Drop for PermitGuard {
+    fn drop(&mut self) {
+        self.permits.release();
+    }
+}
+
+/// Append-only f32 spill file: the disk tier shared by the tile pipeline
+/// and [`super::DiskCachedGram`]'s panel rows. The file is removed on
+/// drop.
+pub struct SpillFile {
+    path: PathBuf,
+    file: std::fs::File,
+    len: u64,
+}
+
+static SPILL_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+impl SpillFile {
+    /// Create (truncating) `dir/name`.
+    pub fn create_in(dir: &Path, name: &str) -> std::io::Result<SpillFile> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(name);
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .truncate(true)
+            .read(true)
+            .write(true)
+            .open(&path)?;
+        Ok(SpillFile { path, file, len: 0 })
+    }
+
+    /// Create a uniquely-named spill file under the system temp dir.
+    pub fn temp(tag: &str) -> std::io::Result<SpillFile> {
+        let dir = std::env::temp_dir().join("dkkm_spill");
+        let name = format!(
+            "{tag}_{}_{}.bin",
+            std::process::id(),
+            SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+        );
+        SpillFile::create_in(&dir, &name)
+    }
+
+    /// Bytes written so far.
+    pub fn len_bytes(&self) -> u64 {
+        self.len
+    }
+
+    /// Append `vals` and return the offset they were written at.
+    pub fn append(&mut self, vals: &[f32]) -> std::io::Result<u64> {
+        let off = self.len;
+        self.file.seek(SeekFrom::Start(off))?;
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        self.file.write_all(&bytes)?;
+        self.len += bytes.len() as u64;
+        Ok(off)
+    }
+
+    /// Read `out.len()` f32s back from `offset`.
+    pub fn read(&mut self, offset: u64, out: &mut [f32]) -> std::io::Result<()> {
+        let mut buf = vec![0u8; out.len() * 4];
+        self.file.seek(SeekFrom::Start(offset))?;
+        self.file.read_exact(&mut buf)?;
+        for (o, chunk) in out.iter_mut().zip(buf.chunks_exact(4)) {
+            *o = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(())
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Where one produced tile currently lives.
+enum TileSlot {
+    /// Not yet produced (only during panel assembly).
+    Pending,
+    /// Pinned in memory — re-read by every inner GD iteration for free.
+    Resident(Mat),
+    /// Spilled to the panel's [`SpillFile`]; re-loaded through a bounded
+    /// read buffer on demand.
+    Spilled { offset: u64 },
+}
+
+/// The pinned-tile cache one mini-batch's `K_nl` panel lives in during
+/// the inner GD loop. `Sync`: sharded node threads read tiles
+/// concurrently (spill loads are bounded by [`READ_PERMITS`]).
+pub struct TiledPanel {
+    plan: TilePlan,
+    slots: Vec<TileSlot>,
+    spill: Mutex<Option<SpillFile>>,
+    meter: Arc<ResidentMeter>,
+    reads: Permits,
+    pin_budget: usize,
+    pinned_bytes: usize,
+}
+
+impl TiledPanel {
+    fn new(plan: TilePlan, meter: Arc<ResidentMeter>, budget: usize, workers: usize) -> TiledPanel {
+        let t = plan.tile_bytes();
+        // When the whole panel plus producer lookahead fits, pin
+        // everything: no spills means no read buffers to reserve.
+        let pin_budget = if plan.panel_bytes() + lookahead_tiles(workers) * t <= budget {
+            plan.panel_bytes()
+        } else {
+            budget.saturating_sub(reserve_tiles(workers) * t)
+        };
+        let slots = (0..plan.n_tiles).map(|_| TileSlot::Pending).collect();
+        TiledPanel {
+            plan,
+            slots,
+            spill: Mutex::new(None),
+            meter,
+            reads: Permits::new(READ_PERMITS),
+            pin_budget,
+            pinned_bytes: 0,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.plan.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.plan.cols
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        self.plan.n_tiles
+    }
+
+    pub fn tile_range(&self, t: usize) -> (usize, usize) {
+        self.plan.tile_range(t)
+    }
+
+    /// Bytes held by the pinned cache.
+    pub fn pinned_bytes(&self) -> usize {
+        self.pinned_bytes
+    }
+
+    /// Place a produced tile: pin while the budget allows, spill beyond.
+    /// Returns true when the tile was pinned.
+    fn place(&mut self, t: usize, mat: Mat) -> bool {
+        let bytes = mat_bytes(&mat);
+        if self.pinned_bytes + bytes <= self.pin_budget {
+            self.pinned_bytes += bytes;
+            self.slots[t] = TileSlot::Resident(mat);
+            return true;
+        }
+        let offset = {
+            let mut guard = self.spill.lock().unwrap();
+            let spill = guard
+                .get_or_insert_with(|| SpillFile::temp("tile").expect("create tile spill file"));
+            spill.append(mat.data()).expect("tile spill write")
+        };
+        self.slots[t] = TileSlot::Spilled { offset };
+        drop(mat);
+        self.meter.sub(bytes);
+        false
+    }
+
+    /// Fetch tile `t`: a borrow when pinned, a metered read-back buffer
+    /// when spilled.
+    pub fn tile(&self, t: usize) -> TileRef<'_> {
+        match &self.slots[t] {
+            TileSlot::Resident(m) => TileRef::Mem(m),
+            TileSlot::Spilled { offset } => {
+                self.reads.acquire();
+                let (lo, hi) = self.plan.tile_range(t);
+                let mut mat = Mat::zeros(hi - lo, self.plan.cols);
+                {
+                    let mut guard = self.spill.lock().unwrap();
+                    guard
+                        .as_mut()
+                        .expect("spilled tile without spill file")
+                        .read(*offset, mat.data_mut())
+                        .expect("tile spill read");
+                }
+                self.meter.add(mat_bytes(&mat));
+                TileRef::Loaded(LoadedTile { mat, panel: self })
+            }
+            TileSlot::Pending => panic!("tile {t} was never produced"),
+        }
+    }
+}
+
+/// A tile either borrowed from the pinned cache or loaded back from the
+/// spill tier (releasing its read buffer + meter bytes on drop).
+pub enum TileRef<'a> {
+    Mem(&'a Mat),
+    Loaded(LoadedTile<'a>),
+}
+
+impl TileRef<'_> {
+    pub fn mat(&self) -> &Mat {
+        match self {
+            TileRef::Mem(m) => m,
+            TileRef::Loaded(l) => &l.mat,
+        }
+    }
+}
+
+/// Owned read-back buffer for one spilled tile.
+pub struct LoadedTile<'a> {
+    mat: Mat,
+    panel: &'a TiledPanel,
+}
+
+impl Drop for LoadedTile<'_> {
+    fn drop(&mut self) {
+        self.panel.meter.sub(mat_bytes(&self.mat));
+        self.panel.reads.release();
+    }
+}
+
+/// One mini-batch's produced `K_nl` panel, whole or tiled. Dropping it
+/// releases its resident bytes (and any spill file).
+pub struct GramPanel {
+    kind: PanelKind,
+    meter: Arc<ResidentMeter>,
+    resident_bytes: usize,
+}
+
+enum PanelKind {
+    Whole(Mat),
+    Tiled(TiledPanel),
+}
+
+impl GramPanel {
+    fn whole(mat: Mat, meter: Arc<ResidentMeter>) -> GramPanel {
+        let resident_bytes = mat_bytes(&mat);
+        GramPanel { kind: PanelKind::Whole(mat), meter, resident_bytes }
+    }
+
+    fn tiled(panel: TiledPanel, meter: Arc<ResidentMeter>) -> GramPanel {
+        let resident_bytes = panel.pinned_bytes();
+        GramPanel { kind: PanelKind::Tiled(panel), meter, resident_bytes }
+    }
+
+    /// Borrow the panel as the view `StepBackend::iterate` consumes.
+    pub fn view(&self) -> GramView<'_> {
+        match &self.kind {
+            PanelKind::Whole(m) => GramView::Whole(m),
+            PanelKind::Tiled(p) => GramView::Tiled(p),
+        }
+    }
+}
+
+impl Drop for GramPanel {
+    fn drop(&mut self) {
+        self.meter.sub(self.resident_bytes);
+    }
+}
+
+/// Borrowed view of a `K_nl` panel: either a whole matrix (historical
+/// path) or a tile stream. All backends consume this, so the native,
+/// sharded and PJRT inner loops run tile-wise through one interface.
+#[derive(Clone, Copy)]
+pub enum GramView<'a> {
+    Whole(&'a Mat),
+    Tiled(&'a TiledPanel),
+}
+
+impl<'a> GramView<'a> {
+    pub fn rows(&self) -> usize {
+        match self {
+            GramView::Whole(m) => m.rows(),
+            GramView::Tiled(p) => p.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            GramView::Whole(m) => m.cols(),
+            GramView::Tiled(p) => p.cols(),
+        }
+    }
+
+    pub fn n_tiles(&self) -> usize {
+        match self {
+            GramView::Whole(_) => 1,
+            GramView::Tiled(p) => p.n_tiles(),
+        }
+    }
+
+    pub fn tile_range(&self, t: usize) -> (usize, usize) {
+        match self {
+            GramView::Whole(m) => {
+                assert_eq!(t, 0, "whole panel has one tile");
+                (0, m.rows())
+            }
+            GramView::Tiled(p) => p.tile_range(t),
+        }
+    }
+
+    pub fn tile(&self, t: usize) -> TileRef<'a> {
+        // match by value (the view is Copy) so the 'a references move out
+        match *self {
+            GramView::Whole(m) => {
+                assert_eq!(t, 0, "whole panel has one tile");
+                TileRef::Mem(m)
+            }
+            GramView::Tiled(p) => p.tile(t),
+        }
+    }
+}
+
+/// One panel's production order: batch sample indices, landmark
+/// positions within the batch, and the derived landmark sample indices
+/// (the panel's column set).
+pub struct PanelSpec<'a> {
+    pub rows: &'a [usize],
+    pub lm_pos: &'a [usize],
+    pub cols: Vec<usize>,
+}
+
+impl<'a> PanelSpec<'a> {
+    pub fn new(rows: &'a [usize], lm_pos: &'a [usize]) -> PanelSpec<'a> {
+        let cols = lm_pos.iter().map(|&p| rows[p]).collect();
+        PanelSpec { rows, lm_pos, cols }
+    }
+}
+
+/// Pipeline shape: `budget = None` keeps whole panels (historical
+/// behavior); `workers = 0` produces synchronously in the consumer
+/// thread (inline), `workers >= 1` runs the producer pool with
+/// per-worker lookahead 1 over a bounded ring.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineConfig {
+    pub budget: Option<usize>,
+    pub workers: usize,
+}
+
+/// Production/residency accounting for one pipeline run.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineStats {
+    /// Tiles produced across all panels.
+    pub tiles: usize,
+    /// Tiles pinned in memory for the inner-loop re-reads.
+    pub pinned_tiles: usize,
+    /// Tiles spilled to the disk tier.
+    pub spilled_tiles: usize,
+    /// High-water mark of resident `K_nl` bytes.
+    pub peak_resident_bytes: usize,
+    /// The budget in force (None = whole panels).
+    pub budget_bytes: Option<usize>,
+    /// Seconds producers spent evaluating kernel blocks.
+    pub producer_busy_s: f64,
+    /// Seconds the consumer waited on the ring.
+    pub consumer_wait_s: f64,
+    /// Producer pool size (0 = inline).
+    pub workers: usize,
+}
+
+impl PipelineStats {
+    /// Fraction of block-production time hidden behind consumer compute
+    /// (the Fig.3 figure of merit). Inline production overlaps nothing.
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.workers == 0 {
+            return 0.0;
+        }
+        if self.producer_busy_s <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - self.consumer_wait_s / self.producer_busy_s).clamp(0.0, 1.0)
+    }
+}
+
+/// One produced tile in flight between a worker and the consumer.
+struct Produced {
+    batch: usize,
+    tile: usize,
+    mat: Mat,
+    busy: f64,
+    permit: Option<PermitGuard>,
+}
+
+/// The consumer's handle: `next_panel()` assembles the next mini-batch's
+/// panel (and its `K_ll` block, gathered from the tile stream so it is
+/// bit-identical to `k_nl.gather(lm_pos)`).
+pub struct PanelFeed<'a> {
+    source: &'a dyn GramSource,
+    specs: &'a [PanelSpec<'a>],
+    plans: &'a [TilePlan],
+    budget: Option<usize>,
+    workers: usize,
+    meter: Arc<ResidentMeter>,
+    rx: Option<mpsc::Receiver<Produced>>,
+    stash: HashMap<(usize, usize), (Mat, Option<PermitGuard>)>,
+    next_batch: usize,
+    tiles: usize,
+    pinned: usize,
+    spilled: usize,
+    producer_busy_s: f64,
+    consumer_wait_s: f64,
+}
+
+impl PanelFeed<'_> {
+    /// Assemble the next panel in plan order.
+    pub fn next_panel(&mut self) -> (GramPanel, Mat) {
+        let i = self.next_batch;
+        self.next_batch += 1;
+        assert!(i < self.specs.len(), "pipeline over-consumed: no panel {i}");
+        // copy the slice handle out so `spec` does not pin `self`
+        // (obtain() below needs `&mut self`)
+        let specs = self.specs;
+        let spec = &specs[i];
+        if self.budget.is_none() {
+            // whole-panel mode: one tile per panel, bit-identical to the
+            // historical fetch_blocks path (and with workers = 1 to the
+            // Fig.3 offload producer).
+            let (mat, permit) = self.obtain(i, 0);
+            let k_ll = mat.gather(spec.lm_pos);
+            drop(permit);
+            let panel = GramPanel::whole(mat, Arc::clone(&self.meter));
+            return (panel, k_ll);
+        }
+        let budget = self.budget.expect("checked above");
+        let l = spec.lm_pos.len();
+        let mut k_ll = Mat::zeros(l, l);
+        let mut panel = TiledPanel::new(
+            self.plans[i].clone(),
+            Arc::clone(&self.meter),
+            budget,
+            self.workers,
+        );
+        for t in 0..panel.n_tiles() {
+            let (mat, permit) = self.obtain(i, t);
+            let (lo, hi) = panel.tile_range(t);
+            // gather the K_ll rows that live in this tile: row j of K_ll
+            // is row lm_pos[j] of K_nl, exactly as gather() would copy it
+            for (j, &p) in spec.lm_pos.iter().enumerate() {
+                if p >= lo && p < hi {
+                    k_ll.row_mut(j).copy_from_slice(mat.row(p - lo));
+                }
+            }
+            if panel.place(t, mat) {
+                self.pinned += 1;
+            } else {
+                self.spilled += 1;
+            }
+            drop(permit);
+        }
+        (GramPanel::tiled(panel, Arc::clone(&self.meter)), k_ll)
+    }
+
+    /// Get tile `(b, t)` from the producers (or produce it inline).
+    fn obtain(&mut self, b: usize, t: usize) -> (Mat, Option<PermitGuard>) {
+        self.tiles += 1;
+        if self.rx.is_none() {
+            // synchronous production in the consumer thread
+            let (specs, plans, source) = (self.specs, self.plans, self.source);
+            let spec = &specs[b];
+            let (lo, hi) = plans[b].tile_range(t);
+            let timer = Timer::start();
+            let mat = source.block_mat(&spec.rows[lo..hi], &spec.cols);
+            self.producer_busy_s += timer.elapsed_s();
+            self.meter.add(mat_bytes(&mat));
+            return (mat, None);
+        }
+        if let Some(found) = self.stash.remove(&(b, t)) {
+            return found;
+        }
+        loop {
+            let timer = Timer::start();
+            let item = self
+                .rx
+                .as_ref()
+                .expect("async feed lost its receiver")
+                .recv()
+                .expect("tile producer died");
+            self.consumer_wait_s += timer.elapsed_s();
+            self.producer_busy_s += item.busy;
+            if item.batch == b && item.tile == t {
+                return (item.mat, item.permit);
+            }
+            // a racing worker finished a later tile first; park it
+            self.stash.insert((item.batch, item.tile), (item.mat, item.permit));
+        }
+    }
+}
+
+/// Run the tiled Gram pipeline over `specs`, calling `consume` with the
+/// feed; returns the consumer's result plus production stats.
+pub fn run_pipeline<R>(
+    source: &dyn GramSource,
+    specs: &[PanelSpec<'_>],
+    cfg: &PipelineConfig,
+    consume: impl FnOnce(&mut PanelFeed<'_>) -> R,
+) -> (R, PipelineStats) {
+    let plans: Vec<TilePlan> = specs
+        .iter()
+        .map(|s| match cfg.budget {
+            Some(b) => TilePlan::for_budget(s.rows.len(), s.cols.len(), b, cfg.workers),
+            None => TilePlan::whole(s.rows.len(), s.cols.len()),
+        })
+        .collect();
+    let meter = Arc::new(ResidentMeter::new());
+    let finish = |feed: &PanelFeed<'_>, meter: &ResidentMeter| PipelineStats {
+        tiles: feed.tiles,
+        pinned_tiles: feed.pinned,
+        spilled_tiles: feed.spilled,
+        peak_resident_bytes: meter.peak(),
+        budget_bytes: cfg.budget,
+        producer_busy_s: feed.producer_busy_s,
+        consumer_wait_s: feed.consumer_wait_s,
+        workers: cfg.workers,
+    };
+    if cfg.workers == 0 {
+        let mut feed = PanelFeed {
+            source,
+            specs,
+            plans: &plans,
+            budget: cfg.budget,
+            workers: 0,
+            meter: Arc::clone(&meter),
+            rx: None,
+            stash: HashMap::new(),
+            next_batch: 0,
+            tiles: 0,
+            pinned: 0,
+            spilled: 0,
+            producer_busy_s: 0.0,
+            consumer_wait_s: 0.0,
+        };
+        let out = consume(&mut feed);
+        let stats = finish(&feed, &meter);
+        return (out, stats);
+    }
+
+    // producer pool: every (batch, tile) is a work item, handed out in
+    // order through the shared WorkQueue; the ring + per-item permits
+    // bound how far production runs ahead of consumption
+    let items: Vec<(usize, usize)> = plans
+        .iter()
+        .enumerate()
+        .flat_map(|(b, plan)| (0..plan.n_tiles).map(move |t| (b, t)))
+        .collect();
+    let depth = lookahead_tiles(cfg.workers);
+    let in_flight = Arc::new(Permits::new(depth));
+    let queue = WorkQueue::new(items.len());
+    let (tx, rx) = mpsc::sync_channel::<Produced>(depth);
+    let queue_ref = &queue;
+    let items_ref: &[(usize, usize)] = &items;
+    let plans_ref: &[TilePlan] = &plans;
+    std::thread::scope(|scope| {
+        for _ in 0..cfg.workers {
+            let tx = tx.clone();
+            let meter = Arc::clone(&meter);
+            let permits = Arc::clone(&in_flight);
+            scope.spawn(move || loop {
+                permits.acquire();
+                let guard = PermitGuard { permits: Arc::clone(&permits) };
+                let Some(idx) = queue_ref.take() else {
+                    break; // guard drop releases the slot
+                };
+                let (b, t) = items_ref[idx];
+                let spec = &specs[b];
+                let (lo, hi) = plans_ref[b].tile_range(t);
+                let timer = Timer::start();
+                let mat = source.block_mat(&spec.rows[lo..hi], &spec.cols);
+                let busy = timer.elapsed_s();
+                let bytes = mat_bytes(&mat);
+                meter.add(bytes);
+                let item = Produced { batch: b, tile: t, mat, busy, permit: Some(guard) };
+                if tx.send(item).is_err() {
+                    // consumer gone early: the dropped item released its
+                    // permit; roll the meter back and stop
+                    meter.sub(bytes);
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut feed = PanelFeed {
+            source,
+            specs,
+            plans: &plans,
+            budget: cfg.budget,
+            workers: cfg.workers,
+            meter: Arc::clone(&meter),
+            rx: Some(rx),
+            stash: HashMap::new(),
+            next_batch: 0,
+            tiles: 0,
+            pinned: 0,
+            spilled: 0,
+            producer_busy_s: 0.0,
+            consumer_wait_s: 0.0,
+        };
+        let out = consume(&mut feed);
+        // drain anything the consumer left behind so worker sends fail
+        // fast and the meter stays honest
+        if let Some(rx) = feed.rx.take() {
+            while let Ok(item) = rx.try_recv() {
+                feed.producer_busy_s += item.busy;
+                meter.sub(mat_bytes(&item.mat));
+            }
+            drop(rx);
+        }
+        for (_, (mat, _permit)) in feed.stash.drain() {
+            meter.sub(mat_bytes(&mat));
+        }
+        let stats = finish(&feed, &meter);
+        (out, stats)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{KernelFn, VecGram};
+    use crate::util::rng::Rng;
+
+    fn source(n: usize, d: usize) -> VecGram {
+        let mut rng = Rng::new(7);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal32(0.0, 1.0));
+        VecGram::new(x, KernelFn::Rbf { gamma: 0.3 }, 2)
+    }
+
+    fn collect_panel(view: &GramView<'_>) -> Mat {
+        let mut out = Mat::zeros(view.rows(), view.cols());
+        for t in 0..view.n_tiles() {
+            let (lo, _hi) = view.tile_range(t);
+            let tile = view.tile(t);
+            let m = tile.mat();
+            for r in 0..m.rows() {
+                out.row_mut(lo + r).copy_from_slice(m.row(r));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn plan_covers_rows_exactly() {
+        for &(rows, cols, budget, workers) in &[
+            (100usize, 40usize, 10_000usize, 1usize),
+            (7, 3, 200, 0),
+            (1, 1, 1_000_000, 2),
+            (257, 19, 4 * 19 * 6, 1), // exactly min budget: 1-row tiles
+        ] {
+            let plan = TilePlan::for_budget(rows, cols, budget, workers);
+            let mut next = 0;
+            for t in 0..plan.n_tiles {
+                let (lo, hi) = plan.tile_range(t);
+                assert_eq!(lo, next, "gap at tile {t}");
+                assert!(hi > lo || rows == 0);
+                next = hi;
+            }
+            assert_eq!(next, rows);
+        }
+        let whole = TilePlan::whole(42, 9);
+        assert_eq!(whole.n_tiles, 1);
+        assert_eq!(whole.tile_range(0), (0, 42));
+    }
+
+    #[test]
+    fn budget_sizing_reserves_slots() {
+        let budget = 10_000;
+        let plan = TilePlan::for_budget(500, 20, budget, 1);
+        // pinned + lookahead + read buffers + one being placed must fit
+        assert!(plan.tile_bytes() * (reserve_tiles(1) + 1) <= budget);
+        assert!(plan.tile_rows >= 1);
+        // a generous budget keeps the panel whole
+        let roomy = TilePlan::for_budget(10, 4, 1 << 20, 1);
+        assert_eq!(roomy.n_tiles, 1);
+    }
+
+    #[test]
+    fn spill_file_round_trips() {
+        let mut f = SpillFile::temp("test").unwrap();
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..11).map(|i| -(i as f32)).collect();
+        let off_a = f.append(&a).unwrap();
+        let off_b = f.append(&b).unwrap();
+        assert_eq!(off_a, 0);
+        assert_eq!(off_b, 37 * 4);
+        let mut back = vec![0.0f32; 11];
+        f.read(off_b, &mut back).unwrap();
+        assert_eq!(back, b);
+        let mut back_a = vec![0.0f32; 37];
+        f.read(off_a, &mut back_a).unwrap();
+        assert_eq!(back_a, a);
+        assert_eq!(f.len_bytes(), (37 + 11) * 4);
+    }
+
+    #[test]
+    fn pipeline_matches_direct_blocks_all_modes() {
+        let g = source(120, 6);
+        let batch_a: Vec<usize> = (0..60).collect();
+        let batch_b: Vec<usize> = (60..120).collect();
+        let lm_pos: Vec<usize> = (0..30).map(|i| i * 2).collect();
+        let specs = vec![PanelSpec::new(&batch_a, &lm_pos), PanelSpec::new(&batch_b, &lm_pos)];
+        let budget = min_pipeline_budget(30, 3) * 3;
+        for (budget, workers) in [
+            (None, 0usize),
+            (None, 1),
+            (Some(budget), 0),
+            (Some(budget), 1),
+            (Some(budget), 3),
+        ] {
+            let cfg = PipelineConfig { budget, workers };
+            let (got, stats) = run_pipeline(&g, &specs, &cfg, |feed| {
+                let mut out = Vec::new();
+                for _ in 0..2 {
+                    let (panel, k_ll) = feed.next_panel();
+                    out.push((collect_panel(&panel.view()), k_ll));
+                }
+                out
+            });
+            for (i, spec) in specs.iter().enumerate() {
+                let want = g.block_mat(spec.rows, &spec.cols);
+                assert_eq!(
+                    got[i].0.data(),
+                    want.data(),
+                    "panel {i} diverges (budget {budget:?}, workers {workers})"
+                );
+                assert_eq!(
+                    got[i].1.data(),
+                    want.gather(spec.lm_pos).data(),
+                    "k_ll {i} diverges (budget {budget:?}, workers {workers})"
+                );
+            }
+            if let Some(b) = budget {
+                assert!(
+                    stats.peak_resident_bytes <= b,
+                    "peak {} exceeds budget {b} (workers {workers})",
+                    stats.peak_resident_bytes
+                );
+                assert!(stats.tiles > 2, "budget did not split panels");
+            } else {
+                assert_eq!(stats.tiles, 2);
+            }
+        }
+    }
+
+    #[test]
+    fn tight_budget_spills_and_reloads_identically() {
+        let g = source(80, 5);
+        let batch: Vec<usize> = (0..80).collect();
+        let lm_pos: Vec<usize> = (0..40).collect();
+        let specs = vec![PanelSpec::new(&batch, &lm_pos)];
+        // just above the minimum: almost everything must spill
+        let budget = min_pipeline_budget(40, 1) + 4 * 40;
+        let cfg = PipelineConfig { budget: Some(budget), workers: 1 };
+        let want = g.block_mat(&batch, &specs[0].cols);
+        let (reads, stats) = run_pipeline(&g, &specs, &cfg, |feed| {
+            let (panel, _k_ll) = feed.next_panel();
+            // re-read the panel several times, like the inner GD loop
+            (0..3).map(|_| collect_panel(&panel.view())).collect::<Vec<_>>()
+        });
+        assert!(stats.spilled_tiles > 0, "nothing spilled: {stats:?}");
+        for r in &reads {
+            assert_eq!(r.data(), want.data());
+        }
+        assert!(stats.peak_resident_bytes <= budget, "{stats:?}");
+    }
+
+    #[test]
+    fn meter_tracks_peak() {
+        let m = ResidentMeter::new();
+        m.add(100);
+        m.add(50);
+        m.sub(100);
+        m.add(10);
+        assert_eq!(m.current(), 60);
+        assert_eq!(m.peak(), 150);
+    }
+
+    #[test]
+    fn overlap_efficiency_bounds() {
+        let mut s = PipelineStats { workers: 0, producer_busy_s: 1.0, ..Default::default() };
+        assert_eq!(s.overlap_efficiency(), 0.0);
+        s.workers = 2;
+        s.consumer_wait_s = 0.25;
+        assert!((s.overlap_efficiency() - 0.75).abs() < 1e-12);
+        s.consumer_wait_s = 9.0;
+        assert_eq!(s.overlap_efficiency(), 0.0);
+    }
+}

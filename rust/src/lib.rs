@@ -35,9 +35,10 @@
 //! let session = Experiment::on(DatasetSpec::Mnist { train: 10_000, test: 2_000 })
 //!     .clusters(10)
 //!     .batches(4)
-//!     .backend("pjrt") // or "native", "sharded:8"
-//!     .offload(true)   // Fig.3 pipeline
-//!     .build()?;       // invalid combinations fail here, not mid-run
+//!     .backend("pjrt")              // or "native", "sharded:8"
+//!     .offload(true)                // Fig.3 pipeline
+//!     .memory_budget(64 << 20)      // cap resident K_nl bytes (tiled pipeline)
+//!     .build()?;                    // invalid combinations fail here, not mid-run
 //! let report = session.fit()?;
 //! println!(
 //!     "accuracy {:.1}% on engine {}",
@@ -74,7 +75,7 @@ pub mod prelude {
         RunConfig, RunReport, Session,
     };
     pub use crate::data::Sampling;
-    pub use crate::kernels::{GramSource, KernelFn};
+    pub use crate::kernels::{GramSource, KernelFn, PipelineStats};
     pub use crate::metrics::{accuracy, nmi};
     pub use crate::util::error::{Error, Result};
 }

@@ -102,6 +102,7 @@ fn parse_run_experiment(rest: &[String]) -> Result<(Experiment, bool)> {
         .opt("seed", "42", "rng seed")
         .opt("restarts", "1", "k-means++ restarts, keep min cost")
         .opt("sigma-factor", "4.0", "sigma = factor * d_max (paper: 4)")
+        .opt("memory-budget-mb", "0", "resident K_nl MiB for the tile pipeline (0 = whole panels)")
         .flag("track-cost", "record Fig.4 cost observables")
         .flag("offload", "Fig.3 producer-consumer pipeline")
         .flag("json", "emit machine-readable report")
@@ -122,6 +123,10 @@ fn parse_run_experiment(rest: &[String]) -> Result<(Experiment, bool)> {
     if threads > 0 {
         exp = exp.threads(threads);
     }
+    let budget_mb: usize = p.get("memory-budget-mb")?;
+    if budget_mb > 0 {
+        exp = exp.memory_budget(budget_mb << 20);
+    }
     Ok((exp, p.get_bool("json")))
 }
 
@@ -136,6 +141,7 @@ fn apply_run_flags(mut exp: Experiment, rest: &[String]) -> Result<(Experiment, 
         .opt("backend", "", "override backend")
         .opt("seed", "", "override seed")
         .opt("restarts", "", "override restarts")
+        .opt("memory-budget-mb", "", "override tile-pipeline budget (MiB)")
         .flag("offload", "enable offload")
         .flag("json", "emit machine-readable report")
         .parse(rest)?;
@@ -163,6 +169,15 @@ fn apply_run_flags(mut exp: Experiment, rest: &[String]) -> Result<(Experiment, 
     }
     if !p.str("restarts").is_empty() {
         exp = exp.restarts(p.get("restarts")?);
+    }
+    if !p.str("memory-budget-mb").is_empty() {
+        let budget_mb: usize = p.get("memory-budget-mb")?;
+        // an explicit 0 clears a budget the config file may have set
+        exp = if budget_mb > 0 {
+            exp.memory_budget(budget_mb << 20)
+        } else {
+            exp.no_memory_budget()
+        };
     }
     if p.get_bool("offload") {
         exp = exp.offload(true);
@@ -204,6 +219,17 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         println!(
             "offload overlap : {:.0}% of block production hidden",
             ov.overlap_efficiency() * 100.0
+        );
+    }
+    if report.pipeline.budget_bytes.is_some() {
+        let p = &report.pipeline;
+        println!(
+            "tile pipeline   : {} tiles ({} pinned, {} spilled), peak {:.2} MiB of {:.2} MiB budget",
+            p.tiles,
+            p.pinned_tiles,
+            p.spilled_tiles,
+            p.peak_resident_bytes as f64 / (1 << 20) as f64,
+            p.budget_bytes.unwrap_or(0) as f64 / (1 << 20) as f64
         );
     }
     for (i, rec) in report.result.history.iter().enumerate() {

@@ -19,6 +19,7 @@ use std::sync::Arc;
 
 use crate::cluster::assign::{self, ClusterStats};
 use crate::cluster::minibatch::StepBackend;
+use crate::kernels::GramView;
 use crate::linalg::Mat;
 use crate::util::error::Result;
 
@@ -39,7 +40,7 @@ impl PjrtBackend {
 
     fn iterate_pjrt(
         &self,
-        k_nl: &Mat,
+        k_nl: &GramView<'_>,
         k_ll: &Mat,
         lm_labels: &[usize],
         c: usize,
@@ -76,24 +77,33 @@ impl PjrtBackend {
         let n = k_nl.rows();
         let mut labels = Vec::with_capacity(n);
         let mut g_out = vec![0.0f32; c];
-        for lo in (0..n).step_by(N_TILE) {
-            let hi = (lo + N_TILE).min(n);
-            let chunk = k_nl.row_slice(lo, hi).padded(N_TILE, l_pad);
-            let outputs = self.runtime.execute(
-                &name,
-                vec![
-                    Tensor::from_mat(&chunk),
-                    Tensor::from_mat(&kll_pad),
-                    Tensor::from_mat(&onehot),
-                    Tensor::row(inv.clone()),
-                    Tensor::row(valid.clone()),
-                ],
-            )?;
-            let chunk_labels = outputs[0].i32_data()?;
-            labels.extend(chunk_labels[..hi - lo].iter().map(|&v| v as usize));
-            if lo == 0 {
-                let g = outputs[1].f32_data()?;
-                g_out.copy_from_slice(&g[..c]);
+        let mut first_chunk = true;
+        // tile-wise sweep: each view tile is chunked to the artifact's
+        // fixed N_TILE rows; per-row results are independent of the
+        // chunk boundaries, so tiled and whole panels agree
+        for t in 0..k_nl.n_tiles() {
+            let tile = k_nl.tile(t);
+            let m = tile.mat();
+            for lo in (0..m.rows()).step_by(N_TILE) {
+                let hi = (lo + N_TILE).min(m.rows());
+                let chunk = m.row_slice(lo, hi).padded(N_TILE, l_pad);
+                let outputs = self.runtime.execute(
+                    &name,
+                    vec![
+                        Tensor::from_mat(&chunk),
+                        Tensor::from_mat(&kll_pad),
+                        Tensor::from_mat(&onehot),
+                        Tensor::row(inv.clone()),
+                        Tensor::row(valid.clone()),
+                    ],
+                )?;
+                let chunk_labels = outputs[0].i32_data()?;
+                labels.extend(chunk_labels[..hi - lo].iter().map(|&v| v as usize));
+                if first_chunk {
+                    let g = outputs[1].f32_data()?;
+                    g_out.copy_from_slice(&g[..c]);
+                    first_chunk = false;
+                }
             }
         }
         let inv_c: Vec<f32> = inv[..c].to_vec();
@@ -104,7 +114,7 @@ impl PjrtBackend {
 impl StepBackend for PjrtBackend {
     fn iterate(
         &self,
-        k_nl: &Mat,
+        k_nl: &GramView<'_>,
         k_ll: &Mat,
         lm_labels: &[usize],
         c: usize,
@@ -113,7 +123,7 @@ impl StepBackend for PjrtBackend {
             Ok(Some(result)) => result,
             // graceful fallback: shapes outside the lowered variants run
             // natively (same math, tested for parity)
-            Ok(None) => assign::inner_iteration(k_nl, k_ll, lm_labels, c),
+            Ok(None) => assign::inner_iteration_view(k_nl, k_ll, lm_labels, c),
             Err(e) => panic!("PJRT backend failed: {e}"),
         }
     }
@@ -151,7 +161,7 @@ mod tests {
             return;
         };
         let backend = PjrtBackend::new(rt);
-        let (got, stats) = backend.iterate(&k_nl, &k_ll, &lm_labels, 7);
+        let (got, stats) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 7);
         assert_eq!(got, want);
         for j in 0..7 {
             assert!(
@@ -174,7 +184,7 @@ mod tests {
             return;
         };
         let backend = PjrtBackend::new(rt);
-        let (got, _) = backend.iterate(&k_nl, &k_ll, &lm_labels, 10);
+        let (got, _) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 10);
         let diff = got.iter().zip(&want).filter(|(a, b)| a != b).count();
         assert_eq!(diff, 0, "{diff} label mismatches");
     }
@@ -188,7 +198,7 @@ mod tests {
             return;
         };
         let backend = PjrtBackend::new(rt);
-        let (labels, stats) = backend.iterate(&k_nl, &k_ll, &lm_labels, 8);
+        let (labels, stats) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 8);
         assert!(labels.iter().all(|&u| u < 3));
         assert_eq!(&stats.counts[3..], &[0; 5]);
     }
@@ -202,7 +212,7 @@ mod tests {
             return;
         };
         let backend = PjrtBackend::new(rt);
-        let (got, _) = backend.iterate(&k_nl, &k_ll, &lm_labels, 4);
+        let (got, _) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 4);
         assert_eq!(got, want);
     }
 }

@@ -7,6 +7,11 @@
 //! thread and the consuming coordinator loop, with stall accounting on
 //! both sides so the overlap efficiency is measurable (EXPERIMENTS.md
 //! §Perf reports it).
+//!
+//! The clustering path itself now runs on the memory-budgeted tile
+//! pipeline (`kernels::tiles`), which generalizes this scheme to a
+//! worker pool over budget-sized tiles; `Prefetcher` remains the
+//! standalone device-queue utility (and the Fig.3 reference shape).
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 

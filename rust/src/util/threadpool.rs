@@ -15,6 +15,31 @@ pub fn default_threads() -> usize {
         .clamp(1, 64)
 }
 
+/// Lock-free fetch-add cursor over `total` work items. The shared work
+/// queue behind `parallel_chunks` and the tile-pipeline producer pool
+/// (`kernels::tiles`): workers call [`WorkQueue::take`] until it returns
+/// `None`.
+pub struct WorkQueue {
+    next: AtomicUsize,
+    total: usize,
+}
+
+impl WorkQueue {
+    pub fn new(total: usize) -> WorkQueue {
+        WorkQueue { next: AtomicUsize::new(0), total }
+    }
+
+    /// Claim the next unclaimed item index, if any remain.
+    pub fn take(&self) -> Option<usize> {
+        let i = self.next.fetch_add(1, Ordering::Relaxed);
+        if i < self.total {
+            Some(i)
+        } else {
+            None
+        }
+    }
+}
+
 /// Run `body(start, end)` over `[0, n)` split into `chunk`-sized ranges,
 /// dynamically balanced across `threads` workers. `body` must be
 /// `Sync + Fn`: mutation happens through interior slices obtained by the
@@ -37,18 +62,15 @@ where
         }
         return;
     }
-    let cursor = AtomicUsize::new(0);
-    let nchunks = n.div_ceil(chunk);
+    let queue = WorkQueue::new(n.div_ceil(chunk));
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let c = cursor.fetch_add(1, Ordering::Relaxed);
-                if c >= nchunks {
-                    break;
+            scope.spawn(|| {
+                while let Some(c) = queue.take() {
+                    let lo = c * chunk;
+                    let hi = (lo + chunk).min(n);
+                    body(lo, hi);
                 }
-                let lo = c * chunk;
-                let hi = (lo + chunk).min(n);
-                body(lo, hi);
             });
         }
     });
@@ -74,7 +96,6 @@ pub fn parallel_rows_mut<F>(
     }
     let threads = threads.max(1);
     let nchunks = nrows.div_ceil(rows_per_chunk);
-    let cursor = AtomicUsize::new(0);
     // SAFETY-free approach: carve disjoint &mut chunks up front.
     let mut blocks: Vec<(usize, usize, &mut [f32])> = Vec::with_capacity(nchunks);
     let mut rest = out;
@@ -102,7 +123,6 @@ pub fn parallel_rows_mut<F>(
             });
         }
     });
-    let _ = cursor;
 }
 
 /// Map `f` over `items` in parallel, preserving order of results.
@@ -136,6 +156,23 @@ where
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn work_queue_hands_each_item_once() {
+        let q = WorkQueue::new(100);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    while let Some(i) = q.take() {
+                        hits[i].fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        assert_eq!(q.take(), None);
+    }
 
     #[test]
     fn chunks_cover_range_exactly_once() {

@@ -72,7 +72,7 @@ fn inner_iteration_matches_native_across_shapes() {
         let labels: Vec<usize> = (0..l).map(|_| rng.below(c)).collect();
         let (want, want_stats) = assign::inner_iteration(&k_nl, &k_ll, &labels, c);
         let backend = PjrtBackend::new(runtime_or_skip!());
-        let (got, stats) = backend.iterate(&k_nl, &k_ll, &labels, c);
+        let (got, stats) = backend.iterate_mat(&k_nl, &k_ll, &labels, c);
         assert_eq!(got, want, "labels diverge at n={n} l={l} c={c}");
         for j in 0..c {
             assert!(
@@ -132,7 +132,7 @@ fn hypothesis_style_shape_sweep() {
         let k_ll = g.block_mat(&lms, &lms);
         let labels: Vec<usize> = (0..l).map(|_| rng.below(c)).collect();
         let (want, _) = assign::inner_iteration(&k_nl, &k_ll, &labels, c);
-        let (got, _) = backend.iterate(&k_nl, &k_ll, &labels, c);
+        let (got, _) = backend.iterate_mat(&k_nl, &k_ll, &labels, c);
         assert_eq!(got, want, "case {case}: n={n} l={l} c={c}");
     }
 }

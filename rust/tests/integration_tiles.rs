@@ -1,0 +1,194 @@
+//! Tile-path equivalence: the memory-budgeted Gram pipeline is a pure
+//! scheduling/placement change. Tiled runs must be bit-identical to
+//! whole-panel runs across backends (`native`, `sharded:<p>`), sampling
+//! strategies (stride, block), and offload on/off — while the peak
+//! resident `K_nl` bytes respect the budget and the report says what the
+//! pipeline actually did.
+use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
+use dkkm::distributed::ShardedBackend;
+use dkkm::kernels::{KernelFn, VecGram};
+use dkkm::prelude::*;
+use dkkm::util::rng::Rng;
+
+fn toy_source(seed: u64, per_cluster: usize) -> VecGram {
+    let mut rng = Rng::new(seed);
+    let d = dkkm::data::toy2d(&mut rng, per_cluster);
+    VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2)
+}
+
+fn assert_same(a: &dkkm::cluster::MiniBatchResult, b: &dkkm::cluster::MiniBatchResult, tag: &str) {
+    assert_eq!(a.labels, b.labels, "labels diverge: {tag}");
+    assert_eq!(a.medoids, b.medoids, "medoids diverge: {tag}");
+    assert_eq!(a.counts, b.counts, "counts diverge: {tag}");
+}
+
+#[test]
+fn tiled_equals_whole_native_both_samplings() {
+    let g = toy_source(0, 80); // n = 320, B = 4 -> 80x80 panels (25 KiB)
+    for sampling in [Sampling::Stride, Sampling::Block] {
+        let mut base = MiniBatchConfig::new(4, 4);
+        base.sampling = sampling;
+        let whole = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g);
+        let budget = 8 * 1024; // forces several tiles + spills per panel
+        let mut tiled_cfg = base;
+        tiled_cfg.memory_budget = Some(budget);
+        let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g);
+        assert_same(&whole, &tiled, &format!("native, {sampling}"));
+        assert!(tiled.pipeline.tiles > 4, "{:?}", tiled.pipeline);
+        assert!(tiled.pipeline.spilled_tiles > 0, "{:?}", tiled.pipeline);
+        assert!(
+            tiled.pipeline.peak_resident_bytes <= budget,
+            "peak {} over budget {budget} ({sampling})",
+            tiled.pipeline.peak_resident_bytes
+        );
+    }
+}
+
+#[test]
+fn tiled_equals_whole_sharded() {
+    let g = toy_source(1, 80);
+    for p in [1usize, 3, 7] {
+        let backend = ShardedBackend::new(p);
+        let base = MiniBatchConfig::new(4, 2); // 160x160 panels
+        let whole = MiniBatchKernelKMeans::new(base.clone(), &backend).run(&g);
+        let native_whole =
+            MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g);
+        assert_same(&whole, &native_whole, &format!("sharded:{p} vs native, whole"));
+        let budget = 20 * 1024;
+        let mut tiled_cfg = base;
+        tiled_cfg.memory_budget = Some(budget);
+        let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &backend).run(&g);
+        assert_same(&whole, &tiled, &format!("sharded:{p}, tiled"));
+        assert!(tiled.pipeline.peak_resident_bytes <= budget, "{:?}", tiled.pipeline);
+    }
+}
+
+#[test]
+fn tiled_equals_whole_with_offload() {
+    let g = toy_source(2, 60);
+    let base = MiniBatchConfig::new(4, 3);
+    let reference = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g);
+    // offload without budget: whole panels, one producer (Fig.3)
+    let mut off = base.clone();
+    off.offload = true;
+    let offload = MiniBatchKernelKMeans::new(off, &NativeBackend).run(&g);
+    assert_same(&reference, &offload, "offload whole");
+    // offload + budget: tiles stream one batch ahead through the ring
+    let mut off_budget = base.clone();
+    off_budget.offload = true;
+    off_budget.memory_budget = Some(10 * 1024);
+    let both = MiniBatchKernelKMeans::new(off_budget, &NativeBackend).run(&g);
+    assert_same(&reference, &both, "offload + budget");
+    assert!(both.overlap.is_some());
+    assert!(both.pipeline.peak_resident_bytes <= 10 * 1024, "{:?}", both.pipeline);
+    // a wider producer pool is still a pure scheduling change
+    let mut pool = base.clone();
+    pool.memory_budget = Some(10 * 1024);
+    pool.pipeline_workers = Some(3);
+    let pooled = MiniBatchKernelKMeans::new(pool, &NativeBackend).run(&g);
+    assert_same(&reference, &pooled, "worker pool");
+    // forced-inline production under a budget is the same run again
+    let mut inline = base;
+    inline.memory_budget = Some(10 * 1024);
+    inline.pipeline_workers = Some(0);
+    let inlined = MiniBatchKernelKMeans::new(inline, &NativeBackend).run(&g);
+    assert_same(&reference, &inlined, "inline tiled");
+    assert!(inlined.overlap.is_none());
+}
+
+#[test]
+fn landmark_fraction_and_tiles_compose() {
+    // s < 1 shrinks the panel's column set; the tile path must keep the
+    // landmark gather (K_ll) bit-exact through arbitrary lm positions
+    let g = toy_source(3, 80);
+    let mut base = MiniBatchConfig::new(4, 2);
+    base.s = 0.4;
+    let whole = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g);
+    let mut tiled_cfg = base;
+    tiled_cfg.memory_budget = Some(6 * 1024);
+    let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g);
+    assert_same(&whole, &tiled, "s=0.4 tiled");
+}
+
+#[test]
+fn builder_threads_budget_through_session() {
+    let exp = || {
+        Experiment::on(DatasetSpec::Toy2d { per_cluster: 60 })
+            .clusters(4)
+            .batches(2)
+            .sigma_factor(0.1)
+    };
+    let whole = exp().build().unwrap().fit().unwrap();
+    let budget = 16 * 1024; // 120x120 panels = 56 KiB each
+    let tiled = exp().memory_budget(budget).build().unwrap().fit().unwrap();
+    assert_eq!(whole.result.labels, tiled.result.labels);
+    assert_eq!(whole.result.medoids, tiled.result.medoids);
+    assert_eq!(whole.train_accuracy, tiled.train_accuracy);
+    // the report records what the pipeline did
+    assert_eq!(tiled.pipeline.budget_bytes, Some(budget));
+    assert!(tiled.pipeline.tiles > 2);
+    assert!(tiled.pipeline.peak_resident_bytes <= budget);
+    let j = tiled.to_json();
+    let parsed = dkkm::util::json::Json::parse(&j.to_string()).unwrap();
+    let pipe = parsed.get("pipeline").expect("pipeline in report json");
+    assert_eq!(pipe.get("budget_bytes").and_then(|v| v.as_usize()), Some(budget));
+    assert!(pipe.get("peak_resident_bytes").and_then(|v| v.as_usize()).unwrap() <= budget);
+    assert!(pipe.get("overlap_efficiency").and_then(|v| v.as_f64()).is_some());
+    // whole-panel runs carry honest accounting too
+    assert_eq!(whole.pipeline.budget_bytes, None);
+    assert_eq!(whole.pipeline.tiles, 2);
+}
+
+#[test]
+fn builder_budget_composes_with_sharded_engine() {
+    let exp = || {
+        Experiment::on(DatasetSpec::Toy2d { per_cluster: 60 })
+            .clusters(4)
+            .batches(2)
+            .sigma_factor(0.1)
+    };
+    let native = exp().build().unwrap().fit().unwrap();
+    let sharded = exp()
+        .backend("sharded:3")
+        .memory_budget(16 * 1024)
+        .build()
+        .unwrap()
+        .fit()
+        .unwrap();
+    assert_eq!(native.result.labels, sharded.result.labels);
+    assert_eq!(native.result.medoids, sharded.result.medoids);
+    assert_eq!(sharded.engine.used, "sharded:3");
+    assert!(sharded.pipeline.peak_resident_bytes <= 16 * 1024);
+}
+
+#[test]
+fn oversized_c_at_fit_time_is_a_structured_error() {
+    // build validates the budget for C=4 (L = max(round(s*nb), C) = 6);
+    // a later fit_clusters with a C that outgrows the budget must be a
+    // Config error, not the pipeline's runtime panic
+    let session = Experiment::on(DatasetSpec::Toy2d { per_cluster: 60 })
+        .clusters(4)
+        .batches(2)
+        .landmark_fraction(0.05)
+        .sigma_factor(0.1)
+        .memory_budget(2000)
+        .build()
+        .unwrap();
+    assert!(session.fit_clusters(4).is_ok());
+    // C=120 keeps B*C <= n but needs L=120 columns: 2400 B > 2000 B
+    let err = session.fit_clusters(120).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("memory_budget") && msg.contains("C=120"), "{msg}");
+}
+
+#[test]
+fn infeasible_budget_is_a_build_error() {
+    let err = Experiment::on(DatasetSpec::Toy2d { per_cluster: 60 })
+        .clusters(4)
+        .batches(2)
+        .memory_budget(64)
+        .build()
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("memory_budget") && msg.contains("64"), "{msg}");
+}
