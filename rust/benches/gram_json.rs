@@ -1,0 +1,138 @@
+//! bench-json harness: machine-readable Gram micro-kernel throughput.
+//!
+//! Fills the same `rows x cols` RBF Gram block through every SIMD tier
+//! this host can execute (`linalg::simd`) plus the pre-micro-kernel
+//! `dot4` baseline, across feature dimensions, and emits
+//! `BENCH_gram.json` (override the path with `DKKM_BENCH_OUT`) with
+//! GFLOP/s per dispatch tier and the speedup over the baseline — so the
+//! compute-core speedup is a tracked number from PR to PR, not a claim.
+//! Single-threaded on purpose: this measures the kernel, not the
+//! thread pool (`pipeline_json` covers end-to-end runs).
+//!
+//!     cargo bench --bench gram_json
+//!
+//! Knobs: `DKKM_SCALE` multiplies the block shape, `DKKM_REPEATS` sets
+//! timed repetitions per configuration (best-of is reported).
+use dkkm::kernels::microkernel::{self, PackedPanel};
+use dkkm::kernels::KernelFn;
+use dkkm::linalg::{row_sq_norms, simd, Mat};
+use dkkm::util::json::Json;
+use dkkm::util::rng::Rng;
+use dkkm::util::stats::{bench_repeats, bench_scale, Table, Timer};
+
+/// Best-of-N wall time of `f` in seconds.
+fn best_of(repeats: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..repeats.max(1) {
+        let t = Timer::start();
+        f();
+        best = best.min(t.elapsed_s());
+    }
+    best
+}
+
+fn main() {
+    let scale = bench_scale();
+    let rows = ((2048.0 * scale) as usize).max(128);
+    let cols = ((512.0 * scale) as usize).clamp(64, rows);
+    let repeats = bench_repeats();
+    let tiers = simd::supported_tiers();
+    let default_tier = simd::active_tier();
+    println!(
+        "== Gram micro-kernel bench: {rows}x{cols} RBF blocks, {repeats} repeats ==\n\
+         host tiers: {:?}, dispatching: {default_tier}\n",
+        tiers.iter().map(|t| t.name()).collect::<Vec<_>>()
+    );
+
+    let mut table = Table::new(&["d", "path", "seconds", "GFLOP/s", "vs dot4"]);
+    let mut results = Vec::new();
+    for &d in &[16usize, 64, 256] {
+        // gamma ~ 1/d keeps RBF outputs near e^-1 for N(0,1) data
+        // (E[d2] ≈ 2d), so the cross-tier equivalence assertion compares
+        // meaningful values at every depth instead of saturating to ~0
+        let kernel = KernelFn::Rbf { gamma: 1.0 / (2.0 * d as f32) };
+        let mut rng = Rng::new(0xB5E + d as u64);
+        let x = Mat::from_fn(rows, d, |_, _| rng.normal32(0.0, 1.0));
+        let row_idx: Vec<usize> = (0..rows).collect();
+        let col_idx: Vec<usize> = (0..cols).map(|j| (j * rows / cols) % rows).collect();
+        let xn = row_sq_norms(&x);
+        let yn: Vec<f32> = col_idx.iter().map(|&j| xn[j]).collect();
+        let flops = 2.0 * rows as f64 * cols as f64 * d as f64;
+
+        // --- baseline: the pre-PR-4 autovectorized dot4 path
+        let mut base_out = vec![0.0f32; rows * cols];
+        let base_s = best_of(repeats, || {
+            microkernel::fill_block_dot4(&x, &row_idx, &col_idx, kernel, &mut base_out);
+        });
+        let base_gflops = flops / base_s / 1e9;
+        table.row(&[
+            format!("{d}"),
+            "dot4-reference".into(),
+            format!("{base_s:.4}"),
+            format!("{base_gflops:.2}"),
+            "1.00x".into(),
+        ]);
+        results.push(Json::obj(vec![
+            ("d", Json::num(d as f64)),
+            ("path", Json::str("dot4-reference")),
+            ("seconds_best", Json::num(base_s)),
+            ("gflops", Json::num(base_gflops)),
+            ("speedup_vs_dot4", Json::num(1.0)),
+        ]));
+
+        // --- every executable tier of the dispatched micro-kernel
+        // (packing is timed too: it is part of every block fill)
+        for &tier in &tiers {
+            let mut out = vec![0.0f32; rows * cols];
+            let s = best_of(repeats, || {
+                let packed = PackedPanel::pack_gather(&x, &col_idx);
+                microkernel::fill_gram_rows(
+                    tier, &x, &row_idx, &packed, &xn, &yn, kernel, &mut out,
+                );
+            });
+            // equivalence spot-check against the baseline
+            let max_diff = out
+                .iter()
+                .zip(&base_out)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_diff < 1e-3,
+                "tier {tier} diverges from dot4 at d={d}: max |diff| = {max_diff}"
+            );
+            let gflops = flops / s / 1e9;
+            let speedup = base_s / s;
+            table.row(&[
+                format!("{d}"),
+                tier.name().into(),
+                format!("{s:.4}"),
+                format!("{gflops:.2}"),
+                format!("{speedup:.2}x"),
+            ]);
+            results.push(Json::obj(vec![
+                ("d", Json::num(d as f64)),
+                ("path", Json::str(tier.name())),
+                ("seconds_best", Json::num(s)),
+                ("gflops", Json::num(gflops)),
+                ("speedup_vs_dot4", Json::num(speedup)),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("gram")),
+        ("rows", Json::num(rows as f64)),
+        ("cols", Json::num(cols as f64)),
+        ("repeats", Json::num(repeats as f64)),
+        ("dispatch_tier", Json::str(default_tier.name())),
+        (
+            "host_tiers",
+            Json::arr(tiers.iter().map(|t| Json::str(t.name()))),
+        ),
+        ("results", Json::arr(results)),
+    ]);
+    let out = std::env::var("DKKM_BENCH_OUT").unwrap_or_else(|_| "BENCH_gram.json".into());
+    std::fs::write(&out, report.to_string()).expect("write bench json");
+    println!("\nwrote {out}");
+}

@@ -11,8 +11,19 @@
 //! stream of budget-sized tiles (`kernels::tiles`). Every per-row value
 //! is computed from that row's kernel entries alone, so the tile-wise
 //! sweep is bit-identical to the whole-panel one.
+//!
+//! The update step is cast as dense linear algebra over the packed
+//! micro-kernel (`kernels::microkernel`), following the
+//! communication-avoiding formulation (Bellavita et al.) of Chitta et
+//! al.'s `K_nl · indicator` products: an [`Indicator`] packs the `L x C`
+//! landmark one-hot matrix once per label update (scaled by `1/|w_j|`),
+//! `f = K_block · M · diag(1/|w|)` becomes one GEMM per block,
+//! compactness becomes `g_j = inv_j² · (Mᵀ K_ll M)_jj`, and the label
+//! update is a branchless row-argmin over `g_j - 2 f_rj` with empty
+//! clusters masked to +inf.
+use crate::kernels::microkernel::{self, PackedPanel};
 use crate::kernels::GramView;
-use crate::linalg::Mat;
+use crate::linalg::{simd, Mat};
 
 /// Per-cluster statistics derived from landmark labels.
 #[derive(Clone, Debug)]
@@ -27,7 +38,10 @@ pub struct ClusterStats {
 
 impl ClusterStats {
     /// Compute counts, inv and g from the landmark-vs-landmark kernel
-    /// block and landmark labels. O(L^2) — L is small by construction.
+    /// block and landmark labels. The quadratic form is evaluated as
+    /// linear algebra on the micro-kernel: `t = K_ll · M` (one-hot `M`),
+    /// then `g_j = inv_j² · sum_{m in j} t[m][j]` — the diagonal of
+    /// `Mᵀ K_ll M` without materializing it.
     pub fn compute(k_ll: &Mat, lm_labels: &[usize], c: usize) -> ClusterStats {
         let l = lm_labels.len();
         assert_eq!(k_ll.rows(), l);
@@ -41,23 +55,12 @@ impl ClusterStats {
             .iter()
             .map(|&s| if s > 0 { 1.0 / s as f32 } else { 0.0 })
             .collect();
-        // g_j = inv_j^2 sum_{m,n in j} K_mn, accumulated row-wise:
-        // for each row m, add inv^2 * sum_{n in j(m)==j} ... grouped by
-        // (label(m), label(n)) pairs where only equal labels contribute.
+        let onehot = Indicator::onehot(lm_labels, c);
+        let mut t = vec![0.0f32; l * c];
+        onehot.apply_rows(k_ll.data(), &mut t);
         let mut g = vec![0.0f64; c];
-        for m in 0..l {
-            let um = lm_labels[m];
-            if counts[um] == 0 {
-                continue;
-            }
-            let row = k_ll.row(m);
-            let mut acc = 0.0f64;
-            for (n, &kv) in row.iter().enumerate() {
-                if lm_labels[n] == um {
-                    acc += kv as f64;
-                }
-            }
-            g[um] += acc;
+        for (m, &um) in lm_labels.iter().enumerate() {
+            g[um] += t[m * c + um] as f64;
         }
         let g: Vec<f32> = g
             .iter()
@@ -71,25 +74,84 @@ impl ClusterStats {
     pub fn valid(&self) -> Vec<bool> {
         self.counts.iter().map(|&s| s > 0).collect()
     }
+
+    /// `g` with empty clusters mapped to +inf: the branchless argmin mask
+    /// (`+inf - 2 f` never wins, so empty clusters are never selected).
+    pub fn masked_g(&self) -> Vec<f32> {
+        masked_g(&self.g, &self.counts)
+    }
+}
+
+/// The argmin mask shared by the serial and sharded paths: `g` with
+/// empty clusters mapped to +inf (see [`ClusterStats::masked_g`]; the
+/// sharded backend calls this on its allreduced `g`).
+pub fn masked_g(g: &[f32], counts: &[usize]) -> Vec<f32> {
+    g.iter()
+        .zip(counts)
+        .map(|(&gj, &s)| if s > 0 { gj } else { f32::INFINITY })
+        .collect()
+}
+
+/// The packed `L x C` landmark-indicator matrix, built once per label
+/// update and contracted against kernel rows by the micro-kernel.
+/// `scaled` folds `diag(1/|w|)` into the columns so
+/// `f = K_block · M · diag(inv)` is a single GEMM; `onehot` keeps raw
+/// 0/1 columns for the compactness quadratic form.
+pub struct Indicator {
+    packed: PackedPanel,
+    depth: usize,
+    c: usize,
+}
+
+impl Indicator {
+    fn build(lm_labels: &[usize], c: usize, col_value: impl Fn(usize) -> f32) -> Indicator {
+        let l = lm_labels.len();
+        let mut m = Mat::zeros(l, c);
+        for (i, &u) in lm_labels.iter().enumerate() {
+            assert!(u < c, "label {u} out of range {c}");
+            m.set(i, u, col_value(u));
+        }
+        Indicator { packed: PackedPanel::pack_mat(&m), depth: l, c }
+    }
+
+    /// Indicator with `M[m][u_m] = inv[u_m]` (empty clusters stay 0).
+    pub fn scaled(lm_labels: &[usize], inv: &[f32]) -> Indicator {
+        Indicator::build(lm_labels, inv.len(), |u| inv[u])
+    }
+
+    /// Plain 0/1 indicator.
+    pub fn onehot(lm_labels: &[usize], c: usize) -> Indicator {
+        Indicator::build(lm_labels, c, |_| 1.0)
+    }
+
+    /// Number of clusters (output columns).
+    pub fn c(&self) -> usize {
+        self.c
+    }
+
+    /// Contract contiguous row-major kernel rows (`nrows x L`) against
+    /// the indicator: `out[r][j] = sum_m k_rows[r][m] * M[m][j]`.
+    pub fn apply_rows(&self, k_rows: &[f32], out: &mut [f32]) {
+        let nrows = if self.depth == 0 { 0 } else { k_rows.len() / self.depth };
+        microkernel::matmul_rows(
+            simd::active_tier(),
+            k_rows,
+            nrows,
+            self.depth,
+            &self.packed,
+            out,
+        );
+    }
 }
 
 /// Cluster average similarity f (Eq.6/17): `f[r][j] = inv_j *
-/// sum_{m: label(m)=j} K[r][m]` for every row of the block.
+/// sum_{m: label(m)=j} K[r][m]` for every row of the block, computed as
+/// the GEMM `K_block · M · diag(inv)` with the scale folded into `M`.
 pub fn similarity_f(k_block: &Mat, lm_labels: &[usize], stats: &ClusterStats) -> Mat {
-    let c = stats.counts.len();
-    let rows = k_block.rows();
     assert_eq!(k_block.cols(), lm_labels.len());
-    let mut f = Mat::zeros(rows, c);
-    for r in 0..rows {
-        let krow = k_block.row(r);
-        let frow = f.row_mut(r);
-        for (m, &kv) in krow.iter().enumerate() {
-            frow[lm_labels[m]] += kv;
-        }
-        for (j, v) in frow.iter_mut().enumerate() {
-            *v *= stats.inv[j];
-        }
-    }
+    let ind = Indicator::scaled(lm_labels, &stats.inv);
+    let mut f = Mat::zeros(k_block.rows(), ind.c());
+    ind.apply_rows(k_block.data(), f.data_mut());
     f
 }
 
@@ -99,45 +161,53 @@ pub fn argmin_labels(f: &Mat, stats: &ClusterStats) -> Vec<usize> {
     let c = stats.counts.len();
     assert_eq!(f.cols(), c);
     let mut labels = Vec::with_capacity(f.rows());
-    for r in 0..f.rows() {
-        let frow = f.row(r);
-        let mut best = usize::MAX;
+    argmin_rows_into(f.data(), c, &stats.masked_g(), &mut labels);
+    labels
+}
+
+/// Branchless row-argmin of `g_j - 2 f_rj` over contiguous row-major
+/// `f` rows; `masked_g` carries +inf for empty clusters (see
+/// [`ClusterStats::masked_g`]), so no per-cluster branch is needed and
+/// the inner loop vectorizes. Ties keep the lowest cluster index,
+/// matching the historical scan order.
+pub fn argmin_rows_into(f: &[f32], c: usize, masked_g: &[f32], out: &mut Vec<usize>) {
+    assert!(c > 0 && f.len() % c == 0);
+    assert_eq!(masked_g.len(), c);
+    for frow in f.chunks_exact(c) {
+        let mut best = 0usize;
         let mut best_d = f32::INFINITY;
-        for j in 0..c {
-            if stats.counts[j] == 0 {
-                continue;
-            }
-            let d = stats.g[j] - 2.0 * frow[j];
+        for (j, (&g, &fv)) in masked_g.iter().zip(frow).enumerate() {
+            let d = g - 2.0 * fv;
             if d < best_d {
                 best_d = d;
                 best = j;
             }
         }
-        debug_assert!(best != usize::MAX, "all clusters empty");
-        labels.push(best);
+        debug_assert!(best_d < f32::INFINITY, "all clusters empty");
+        out.push(best);
     }
-    labels
 }
 
-/// Cluster average similarity f over a tiled view: assembles the full
-/// `rows x C` matrix tile by tile (C is small, so f always fits).
+/// Cluster average similarity f over a tiled view: one GEMM per tile,
+/// written straight into the assembled `rows x C` matrix (tile rows are
+/// contiguous in `f`, so no per-tile scratch is allocated).
 pub fn similarity_f_view(view: &GramView<'_>, lm_labels: &[usize], stats: &ClusterStats) -> Mat {
-    let c = stats.counts.len();
+    let ind = Indicator::scaled(lm_labels, &stats.inv);
+    let c = ind.c();
     let mut f = Mat::zeros(view.rows(), c);
     for t in 0..view.n_tiles() {
-        let (lo, _hi) = view.tile_range(t);
+        let (lo, hi) = view.tile_range(t);
         let tile = view.tile(t);
-        let ft = similarity_f(tile.mat(), lm_labels, stats);
-        for r in 0..ft.rows() {
-            f.row_mut(lo + r).copy_from_slice(ft.row(r));
-        }
+        ind.apply_rows(tile.mat().data(), &mut f.data_mut()[lo * c..hi * c]);
     }
     f
 }
 
 /// One fused inner-loop iteration on the native path: compute stats from
-/// `k_ll`, then f and labels tile-wise over the view. Mirrors the PJRT
-/// `inner_*` artifact.
+/// `k_ll`, then f and labels tile-wise over the view — the indicator is
+/// packed once per label update and one scratch `f` buffer (sized to the
+/// widest tile) is reused across tiles. Mirrors the PJRT `inner_*`
+/// artifact.
 pub fn inner_iteration_view(
     view: &GramView<'_>,
     k_ll: &Mat,
@@ -145,11 +215,16 @@ pub fn inner_iteration_view(
     c: usize,
 ) -> (Vec<usize>, ClusterStats) {
     let stats = ClusterStats::compute(k_ll, lm_labels, c);
+    let ind = Indicator::scaled(lm_labels, &stats.inv);
+    let masked_g = stats.masked_g();
     let mut labels = Vec::with_capacity(view.rows());
+    let mut scratch = vec![0.0f32; view.max_tile_rows() * c];
     for t in 0..view.n_tiles() {
+        let (lo, hi) = view.tile_range(t);
         let tile = view.tile(t);
-        let f = similarity_f(tile.mat(), lm_labels, &stats);
-        labels.extend(argmin_labels(&f, &stats));
+        let f = &mut scratch[..(hi - lo) * c];
+        ind.apply_rows(tile.mat().data(), f);
+        argmin_rows_into(f, c, &masked_g, &mut labels);
     }
     (labels, stats)
 }

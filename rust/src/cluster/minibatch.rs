@@ -22,6 +22,11 @@
 //! is produced as row tiles by a producer pool, pinned in memory up to
 //! the budget and spilled to disk beyond, while the inner GD loop
 //! consumes a [`GramView`] — bit-identical to the whole-panel path.
+//!
+//! Both the Gram fills and the inner-loop `K · indicator` contractions
+//! bottom out in the dispatched compute core (`kernels::microkernel`,
+//! tier selected once via `linalg::simd`, override `DKKM_SIMD=`), so
+//! native, sharded and tiled runs share one tuned kernel.
 use crate::data::{minibatch_indices, Sampling};
 use crate::kernels::tiles;
 use crate::kernels::{

@@ -76,6 +76,9 @@ impl RunReport {
             ),
             ("best_cost", Json::num(self.best_cost)),
             ("engine", self.engine.to_json()),
+            // the compute-core tier every native Gram fill and indicator
+            // GEMM dispatched to in this process (DKKM_SIMD override)
+            ("simd", Json::str(crate::linalg::simd::active_tier().name())),
             ("pipeline", pipeline_json(&self.pipeline)),
             (
                 "outer_iterations",

@@ -102,6 +102,7 @@ impl Session {
             }
         };
         let GramBuild { source, fallback } = build;
+        log_simd_tier_once();
         let requested = engine.name().to_string();
         // every degraded path serves native blocks; no fallback = the
         // engine's own path ran
@@ -312,6 +313,17 @@ fn log_fallback_once(engine: &str, reason: &str) {
     static LOGGED: OnceLock<()> = OnceLock::new();
     LOGGED.get_or_init(|| {
         eprintln!("dkkm: engine '{engine}' degraded to the native path: {reason}");
+    });
+}
+
+fn log_simd_tier_once() {
+    static LOGGED: OnceLock<()> = OnceLock::new();
+    LOGGED.get_or_init(|| {
+        eprintln!(
+            "dkkm: compute core dispatching '{}' micro-kernels \
+             (override: DKKM_SIMD=avx2|sse2|scalar)",
+            crate::linalg::simd::active_tier()
+        );
     });
 }
 

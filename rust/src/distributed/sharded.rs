@@ -13,7 +13,7 @@
 //! The result is bit-identical to the serial backend (tested below),
 //! which is exactly the paper's point: the distribution touches only the
 //! schedule, not the math.
-use crate::cluster::assign::{argmin_labels, similarity_f, ClusterStats};
+use crate::cluster::assign::{argmin_rows_into, masked_g, ClusterStats, Indicator};
 use crate::cluster::minibatch::StepBackend;
 use crate::kernels::GramView;
 use crate::linalg::Mat;
@@ -43,6 +43,8 @@ impl StepBackend for ShardedBackend {
     ) -> (Vec<usize>, ClusterStats) {
         let n = k_nl.rows();
         let l = lm_labels.len();
+        assert_eq!(k_nl.cols(), l, "K_nl columns must match landmark count");
+        assert_eq!(k_ll.cols(), l, "K_ll must be L x L");
         let p = self.nodes.min(n.max(1));
         // whole panels shard by rows (historical layout); tiled panels
         // shard by tiles, which are contiguous row ranges, so each node
@@ -66,6 +68,13 @@ impl StepBackend for ShardedBackend {
             .map(|&s| if s > 0 { 1.0 / s as f32 } else { 0.0 })
             .collect();
 
+        // the packed indicators are built once per iteration and shared
+        // read-only by every node: the scaled one serves the f GEMMs,
+        // the one-hot one the compactness quadratic form — both run
+        // through the same dispatched micro-kernel as the serial path
+        let ind = Indicator::scaled(lm_labels, &inv);
+        let onehot = Indicator::onehot(lm_labels, c);
+
         let mut labels_out: Vec<usize> = vec![0; n];
         let mut g_out: Vec<f32> = vec![0.0; c];
         std::thread::scope(|scope| {
@@ -78,56 +87,58 @@ impl StepBackend for ShardedBackend {
                 let row_shards_whole = &row_shards_whole;
                 let inv = &inv;
                 let counts = &counts;
+                let ind = &ind;
+                let onehot = &onehot;
                 handles.push(scope.spawn(move || {
                     // --- partial g from this node's landmark rows:
                     // g_j = inv_j^2 sum_{m in shard, n: u_n = u_m = j} K_mn
+                    // = inv_j^2 * (K_ll[shard] · M_onehot)[m][u_m] summed
                     let mut g_partial = vec![0.0f32; c];
-                    for m in llo..lhi {
-                        let um = lm_labels[m];
-                        if counts[um] == 0 {
-                            continue;
+                    if lhi > llo {
+                        let mut t = vec![0.0f32; (lhi - llo) * c];
+                        onehot.apply_rows(&k_ll.data()[llo * l..lhi * l], &mut t);
+                        for (r, m) in (llo..lhi).enumerate() {
+                            let um = lm_labels[m];
+                            g_partial[um] += t[r * c + um] * inv[um] * inv[um];
                         }
-                        let row = k_ll.row(m);
-                        let mut acc = 0.0f64;
-                        for (nn, &kv) in row.iter().enumerate() {
-                            if lm_labels[nn] == um {
-                                acc += kv as f64;
-                            }
-                        }
-                        g_partial[um] += acc as f32 * inv[um] * inv[um];
                     }
                     // --- collective 1: allreduce(sum) of g
                     let g = comm.allreduce_sum(&g_partial);
-                    let stats = ClusterStats {
-                        counts: counts.clone(),
-                        inv: inv.clone(),
-                        g: g.clone(),
+                    let g_mask = masked_g(&g, counts);
+                    // --- local f (one GEMM per slice/tile into a reused
+                    //     scratch buffer) + argmin over this node's rows
+                    let scratch_rows = match (&view, tile_shards) {
+                        (GramView::Whole(_), _) => {
+                            let (lo, hi) = row_shards_whole[rank];
+                            hi - lo
+                        }
+                        (GramView::Tiled(_), _) => view.max_tile_rows(),
                     };
-                    // --- local f + argmin over this node's slice
-                    let (lo, local_labels) = match (&view, tile_shards) {
+                    let mut scratch = vec![0.0f32; scratch_rows * c];
+                    let mut local_labels = Vec::new();
+                    let lo = match (&view, tile_shards) {
                         (GramView::Whole(mat), _) => {
                             let (lo, hi) = row_shards_whole[rank];
                             if hi > lo {
-                                let block = mat.row_slice(lo, hi);
-                                let f = similarity_f(&block, lm_labels, &stats);
-                                (lo, argmin_labels(&f, &stats))
-                            } else {
-                                (lo, Vec::new())
+                                let f = &mut scratch[..(hi - lo) * c];
+                                ind.apply_rows(&mat.data()[lo * l..hi * l], f);
+                                argmin_rows_into(f, c, &g_mask, &mut local_labels);
                             }
+                            lo
                         }
                         (GramView::Tiled(_), Some(shards)) => {
                             let (tlo, thi) = shards[rank];
                             if thi > tlo {
-                                let lo = view.tile_range(tlo).0;
-                                let mut local = Vec::new();
                                 for t in tlo..thi {
+                                    let (rlo, rhi) = view.tile_range(t);
                                     let tile = view.tile(t);
-                                    let f = similarity_f(tile.mat(), lm_labels, &stats);
-                                    local.extend(argmin_labels(&f, &stats));
+                                    let f = &mut scratch[..(rhi - rlo) * c];
+                                    ind.apply_rows(tile.mat().data(), f);
+                                    argmin_rows_into(f, c, &g_mask, &mut local_labels);
                                 }
-                                (lo, local)
+                                view.tile_range(tlo).0
                             } else {
-                                (n, Vec::new())
+                                n
                             }
                         }
                         (GramView::Tiled(_), None) => unreachable!("tile shards computed above"),

@@ -1,9 +1,10 @@
 //! Gram-block sources: the interface between data and the clusterer.
 use std::sync::Arc;
 
-use crate::linalg::{qcp_rmsd, Frame, Mat};
+use crate::linalg::{qcp_rmsd, row_sq_norms, simd, Frame, Mat};
 use crate::util::threadpool;
 
+use super::microkernel::{self, PackedPanel};
 use super::KernelFn;
 
 /// Anything that can produce rectangular kernel blocks over sample
@@ -38,19 +39,25 @@ pub trait GramSource: Sync {
     }
 }
 
-/// Vector-space data with a kernel function, evaluated natively
-/// (blocked + multithreaded). This is the CPU fallback / test oracle; the
-/// PJRT path (`runtime::PjrtGram`) produces the same numbers through the
-/// AOT Pallas artifacts.
+/// Vector-space data with a kernel function, evaluated natively through
+/// the dispatched micro-kernel (`kernels::microkernel`, blocked +
+/// multithreaded). This is the CPU fallback / test oracle; the PJRT path
+/// (`runtime::PjrtGram`) produces the same numbers through the AOT
+/// Pallas artifacts.
 pub struct VecGram {
     x: Mat,
     kernel: KernelFn,
     threads: usize,
+    /// Per-sample squared norms, computed once at construction: `block`
+    /// reads both its row norms (`xn[rows[i]]`) and its column norms
+    /// (`xn[cols[j]]`) from this cache instead of re-summing per call.
+    xn: Vec<f32>,
 }
 
 impl VecGram {
     pub fn new(x: Mat, kernel: KernelFn, threads: usize) -> VecGram {
-        VecGram { x, kernel, threads: threads.max(1) }
+        let xn = row_sq_norms(&x);
+        VecGram { x, kernel, threads: threads.max(1), xn }
     }
 
     pub fn kernel(&self) -> KernelFn {
@@ -71,64 +78,33 @@ impl GramSource for VecGram {
         assert_eq!(out.len(), rows.len() * cols.len());
         let d = self.x.cols();
         let ncols = cols.len();
-        // gather column samples once (rows stream per chunk)
-        let ymat = self.x.gather(cols);
-        let yn: Vec<f32> = (0..ymat.rows())
-            .map(|r| ymat.row(r).iter().map(|v| v * v).sum())
-            .collect();
+        if ncols == 0 || rows.is_empty() {
+            return;
+        }
+        // pack column samples once into NR-wide depth-major panels (the
+        // micro-kernel's layout); rows stream per worker chunk. Column
+        // squared norms come straight from the per-sample cache.
+        let packed = PackedPanel::pack_gather(&self.x, cols);
+        let yn: Vec<f32> = cols.iter().map(|&j| self.xn[j]).collect();
         let kernel = self.kernel;
+        let tier = simd::active_tier();
         let rows_per_chunk = (128 * 1024 / (d.max(1) * 4)).clamp(4, 128);
         threadpool::parallel_rows_mut(
             self.threads,
             out,
             ncols,
             rows_per_chunk,
-            |lo, _hi, blockbuf| {
-                for (r, out_row) in blockbuf.chunks_mut(ncols).enumerate() {
-                    let xi = self.x.row(rows[lo + r]);
-                    let xin: f32 = xi.iter().map(|v| v * v).sum();
-                    // 4-wide column micro-kernel: amortizes the x-row
-                    // stream across four dot products and breaks the
-                    // serial accumulator dependency (~2.5x over the naive
-                    // dot loop on this host; a 2x4 row-pair tile was
-                    // tried and *regressed* — see EXPERIMENTS.md §Perf
-                    // iteration log)
-                    let mut j = 0;
-                    while j + 4 <= ncols {
-                        let dots = dot4(
-                            xi,
-                            ymat.row(j),
-                            ymat.row(j + 1),
-                            ymat.row(j + 2),
-                            ymat.row(j + 3),
-                        );
-                        for t in 0..4 {
-                            let d2 = (xin + yn[j + t] - 2.0 * dots[t]).max(0.0);
-                            out_row[j + t] = kernel.from_parts(d2, dots[t]);
-                        }
-                        j += 4;
-                    }
-                    while j < ncols {
-                        let yj = ymat.row(j);
-                        let mut acc = [0.0f32; 4];
-                        let mut k = 0;
-                        while k + 4 <= d {
-                            acc[0] += xi[k] * yj[k];
-                            acc[1] += xi[k + 1] * yj[k + 1];
-                            acc[2] += xi[k + 2] * yj[k + 2];
-                            acc[3] += xi[k + 3] * yj[k + 3];
-                            k += 4;
-                        }
-                        let mut dot = acc[0] + acc[1] + acc[2] + acc[3];
-                        while k < d {
-                            dot += xi[k] * yj[k];
-                            k += 1;
-                        }
-                        let d2 = (xin + yn[j] - 2.0 * dot).max(0.0);
-                        out_row[j] = kernel.from_parts(d2, dot);
-                        j += 1;
-                    }
-                }
+            |lo, hi, blockbuf| {
+                microkernel::fill_gram_rows(
+                    tier,
+                    &self.x,
+                    &rows[lo..hi],
+                    &packed,
+                    &self.xn,
+                    &yn,
+                    kernel,
+                    blockbuf,
+                );
             },
         );
     }
@@ -144,44 +120,6 @@ impl GramSource for VecGram {
             }
         }
     }
-}
-
-/// Four simultaneous dot products of `x` against y0..y3 (column
-/// micro-kernel of the native Gram path). Plain indexed code the
-/// autovectorizer turns into wide FMAs.
-#[inline]
-fn dot4(x: &[f32], y0: &[f32], y1: &[f32], y2: &[f32], y3: &[f32]) -> [f32; 4] {
-    let d = x.len();
-    let mut acc = [0.0f32; 4];
-    let mut k = 0;
-    // trust-region for the autovectorizer: fixed-width inner block
-    while k + 8 <= d {
-        let mut a0 = 0.0f32;
-        let mut a1 = 0.0f32;
-        let mut a2 = 0.0f32;
-        let mut a3 = 0.0f32;
-        for t in 0..8 {
-            let xv = x[k + t];
-            a0 += xv * y0[k + t];
-            a1 += xv * y1[k + t];
-            a2 += xv * y2[k + t];
-            a3 += xv * y3[k + t];
-        }
-        acc[0] += a0;
-        acc[1] += a1;
-        acc[2] += a2;
-        acc[3] += a3;
-        k += 8;
-    }
-    while k < d {
-        let xv = x[k];
-        acc[0] += xv * y0[k];
-        acc[1] += xv * y1[k];
-        acc[2] += xv * y2[k];
-        acc[3] += xv * y3[k];
-        k += 1;
-    }
-    acc
 }
 
 /// MD frames with the RMSD-RBF kernel `exp(-rmsd^2 / (2 sigma^2))`.

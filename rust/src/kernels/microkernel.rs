@@ -1,0 +1,606 @@
+//! Packed, register-blocked micro-kernel — the one tuned compute core
+//! every Gram-block and inner-loop contraction runs through.
+//!
+//! The hot shape everywhere in this crate is "a handful of long `f32`
+//! rows against a shared set of columns": mini-batch rows against
+//! landmark samples when filling `K_nl` (`VecGram::block`), kernel rows
+//! against the landmark-indicator matrix when forming the cluster
+//! similarity `f = K · M · diag(1/|w|)` (`cluster::assign`). Both are
+//! served by the same GEMM-style kernel:
+//!
+//! * columns are packed once into [`PackedPanel`]s — [`NR`]-wide,
+//!   depth-major interleaved panels, so the inner loop issues one
+//!   contiguous [`NR`]-lane load per depth step no matter how scattered
+//!   the source columns were;
+//! * rows are register-blocked `MR` at a time (4 for AVX2+FMA, 2 for
+//!   SSE2), each row owning two independent accumulator chains (depth
+//!   unrolled by 2) so the FMA latency is hidden behind 2·MR chains;
+//! * the Gram entry point fuses the kernel-function epilogue: squared
+//!   distances are assembled from the accumulated dots plus cached
+//!   row/column squared norms (`d² = ‖x‖² + ‖y‖² − 2·x·y`, clamped), and
+//!   `KernelFn::from_parts` maps them to RBF/poly/linear values while the
+//!   dot block is still hot.
+//!
+//! Which implementation runs is decided once per process by
+//! [`crate::linalg::simd::active_tier`] (override: `DKKM_SIMD=`). All
+//! tiers are deterministic and **independent of row grouping**: a row's
+//! result depends only on its own data and the packed panel, never on
+//! which rows share its register block — this is what keeps the tiled,
+//! sharded and whole-panel paths bit-identical to each other.
+//!
+//! `fill_block_dot4` preserves the pre-micro-kernel path (the
+//! autovectorizer-dependent 4-column `dot4` loop) as the baseline that
+//! `benches/gram_json.rs` reports speedups against and the oracle the
+//! property suite compares every tier to.
+use crate::linalg::simd::SimdTier;
+use crate::linalg::Mat;
+
+use super::KernelFn;
+
+/// Packed panel width: one AVX2 register of `f32` lanes. SSE2 consumes
+/// the same panels as two 4-lane halves; the scalar tier as plain arrays.
+pub const NR: usize = 8;
+
+/// Largest row block any tier uses.
+pub const MR_MAX: usize = 4;
+
+/// Rows per register block for a tier (bounded by accumulator registers:
+/// 2 chains x MR rows must fit the architectural register file).
+fn mr_for(tier: SimdTier) -> usize {
+    match tier {
+        SimdTier::Avx2Fma => 4,
+        SimdTier::Sse2 => 2,
+        // scalar rows are independent; 4 amortizes the panel stream
+        SimdTier::Scalar => 4,
+    }
+}
+
+/// Column panels packed for the micro-kernel: [`NR`] columns interleaved
+/// depth-major (`panel[k * NR + t]` = element `k` of panel column `t`),
+/// zero-padded to a multiple of [`NR`] columns. Padding lanes produce
+/// garbage dots that the epilogue never reads.
+pub struct PackedPanel {
+    data: Vec<f32>,
+    ncols: usize,
+    depth: usize,
+}
+
+impl PackedPanel {
+    /// Pack rows `cols` of `x` as panel columns (the Gram layout:
+    /// column `j` of the block is sample `cols[j]`, depth = feature dim).
+    pub fn pack_gather(x: &Mat, cols: &[usize]) -> PackedPanel {
+        let depth = x.cols();
+        let ncols = cols.len();
+        let mut data = vec![0.0f32; ncols.div_ceil(NR) * depth * NR];
+        for (j, &col) in cols.iter().enumerate() {
+            let (p, t) = (j / NR, j % NR);
+            let panel = &mut data[p * depth * NR..(p + 1) * depth * NR];
+            for (k, &v) in x.row(col).iter().enumerate() {
+                panel[k * NR + t] = v;
+            }
+        }
+        PackedPanel { data, ncols, depth }
+    }
+
+    /// Pack the columns of `m` as panel columns (the GEMM layout used for
+    /// the landmark-indicator matrix: depth = rows of `m`).
+    pub fn pack_mat(m: &Mat) -> PackedPanel {
+        let depth = m.rows();
+        let ncols = m.cols();
+        let mut data = vec![0.0f32; ncols.div_ceil(NR) * depth * NR];
+        for k in 0..depth {
+            for (j, &v) in m.row(k).iter().enumerate() {
+                let (p, t) = (j / NR, j % NR);
+                data[p * depth * NR + k * NR + t] = v;
+            }
+        }
+        PackedPanel { data, ncols, depth }
+    }
+
+    /// Packed (unpadded) column count.
+    pub fn ncols(&self) -> usize {
+        self.ncols
+    }
+
+    /// Contraction depth (feature dim for Gram panels, L for indicators).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Number of [`NR`]-wide panels.
+    pub fn n_panels(&self) -> usize {
+        self.ncols.div_ceil(NR)
+    }
+
+    fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.depth * NR..(p + 1) * self.depth * NR]
+    }
+}
+
+/// Fill a Gram block: `out[i][j] = kernel(x[rows[i]], packed column j)`.
+///
+/// `xn` holds squared norms indexed by **sample id** (so `xn[rows[i]]`
+/// is row `i`'s norm); `yn` holds squared norms of the packed columns in
+/// packed order. Row results are independent of how rows are chunked
+/// across calls or grouped into register blocks, so any row partition of
+/// the same (tier, packed panel) is bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_gram_rows(
+    tier: SimdTier,
+    x: &Mat,
+    rows: &[usize],
+    packed: &PackedPanel,
+    xn: &[f32],
+    yn: &[f32],
+    kernel: KernelFn,
+    out: &mut [f32],
+) {
+    let ncols = packed.ncols();
+    assert_eq!(out.len(), rows.len() * ncols);
+    assert_eq!(yn.len(), ncols);
+    assert_eq!(packed.depth(), x.cols());
+    assert!(
+        tier.is_available(),
+        "SIMD tier {tier} is not executable on this host"
+    );
+    let depth = packed.depth();
+    let mr = mr_for(tier);
+    let mut r = 0;
+    while r < rows.len() {
+        let m = mr.min(rows.len() - r);
+        let mut arows: [&[f32]; MR_MAX] = [&[]; MR_MAX];
+        for i in 0..m {
+            arows[i] = x.row(rows[r + i]);
+        }
+        let mut dots = [[0.0f32; NR]; MR_MAX];
+        for p in 0..packed.n_panels() {
+            panel_dots(tier, &arows[..m], packed.panel(p), depth, &mut dots[..m]);
+            let jlo = p * NR;
+            let jhi = (jlo + NR).min(ncols);
+            for i in 0..m {
+                let xnr = xn[rows[r + i]];
+                let orow = &mut out[(r + i) * ncols..(r + i + 1) * ncols];
+                for (t, j) in (jlo..jhi).enumerate() {
+                    let dot = dots[i][t];
+                    let d2 = (xnr + yn[j] - 2.0 * dot).max(0.0);
+                    orow[j] = kernel.from_parts(d2, dot);
+                }
+            }
+        }
+        r += m;
+    }
+}
+
+/// `out = A · P` for a contiguous row-major row block `a_rows`
+/// (`nrows x depth`) against a packed panel set (`depth x ncols`). The
+/// raw-dot twin of [`fill_gram_rows`] — no kernel epilogue — used for
+/// the `f = K_block · M · diag(1/|w|)` and `K_ll · M` contractions of
+/// the inner loop. Row results are independent of row grouping.
+pub fn matmul_rows(
+    tier: SimdTier,
+    a_rows: &[f32],
+    nrows: usize,
+    depth: usize,
+    packed: &PackedPanel,
+    out: &mut [f32],
+) {
+    let ncols = packed.ncols();
+    assert_eq!(a_rows.len(), nrows * depth);
+    assert_eq!(depth, packed.depth());
+    assert_eq!(out.len(), nrows * ncols);
+    assert!(
+        tier.is_available(),
+        "SIMD tier {tier} is not executable on this host"
+    );
+    let mr = mr_for(tier);
+    let mut r = 0;
+    while r < nrows {
+        let m = mr.min(nrows - r);
+        let mut arows: [&[f32]; MR_MAX] = [&[]; MR_MAX];
+        for i in 0..m {
+            arows[i] = &a_rows[(r + i) * depth..(r + i + 1) * depth];
+        }
+        let mut dots = [[0.0f32; NR]; MR_MAX];
+        for p in 0..packed.n_panels() {
+            panel_dots(tier, &arows[..m], packed.panel(p), depth, &mut dots[..m]);
+            let jlo = p * NR;
+            let jhi = (jlo + NR).min(ncols);
+            for i in 0..m {
+                let orow = &mut out[(r + i) * ncols..(r + i + 1) * ncols];
+                orow[jlo..jhi].copy_from_slice(&dots[i][..jhi - jlo]);
+            }
+        }
+        r += m;
+    }
+}
+
+/// Whole-`Mat` convenience over [`matmul_rows`].
+pub fn matmul_packed(tier: SimdTier, a: &Mat, packed: &PackedPanel, out: &mut [f32]) {
+    matmul_rows(tier, a.data(), a.rows(), a.cols(), packed, out);
+}
+
+/// Dispatch one `(<= MR) x NR` register block: `out[i] = arows[i] · P`.
+#[inline]
+fn panel_dots(
+    tier: SimdTier,
+    arows: &[&[f32]],
+    panel: &[f32],
+    depth: usize,
+    out: &mut [[f32; NR]],
+) {
+    debug_assert!(panel.len() >= depth * NR);
+    debug_assert!(arows.len() <= out.len() && arows.len() <= mr_for(tier));
+    debug_assert!(arows.iter().all(|a| a.len() == depth));
+    match tier {
+        // SAFETY: the public entry points assert `tier.is_available()`,
+        // so the required CPU features are present when these arms run.
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2Fma => unsafe { x86::panel_dots_avx2(arows, panel, depth, out) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { x86::panel_dots_sse2(arows, panel, depth, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdTier::Avx2Fma | SimdTier::Sse2 => panel_dots_scalar(arows, panel, depth, out),
+        SimdTier::Scalar => panel_dots_scalar(arows, panel, depth, out),
+    }
+}
+
+/// Scalar reference block: the exact accumulation shape (two chains per
+/// row, NR lanes) the vector tiers implement, in plain Rust.
+fn panel_dots_scalar(arows: &[&[f32]], panel: &[f32], depth: usize, out: &mut [[f32; NR]]) {
+    for (arow, orow) in arows.iter().zip(out.iter_mut()) {
+        let mut acc0 = [0.0f32; NR];
+        let mut acc1 = [0.0f32; NR];
+        let mut k = 0;
+        while k + 2 <= depth {
+            let a0 = arow[k];
+            let a1 = arow[k + 1];
+            let y0 = &panel[k * NR..k * NR + NR];
+            let y1 = &panel[(k + 1) * NR..(k + 1) * NR + NR];
+            for t in 0..NR {
+                acc0[t] += a0 * y0[t];
+                acc1[t] += a1 * y1[t];
+            }
+            k += 2;
+        }
+        if k < depth {
+            let a0 = arow[k];
+            let y0 = &panel[k * NR..k * NR + NR];
+            for t in 0..NR {
+                acc0[t] += a0 * y0[t];
+            }
+        }
+        for t in 0..NR {
+            orow[t] = acc0[t] + acc1[t];
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! Intrinsic tiers. Both keep one accumulator pair per row with the
+    //! depth loop unrolled by 2, mirroring `panel_dots_scalar`'s shape,
+    //! and never let a row's arithmetic depend on its block-mates.
+    use std::arch::x86_64::*;
+
+    use super::{MR_MAX, NR};
+
+    /// # Safety
+    /// Requires AVX2 + FMA (asserted by the public entry points).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn panel_dots_avx2(
+        arows: &[&[f32]],
+        panel: &[f32],
+        depth: usize,
+        out: &mut [[f32; NR]],
+    ) {
+        let m = arows.len();
+        let py = panel.as_ptr();
+        let mut acc0 = [_mm256_setzero_ps(); MR_MAX];
+        let mut acc1 = [_mm256_setzero_ps(); MR_MAX];
+        let mut k = 0;
+        while k + 2 <= depth {
+            let y0 = _mm256_loadu_ps(py.add(k * NR));
+            let y1 = _mm256_loadu_ps(py.add((k + 1) * NR));
+            for i in 0..m {
+                let a = arows[i];
+                acc0[i] = _mm256_fmadd_ps(_mm256_set1_ps(*a.get_unchecked(k)), y0, acc0[i]);
+                acc1[i] = _mm256_fmadd_ps(_mm256_set1_ps(*a.get_unchecked(k + 1)), y1, acc1[i]);
+            }
+            k += 2;
+        }
+        if k < depth {
+            let y0 = _mm256_loadu_ps(py.add(k * NR));
+            for i in 0..m {
+                acc0[i] = _mm256_fmadd_ps(_mm256_set1_ps(*arows[i].get_unchecked(k)), y0, acc0[i]);
+            }
+        }
+        for i in 0..m {
+            _mm256_storeu_ps(out[i].as_mut_ptr(), _mm256_add_ps(acc0[i], acc1[i]));
+        }
+    }
+
+    /// # Safety
+    /// SSE2 is baseline on x86_64; unsafe only for the raw loads/stores.
+    pub unsafe fn panel_dots_sse2(
+        arows: &[&[f32]],
+        panel: &[f32],
+        depth: usize,
+        out: &mut [[f32; NR]],
+    ) {
+        debug_assert!(arows.len() <= 2);
+        let m = arows.len();
+        let py = panel.as_ptr();
+        let mut acc0lo = [_mm_setzero_ps(); 2];
+        let mut acc0hi = [_mm_setzero_ps(); 2];
+        let mut acc1lo = [_mm_setzero_ps(); 2];
+        let mut acc1hi = [_mm_setzero_ps(); 2];
+        let mut k = 0;
+        while k + 2 <= depth {
+            let y0lo = _mm_loadu_ps(py.add(k * NR));
+            let y0hi = _mm_loadu_ps(py.add(k * NR + 4));
+            let y1lo = _mm_loadu_ps(py.add((k + 1) * NR));
+            let y1hi = _mm_loadu_ps(py.add((k + 1) * NR + 4));
+            for i in 0..m {
+                let a = arows[i];
+                let av0 = _mm_set1_ps(*a.get_unchecked(k));
+                let av1 = _mm_set1_ps(*a.get_unchecked(k + 1));
+                acc0lo[i] = _mm_add_ps(acc0lo[i], _mm_mul_ps(av0, y0lo));
+                acc0hi[i] = _mm_add_ps(acc0hi[i], _mm_mul_ps(av0, y0hi));
+                acc1lo[i] = _mm_add_ps(acc1lo[i], _mm_mul_ps(av1, y1lo));
+                acc1hi[i] = _mm_add_ps(acc1hi[i], _mm_mul_ps(av1, y1hi));
+            }
+            k += 2;
+        }
+        if k < depth {
+            let y0lo = _mm_loadu_ps(py.add(k * NR));
+            let y0hi = _mm_loadu_ps(py.add(k * NR + 4));
+            for i in 0..m {
+                let av0 = _mm_set1_ps(*arows[i].get_unchecked(k));
+                acc0lo[i] = _mm_add_ps(acc0lo[i], _mm_mul_ps(av0, y0lo));
+                acc0hi[i] = _mm_add_ps(acc0hi[i], _mm_mul_ps(av0, y0hi));
+            }
+        }
+        for i in 0..m {
+            _mm_storeu_ps(out[i].as_mut_ptr(), _mm_add_ps(acc0lo[i], acc1lo[i]));
+            _mm_storeu_ps(out[i].as_mut_ptr().add(4), _mm_add_ps(acc0hi[i], acc1hi[i]));
+        }
+    }
+}
+
+/// The pre-micro-kernel Gram fill (4-wide `dot4` column loop relying on
+/// the autovectorizer), single-threaded. Retained as the speedup
+/// baseline of `benches/gram_json.rs` and the independent oracle of the
+/// SIMD property suite — do not "optimize" it.
+pub fn fill_block_dot4(
+    x: &Mat,
+    rows: &[usize],
+    cols: &[usize],
+    kernel: KernelFn,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), rows.len() * cols.len());
+    let d = x.cols();
+    let ncols = cols.len();
+    if ncols == 0 {
+        return;
+    }
+    let ymat = x.gather(cols);
+    let yn: Vec<f32> = (0..ymat.rows())
+        .map(|r| ymat.row(r).iter().map(|v| v * v).sum())
+        .collect();
+    for (out_row, &row) in out.chunks_mut(ncols).zip(rows) {
+        let xi = x.row(row);
+        let xin: f32 = xi.iter().map(|v| v * v).sum();
+        let mut j = 0;
+        while j + 4 <= ncols {
+            let dots = dot4(
+                xi,
+                ymat.row(j),
+                ymat.row(j + 1),
+                ymat.row(j + 2),
+                ymat.row(j + 3),
+            );
+            for t in 0..4 {
+                let d2 = (xin + yn[j + t] - 2.0 * dots[t]).max(0.0);
+                out_row[j + t] = kernel.from_parts(d2, dots[t]);
+            }
+            j += 4;
+        }
+        while j < ncols {
+            let yj = ymat.row(j);
+            let mut acc = [0.0f32; 4];
+            let mut k = 0;
+            while k + 4 <= d {
+                acc[0] += xi[k] * yj[k];
+                acc[1] += xi[k + 1] * yj[k + 1];
+                acc[2] += xi[k + 2] * yj[k + 2];
+                acc[3] += xi[k + 3] * yj[k + 3];
+                k += 4;
+            }
+            let mut dot = acc[0] + acc[1] + acc[2] + acc[3];
+            while k < d {
+                dot += xi[k] * yj[k];
+                k += 1;
+            }
+            let d2 = (xin + yn[j] - 2.0 * dot).max(0.0);
+            out_row[j] = kernel.from_parts(d2, dot);
+            j += 1;
+        }
+    }
+}
+
+/// Four simultaneous dot products of `x` against y0..y3 (the historical
+/// column micro-kernel; see [`fill_block_dot4`]).
+#[inline]
+fn dot4(x: &[f32], y0: &[f32], y1: &[f32], y2: &[f32], y3: &[f32]) -> [f32; 4] {
+    let d = x.len();
+    let mut acc = [0.0f32; 4];
+    let mut k = 0;
+    while k + 8 <= d {
+        let mut a0 = 0.0f32;
+        let mut a1 = 0.0f32;
+        let mut a2 = 0.0f32;
+        let mut a3 = 0.0f32;
+        for t in 0..8 {
+            let xv = x[k + t];
+            a0 += xv * y0[k + t];
+            a1 += xv * y1[k + t];
+            a2 += xv * y2[k + t];
+            a3 += xv * y3[k + t];
+        }
+        acc[0] += a0;
+        acc[1] += a1;
+        acc[2] += a2;
+        acc[3] += a3;
+        k += 8;
+    }
+    while k < d {
+        let xv = x[k];
+        acc[0] += xv * y0[k];
+        acc[1] += xv * y1[k];
+        acc[2] += xv * y2[k];
+        acc[3] += xv * y3[k];
+        k += 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::simd;
+    use crate::util::rng::Rng;
+
+    fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal32(0.0, 1.0))
+    }
+
+    #[test]
+    fn packed_panel_layout_and_padding() {
+        let x = Mat::from_fn(5, 3, |r, c| (r * 10 + c) as f32);
+        let p = PackedPanel::pack_gather(&x, &[4, 0, 2]);
+        assert_eq!(p.ncols(), 3);
+        assert_eq!(p.depth(), 3);
+        assert_eq!(p.n_panels(), 1);
+        let panel = p.panel(0);
+        // lane t of depth k is x[cols[t]][k]; lanes 3..8 are zero padding
+        assert_eq!(panel[0], 40.0);
+        assert_eq!(panel[1], 0.0);
+        assert_eq!(panel[2], 20.0);
+        assert_eq!(panel[NR], 41.0);
+        assert_eq!(panel[2 * NR + 2], 22.0);
+        assert!(panel.iter().skip(3).step_by(NR).all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn pack_mat_matches_pack_gather_on_transpose() {
+        let mut rng = Rng::new(0);
+        let m = random_mat(&mut rng, 7, 11); // depth 7, 11 columns
+        let a = PackedPanel::pack_mat(&m);
+        // transpose by hand, then gather its rows
+        let t = Mat::from_fn(11, 7, |r, c| m.at(c, r));
+        let idx: Vec<usize> = (0..11).collect();
+        let b = PackedPanel::pack_gather(&t, &idx);
+        assert_eq!(a.data, b.data);
+        assert_eq!((a.ncols, a.depth), (b.ncols, b.depth));
+    }
+
+    #[test]
+    fn matmul_matches_naive_all_tiers() {
+        let mut rng = Rng::new(1);
+        for &(n, k, c) in &[(13usize, 9usize, 5usize), (4, 16, 8), (1, 1, 1), (6, 7, 17)] {
+            let a = random_mat(&mut rng, n, k);
+            let b = random_mat(&mut rng, k, c);
+            let want = a.matmul(&b).unwrap();
+            let packed = PackedPanel::pack_mat(&b);
+            for tier in simd::supported_tiers() {
+                let mut out = vec![0.0f32; n * c];
+                matmul_packed(tier, &a, &packed, &mut out);
+                for (g, w) in out.iter().zip(want.data()) {
+                    assert!((g - w).abs() < 1e-4, "{tier}: {g} vs {w} ({n}x{k}x{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gram_fill_matches_dot4_reference() {
+        let mut rng = Rng::new(2);
+        let x = random_mat(&mut rng, 30, 19);
+        let rows: Vec<usize> = vec![3, 7, 0, 29, 15];
+        let cols: Vec<usize> = vec![1, 2, 28, 4, 9, 11, 20];
+        let xn: Vec<f32> = (0..30)
+            .map(|r| x.row(r).iter().map(|v| v * v).sum())
+            .collect();
+        let yn: Vec<f32> = cols.iter().map(|&j| xn[j]).collect();
+        for kernel in [
+            KernelFn::Linear,
+            KernelFn::Rbf { gamma: 0.3 },
+            KernelFn::Poly { degree: 2, c: 1.0 },
+        ] {
+            let mut want = vec![0.0f32; rows.len() * cols.len()];
+            fill_block_dot4(&x, &rows, &cols, kernel, &mut want);
+            let packed = PackedPanel::pack_gather(&x, &cols);
+            for tier in simd::supported_tiers() {
+                let mut got = vec![0.0f32; rows.len() * cols.len()];
+                fill_gram_rows(tier, &x, &rows, &packed, &xn, &yn, kernel, &mut got);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-4, "{tier} {kernel:?}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_partition_is_bit_identical() {
+        // a row's result must not depend on which rows share its register
+        // block — the invariant behind whole-vs-tiled bit-identity
+        let mut rng = Rng::new(3);
+        let x = random_mat(&mut rng, 23, 13);
+        let rows: Vec<usize> = (0..23).collect();
+        let cols: Vec<usize> = (0..23).step_by(2).collect();
+        let xn: Vec<f32> = (0..23)
+            .map(|r| x.row(r).iter().map(|v| v * v).sum())
+            .collect();
+        let yn: Vec<f32> = cols.iter().map(|&j| xn[j]).collect();
+        let kernel = KernelFn::Rbf { gamma: 0.2 };
+        let packed = PackedPanel::pack_gather(&x, &cols);
+        for tier in simd::supported_tiers() {
+            let mut whole = vec![0.0f32; rows.len() * cols.len()];
+            fill_gram_rows(tier, &x, &rows, &packed, &xn, &yn, kernel, &mut whole);
+            for split in [1usize, 3, 5, 22] {
+                let mut pieces = vec![0.0f32; rows.len() * cols.len()];
+                let mut lo = 0;
+                while lo < rows.len() {
+                    let hi = (lo + split).min(rows.len());
+                    fill_gram_rows(
+                        tier,
+                        &x,
+                        &rows[lo..hi],
+                        &packed,
+                        &xn,
+                        &yn,
+                        kernel,
+                        &mut pieces[lo * cols.len()..hi * cols.len()],
+                    );
+                    lo = hi;
+                }
+                assert_eq!(whole, pieces, "{tier} split={split}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shapes_are_noops() {
+        let x = Mat::zeros(4, 3);
+        let packed = PackedPanel::pack_gather(&x, &[]);
+        assert_eq!(packed.n_panels(), 0);
+        let xn = vec![0.0f32; 4];
+        let yn: Vec<f32> = Vec::new();
+        let mut out: Vec<f32> = Vec::new();
+        for tier in simd::supported_tiers() {
+            fill_gram_rows(tier, &x, &[0, 1], &packed, &xn, &yn, KernelFn::Linear, &mut out);
+            fill_gram_rows(tier, &x, &[], &packed, &xn, &yn, KernelFn::Linear, &mut out);
+        }
+    }
+}

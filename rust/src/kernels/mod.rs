@@ -22,14 +22,22 @@
 //! sized to an explicit byte budget, pinned in memory while the budget
 //! allows and spilled to disk beyond, and every `StepBackend` consumes
 //! the resulting [`GramView`] instead of a materialized `Mat`.
+//!
+//! [`microkernel`] is the compute core underneath the native paths: a
+//! CPU-feature-dispatched (AVX2+FMA / SSE2 / scalar, see
+//! `linalg::simd`), packed, register-blocked micro-kernel that fills
+//! Gram blocks with a fused kernel-function epilogue and serves the
+//! inner loop's `K · M` indicator contractions.
 mod diskcache;
 mod gram;
 mod kernel_fn;
+pub mod microkernel;
 pub mod tiles;
 
 pub use diskcache::DiskCachedGram;
 pub use gram::{GramSource, RmsdGram, VecGram};
 pub use kernel_fn::KernelFn;
+pub use microkernel::PackedPanel;
 pub use tiles::{
     run_pipeline, GramPanel, GramView, PanelFeed, PanelSpec, PipelineConfig, PipelineStats,
     SpillFile, TilePlan, TileRef, TiledPanel,

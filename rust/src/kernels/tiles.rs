@@ -316,6 +316,11 @@ impl TiledPanel {
         self.plan.tile_range(t)
     }
 
+    /// Rows of the widest tile (the last tile may be shorter).
+    pub fn max_tile_rows(&self) -> usize {
+        self.plan.tile_rows.min(self.plan.rows)
+    }
+
     /// Bytes held by the pinned cache.
     pub fn pinned_bytes(&self) -> usize {
         self.pinned_bytes
@@ -473,6 +478,15 @@ impl<'a> GramView<'a> {
                 (0, m.rows())
             }
             GramView::Tiled(p) => p.tile_range(t),
+        }
+    }
+
+    /// Rows of the widest tile — the scratch-buffer size consumers reuse
+    /// across tiles instead of allocating per tile.
+    pub fn max_tile_rows(&self) -> usize {
+        match self {
+            GramView::Whole(m) => m.rows(),
+            GramView::Tiled(p) => p.max_tile_rows(),
         }
     }
 

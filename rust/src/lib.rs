@@ -76,6 +76,7 @@ pub mod prelude {
     };
     pub use crate::data::Sampling;
     pub use crate::kernels::{GramSource, KernelFn, PipelineStats};
+    pub use crate::linalg::SimdTier;
     pub use crate::metrics::{accuracy, nmi};
     pub use crate::util::error::{Error, Result};
 }

@@ -1,10 +1,13 @@
 //! Dense row-major matrices + the linear algebra the pipeline needs:
 //! blocked pairwise squared distances, small matmuls for one-hot products,
-//! and Kabsch/QCP RMSD for roto-translationally invariant MD kernels.
+//! Kabsch/QCP RMSD for roto-translationally invariant MD kernels, and the
+//! CPU-feature dispatch ([`simd`]) behind the packed Gram micro-kernel.
 mod mat;
 mod pairwise;
 mod rmsd;
+pub mod simd;
 
 pub use mat::Mat;
 pub use pairwise::{sq_dists_block, sq_dists_block_into, row_sq_norms};
 pub use rmsd::{centroid, kabsch_rmsd, qcp_rmsd, Frame};
+pub use simd::SimdTier;

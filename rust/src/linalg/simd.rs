@@ -1,0 +1,163 @@
+//! CPU-feature dispatch for the packed Gram micro-kernel.
+//!
+//! The compute core (`kernels::microkernel`) ships three implementations
+//! of the same register-blocked panel kernel: AVX2+FMA, SSE2, and a
+//! plain-Rust scalar reference. Which one runs is decided **once** at
+//! startup — first use of [`active_tier`] — from CPUID feature detection,
+//! overridable via the `DKKM_SIMD` environment variable (`avx2`, `sse2`,
+//! `scalar`) for testing and apples-to-apples benchmarking. Requesting a
+//! tier the host cannot execute falls back to detection with a warning
+//! rather than dispatching illegal instructions.
+//!
+//! Tiers differ only in rounding (FMA contracts the multiply-add, and
+//! lane counts change the split of the accumulation tree); every tier is
+//! deterministic, independent of threading and of how rows are grouped
+//! into register blocks, and matches the scalar reference within 1e-4
+//! (property-tested in `tests/integration_simd.rs`).
+use std::fmt;
+use std::str::FromStr;
+use std::sync::OnceLock;
+
+/// One dispatchable implementation of the packed panel micro-kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdTier {
+    /// 256-bit FMA kernel (8 lanes, 4-row register block).
+    Avx2Fma,
+    /// 128-bit mul+add kernel (two 4-lane halves, 2-row register block).
+    Sse2,
+    /// Plain-Rust reference (8-lane arrays the autovectorizer may widen).
+    Scalar,
+}
+
+impl SimdTier {
+    /// Stable name used in logs, reports and `BENCH_gram.json`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdTier::Avx2Fma => "avx2+fma",
+            SimdTier::Sse2 => "sse2",
+            SimdTier::Scalar => "scalar",
+        }
+    }
+
+    /// Whether this host can execute the tier. `Scalar` always can;
+    /// `Sse2` is baseline on x86_64; AVX2 requires both `avx2` and `fma`
+    /// CPUID bits (the micro-kernel uses them together).
+    pub fn is_available(&self) -> bool {
+        match self {
+            SimdTier::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Sse2 => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Avx2Fma => {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+}
+
+impl fmt::Display for SimdTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for SimdTier {
+    type Err = String;
+
+    /// Parse a `DKKM_SIMD` value: "avx2" (or "avx2+fma"), "sse2",
+    /// "scalar".
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "avx2" | "avx2+fma" | "avx2fma" => Ok(SimdTier::Avx2Fma),
+            "sse2" => Ok(SimdTier::Sse2),
+            "scalar" => Ok(SimdTier::Scalar),
+            other => Err(format!(
+                "unknown SIMD tier '{other}' (expected avx2 | sse2 | scalar)"
+            )),
+        }
+    }
+}
+
+/// Best tier the host supports, by CPUID detection alone.
+pub fn detect() -> SimdTier {
+    if SimdTier::Avx2Fma.is_available() {
+        SimdTier::Avx2Fma
+    } else if SimdTier::Sse2.is_available() {
+        SimdTier::Sse2
+    } else {
+        SimdTier::Scalar
+    }
+}
+
+/// Every tier this host can execute, best first (bench sweeps iterate
+/// this so `BENCH_gram.json` only reports tiers that actually ran).
+pub fn supported_tiers() -> Vec<SimdTier> {
+    [SimdTier::Avx2Fma, SimdTier::Sse2, SimdTier::Scalar]
+        .into_iter()
+        .filter(|t| t.is_available())
+        .collect()
+}
+
+/// The tier the compute core dispatches to, selected once per process:
+/// `DKKM_SIMD` when set (and executable on this host), CPUID detection
+/// otherwise.
+pub fn active_tier() -> SimdTier {
+    static TIER: OnceLock<SimdTier> = OnceLock::new();
+    *TIER.get_or_init(|| match std::env::var("DKKM_SIMD") {
+        Ok(raw) => match raw.parse::<SimdTier>() {
+            Ok(tier) if tier.is_available() => tier,
+            Ok(tier) => {
+                eprintln!(
+                    "dkkm: DKKM_SIMD={tier} is not executable on this host; \
+                     falling back to detection"
+                );
+                detect()
+            }
+            Err(e) => {
+                eprintln!("dkkm: ignoring DKKM_SIMD: {e}");
+                detect()
+            }
+        },
+        Err(_) => detect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!("avx2".parse::<SimdTier>().unwrap(), SimdTier::Avx2Fma);
+        assert_eq!("AVX2+FMA".parse::<SimdTier>().unwrap(), SimdTier::Avx2Fma);
+        assert_eq!("sse2".parse::<SimdTier>().unwrap(), SimdTier::Sse2);
+        assert_eq!("scalar".parse::<SimdTier>().unwrap(), SimdTier::Scalar);
+        assert!("neon".parse::<SimdTier>().is_err());
+        for t in [SimdTier::Avx2Fma, SimdTier::Sse2, SimdTier::Scalar] {
+            assert_eq!(t.name().parse::<SimdTier>().unwrap(), t);
+        }
+    }
+
+    #[test]
+    fn scalar_always_available() {
+        assert!(SimdTier::Scalar.is_available());
+        assert!(supported_tiers().contains(&SimdTier::Scalar));
+    }
+
+    #[test]
+    fn detect_returns_available_tier() {
+        assert!(detect().is_available());
+        // supported_tiers is ordered best-first and contains detect()
+        assert_eq!(supported_tiers()[0], detect());
+    }
+
+    #[test]
+    fn active_tier_is_stable_and_available() {
+        let a = active_tier();
+        assert!(a.is_available());
+        assert_eq!(a, active_tier(), "tier must be selected once");
+    }
+}

@@ -1,0 +1,253 @@
+//! Compute-core equivalence: every SIMD dispatch tier the host can
+//! execute must match the scalar reference (and the retained pre-PR-4
+//! `dot4` oracle) within 1e-4 across awkward shapes — feature dims and
+//! column counts that are not multiples of the vector width, single-row
+//! blocks, empty clusters — and the dispatched path must stay invariant
+//! under threading and tiling, since whole-vs-tiled and serial-vs-shard
+//! equivalence throughout the crate relies on per-row determinism.
+use dkkm::cluster::assign::{self, ClusterStats};
+use dkkm::kernels::microkernel::{self, PackedPanel};
+use dkkm::kernels::{GramSource, GramView, KernelFn, VecGram};
+use dkkm::linalg::{row_sq_norms, simd, Mat, SimdTier};
+use dkkm::util::rng::Rng;
+
+fn random_mat(rng: &mut Rng, r: usize, c: usize) -> Mat {
+    Mat::from_fn(r, c, |_, _| rng.normal32(0.0, 1.0))
+}
+
+/// All kernels the blocked evaluator supports.
+fn kernels() -> [KernelFn; 3] {
+    [
+        KernelFn::Linear,
+        KernelFn::Rbf { gamma: 0.3 },
+        KernelFn::Poly { degree: 2, c: 1.0 },
+    ]
+}
+
+#[test]
+fn tiers_match_scalar_reference_across_awkward_shapes() {
+    let mut rng = Rng::new(0);
+    // d and ncols deliberately straddle the 8-lane width and the 2-deep
+    // unroll: 1, below/at/above one vector, odd, and large
+    for &d in &[1usize, 2, 3, 7, 8, 9, 17, 64, 65] {
+        for &(nrows, ncols) in &[(1usize, 1usize), (1, 9), (5, 7), (4, 8), (13, 31)] {
+            let n = nrows.max(ncols) + 9;
+            let x = random_mat(&mut rng, n, d);
+            let rows: Vec<usize> = (0..nrows).map(|i| (i * 3) % n).collect();
+            let cols: Vec<usize> = (0..ncols).map(|j| (j * 5 + 1) % n).collect();
+            let xn = row_sq_norms(&x);
+            let yn: Vec<f32> = cols.iter().map(|&j| xn[j]).collect();
+            let packed = PackedPanel::pack_gather(&x, &cols);
+            for kernel in kernels() {
+                let mut oracle = vec![0.0f32; nrows * ncols];
+                microkernel::fill_block_dot4(&x, &rows, &cols, kernel, &mut oracle);
+                let mut scalar = vec![0.0f32; nrows * ncols];
+                microkernel::fill_gram_rows(
+                    SimdTier::Scalar,
+                    &x,
+                    &rows,
+                    &packed,
+                    &xn,
+                    &yn,
+                    kernel,
+                    &mut scalar,
+                );
+                for tier in simd::supported_tiers() {
+                    let mut got = vec![0.0f32; nrows * ncols];
+                    microkernel::fill_gram_rows(
+                        tier, &x, &rows, &packed, &xn, &yn, kernel, &mut got,
+                    );
+                    for (i, ((g, s), o)) in
+                        got.iter().zip(&scalar).zip(&oracle).enumerate()
+                    {
+                        assert!(
+                            (g - s).abs() < 1e-4,
+                            "{tier} vs scalar {kernel:?} d={d} [{i}]: {g} vs {s}"
+                        );
+                        assert!(
+                            (g - o).abs() < 1e-4,
+                            "{tier} vs dot4 {kernel:?} d={d} [{i}]: {g} vs {o}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn vec_gram_thread_invariant_on_awkward_shapes() {
+    // the dispatched block fill must be exactly reproducible under any
+    // thread count (row chunking must not change per-row results)
+    let mut rng = Rng::new(1);
+    for &(n, d) in &[(37usize, 5usize), (130, 9), (64, 65)] {
+        let x = random_mat(&mut rng, n, d);
+        let rows: Vec<usize> = (0..n).collect();
+        let cols: Vec<usize> = (0..n).step_by(3).collect();
+        let one = VecGram::new(x.clone(), KernelFn::Rbf { gamma: 0.2 }, 1)
+            .block_mat(&rows, &cols);
+        for threads in [2usize, 5, 8] {
+            let many = VecGram::new(x.clone(), KernelFn::Rbf { gamma: 0.2 }, threads)
+                .block_mat(&rows, &cols);
+            assert_eq!(one.data(), many.data(), "threads={threads} n={n} d={d}");
+        }
+    }
+}
+
+#[test]
+fn vec_gram_row_subsets_are_bit_identical() {
+    // tile invariance at the source: filling a panel in arbitrary row
+    // slices must reproduce the whole fill bit for bit
+    let mut rng = Rng::new(2);
+    let x = random_mat(&mut rng, 61, 13);
+    let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.15 }, 2);
+    let rows: Vec<usize> = (0..61).collect();
+    let cols: Vec<usize> = (0..61).step_by(2).collect();
+    let whole = g.block_mat(&rows, &cols);
+    for chunk in [1usize, 4, 7, 60] {
+        let mut assembled = Mat::zeros(rows.len(), cols.len());
+        let mut lo = 0;
+        while lo < rows.len() {
+            let hi = (lo + chunk).min(rows.len());
+            let piece = g.block_mat(&rows[lo..hi], &cols);
+            for r in 0..piece.rows() {
+                assembled.row_mut(lo + r).copy_from_slice(piece.row(r));
+            }
+            lo = hi;
+        }
+        assert_eq!(whole.data(), assembled.data(), "chunk={chunk}");
+    }
+}
+
+#[test]
+fn inner_iteration_handles_empty_clusters_and_single_rows() {
+    let mut rng = Rng::new(3);
+    let x = random_mat(&mut rng, 21, 6);
+    let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.4 }, 1);
+    let rows: Vec<usize> = (0..21).collect();
+    let lms: Vec<usize> = (0..10).collect();
+    let k_nl = g.block_mat(&rows, &lms);
+    let k_ll = g.block_mat(&lms, &lms);
+    // clusters 3..8 stay empty; the masked argmin must never pick them
+    let labels: Vec<usize> = (0..10).map(|m| m % 3).collect();
+    let (new_labels, stats) = assign::inner_iteration(&k_nl, &k_ll, &labels, 8);
+    assert_eq!(new_labels.len(), 21);
+    assert!(new_labels.iter().all(|&u| u < 3));
+    assert_eq!(&stats.counts[3..], &[0; 5]);
+    assert!(stats.g[3..].iter().all(|&v| v == 0.0));
+    // single-row block through the same path
+    let one = g.block_mat(&rows[..1], &lms);
+    let (one_label, _) = assign::inner_iteration(&one, &k_ll, &labels, 8);
+    assert_eq!(one_label.len(), 1);
+    assert_eq!(one_label[0], new_labels[0]);
+}
+
+#[test]
+fn similarity_f_gemm_matches_scatter_reference() {
+    let mut rng = Rng::new(4);
+    for &(nrows, l, c) in &[(17usize, 9usize, 4usize), (3, 16, 9), (1, 5, 2), (11, 30, 12)] {
+        let x = random_mat(&mut rng, nrows.max(l), 5);
+        let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.25 }, 1);
+        let rows: Vec<usize> = (0..nrows).collect();
+        let lms: Vec<usize> = (0..l).collect();
+        let kb = g.block_mat(&rows, &lms);
+        let kll = g.block_mat(&lms, &lms);
+        // leave some clusters empty when c allows
+        let labels: Vec<usize> = (0..l).map(|m| (m * m + 1) % c.max(1)).collect();
+        let stats = ClusterStats::compute(&kll, &labels, c);
+        let f = assign::similarity_f(&kb, &labels, &stats);
+        for r in 0..nrows {
+            for j in 0..c {
+                let mut want = 0.0f32;
+                for (m, &u) in labels.iter().enumerate() {
+                    if u == j {
+                        want += kb.at(r, m);
+                    }
+                }
+                want *= stats.inv[j];
+                assert!(
+                    (f.at(r, j) - want).abs() < 1e-4,
+                    "f[{r}][{j}] {} vs {want} ({nrows}x{l}x{c})",
+                    f.at(r, j)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn compactness_gemm_matches_quadratic_form() {
+    let mut rng = Rng::new(5);
+    for &(l, c) in &[(9usize, 3usize), (16, 5), (1, 1), (31, 10)] {
+        let x = random_mat(&mut rng, l, 7);
+        let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.2 }, 1);
+        let lms: Vec<usize> = (0..l).collect();
+        let kll = g.block_mat(&lms, &lms);
+        let labels: Vec<usize> = (0..l).map(|m| (m * 7 + 2) % c).collect();
+        let stats = ClusterStats::compute(&kll, &labels, c);
+        for j in 0..c {
+            let mut want = 0.0f64;
+            for m in 0..l {
+                for n in 0..l {
+                    if labels[m] == j && labels[n] == j {
+                        want += kll.at(m, n) as f64;
+                    }
+                }
+            }
+            let sz = stats.counts[j] as f64;
+            let want = if sz > 0.0 { want / (sz * sz) } else { 0.0 };
+            assert!(
+                (stats.g[j] as f64 - want).abs() < 1e-4,
+                "g[{j}] {} vs {want} (L={l} C={c})",
+                stats.g[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn view_iteration_matches_whole_across_tile_widths() {
+    // the scratch-buffer tile sweep must be bit-identical to the whole
+    // panel for every tile width, including 1-row tiles
+    let mut rng = Rng::new(6);
+    let x = random_mat(&mut rng, 40, 4);
+    let g = VecGram::new(x, KernelFn::Rbf { gamma: 0.3 }, 1);
+    let rows: Vec<usize> = (0..40).collect();
+    let lms: Vec<usize> = (0..18).collect();
+    let k_nl = g.block_mat(&rows, &lms);
+    let k_ll = g.block_mat(&lms, &lms);
+    let labels: Vec<usize> = (0..18).map(|m| m % 5).collect();
+    let (want, want_stats) = assign::inner_iteration(&k_nl, &k_ll, &labels, 5);
+    for tile_rows in [1usize, 3, 8, 39] {
+        // emulate a tiled view by slicing the panel into row tiles and
+        // concatenating per-tile label updates
+        let stats = ClusterStats::compute(&k_ll, &labels, 5);
+        let mut got = Vec::new();
+        let mut lo = 0;
+        while lo < 40 {
+            let hi = (lo + tile_rows).min(40);
+            let tile = k_nl.row_slice(lo, hi);
+            let view = GramView::Whole(&tile);
+            let (tile_labels, _) = assign::inner_iteration_view(&view, &k_ll, &labels, 5);
+            got.extend(tile_labels);
+            lo = hi;
+        }
+        assert_eq!(got, want, "tile_rows={tile_rows}");
+        for j in 0..5 {
+            assert_eq!(stats.g[j], want_stats.g[j], "g[{j}] tile_rows={tile_rows}");
+        }
+    }
+}
+
+#[test]
+fn simd_tier_parse_and_detection_are_consistent() {
+    // every supported tier round-trips through the DKKM_SIMD syntax and
+    // is actually executable; the active tier is one of them
+    let tiers = simd::supported_tiers();
+    assert!(tiers.contains(&SimdTier::Scalar));
+    for t in &tiers {
+        assert!(t.is_available());
+        assert_eq!(t.name().parse::<SimdTier>().unwrap(), *t);
+    }
+    assert!(tiers.contains(&simd::active_tier()));
+}
