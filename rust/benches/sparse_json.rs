@@ -1,0 +1,187 @@
+//! bench-json harness: machine-readable sparse-vs-dense Gram throughput.
+//!
+//! Generates the synthetic RCV1 corpus in its native CSR form at several
+//! vocabulary sizes (vocabulary width controls density: merged documents
+//! hold ~60-100 distinct words regardless of vocab), then fills the same
+//! RBF Gram block through the dense packed micro-kernel (over the
+//! densified matrix) and the sparse CSR micro-kernel, asserting the two
+//! agree before reporting. Emits `BENCH_sparse.json` (override the path
+//! with `DKKM_BENCH_OUT`) with dense-equivalent GFLOP/s, effective
+//! GFLOP/s per stored entry, and the sparse-over-dense speedup — so "the
+//! CSR path beats the dense core by the sparsity factor" is a tracked
+//! number, not a claim. Single-threaded on purpose: this measures the
+//! kernels, not the thread pool.
+//!
+//!     cargo bench --bench sparse_json
+//!
+//! Knobs: `DKKM_SCALE` multiplies the block shape, `DKKM_REPEATS` sets
+//! timed repetitions per configuration (best-of is reported).
+use dkkm::data::synthetic_rcv1_sparse;
+use dkkm::kernels::microkernel::{self, PackedPanel};
+use dkkm::kernels::KernelFn;
+use dkkm::linalg::{row_sq_norms, simd};
+use dkkm::util::json::Json;
+use dkkm::util::rng::Rng;
+use dkkm::util::stats::{bench_repeats, bench_scale, Table, Timer};
+
+/// Best-of-N wall time of `f` in seconds.
+fn best_of(repeats: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..repeats.max(1) {
+        let t = Timer::start();
+        f();
+        best = best.min(t.elapsed_s());
+    }
+    best
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max)
+}
+
+fn main() {
+    let scale = bench_scale();
+    let rows = ((1024.0 * scale) as usize).max(256);
+    let cols = (rows / 4).clamp(64, 256);
+    let repeats = bench_repeats();
+    let tier = simd::active_tier();
+    // L2-normalized documents have d² in [0, 2]; gamma = 0.5 keeps RBF
+    // values in [e^-1, 1] so the equivalence check compares real numbers
+    let kernel = KernelFn::Rbf { gamma: 0.5 };
+    println!(
+        "== Sparse CSR vs dense Gram bench: {rows}x{cols} RBF blocks, \
+         tier {tier}, {repeats} repeats =="
+    );
+    println!("(vocab sweeps density: ~60-100 stored words per doc)\n");
+
+    let mut table = Table::new(&[
+        "vocab",
+        "density",
+        "dense s",
+        "sparse s",
+        "speedup",
+        "dense GF/s",
+        "nnz GF/s",
+    ]);
+    let mut results = Vec::new();
+    for &vocab in &[300usize, 1000, 4000] {
+        let ds = synthetic_rcv1_sparse(&mut Rng::new(0xC5A + vocab as u64), rows, 12, vocab);
+        let csr = ds.x;
+        let dense = csr.to_dense();
+        let density = csr.density();
+        let row_idx: Vec<usize> = (0..rows).collect();
+        let col_idx: Vec<usize> = (0..cols).map(|j| j * rows / cols).collect();
+        let xn_dense = row_sq_norms(&dense);
+        let xn_csr = csr.sq_norms().to_vec();
+        let yn: Vec<f32> = col_idx.iter().map(|&j| xn_csr[j]).collect();
+
+        // --- dense core over the densified matrix (packing timed: it is
+        // part of every block fill on both paths)
+        let mut dense_out = vec![0.0f32; rows * cols];
+        let dense_s = best_of(repeats, || {
+            let packed = PackedPanel::pack_gather(&dense, &col_idx);
+            microkernel::fill_gram_rows(
+                tier,
+                &dense,
+                &row_idx,
+                &packed,
+                &xn_dense,
+                &yn,
+                kernel,
+                &mut dense_out,
+            );
+        });
+
+        // --- sparse core over the CSR rows
+        let mut sparse_out = vec![0.0f32; rows * cols];
+        let sparse_s = best_of(repeats, || {
+            let packed = PackedPanel::pack_gather_csr(&csr, &col_idx);
+            microkernel::fill_gram_rows_csr(
+                tier,
+                &csr,
+                &row_idx,
+                &packed,
+                &xn_csr,
+                &yn,
+                kernel,
+                &mut sparse_out,
+            );
+        });
+
+        // the two storages must agree before any speedup is reported
+        let diff = max_abs_diff(&sparse_out, &dense_out);
+        assert!(
+            diff < 1e-3,
+            "sparse diverges from dense at vocab={vocab}: max |diff| = {diff}"
+        );
+
+        let dense_equiv_flops = 2.0 * rows as f64 * cols as f64 * vocab as f64;
+        let nnz_flops = 2.0 * csr.nnz() as f64 * cols as f64;
+        let speedup = dense_s / sparse_s;
+        let dense_gflops = dense_equiv_flops / dense_s / 1e9;
+        let nnz_gflops = nnz_flops / sparse_s / 1e9;
+        // the acceptance bar: at text-corpus density the CSR path must
+        // clearly beat the dense core, not just edge it out
+        if density <= 0.10 {
+            assert!(
+                speedup >= 2.0,
+                "CSR path only {speedup:.2}x over dense at density {density:.4} \
+                 (vocab={vocab}); expected >= 2x below 10% density"
+            );
+        }
+        table.row(&[
+            format!("{vocab}"),
+            format!("{:.2}%", density * 100.0),
+            format!("{dense_s:.4}"),
+            format!("{sparse_s:.4}"),
+            format!("{speedup:.2}x"),
+            format!("{dense_gflops:.2}"),
+            format!("{nnz_gflops:.2}"),
+        ]);
+        results.push(Json::obj(vec![
+            ("vocab", Json::num(vocab as f64)),
+            ("density", Json::num(density)),
+            ("nnz", Json::num(csr.nnz() as f64)),
+            ("dense_seconds_best", Json::num(dense_s)),
+            ("sparse_seconds_best", Json::num(sparse_s)),
+            ("speedup_vs_dense", Json::num(speedup)),
+            ("dense_equiv_gflops", Json::num(dense_gflops)),
+            ("effective_gflops_per_nnz", Json::num(nnz_gflops)),
+            ("max_abs_diff", Json::num(diff as f64)),
+        ]));
+    }
+    println!("{}", table.render());
+
+    // kernel-function sweep: the fused epilogue must agree across
+    // storages for every kernel family, not just RBF
+    let ds = synthetic_rcv1_sparse(&mut Rng::new(0xC5A), 128, 6, 800);
+    let csr = ds.x;
+    let dense = csr.to_dense();
+    let idx: Vec<usize> = (0..128).collect();
+    let cols_small: Vec<usize> = (0..32).map(|j| j * 4).collect();
+    let xn = csr.sq_norms().to_vec();
+    let yn: Vec<f32> = cols_small.iter().map(|&j| xn[j]).collect();
+    for k in [KernelFn::Linear, KernelFn::Poly { degree: 2, c: 1.0 }] {
+        let mut a = vec![0.0f32; 128 * 32];
+        let mut b = vec![0.0f32; 128 * 32];
+        let pd = PackedPanel::pack_gather(&dense, &cols_small);
+        let ps = PackedPanel::pack_gather_csr(&csr, &cols_small);
+        microkernel::fill_gram_rows(tier, &dense, &idx, &pd, &xn, &yn, k, &mut a);
+        microkernel::fill_gram_rows_csr(tier, &csr, &idx, &ps, &xn, &yn, k, &mut b);
+        let diff = max_abs_diff(&a, &b);
+        assert!(diff < 1e-3, "{k:?} diverges across storages: {diff}");
+    }
+    println!("kernel-family equivalence (linear, poly): ok");
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("sparse")),
+        ("rows", Json::num(rows as f64)),
+        ("cols", Json::num(cols as f64)),
+        ("repeats", Json::num(repeats as f64)),
+        ("dispatch_tier", Json::str(tier.name())),
+        ("results", Json::arr(results)),
+    ]);
+    let out = std::env::var("DKKM_BENCH_OUT").unwrap_or_else(|_| "BENCH_sparse.json".into());
+    std::fs::write(&out, report.to_string()).expect("write bench json");
+    println!("\nwrote {out}");
+}

@@ -30,8 +30,8 @@ fn main() {
     // baseline: linear k-means (scikit-learn stand-in)
     let (mut acc, mut nm) = (Vec::new(), Vec::new());
     for r in 0..repeats {
-        let (_, _, a, n) =
-            run_lloyd_baseline(&DatasetSpec::Mnist { train, test }, 10, 100 + r as u64);
+        let spec = DatasetSpec::Mnist { train, test };
+        let (_, _, a, n) = run_lloyd_baseline(&spec, 10, 100 + r as u64).expect("baseline");
         acc.push(a.unwrap() * 100.0);
         nm.push(n.unwrap());
     }

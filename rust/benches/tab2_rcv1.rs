@@ -29,11 +29,8 @@ fn main() {
 
     let (mut acc, mut nm) = (Vec::new(), Vec::new());
     for r in 0..repeats {
-        let (_, _, a, nmv) = run_lloyd_baseline(
-            &DatasetSpec::Rcv1 { n, classes, dim },
-            c,
-            200 + r as u64,
-        );
+        let spec = DatasetSpec::Rcv1 { n, classes, dim, storage: RcvStorage::Dense };
+        let (_, _, a, nmv) = run_lloyd_baseline(&spec, c, 200 + r as u64).expect("baseline");
         acc.push(a.unwrap() * 100.0);
         nm.push(nmv.unwrap());
     }
@@ -44,7 +41,8 @@ fn main() {
     for &b in &[4usize, 16, 64] {
         let (mut acc, mut nm, mut tm) = (Vec::new(), Vec::new(), Vec::new());
         for r in 0..repeats {
-            let rep = Experiment::on(DatasetSpec::Rcv1 { n, classes, dim })
+            let spec = DatasetSpec::Rcv1 { n, classes, dim, storage: RcvStorage::Dense };
+            let rep = Experiment::on(spec)
                 .clusters(c)
                 .batches(b)
                 .seed(200 + r as u64)

@@ -1,7 +1,12 @@
 //! Standard (linear, feature-space) k-means: k-means++ seeding + Lloyd
 //! iterations, with restarts keeping the lowest-inertia solution — the
 //! same protocol as the scikit-learn baseline in the paper's Tab.1-2.
-use crate::linalg::Mat;
+//!
+//! The hot path — the point-to-center assignment sweep — runs through
+//! `linalg::sq_dists_block_into`, i.e. the packed SIMD compute core,
+//! so the baseline timings in Tab.1/2 ride the same dispatch tiers as
+//! the kernel method they are compared against.
+use crate::linalg::{sq_dists_block_into, Mat};
 use crate::util::rng::Rng;
 
 /// Result of a Lloyd run.
@@ -46,16 +51,17 @@ fn lloyd_once(x: &Mat, c: usize, max_iter: usize, rng: &mut Rng) -> LloydResult 
     let mut centers = plus_plus_centers(x, c, rng);
     let mut labels = vec![0usize; n];
     let mut iterations = 0;
+    let mut d2 = vec![0.0f32; n * c];
     for _ in 0..max_iter {
         iterations += 1;
-        // assignment
+        // assignment: one blocked pairwise sweep through the compute
+        // core (reused buffer), then a per-row argmin
+        sq_dists_block_into(1, x, &centers, &mut d2);
         let mut changed = false;
-        for i in 0..n {
-            let xi = x.row(i);
+        for (i, drow) in d2.chunks(c).enumerate() {
             let mut best = 0;
             let mut best_d = f32::INFINITY;
-            for j in 0..c {
-                let dd = sq_dist(xi, centers.row(j));
+            for (j, &dd) in drow.iter().enumerate() {
                 if dd < best_d {
                     best_d = dd;
                     best = j;
@@ -128,18 +134,23 @@ pub fn lloyd_kmeans(
     best.unwrap()
 }
 
-/// Assign new samples to the fitted centers.
+/// Assign new samples to the fitted centers (blocked pairwise sweep
+/// through the compute core, first-index tie-breaking like training).
 pub fn assign_to_centers(x: &Mat, centers: &Mat) -> Vec<usize> {
-    (0..x.rows())
-        .map(|i| {
-            let xi = x.row(i);
-            (0..centers.rows())
-                .min_by(|&a, &b| {
-                    sq_dist(xi, centers.row(a))
-                        .partial_cmp(&sq_dist(xi, centers.row(b)))
-                        .unwrap()
-                })
-                .unwrap()
+    let c = centers.rows();
+    let mut d2 = vec![0.0f32; x.rows() * c];
+    sq_dists_block_into(1, x, centers, &mut d2);
+    d2.chunks(c)
+        .map(|drow| {
+            let mut best = 0;
+            let mut best_v = f32::INFINITY;
+            for (j, &v) in drow.iter().enumerate() {
+                if v < best_v {
+                    best_v = v;
+                    best = j;
+                }
+            }
+            best
         })
         .collect()
 }

@@ -12,6 +12,39 @@ use crate::data::Sampling;
 use crate::util::error::{Error, Result};
 use crate::util::json::Json;
 
+/// Feature storage for the RCV1 corpus: the paper-faithful dense random
+/// projection, or native CSR over the raw vocabulary (no projection),
+/// served by the sparse Gram micro-kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RcvStorage {
+    /// Achlioptas projection to `dim` dense components (paper setup).
+    #[default]
+    Dense,
+    /// CSR documents in the vocabulary space; `dim` is ignored.
+    Sparse,
+}
+
+impl fmt::Display for RcvStorage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RcvStorage::Dense => write!(f, "dense"),
+            RcvStorage::Sparse => write!(f, "sparse"),
+        }
+    }
+}
+
+impl FromStr for RcvStorage {
+    type Err = String;
+
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "dense" => Ok(RcvStorage::Dense),
+            "sparse" | "csr" => Ok(RcvStorage::Sparse),
+            other => Err(format!("bad storage '{other}' (dense|sparse)")),
+        }
+    }
+}
+
 /// Which dataset substrate to generate.
 #[derive(Clone, Debug, PartialEq)]
 pub enum DatasetSpec {
@@ -19,8 +52,9 @@ pub enum DatasetSpec {
     Toy2d { per_cluster: usize },
     /// Synthetic MNIST-like digits: `train` + `test` samples.
     Mnist { train: usize, test: usize },
-    /// Synthetic RCV1-like corpus projected to `dim`.
-    Rcv1 { n: usize, classes: usize, dim: usize },
+    /// Synthetic RCV1-like corpus: projected to `dim` (dense storage)
+    /// or kept as CSR documents over the vocabulary (sparse storage).
+    Rcv1 { n: usize, classes: usize, dim: usize, storage: RcvStorage },
     /// Noisy MNIST: `base` samples x `copies` perturbed replicas.
     NoisyMnist { base: usize, copies: usize },
     /// MD trajectory with `frames` recorded frames.
@@ -47,8 +81,13 @@ impl fmt::Display for DatasetSpec {
         match self {
             DatasetSpec::Toy2d { per_cluster } => write!(f, "toy2d:{per_cluster}"),
             DatasetSpec::Mnist { train, test } => write!(f, "mnist:{train}:{test}"),
-            DatasetSpec::Rcv1 { n, classes, dim } => {
+            // the dense form keeps the historical 3-number arity so old
+            // spec strings and report echoes round-trip unchanged
+            DatasetSpec::Rcv1 { n, classes, dim, storage: RcvStorage::Dense } => {
                 write!(f, "rcv1:{n}:{classes}:{dim}")
+            }
+            DatasetSpec::Rcv1 { n, classes, dim, storage } => {
+                write!(f, "rcv1:{n}:{classes}:{dim}:{storage}")
             }
             DatasetSpec::NoisyMnist { base, copies } => {
                 write!(f, "noisy-mnist:{base}:{copies}")
@@ -61,7 +100,8 @@ impl fmt::Display for DatasetSpec {
 impl FromStr for DatasetSpec {
     type Err = String;
 
-    /// `toy2d[:per]`, `mnist[:train[:test]]`, `rcv1[:n[:classes[:dim]]]`,
+    /// `toy2d[:per]`, `mnist[:train[:test]]`,
+    /// `rcv1[:n[:classes[:dim[:dense|sparse]]]]`,
     /// `noisy-mnist[:base[:copies]]`, `md[:frames]`.
     fn from_str(s: &str) -> std::result::Result<Self, String> {
         let parts: Vec<&str> = s.split(':').collect();
@@ -74,11 +114,18 @@ impl FromStr for DatasetSpec {
         match parts[0] {
             "toy2d" => Ok(DatasetSpec::Toy2d { per_cluster: num(1, 10_000)? }),
             "mnist" => Ok(DatasetSpec::Mnist { train: num(1, 60_000)?, test: num(2, 10_000)? }),
-            "rcv1" => Ok(DatasetSpec::Rcv1 {
-                n: num(1, 188_000)?,
-                classes: num(2, 50)?,
-                dim: num(3, 256)?,
-            }),
+            "rcv1" => {
+                let storage = match parts.get(4) {
+                    None => RcvStorage::Dense,
+                    Some(v) => v.parse().map_err(|e| format!("{e} in '{s}'"))?,
+                };
+                Ok(DatasetSpec::Rcv1 {
+                    n: num(1, 188_000)?,
+                    classes: num(2, 50)?,
+                    dim: num(3, 256)?,
+                    storage,
+                })
+            }
             "noisy-mnist" => {
                 Ok(DatasetSpec::NoisyMnist { base: num(1, 60_000)?, copies: num(2, 20)? })
             }
@@ -354,7 +401,11 @@ mod tests {
         );
         assert_eq!(
             "rcv1:1000:12:64".parse::<DatasetSpec>().unwrap(),
-            DatasetSpec::Rcv1 { n: 1000, classes: 12, dim: 64 }
+            DatasetSpec::Rcv1 { n: 1000, classes: 12, dim: 64, storage: RcvStorage::Dense }
+        );
+        assert_eq!(
+            "rcv1:1000:12:64:sparse".parse::<DatasetSpec>().unwrap(),
+            DatasetSpec::Rcv1 { n: 1000, classes: 12, dim: 64, storage: RcvStorage::Sparse }
         );
         assert_eq!(
             "noisy-mnist:200:5".parse::<DatasetSpec>().unwrap(),
@@ -373,7 +424,8 @@ mod tests {
         let specs = [
             DatasetSpec::Toy2d { per_cluster: 123 },
             DatasetSpec::Mnist { train: 500, test: 100 },
-            DatasetSpec::Rcv1 { n: 700, classes: 9, dim: 48 },
+            DatasetSpec::Rcv1 { n: 700, classes: 9, dim: 48, storage: RcvStorage::Dense },
+            DatasetSpec::Rcv1 { n: 700, classes: 9, dim: 48, storage: RcvStorage::Sparse },
             DatasetSpec::NoisyMnist { base: 60, copies: 3 },
             DatasetSpec::Md { frames: 4242 },
         ];
@@ -396,7 +448,7 @@ mod tests {
         );
         assert_eq!(
             "rcv1:1000".parse::<DatasetSpec>().unwrap(),
-            DatasetSpec::Rcv1 { n: 1000, classes: 50, dim: 256 }
+            DatasetSpec::Rcv1 { n: 1000, classes: 50, dim: 256, storage: RcvStorage::Dense }
         );
         assert_eq!(
             "noisy-mnist".parse::<DatasetSpec>().unwrap(),
@@ -411,13 +463,16 @@ mod tests {
         assert!(err.contains("hyperspace"), "{err}");
         let err = "mnist:1k".parse::<DatasetSpec>().unwrap_err();
         assert!(err.contains("1k") && err.contains("mnist:1k"), "{err}");
+        let err = "rcv1:100:4:16:ragged".parse::<DatasetSpec>().unwrap_err();
+        assert!(err.contains("ragged") && err.contains("dense|sparse"), "{err}");
     }
 
     #[test]
     fn dataset_train_len() {
         assert_eq!(DatasetSpec::Toy2d { per_cluster: 100 }.train_len(), 400);
         assert_eq!(DatasetSpec::Mnist { train: 300, test: 60 }.train_len(), 300);
-        assert_eq!(DatasetSpec::Rcv1 { n: 70, classes: 3, dim: 8 }.train_len(), 70);
+        let sparse = DatasetSpec::Rcv1 { n: 70, classes: 3, dim: 8, storage: RcvStorage::Sparse };
+        assert_eq!(sparse.train_len(), 70);
         assert_eq!(DatasetSpec::NoisyMnist { base: 50, copies: 4 }.train_len(), 200);
         assert_eq!(DatasetSpec::Md { frames: 99 }.train_len(), 99);
     }

@@ -17,6 +17,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
 use crate::cluster::minibatch::{NativeBackend, StepBackend};
+use crate::data::CsrMat;
 use crate::distributed::ShardedBackend;
 use crate::kernels::{GramSource, KernelFn, RmsdGram, VecGram};
 use crate::linalg::{Frame, Mat};
@@ -49,15 +50,24 @@ pub struct GramBuild {
     /// means the engine's own path served the request; `Some` means the
     /// blocks run natively and the report must say so.
     pub fallback: Option<String>,
+    /// Operand storage the blocks run over (`dense` | `csr` | `frames`),
+    /// surfaced in `RunReport.storage`. CSR requests record what the
+    /// density crossover actually chose, not what was asked for.
+    pub storage: &'static str,
 }
 
 impl GramBuild {
     fn direct(source: Box<dyn GramSource>) -> GramBuild {
-        GramBuild { source, fallback: None }
+        GramBuild { source, fallback: None, storage: "dense" }
     }
 
     fn degraded(source: Box<dyn GramSource>, reason: String) -> GramBuild {
-        GramBuild { source, fallback: Some(reason) }
+        GramBuild { source, fallback: Some(reason), storage: "dense" }
+    }
+
+    fn with_storage(mut self, storage: &'static str) -> GramBuild {
+        self.storage = storage;
+        self
     }
 }
 
@@ -71,11 +81,23 @@ pub trait Engine: Send + Sync {
     /// Gram source over vector-space data with the RBF kernel.
     fn vec_gram(&self, x: Mat, gamma: f32, threads: usize) -> GramBuild;
 
+    /// Gram source over CSR vector-space data with the RBF kernel. The
+    /// default serves the native storage-generic [`VecGram`], whose
+    /// density crossover keeps CSR below
+    /// [`VecGram::SPARSE_DENSITY_THRESHOLD`] and densifies above it;
+    /// engines with a sparse accelerator path override this.
+    fn sparse_gram(&self, x: CsrMat, gamma: f32, threads: usize) -> GramBuild {
+        let g = VecGram::auto(x, KernelFn::Rbf { gamma }, threads);
+        let storage = g.storage_name();
+        GramBuild::direct(Box::new(g)).with_storage(storage)
+    }
+
     /// Gram source over MD frames with the QCP-RMSD RBF kernel. The
     /// default serves the native implementation; engines with an RMSD
     /// accelerator path override it.
     fn rmsd_gram(&self, frames: Arc<Vec<Frame>>, sigma: f64, threads: usize) -> GramBuild {
         GramBuild::direct(Box::new(RmsdGram::shared(frames, sigma, threads)))
+            .with_storage("frames")
     }
 
     /// The inner-loop iteration strategy (Eq.15-17).
@@ -165,11 +187,24 @@ impl Engine for PjrtEngine {
         }
     }
 
+    fn sparse_gram(&self, x: CsrMat, gamma: f32, threads: usize) -> GramBuild {
+        // no sparse artifact is lowered; degrade honestly to the native
+        // storage-generic path instead of densifying through the tiles
+        let g = VecGram::auto(x, KernelFn::Rbf { gamma }, threads);
+        let storage = g.storage_name();
+        GramBuild::degraded(
+            Box::new(g),
+            "no sparse-CSR artifact is lowered; CSR Gram blocks run on the host".into(),
+        )
+        .with_storage(storage)
+    }
+
     fn rmsd_gram(&self, frames: Arc<Vec<Frame>>, sigma: f64, threads: usize) -> GramBuild {
         GramBuild::degraded(
             Box::new(RmsdGram::shared(frames, sigma, threads)),
             "no QCP-RMSD artifact is lowered; MD Gram blocks run on the host".into(),
         )
+        .with_storage("frames")
     }
 
     fn step(&self) -> &dyn StepBackend {
@@ -258,6 +293,23 @@ mod tests {
         assert_eq!(build.source.n(), 20);
         assert_eq!(e.step().name(), "native");
         assert!(e.supports_offload());
+    }
+
+    #[test]
+    fn native_engine_builds_sparse_gram_with_storage_provenance() {
+        let e = NativeEngine::new();
+        // 1 nnz per 50-wide row: well under the density crossover
+        let sparse = CsrMat::from_rows(50, (0..20).map(|r| vec![(r, 1.0f32)]).collect());
+        let build = e.sparse_gram(sparse, 0.5, 1);
+        assert!(build.fallback.is_none());
+        assert_eq!(build.storage, "csr");
+        assert_eq!(build.source.n(), 20);
+        // a dense CSR crosses the threshold and is densified
+        let dense = CsrMat::from_dense(&random_mat(1, 10, 4));
+        let build = e.sparse_gram(dense, 0.5, 1);
+        assert_eq!(build.storage, "dense");
+        // dense and frame builds carry their storage labels too
+        assert_eq!(e.vec_gram(random_mat(2, 8, 3), 0.5, 1).storage, "dense");
     }
 
     #[test]

@@ -52,6 +52,10 @@ pub struct RunReport {
     pub best_cost: f64,
     /// Engine provenance, including any fallback reason.
     pub engine: EngineReport,
+    /// Gram operand storage the blocks ran over: `dense` | `csr` |
+    /// `frames`. CSR requests record what the density crossover actually
+    /// chose, not what the spec asked for.
+    pub storage: String,
     /// Tile-pipeline accounting of the best restart: tiles produced /
     /// pinned / spilled, peak resident `K_nl` bytes, overlap efficiency.
     pub pipeline: PipelineStats,
@@ -76,6 +80,7 @@ impl RunReport {
             ),
             ("best_cost", Json::num(self.best_cost)),
             ("engine", self.engine.to_json()),
+            ("storage", Json::str(&self.storage)),
             // the compute-core tier every native Gram fill and indicator
             // GEMM dispatched to in this process (DKKM_SIMD override)
             ("simd", Json::str(crate::linalg::simd::active_tier().name())),

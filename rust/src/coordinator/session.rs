@@ -17,7 +17,8 @@ use crate::cluster::{
     MiniBatchKernelKMeans, MiniBatchResult,
 };
 use crate::data::{
-    noisy_mnist, synthetic_mnist, synthetic_rcv1, toy2d, Dataset,
+    noisy_mnist, synthetic_mnist, synthetic_rcv1, synthetic_rcv1_sparse, toy2d, Dataset,
+    SparseDataset,
 };
 use crate::kernels::{GramSource, KernelFn};
 use crate::linalg::{qcp_rmsd, Frame, Mat};
@@ -27,17 +28,23 @@ use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
 
-use super::config::{DatasetSpec, RunConfig};
+use super::config::{DatasetSpec, RcvStorage, RunConfig};
 use super::engine::{Engine, GramBuild};
 use super::report::{EngineReport, RunReport};
 
 /// What a dataset spec materialized into. Vector workloads carry the
 /// train/test split and the kernel used for held-out assignment; frame
-/// workloads carry the trajectory and its macro-state ground truth.
+/// workloads carry the trajectory and its macro-state ground truth;
+/// sparse workloads are the CSR twin of the vector case.
 enum Workload {
     Vectors {
         train: Dataset,
         test: Option<Dataset>,
+        kernel: KernelFn,
+    },
+    SparseVectors {
+        train: SparseDataset,
+        test: Option<SparseDataset>,
         kernel: KernelFn,
     },
     Frames {
@@ -55,6 +62,8 @@ pub struct Session {
     workload: Workload,
     gamma: f32,
     engine_report: EngineReport,
+    /// Gram operand storage in effect (`dense` | `csr` | `frames`).
+    storage: &'static str,
     /// Default elbow scan range when `cfg.c` is None (paper §4.4/4.5).
     elbow_range: (usize, usize),
 }
@@ -90,6 +99,16 @@ impl Session {
                 // the paper's MD elbow range
                 (Workload::Frames { frames, truth }, build, gamma, (4, 40))
             }
+            DatasetSpec::Rcv1 { n, classes, storage: RcvStorage::Sparse, .. } => {
+                let (train, test) = build_sparse_rcv1(n, classes, cfg.seed);
+                let gamma = cfg
+                    .gamma
+                    .unwrap_or_else(|| gamma_for_sparse(&train, cfg.sigma_factor, cfg.seed));
+                let kernel = KernelFn::Rbf { gamma };
+                let build = engine.sparse_gram(train.x.clone(), gamma, cfg.threads);
+                let c_hi = (train.classes * 2).clamp(8, 40);
+                (Workload::SparseVectors { train, test, kernel }, build, gamma, (2, c_hi))
+            }
             _ => {
                 let (train, test) = build_dataset(&cfg.dataset, cfg.seed);
                 let gamma = cfg
@@ -101,7 +120,7 @@ impl Session {
                 (Workload::Vectors { train, test, kernel }, build, gamma, (2, c_hi))
             }
         };
-        let GramBuild { source, fallback } = build;
+        let GramBuild { source, fallback, storage } = build;
         log_simd_tier_once();
         let requested = engine.name().to_string();
         // every degraded path serves native blocks; no fallback = the
@@ -117,6 +136,7 @@ impl Session {
             source,
             workload,
             gamma,
+            storage,
             elbow_range,
         })
     }
@@ -180,6 +200,10 @@ impl Session {
                 let labels = assign_test_set(te, train, &result.medoids, *kernel);
                 (Some(accuracy(&labels, &te.y)), Some(nmi(&labels, &te.y)))
             }
+            Workload::SparseVectors { train, test: Some(te), kernel } => {
+                let labels = assign_test_set_sparse(te, train, &result.medoids, *kernel);
+                (Some(accuracy(&labels, &te.y)), Some(nmi(&labels, &te.y)))
+            }
             _ => (None, None),
         };
         let seconds = restart_seconds.iter().cloned().reduce(f64::min);
@@ -194,6 +218,7 @@ impl Session {
             restart_seconds,
             best_cost,
             engine: self.engine_report.clone(),
+            storage: self.storage.to_string(),
             pipeline: result.pipeline.clone(),
             result,
         })
@@ -278,24 +303,37 @@ impl Session {
         self.gamma
     }
 
+    /// Gram operand storage in effect (`dense` | `csr` | `frames`).
+    pub fn storage(&self) -> &'static str {
+        self.storage
+    }
+
     /// Number of training samples.
     pub fn n(&self) -> usize {
         self.source.n()
     }
 
-    /// Training dataset (vector workloads only).
+    /// Training dataset (dense vector workloads only).
     pub fn train(&self) -> Option<&Dataset> {
         match &self.workload {
             Workload::Vectors { train, .. } => Some(train),
-            Workload::Frames { .. } => None,
+            _ => None,
         }
     }
 
-    /// Held-out dataset, when the spec carries one.
+    /// Training dataset (sparse vector workloads only).
+    pub fn train_sparse(&self) -> Option<&SparseDataset> {
+        match &self.workload {
+            Workload::SparseVectors { train, .. } => Some(train),
+            _ => None,
+        }
+    }
+
+    /// Held-out dataset, when the spec carries one (dense workloads).
     pub fn test(&self) -> Option<&Dataset> {
         match &self.workload {
             Workload::Vectors { test, .. } => test.as_ref(),
-            Workload::Frames { .. } => None,
+            _ => None,
         }
     }
 
@@ -304,6 +342,7 @@ impl Session {
     pub fn truth(&self) -> &[usize] {
         match &self.workload {
             Workload::Vectors { train, .. } => &train.y,
+            Workload::SparseVectors { train, .. } => &train.y,
             Workload::Frames { truth, .. } => truth,
         }
     }
@@ -327,8 +366,9 @@ fn log_simd_tier_once() {
     });
 }
 
-/// Generated train/test datasets for a vector spec. MD specs have no
-/// vector materialization — they are served by `Session` directly.
+/// Generated train/test datasets for a vector spec. MD specs and
+/// sparse-storage RCV1 have no dense vector materialization — they are
+/// served by `Session` directly (see [`build_sparse_rcv1`]).
 pub fn build_dataset(spec: &DatasetSpec, seed: u64) -> (Dataset, Option<Dataset>) {
     let mut rng = Rng::new(seed ^ 0xDA7A);
     match spec {
@@ -338,13 +378,16 @@ pub fn build_dataset(spec: &DatasetSpec, seed: u64) -> (Dataset, Option<Dataset>
             let (tr, te) = all.split(*train);
             (tr, if *test > 0 { Some(te) } else { None })
         }
-        DatasetSpec::Rcv1 { n, classes, dim } => {
+        DatasetSpec::Rcv1 { n, classes, dim, storage: RcvStorage::Dense } => {
             // paper keeps ~3% of RCV1 for testing
             let test = (n / 33).max(1);
             let vocab = crate::data::rcv1_vocab().min(n * 10);
             let all = synthetic_rcv1(&mut rng, n + test, *classes, vocab, *dim);
             let (tr, te) = all.split(*n);
             (tr, Some(te))
+        }
+        DatasetSpec::Rcv1 { storage: RcvStorage::Sparse, .. } => {
+            unreachable!("sparse RCV1 is materialized by Session, not build_dataset")
         }
         DatasetSpec::NoisyMnist { base, copies } => {
             let b = synthetic_mnist(&mut rng, *base);
@@ -356,10 +399,39 @@ pub fn build_dataset(spec: &DatasetSpec, seed: u64) -> (Dataset, Option<Dataset>
     }
 }
 
+/// Generated train/test CSR datasets for the sparse-storage RCV1 spec.
+/// Same split policy and seed stream as the dense arm of
+/// [`build_dataset`], so a seed names the same documents in both.
+pub fn build_sparse_rcv1(
+    n: usize,
+    classes: usize,
+    seed: u64,
+) -> (SparseDataset, Option<SparseDataset>) {
+    let mut rng = Rng::new(seed ^ 0xDA7A);
+    // paper keeps ~3% of RCV1 for testing
+    let test = (n / 33).max(1);
+    let vocab = crate::data::rcv1_vocab().min(n * 10);
+    let all = synthetic_rcv1_sparse(&mut rng, n + test, classes, vocab);
+    let (tr, te) = all.split(n);
+    (tr, Some(te))
+}
+
 /// RBF gamma following the paper's sigma = sigma_factor * d_max rule.
 pub fn gamma_for(dataset: &Dataset, sigma_factor: f32, seed: u64) -> f32 {
     let mut rng = Rng::new(seed ^ 0x516);
     let d2max = dataset.est_d2_max(&mut rng, 2048.min(dataset.n() * 4));
+    gamma_from_d2max(d2max, sigma_factor)
+}
+
+/// Sigma-rule gamma over CSR data: the same probe through the cached
+/// row norms and sparse dots.
+pub fn gamma_for_sparse(dataset: &SparseDataset, sigma_factor: f32, seed: u64) -> f32 {
+    let mut rng = Rng::new(seed ^ 0x516);
+    let d2max = dataset.est_d2_max(&mut rng, 2048.min(dataset.n() * 4));
+    gamma_from_d2max(d2max, sigma_factor)
+}
+
+fn gamma_from_d2max(d2max: f32, sigma_factor: f32) -> f32 {
     let sigma = sigma_factor * d2max.sqrt().max(1e-6);
     1.0 / (2.0 * sigma * sigma)
 }
@@ -444,18 +516,65 @@ pub fn assign_test_set(
         .collect()
 }
 
-/// Linear k-means baseline on the same dataset (Tab.1/2 "Baseline" rows).
+/// Assign held-out CSR samples to the trained medoids: the sparse twin
+/// of [`assign_test_set`], with kernel values rebuilt from cached norms
+/// and sparse dots (`d² = ‖x‖² + ‖m‖² − 2·x·m`).
+pub fn assign_test_set_sparse(
+    test: &SparseDataset,
+    train: &SparseDataset,
+    medoids: &[usize],
+    kernel: KernelFn,
+) -> Vec<usize> {
+    (0..test.n())
+        .map(|i| {
+            let xin = test.x.sq_norm(i);
+            let mut best = 0;
+            let mut best_v = f32::INFINITY;
+            for (j, &m) in medoids.iter().enumerate() {
+                let mn = train.x.sq_norm(m);
+                let dot = test.x.row_dot(i, &train.x, m);
+                let d2 = (xin + mn - 2.0 * dot).max(0.0);
+                let k_mm = kernel.from_parts(0.0, mn);
+                let k_xm = kernel.from_parts(d2, dot);
+                let d = k_mm - 2.0 * k_xm;
+                if d < best_v {
+                    best_v = d;
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Linear k-means baseline on the same dataset (Tab.1/2 "Baseline"
+/// rows). Specs with no dense vector materialization (MD frames,
+/// sparse-storage RCV1) are a structured error, never a panic.
 pub fn run_lloyd_baseline(
     spec: &DatasetSpec,
     c: usize,
     seed: u64,
-) -> (f64, f64, Option<f64>, Option<f64>) {
+) -> Result<(f64, f64, Option<f64>, Option<f64>)> {
+    match spec {
+        DatasetSpec::Md { .. } => {
+            return Err(Error::Config(
+                "the linear baseline needs dense vectors; MD frames have none".into(),
+            ));
+        }
+        DatasetSpec::Rcv1 { storage: RcvStorage::Sparse, .. } => {
+            return Err(Error::Config(
+                "the linear baseline needs dense vectors (use rcv1:n:classes:dim, not :sparse)"
+                    .into(),
+            ));
+        }
+        _ => {}
+    }
     let (train, test) = build_dataset(spec, seed);
     let mut rng = Rng::new(seed);
     let res = baselines::lloyd_kmeans(&train.x, c, 100, 3, &mut rng);
     let train_acc = accuracy(&res.labels, &train.y);
     let train_n = nmi(&res.labels, &train.y);
-    match test {
+    Ok(match test {
         Some(te) => {
             let labels = baselines::lloyd::assign_to_centers(&te.x, &res.centers);
             (
@@ -466,7 +585,7 @@ pub fn run_lloyd_baseline(
             )
         }
         None => (train_acc, train_n, None, None),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -546,6 +665,28 @@ mod tests {
     }
 
     #[test]
+    fn sparse_rcv1_runs_end_to_end_with_csr_storage() {
+        let spec = DatasetSpec::Rcv1 { n: 400, classes: 6, dim: 32, storage: RcvStorage::Sparse };
+        let session = Experiment::on(spec).clusters(6).batches(2).build().unwrap();
+        assert_eq!(session.storage(), "csr");
+        assert!(session.train().is_none());
+        let train = session.train_sparse().expect("sparse workload");
+        assert_eq!(train.n(), 400);
+        assert!(train.x.density() < crate::kernels::VecGram::SPARSE_DENSITY_THRESHOLD);
+        let report = session.fit().unwrap();
+        assert_eq!(report.storage, "csr");
+        assert_eq!(report.c_used, 6);
+        // the spec keeps ~3% held out, assigned through the sparse path
+        assert!(report.test_accuracy.is_some());
+        assert!(report.test_nmi.is_some());
+        let j = report.to_json();
+        assert_eq!(j.get("storage").and_then(|v| v.as_str()), Some("csr"));
+        // dense storage reports "dense" through the same field
+        let dense = toy_exp().build().unwrap().fit().unwrap();
+        assert_eq!(dense.storage, "dense");
+    }
+
+    #[test]
     fn md_runs_through_the_same_session_path() {
         let session = Experiment::on(DatasetSpec::Md { frames: 400 })
             .clusters(6)
@@ -606,9 +747,20 @@ mod tests {
     #[test]
     fn lloyd_baseline_on_toy() {
         let (acc, n, _, _) =
-            run_lloyd_baseline(&DatasetSpec::Toy2d { per_cluster: 100 }, 4, 1);
+            run_lloyd_baseline(&DatasetSpec::Toy2d { per_cluster: 100 }, 4, 1).unwrap();
         assert!(acc > 0.85, "acc {acc}");
         assert!(n > 0.6, "nmi {n}");
+    }
+
+    #[test]
+    fn lloyd_baseline_rejects_undense_specs_structurally() {
+        // no dense materialization exists for these: a Config error,
+        // never build_dataset's unreachable!()
+        let sparse = DatasetSpec::Rcv1 { n: 60, classes: 3, dim: 8, storage: RcvStorage::Sparse };
+        let err = run_lloyd_baseline(&sparse, 3, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+        let err = run_lloyd_baseline(&DatasetSpec::Md { frames: 50 }, 3, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
     }
 
     #[test]

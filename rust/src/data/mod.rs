@@ -10,10 +10,12 @@ mod dataset;
 mod mnist;
 mod rcv1;
 mod sampler;
+mod sparse;
 mod toy2d;
 
 pub use dataset::Dataset;
 pub use mnist::{synthetic_mnist, noisy_mnist};
-pub use rcv1::{random_projection, rcv1_vocab, synthetic_rcv1};
+pub use rcv1::{random_projection, rcv1_vocab, synthetic_rcv1, synthetic_rcv1_sparse};
 pub use sampler::{Sampling, minibatch_indices};
+pub use sparse::{sparse_dot, CsrMat, SparseDataset};
 pub use toy2d::toy2d;

@@ -12,6 +12,13 @@
 //! overlap => low attainable accuracy), Zipf-imbalanced class sizes with a
 //! minimum, log-TF-IDF weighting with a rank-based IDF proxy, L2
 //! normalization, and an Achlioptas sparse random projection to `dim`.
+//!
+//! Two materializations share one document generator (and therefore one
+//! RNG stream, so a seed names the same corpus in both): the paper-
+//! faithful dense projection ([`synthetic_rcv1`]) and the native CSR
+//! form ([`synthetic_rcv1_sparse`]), which skips the projection and
+//! keeps documents in the raw vocabulary space for the sparse Gram path.
+use super::sparse::{CsrMat, SparseDataset};
 use super::Dataset;
 use crate::linalg::Mat;
 use crate::util::rng::Rng;
@@ -89,15 +96,16 @@ fn class_sizes(n: usize, classes: usize, min_size: usize) -> Vec<usize> {
     sizes
 }
 
-/// Generate the projected corpus. `n` documents, `classes` categories,
-/// projected to `dim` dense dimensions over a `vocab`-word vocabulary.
-pub fn synthetic_rcv1(
+/// Generate the shared corpus: `n` merged, log-TF-IDF-weighted,
+/// L2-normalized documents over a `vocab`-word vocabulary, shuffled,
+/// each with its category label. Both materializations consume this, so
+/// the dense and sparse forms of a seed describe the same documents.
+fn synthetic_rcv1_docs(
     rng: &mut Rng,
     n: usize,
     classes: usize,
     vocab: usize,
-    dim: usize,
-) -> Dataset {
+) -> Vec<(Vec<(usize, f32)>, usize)> {
     let sizes = class_sizes(n, classes, 500.min(n / classes + 1));
     // per-class topic words drawn from a *shared pool* of mid-rank words:
     // classes overlap heavily in vocabulary (as RCV1 categories do), which
@@ -106,10 +114,10 @@ pub fn synthetic_rcv1(
     let topic_words: Vec<Vec<usize>> = (0..classes)
         .map(|_| (0..60).map(|_| pool[rng.below(pool.len())]).collect())
         .collect();
-    let mut rows: Vec<(Vec<f32>, usize)> = Vec::with_capacity(n);
+    let mut docs: Vec<(Vec<(usize, f32)>, usize)> = Vec::with_capacity(n);
     for (c, &size) in sizes.iter().enumerate() {
         for _ in 0..size {
-            if rows.len() == n {
+            if docs.len() == n {
                 break;
             }
             let len = 40 + rng.below(120); // document length
@@ -144,22 +152,59 @@ pub fn synthetic_rcv1(
             for (_, v) in merged.iter_mut() {
                 *v /= norm;
             }
-            rows.push((random_projection(&merged, dim, 0xC0FFEE), c));
+            docs.push((merged, c));
         }
     }
-    // top up if floors under-filled (possible when n is small)
-    while rows.len() < n {
-        let c = rng.below(classes);
-        rows.push((rows[c].0.clone(), c));
+    // top up if floors under-filled (possible when n is small):
+    // duplicate a document drawn from the whole corpus *with its true
+    // label* — padding must never corrupt the ground truth the metrics
+    // score against, nor systematically clone one class
+    while docs.len() < n {
+        let i = rng.below(docs.len());
+        docs.push(docs[i].clone());
     }
-    rng.shuffle(&mut rows);
+    rng.shuffle(&mut docs);
+    docs
+}
+
+/// Generate the projected corpus. `n` documents, `classes` categories,
+/// projected to `dim` dense dimensions over a `vocab`-word vocabulary.
+pub fn synthetic_rcv1(
+    rng: &mut Rng,
+    n: usize,
+    classes: usize,
+    vocab: usize,
+    dim: usize,
+) -> Dataset {
+    let docs = synthetic_rcv1_docs(rng, n, classes, vocab);
     let mut x = Mat::zeros(n, dim);
     let mut y = vec![0usize; n];
-    for (i, (row, c)) in rows.into_iter().enumerate() {
-        x.row_mut(i).copy_from_slice(&row);
+    for (i, (doc, c)) in docs.into_iter().enumerate() {
+        let proj = random_projection(&doc, dim, 0xC0FFEE);
+        x.row_mut(i).copy_from_slice(&proj);
         y[i] = c;
     }
     Dataset::new("synthetic-rcv1", x, y, classes)
+}
+
+/// Generate the corpus in its native sparse form: no random projection,
+/// documents stay in the `vocab`-dimensional word space as CSR rows.
+/// Shares the generator (and RNG stream) with [`synthetic_rcv1`], so the
+/// same seed names the same documents in both storages.
+pub fn synthetic_rcv1_sparse(
+    rng: &mut Rng,
+    n: usize,
+    classes: usize,
+    vocab: usize,
+) -> SparseDataset {
+    let docs = synthetic_rcv1_docs(rng, n, classes, vocab);
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for (doc, c) in docs {
+        rows.push(doc);
+        y.push(c);
+    }
+    SparseDataset::new("synthetic-rcv1-sparse", CsrMat::from_rows(vocab, rows), y, classes)
 }
 
 #[cfg(test)]
@@ -233,5 +278,37 @@ mod tests {
         let b = synthetic_rcv1(&mut Rng::new(5), 200, 5, 1000, 16);
         assert_eq!(a.x.data(), b.x.data());
         assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn sparse_is_deterministic_and_text_like() {
+        let a = synthetic_rcv1_sparse(&mut Rng::new(6), 300, 8, 2000);
+        let b = synthetic_rcv1_sparse(&mut Rng::new(6), 300, 8, 2000);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.n(), 300);
+        assert_eq!(a.d(), 2000);
+        // merged bag-of-words documents are far sparser than the vocab
+        assert!(a.x.density() < 0.10, "density {}", a.x.density());
+        // L2-normalized rows
+        for i in 0..20 {
+            assert!((a.x.sq_norm(i) - 1.0).abs() < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn sparse_projects_to_the_dense_corpus() {
+        // same seed => same documents: projecting every CSR row must
+        // reproduce the dense materialization exactly
+        let dense = synthetic_rcv1(&mut Rng::new(7), 150, 5, 1500, 24);
+        let sparse = synthetic_rcv1_sparse(&mut Rng::new(7), 150, 5, 1500);
+        assert_eq!(dense.y, sparse.y);
+        for i in 0..150 {
+            let (idx, vals) = sparse.x.row(i);
+            let doc: Vec<(usize, f32)> =
+                idx.iter().zip(vals).map(|(&w, &v)| (w as usize, v)).collect();
+            let proj = random_projection(&doc, 24, 0xC0FFEE);
+            assert_eq!(dense.x.row(i), &proj[..], "row {i}");
+        }
     }
 }

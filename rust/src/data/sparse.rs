@@ -1,0 +1,339 @@
+//! Compressed-sparse-row feature matrices for text-corpus workloads.
+//!
+//! The paper's largest benchmark (RCV1) is ~188k documents in a 47236-d
+//! vocabulary at a fraction of a percent density; storing it dense — or
+//! densifying it through a random projection — pays for multiplies that
+//! are overwhelmingly zeros. [`CsrMat`] is the native storage for that
+//! regime: the classic indptr/indices/values layout, with per-row squared
+//! norms cached at construction so the Gram epilogue
+//! (`d² = ‖x‖² + ‖y‖² − 2·x·y`) never re-sums a row. The sparse compute
+//! path lives in `kernels::microkernel::fill_gram_rows_csr`; [`CsrMat`]
+//! itself stays a plain container.
+//!
+//! [`SparseDataset`] is the CSR twin of [`super::Dataset`]: labelled
+//! samples for evaluation, with the same split/subset/d_max-estimation
+//! surface the coordinator drives.
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Row-major CSR matrix of `f32` with cached per-row squared norms.
+///
+/// Invariants (enforced at construction): column indices are strictly
+/// increasing within each row and `< cols`; `indptr` is monotone with
+/// `indptr[0] == 0` and `indptr[rows] == nnz`. The unsafe sparse
+/// micro-kernel relies on the index bound.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMat {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    rows: usize,
+    cols: usize,
+    sq_norms: Vec<f32>,
+}
+
+impl CsrMat {
+    /// Build from per-row `(column, value)` entry lists. Entries may be
+    /// unsorted and may repeat a column (duplicates are summed, as the
+    /// bag-of-words generators produce them); exact zeros are dropped.
+    pub fn from_rows(cols: usize, rows: Vec<Vec<(usize, f32)>>) -> CsrMat {
+        assert!(cols <= u32::MAX as usize, "column space exceeds u32 indices");
+        let nrows = rows.len();
+        let mut indptr = Vec::with_capacity(nrows + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut sq_norms = Vec::with_capacity(nrows);
+        for raw in rows {
+            let mut entries: Vec<(usize, f32)> =
+                raw.into_iter().filter(|&(_, v)| v != 0.0).collect();
+            entries.sort_unstable_by_key(|e| e.0);
+            let mut merged: Vec<(usize, f32)> = Vec::with_capacity(entries.len());
+            for (c, v) in entries {
+                assert!(c < cols, "column {c} out of {cols}");
+                match merged.last_mut() {
+                    Some(last) if last.0 == c => last.1 += v,
+                    _ => merged.push((c, v)),
+                }
+            }
+            let mut norm = 0.0f32;
+            for &(c, v) in &merged {
+                indices.push(c as u32);
+                values.push(v);
+                norm += v * v;
+            }
+            sq_norms.push(norm);
+            indptr.push(indices.len());
+        }
+        CsrMat { indptr, indices, values, rows: nrows, cols, sq_norms }
+    }
+
+    /// Compress a dense matrix, dropping exact zeros.
+    pub fn from_dense(m: &Mat) -> CsrMat {
+        let rows = (0..m.rows())
+            .map(|r| {
+                m.row(r)
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &v)| v != 0.0)
+                    .map(|(c, &v)| (c, v))
+                    .collect()
+            })
+            .collect();
+        CsrMat::from_rows(m.cols(), rows)
+    }
+
+    /// Materialize as a dense `Mat` (the densify side of the
+    /// `VecGram::auto` storage crossover).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (idx, vals) = self.row(r);
+            let orow = out.row_mut(r);
+            for (&c, &v) in idx.iter().zip(vals) {
+                orow[c as usize] = v;
+            }
+        }
+        out
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Stored entries across all rows.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// `nnz / (rows * cols)` — the storage-selection signal.
+    pub fn density(&self) -> f64 {
+        let cells = self.rows * self.cols;
+        if cells == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / cells as f64
+    }
+
+    /// Row `r` as `(column indices, values)` slices.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Cached `‖row r‖²`.
+    #[inline]
+    pub fn sq_norm(&self, r: usize) -> f32 {
+        self.sq_norms[r]
+    }
+
+    /// All cached squared norms, indexed by row.
+    pub fn sq_norms(&self) -> &[f32] {
+        &self.sq_norms
+    }
+
+    /// Gather the given rows into a new matrix (mini-batch / split
+    /// extraction — the CSR twin of `Mat::gather`).
+    pub fn gather(&self, idx: &[usize]) -> CsrMat {
+        let mut indptr = Vec::with_capacity(idx.len() + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        let mut sq_norms = Vec::with_capacity(idx.len());
+        for &i in idx {
+            assert!(i < self.rows, "gather index {i} out of {}", self.rows);
+            let (ri, rv) = self.row(i);
+            indices.extend_from_slice(ri);
+            values.extend_from_slice(rv);
+            sq_norms.push(self.sq_norms[i]);
+            indptr.push(indices.len());
+        }
+        CsrMat { indptr, indices, values, rows: idx.len(), cols: self.cols, sq_norms }
+    }
+
+    /// Dot product of row `i` with row `j` of `other` (two-pointer merge
+    /// over the sorted index streams).
+    pub fn row_dot(&self, i: usize, other: &CsrMat, j: usize) -> f32 {
+        let (ai, av) = self.row(i);
+        let (bi, bv) = other.row(j);
+        sparse_dot(ai, av, bi, bv)
+    }
+}
+
+/// Dot product of two sparse vectors given as sorted `(indices, values)`
+/// slices.
+pub fn sparse_dot(ai: &[u32], av: &[f32], bi: &[u32], bv: &[f32]) -> f32 {
+    let mut dot = 0.0f32;
+    let (mut a, mut b) = (0usize, 0usize);
+    while a < ai.len() && b < bi.len() {
+        match ai[a].cmp(&bi[b]) {
+            std::cmp::Ordering::Less => a += 1,
+            std::cmp::Ordering::Greater => b += 1,
+            std::cmp::Ordering::Equal => {
+                dot += av[a] * bv[b];
+                a += 1;
+                b += 1;
+            }
+        }
+    }
+    dot
+}
+
+/// A labelled CSR dataset: the sparse twin of [`super::Dataset`] (labels
+/// are used only for evaluation, never by the clustering).
+#[derive(Clone, Debug)]
+pub struct SparseDataset {
+    pub x: CsrMat,
+    pub y: Vec<usize>,
+    /// Number of distinct ground-truth classes.
+    pub classes: usize,
+    /// Human-readable provenance for reports.
+    pub name: String,
+}
+
+impl SparseDataset {
+    pub fn new(name: &str, x: CsrMat, y: Vec<usize>, classes: usize) -> SparseDataset {
+        assert_eq!(x.rows(), y.len(), "features/labels length mismatch");
+        debug_assert!(y.iter().all(|&c| c < classes));
+        SparseDataset { x, y, classes, name: name.to_string() }
+    }
+
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    pub fn d(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Subset by sample indices.
+    pub fn subset(&self, idx: &[usize]) -> SparseDataset {
+        SparseDataset {
+            x: self.x.gather(idx),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            classes: self.classes,
+            name: self.name.clone(),
+        }
+    }
+
+    /// Split into (first `n_train` samples, rest). Generators already
+    /// shuffle, so a prefix split is a random split.
+    pub fn split(&self, n_train: usize) -> (SparseDataset, SparseDataset) {
+        assert!(n_train <= self.n());
+        let train_idx: Vec<usize> = (0..n_train).collect();
+        let test_idx: Vec<usize> = (n_train..self.n()).collect();
+        (self.subset(&train_idx), self.subset(&test_idx))
+    }
+
+    /// Maximum pairwise squared distance, estimated from `sample` random
+    /// pairs through the cached norms: `d² = ‖x_i‖² + ‖x_j‖² − 2·x_i·x_j`
+    /// (the same sigma-rule probe `Dataset::est_d2_max` runs densely).
+    pub fn est_d2_max(&self, rng: &mut Rng, sample: usize) -> f32 {
+        let n = self.n();
+        let mut best = 0.0f32;
+        for _ in 0..sample {
+            let i = rng.below(n);
+            let j = rng.below(n);
+            let dot = self.x.row_dot(i, &self.x, j);
+            let d2 = (self.x.sq_norm(i) + self.x.sq_norm(j) - 2.0 * dot).max(0.0);
+            best = best.max(d2);
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> CsrMat {
+        CsrMat::from_rows(
+            5,
+            vec![
+                vec![(1, 2.0), (3, -1.0)],
+                vec![],
+                vec![(0, 1.0), (1, 1.0), (4, 3.0)],
+                vec![(3, 0.5)],
+            ],
+        )
+    }
+
+    #[test]
+    fn construction_and_norms() {
+        let m = toy();
+        assert_eq!((m.rows(), m.cols(), m.nnz()), (4, 5, 6));
+        let (idx, vals) = m.row(0);
+        assert_eq!(idx, &[1, 3]);
+        assert_eq!(vals, &[2.0, -1.0]);
+        assert_eq!(m.row(1).0.len(), 0);
+        assert!((m.sq_norm(0) - 5.0).abs() < 1e-6);
+        assert_eq!(m.sq_norm(1), 0.0);
+        assert!((m.sq_norm(2) - 11.0).abs() < 1e-6);
+        assert!((m.density() - 6.0 / 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicates_merge_and_zeros_drop() {
+        let m = CsrMat::from_rows(4, vec![vec![(2, 1.0), (0, 0.0), (2, 2.5), (1, -1.0)]]);
+        let (idx, vals) = m.row(0);
+        assert_eq!(idx, &[1, 2]);
+        assert_eq!(vals, &[-1.0, 3.5]);
+        assert!((m.sq_norm(0) - (1.0 + 3.5 * 3.5)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let m = toy();
+        let d = m.to_dense();
+        assert_eq!((d.rows(), d.cols()), (4, 5));
+        assert_eq!(d.at(0, 1), 2.0);
+        assert_eq!(d.at(0, 3), -1.0);
+        assert_eq!(d.row(1), &[0.0; 5]);
+        let back = CsrMat::from_dense(&d);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn gather_picks_rows() {
+        let m = toy();
+        let g = m.gather(&[2, 0]);
+        assert_eq!(g.rows(), 2);
+        assert_eq!(g.row(0).0, m.row(2).0);
+        assert_eq!(g.row(1).1, m.row(0).1);
+        assert_eq!(g.sq_norm(0), m.sq_norm(2));
+    }
+
+    #[test]
+    fn dot_matches_dense() {
+        let m = toy();
+        let d = m.to_dense();
+        for i in 0..4 {
+            for j in 0..4 {
+                let want: f32 = d.row(i).iter().zip(d.row(j)).map(|(a, b)| a * b).sum();
+                assert!((m.row_dot(i, &m, j) - want).abs() < 1e-6, "[{i},{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_dataset_split_and_d2max() {
+        let x = CsrMat::from_rows(
+            3,
+            vec![vec![(0, 1.0)], vec![(1, 1.0)], vec![(2, 1.0)], vec![(0, 1.0)]],
+        );
+        let ds = SparseDataset::new("toy-sparse", x, vec![0, 1, 2, 0], 3);
+        let (tr, te) = ds.split(3);
+        assert_eq!(tr.n(), 3);
+        assert_eq!(te.n(), 1);
+        assert_eq!(te.y, vec![0]);
+        let mut rng = Rng::new(0);
+        // orthonormal rows: every cross-pair has d² = 2
+        let d2 = ds.est_d2_max(&mut rng, 256);
+        assert!((d2 - 2.0).abs() < 1e-6, "d2 {d2}");
+    }
+}

@@ -1,6 +1,7 @@
 //! Gram-block sources: the interface between data and the clusterer.
 use std::sync::Arc;
 
+use crate::data::CsrMat;
 use crate::linalg::{qcp_rmsd, row_sq_norms, simd, Frame, Mat};
 use crate::util::threadpool;
 
@@ -39,13 +40,24 @@ pub trait GramSource: Sync {
     }
 }
 
+/// How a [`VecGram`] stores its samples: dense rows or CSR rows. Both
+/// run through the same packed-panel micro-kernel; the sparse side
+/// streams stored entries instead of full feature rows.
+pub enum VecStorage {
+    Dense(Mat),
+    Csr(CsrMat),
+}
+
 /// Vector-space data with a kernel function, evaluated natively through
 /// the dispatched micro-kernel (`kernels::microkernel`, blocked +
-/// multithreaded). This is the CPU fallback / test oracle; the PJRT path
+/// multithreaded). Storage-generic: dense rows ([`VecGram::new`]) and
+/// CSR rows ([`VecGram::from_csr`]) produce the same kernel values; the
+/// [`VecGram::auto`] constructor picks the storage from the measured
+/// density. This is the CPU fallback / test oracle; the PJRT path
 /// (`runtime::PjrtGram`) produces the same numbers through the AOT
 /// Pallas artifacts.
 pub struct VecGram {
-    x: Mat,
+    storage: VecStorage,
     kernel: KernelFn,
     threads: usize,
     /// Per-sample squared norms, computed once at construction: `block`
@@ -55,28 +67,177 @@ pub struct VecGram {
 }
 
 impl VecGram {
+    /// Densify-vs-CSR crossover for [`VecGram::auto`]: below this
+    /// density the sparse kernel's per-nnz stream wins; above it the
+    /// dense core's contiguous loads do. 0.25 is conservative — the
+    /// sparse path breaks even near ~0.5 on AVX2 (see `BENCH_sparse`).
+    pub const SPARSE_DENSITY_THRESHOLD: f64 = 0.25;
+
     pub fn new(x: Mat, kernel: KernelFn, threads: usize) -> VecGram {
         let xn = row_sq_norms(&x);
-        VecGram { x, kernel, threads: threads.max(1), xn }
+        VecGram { storage: VecStorage::Dense(x), kernel, threads: threads.max(1), xn }
+    }
+
+    /// CSR-backed source: blocks run through the sparse micro-kernel
+    /// regardless of density (norms come from the CSR row-norm cache).
+    pub fn from_csr(x: CsrMat, kernel: KernelFn, threads: usize) -> VecGram {
+        let xn = x.sq_norms().to_vec();
+        VecGram { storage: VecStorage::Csr(x), kernel, threads: threads.max(1), xn }
+    }
+
+    /// Storage auto-selection: keep CSR when the data is sparse enough
+    /// for the per-nnz kernel to win, densify above
+    /// [`Self::SPARSE_DENSITY_THRESHOLD`].
+    pub fn auto(x: CsrMat, kernel: KernelFn, threads: usize) -> VecGram {
+        if x.density() > Self::SPARSE_DENSITY_THRESHOLD {
+            VecGram::new(x.to_dense(), kernel, threads)
+        } else {
+            VecGram::from_csr(x, kernel, threads)
+        }
     }
 
     pub fn kernel(&self) -> KernelFn {
         self.kernel
     }
 
+    /// Dense sample matrix. Panics on CSR storage — callers that may see
+    /// either should match on [`VecGram::storage`].
     pub fn x(&self) -> &Mat {
-        &self.x
+        match &self.storage {
+            VecStorage::Dense(m) => m,
+            VecStorage::Csr(_) => {
+                panic!("VecGram::x(): dense accessor on CSR storage (use csr()/storage())")
+            }
+        }
+    }
+
+    /// CSR sample matrix, when that is the storage.
+    pub fn csr(&self) -> Option<&CsrMat> {
+        match &self.storage {
+            VecStorage::Dense(_) => None,
+            VecStorage::Csr(m) => Some(m),
+        }
+    }
+
+    pub fn storage(&self) -> &VecStorage {
+        &self.storage
+    }
+
+    /// Stable storage label for reports: `dense` | `csr`.
+    pub fn storage_name(&self) -> &'static str {
+        match self.storage {
+            VecStorage::Dense(_) => "dense",
+            VecStorage::Csr(_) => "csr",
+        }
+    }
+
+    /// Cap on the densified packed-panel footprint of one CSR block
+    /// fill. The panel is `ncols x depth` f32s — at vocabulary-scale
+    /// depth (RCV1: 47236) an unchunked landmark set would dwarf the
+    /// CSR operand itself — so wide column sets are processed in
+    /// NR-aligned column chunks under this bound. Chunking is invisible
+    /// in the results: each `(row, col)` value depends only on the
+    /// row's entry stream and that column's packed lanes, never on
+    /// which columns share a chunk.
+    const MAX_PACKED_PANEL_BYTES: usize = 32 << 20;
+
+    /// CSR block fill: pack `cols` into panels chunk by chunk (bounded
+    /// by `max_panel_bytes`), stream `rows` through the sparse
+    /// micro-kernel per chunk.
+    fn block_csr(
+        &self,
+        x: &CsrMat,
+        rows: &[usize],
+        cols: &[usize],
+        yn: &[f32],
+        out: &mut [f32],
+        max_panel_bytes: usize,
+    ) {
+        let ncols = cols.len();
+        let kernel = self.kernel;
+        let tier = simd::active_tier();
+        // chunk rows by the average stored row length, not the full
+        // feature dimension: that is what a row costs here
+        let nnz_per_row = (x.nnz() / x.rows().max(1)).max(1);
+        let rows_per_chunk = (128 * 1024 / (nnz_per_row * 4)).clamp(4, 256);
+        let depth_bytes = x.cols().max(1) * 4;
+        let nr = microkernel::NR;
+        let chunk_cols = ((max_panel_bytes / depth_bytes).max(nr) / nr) * nr;
+        // scratch reused across column chunks (first chunk is widest,
+        // so this resizes at most once); untouched on the single-chunk
+        // fast path below
+        let mut tmp: Vec<f32> = Vec::new();
+        let mut jlo = 0;
+        while jlo < ncols {
+            let jhi = (jlo + chunk_cols).min(ncols);
+            let packed = PackedPanel::pack_gather_csr(x, &cols[jlo..jhi]);
+            let yn_chunk = &yn[jlo..jhi];
+            if jlo == 0 && jhi == ncols {
+                // single chunk (the common case): fill `out` directly
+                threadpool::parallel_rows_mut(
+                    self.threads,
+                    out,
+                    ncols,
+                    rows_per_chunk,
+                    |lo, hi, buf| {
+                        microkernel::fill_gram_rows_csr(
+                            tier,
+                            x,
+                            &rows[lo..hi],
+                            &packed,
+                            &self.xn,
+                            yn_chunk,
+                            kernel,
+                            buf,
+                        );
+                    },
+                );
+                return;
+            }
+            // fill a contiguous scratch for this column chunk, then
+            // scatter its rows into the strided output columns (the
+            // fill overwrites every cell, so stale contents are fine)
+            let cw = jhi - jlo;
+            if tmp.len() < rows.len() * cw {
+                tmp.resize(rows.len() * cw, 0.0);
+            }
+            let scratch = &mut tmp[..rows.len() * cw];
+            threadpool::parallel_rows_mut(
+                self.threads,
+                scratch,
+                cw,
+                rows_per_chunk,
+                |lo, hi, buf| {
+                    microkernel::fill_gram_rows_csr(
+                        tier,
+                        x,
+                        &rows[lo..hi],
+                        &packed,
+                        &self.xn,
+                        yn_chunk,
+                        kernel,
+                        buf,
+                    );
+                },
+            );
+            for (r, trow) in scratch.chunks(cw).enumerate() {
+                out[r * ncols + jlo..r * ncols + jhi].copy_from_slice(trow);
+            }
+            jlo = jhi;
+        }
     }
 }
 
 impl GramSource for VecGram {
     fn n(&self) -> usize {
-        self.x.rows()
+        match &self.storage {
+            VecStorage::Dense(m) => m.rows(),
+            VecStorage::Csr(m) => m.rows(),
+        }
     }
 
     fn block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
         assert_eq!(out.len(), rows.len() * cols.len());
-        let d = self.x.cols();
         let ncols = cols.len();
         if ncols == 0 || rows.is_empty() {
             return;
@@ -84,40 +245,56 @@ impl GramSource for VecGram {
         // pack column samples once into NR-wide depth-major panels (the
         // micro-kernel's layout); rows stream per worker chunk. Column
         // squared norms come straight from the per-sample cache.
-        let packed = PackedPanel::pack_gather(&self.x, cols);
         let yn: Vec<f32> = cols.iter().map(|&j| self.xn[j]).collect();
         let kernel = self.kernel;
         let tier = simd::active_tier();
-        let rows_per_chunk = (128 * 1024 / (d.max(1) * 4)).clamp(4, 128);
-        threadpool::parallel_rows_mut(
-            self.threads,
-            out,
-            ncols,
-            rows_per_chunk,
-            |lo, hi, blockbuf| {
-                microkernel::fill_gram_rows(
-                    tier,
-                    &self.x,
-                    &rows[lo..hi],
-                    &packed,
-                    &self.xn,
-                    &yn,
-                    kernel,
-                    blockbuf,
+        match &self.storage {
+            VecStorage::Dense(x) => {
+                let d = x.cols();
+                let packed = PackedPanel::pack_gather(x, cols);
+                let rows_per_chunk = (128 * 1024 / (d.max(1) * 4)).clamp(4, 128);
+                threadpool::parallel_rows_mut(
+                    self.threads,
+                    out,
+                    ncols,
+                    rows_per_chunk,
+                    |lo, hi, blockbuf| {
+                        microkernel::fill_gram_rows(
+                            tier,
+                            x,
+                            &rows[lo..hi],
+                            &packed,
+                            &self.xn,
+                            &yn,
+                            kernel,
+                            blockbuf,
+                        );
+                    },
                 );
-            },
-        );
+            }
+            VecStorage::Csr(x) => {
+                self.block_csr(x, rows, cols, &yn, out, Self::MAX_PACKED_PANEL_BYTES);
+            }
+        }
     }
 
     fn diag(&self, idx: &[usize], out: &mut [f32]) {
         match self.kernel {
             KernelFn::Rbf { .. } => out.fill(1.0),
-            _ => {
-                for (o, &i) in out.iter_mut().zip(idx) {
-                    let xi = self.x.row(i);
-                    *o = self.kernel.eval(xi, xi);
+            _ => match &self.storage {
+                VecStorage::Dense(x) => {
+                    for (o, &i) in out.iter_mut().zip(idx) {
+                        let xi = x.row(i);
+                        *o = self.kernel.eval(xi, xi);
+                    }
                 }
-            }
+                VecStorage::Csr(x) => {
+                    // K_ii from the cached norm: d²(i, i) = 0, dot = ‖x‖²
+                    for (o, &i) in out.iter_mut().zip(idx) {
+                        *o = self.kernel.from_parts(0.0, x.sq_norm(i));
+                    }
+                }
+            },
         }
     }
 }
@@ -229,6 +406,102 @@ mod tests {
             .block_mat(&rows, &rows);
         let b = VecGram::new(x, KernelFn::Rbf { gamma: 0.1 }, 8).block_mat(&rows, &rows);
         assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn csr_gram_matches_dense_gram() {
+        let mut rng = Rng::new(4);
+        // sparse-ish data with exact zeros so CSR actually drops entries
+        let x = Mat::from_fn(40, 13, |_, _| {
+            if rng.f64() < 0.7 {
+                0.0
+            } else {
+                rng.normal32(0.0, 1.0)
+            }
+        });
+        let csr = CsrMat::from_dense(&x);
+        for kernel in [
+            KernelFn::Linear,
+            KernelFn::Rbf { gamma: 0.2 },
+            KernelFn::Poly { degree: 2, c: 1.0 },
+        ] {
+            let dense = VecGram::new(x.clone(), kernel, 2);
+            let sparse = VecGram::from_csr(csr.clone(), kernel, 2);
+            assert_eq!(sparse.storage_name(), "csr");
+            assert_eq!(sparse.n(), 40);
+            let rows: Vec<usize> = (0..40).step_by(3).collect();
+            let cols: Vec<usize> = (1..40).step_by(4).collect();
+            let a = dense.block_mat(&rows, &cols);
+            let b = sparse.block_mat(&rows, &cols);
+            for (g, w) in b.data().iter().zip(a.data()) {
+                assert!((g - w).abs() < 1e-4, "{kernel:?}: {g} vs {w}");
+            }
+            // diag agrees too (linear/poly read the cached norms)
+            let idx: Vec<usize> = (0..10).collect();
+            let mut da = vec![0.0; 10];
+            let mut db = vec![0.0; 10];
+            dense.diag(&idx, &mut da);
+            sparse.diag(&idx, &mut db);
+            for (g, w) in db.iter().zip(&da) {
+                assert!((g - w).abs() < 1e-4, "{kernel:?} diag: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_thread_invariance() {
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(50, 9, |_, _| {
+            if rng.f64() < 0.8 {
+                0.0
+            } else {
+                rng.normal32(0.0, 1.0)
+            }
+        });
+        let csr = CsrMat::from_dense(&x);
+        let rows: Vec<usize> = (0..50).collect();
+        let a = VecGram::from_csr(csr.clone(), KernelFn::Rbf { gamma: 0.1 }, 1)
+            .block_mat(&rows, &rows);
+        let b = VecGram::from_csr(csr, KernelFn::Rbf { gamma: 0.1 }, 8).block_mat(&rows, &rows);
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn csr_column_chunking_is_invisible() {
+        let mut rng = Rng::new(7);
+        let x = Mat::from_fn(30, 40, |_, _| {
+            if rng.f64() < 0.7 {
+                0.0
+            } else {
+                rng.normal32(0.0, 1.0)
+            }
+        });
+        let csr = CsrMat::from_dense(&x);
+        let g = VecGram::from_csr(csr.clone(), KernelFn::Rbf { gamma: 0.3 }, 2);
+        let rows: Vec<usize> = (0..30).collect();
+        let cols: Vec<usize> = (0..30).rev().collect();
+        let yn: Vec<f32> = cols.iter().map(|&j| csr.sq_norm(j)).collect();
+        let mut whole = vec![0.0f32; rows.len() * cols.len()];
+        g.block(&rows, &cols, &mut whole);
+        // a tiny cap forces several NR-aligned column chunks; every
+        // (row, col) value is independent of chunking, so bit-equal
+        let tiny_cap = 40 * 4 * microkernel::NR; // one 8-column panel
+        let mut chunked = vec![0.0f32; rows.len() * cols.len()];
+        g.block_csr(&csr, &rows, &cols, &yn, &mut chunked, tiny_cap);
+        assert_eq!(whole, chunked);
+    }
+
+    #[test]
+    fn auto_storage_selects_by_density() {
+        // near-dense CSR densifies, sparse CSR stays CSR
+        let dense_src = CsrMat::from_dense(&Mat::from_fn(8, 4, |r, c| (r + c + 1) as f32));
+        let auto_dense = VecGram::auto(dense_src, KernelFn::Linear, 1);
+        assert_eq!(auto_dense.storage_name(), "dense");
+        assert!(auto_dense.csr().is_none());
+        let sparse_src = CsrMat::from_rows(100, (0..8).map(|r| vec![(r, 1.0f32)]).collect());
+        let auto_sparse = VecGram::auto(sparse_src, KernelFn::Linear, 1);
+        assert_eq!(auto_sparse.storage_name(), "csr");
+        assert!(auto_sparse.csr().is_some());
     }
 
     #[test]

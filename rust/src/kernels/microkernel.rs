@@ -19,7 +19,11 @@
 //!   distances are assembled from the accumulated dots plus cached
 //!   row/column squared norms (`d² = ‖x‖² + ‖y‖² − 2·x·y`, clamped), and
 //!   `KernelFn::from_parts` maps them to RBF/poly/linear values while the
-//!   dot block is still hot.
+//!   dot block is still hot;
+//! * sparse (CSR) rows run through the **same packed panels** via
+//!   [`fill_gram_rows_csr`]: each stored entry broadcasts its value
+//!   against one contiguous [`NR`]-lane panel load, so per-row cost is
+//!   `nnz` instead of `depth` and the epilogue is shared verbatim.
 //!
 //! Which implementation runs is decided once per process by
 //! [`crate::linalg::simd::active_tier`] (override: `DKKM_SIMD=`). All
@@ -32,6 +36,7 @@
 //! autovectorizer-dependent 4-column `dot4` loop) as the baseline that
 //! `benches/gram_json.rs` reports speedups against and the oracle the
 //! property suite compares every tier to.
+use crate::data::CsrMat;
 use crate::linalg::simd::SimdTier;
 use crate::linalg::Mat;
 
@@ -77,6 +82,27 @@ impl PackedPanel {
             let panel = &mut data[p * depth * NR..(p + 1) * depth * NR];
             for (k, &v) in x.row(col).iter().enumerate() {
                 panel[k * NR + t] = v;
+            }
+        }
+        PackedPanel { data, ncols, depth }
+    }
+
+    /// Pack CSR rows `cols` of `x` as panel columns: the same layout as
+    /// [`PackedPanel::pack_gather`], zero-filling the panels and then
+    /// scattering only the stored entries (a memset plus `nnz` writes —
+    /// no per-element reads of dense rows). The panel itself is still
+    /// `cols x depth` f32s; callers with vocabulary-scale depth bound it
+    /// by packing column chunks (see `VecGram`).
+    pub fn pack_gather_csr(x: &CsrMat, cols: &[usize]) -> PackedPanel {
+        let depth = x.cols();
+        let ncols = cols.len();
+        let mut data = vec![0.0f32; ncols.div_ceil(NR) * depth * NR];
+        for (j, &col) in cols.iter().enumerate() {
+            let (p, t) = (j / NR, j % NR);
+            let panel = &mut data[p * depth * NR..(p + 1) * depth * NR];
+            let (idx, vals) = x.row(col);
+            for (&k, &v) in idx.iter().zip(vals) {
+                panel[k as usize * NR + t] = v;
             }
         }
         PackedPanel { data, ncols, depth }
@@ -171,6 +197,106 @@ pub fn fill_gram_rows(
     }
 }
 
+/// Sparse twin of [`fill_gram_rows`]: `out[i][j] = kernel(x[rows[i]],
+/// packed column j)` where row samples are CSR rows streamed entry-wise
+/// against the same [`NR`]-wide depth-major panels the dense core
+/// consumes. Per row the inner loop touches `nnz(row) · ncols` lanes
+/// instead of `depth · ncols`, so throughput scales with the data's
+/// density while the fused kernel epilogue (cached norms, clamped `d²`)
+/// stays identical. A row's result depends only on its own entry stream
+/// and the packed panel — the same partition-independence invariant as
+/// the dense kernel, so tiled/sharded/threaded row partitions are
+/// bit-identical within a tier.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_gram_rows_csr(
+    tier: SimdTier,
+    x: &CsrMat,
+    rows: &[usize],
+    packed: &PackedPanel,
+    xn: &[f32],
+    yn: &[f32],
+    kernel: KernelFn,
+    out: &mut [f32],
+) {
+    let ncols = packed.ncols();
+    assert_eq!(out.len(), rows.len() * ncols);
+    assert_eq!(yn.len(), ncols);
+    assert_eq!(packed.depth(), x.cols());
+    assert!(
+        tier.is_available(),
+        "SIMD tier {tier} is not executable on this host"
+    );
+    let mut dots = [0.0f32; NR];
+    for (i, &row) in rows.iter().enumerate() {
+        let (idx, vals) = x.row(row);
+        let xnr = xn[row];
+        let orow = &mut out[i * ncols..(i + 1) * ncols];
+        for p in 0..packed.n_panels() {
+            sparse_panel_dots(tier, idx, vals, packed.panel(p), &mut dots);
+            let jlo = p * NR;
+            let jhi = (jlo + NR).min(ncols);
+            for (t, j) in (jlo..jhi).enumerate() {
+                let dot = dots[t];
+                let d2 = (xnr + yn[j] - 2.0 * dot).max(0.0);
+                orow[j] = kernel.from_parts(d2, dot);
+            }
+        }
+    }
+}
+
+/// Squared-distance twin of [`matmul_rows`]: `out[i][j] = max(an[i] +
+/// yn[j] − 2·a_i·p_j, 0)` for a contiguous row-major block `a_rows`
+/// against a packed panel set. This is what routes `linalg::pairwise`
+/// through the compute core (k-means++ seeding, the PJRT-fallback d²
+/// path) instead of its own autovectorized loop; `an` is indexed by
+/// local row, `yn` in packed column order. Row results are independent
+/// of row grouping, so any chunking is bit-identical.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_d2_rows(
+    tier: SimdTier,
+    a_rows: &[f32],
+    nrows: usize,
+    depth: usize,
+    an: &[f32],
+    packed: &PackedPanel,
+    yn: &[f32],
+    out: &mut [f32],
+) {
+    let ncols = packed.ncols();
+    assert_eq!(a_rows.len(), nrows * depth);
+    assert_eq!(depth, packed.depth());
+    assert_eq!(an.len(), nrows);
+    assert_eq!(yn.len(), ncols);
+    assert_eq!(out.len(), nrows * ncols);
+    assert!(
+        tier.is_available(),
+        "SIMD tier {tier} is not executable on this host"
+    );
+    let mr = mr_for(tier);
+    let mut r = 0;
+    while r < nrows {
+        let m = mr.min(nrows - r);
+        let mut arows: [&[f32]; MR_MAX] = [&[]; MR_MAX];
+        for i in 0..m {
+            arows[i] = &a_rows[(r + i) * depth..(r + i + 1) * depth];
+        }
+        let mut dots = [[0.0f32; NR]; MR_MAX];
+        for p in 0..packed.n_panels() {
+            panel_dots(tier, &arows[..m], packed.panel(p), depth, &mut dots[..m]);
+            let jlo = p * NR;
+            let jhi = (jlo + NR).min(ncols);
+            for i in 0..m {
+                let ani = an[r + i];
+                let orow = &mut out[(r + i) * ncols..(r + i + 1) * ncols];
+                for (t, j) in (jlo..jhi).enumerate() {
+                    orow[j] = (ani + yn[j] - 2.0 * dots[i][t]).max(0.0);
+                }
+            }
+        }
+        r += m;
+    }
+}
+
 /// `out = A · P` for a contiguous row-major row block `a_rows`
 /// (`nrows x depth`) against a packed panel set (`depth x ncols`). The
 /// raw-dot twin of [`fill_gram_rows`] — no kernel epilogue — used for
@@ -241,6 +367,69 @@ fn panel_dots(
         #[cfg(not(target_arch = "x86_64"))]
         SimdTier::Avx2Fma | SimdTier::Sse2 => panel_dots_scalar(arows, panel, depth, out),
         SimdTier::Scalar => panel_dots_scalar(arows, panel, depth, out),
+    }
+}
+
+/// Dispatch one sparse row against one [`NR`]-wide panel:
+/// `out[t] = Σ_k vals[k] · panel[idx[k] · NR + t]`. One row at a time —
+/// each CSR row has its own index pattern, so there is no register block
+/// to share — with the same two-chain accumulation shape as the dense
+/// tiers (entries alternate between chains), keeping the rounding class
+/// comparable across storages.
+#[inline]
+fn sparse_panel_dots(
+    tier: SimdTier,
+    idx: &[u32],
+    vals: &[f32],
+    panel: &[f32],
+    out: &mut [f32; NR],
+) {
+    debug_assert_eq!(idx.len(), vals.len());
+    debug_assert!(idx.iter().all(|&k| (k as usize + 1) * NR <= panel.len()));
+    match tier {
+        // SAFETY: the public entry points assert `tier.is_available()`;
+        // `CsrMat` guarantees every index < depth, so the `idx·NR` panel
+        // loads stay in bounds.
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2Fma => unsafe { x86::sparse_panel_dots_avx2(idx, vals, panel, out) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { x86::sparse_panel_dots_sse2(idx, vals, panel, out) },
+        #[cfg(not(target_arch = "x86_64"))]
+        SimdTier::Avx2Fma | SimdTier::Sse2 => sparse_panel_dots_scalar(idx, vals, panel, out),
+        SimdTier::Scalar => sparse_panel_dots_scalar(idx, vals, panel, out),
+    }
+}
+
+/// Scalar reference for the sparse row-panel product: two accumulator
+/// chains over the entry stream, [`NR`] lanes each.
+fn sparse_panel_dots_scalar(idx: &[u32], vals: &[f32], panel: &[f32], out: &mut [f32; NR]) {
+    let mut acc0 = [0.0f32; NR];
+    let mut acc1 = [0.0f32; NR];
+    let n = idx.len();
+    let mut k = 0;
+    while k + 2 <= n {
+        let r0 = idx[k] as usize * NR;
+        let r1 = idx[k + 1] as usize * NR;
+        let v0 = vals[k];
+        let v1 = vals[k + 1];
+        let y0 = &panel[r0..r0 + NR];
+        let y1 = &panel[r1..r1 + NR];
+        for t in 0..NR {
+            acc0[t] += v0 * y0[t];
+            acc1[t] += v1 * y1[t];
+        }
+        k += 2;
+    }
+    if k < n {
+        let r0 = idx[k] as usize * NR;
+        let v0 = vals[k];
+        let y0 = &panel[r0..r0 + NR];
+        for t in 0..NR {
+            acc0[t] += v0 * y0[t];
+        }
+    }
+    for t in 0..NR {
+        out[t] = acc0[t] + acc1[t];
     }
 }
 
@@ -364,6 +553,78 @@ mod x86 {
             _mm_storeu_ps(out[i].as_mut_ptr(), _mm_add_ps(acc0lo[i], acc1lo[i]));
             _mm_storeu_ps(out[i].as_mut_ptr().add(4), _mm_add_ps(acc0hi[i], acc1hi[i]));
         }
+    }
+
+    /// Sparse row-panel product, AVX2+FMA tier: broadcast each stored
+    /// value, gather its panel row with one 8-lane load, two FMA chains.
+    ///
+    /// # Safety
+    /// Requires AVX2 + FMA (asserted by the public entry points); every
+    /// `idx` entry must satisfy `(idx + 1) * NR <= panel.len()` (the
+    /// `CsrMat` column-bound invariant).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sparse_panel_dots_avx2(
+        idx: &[u32],
+        vals: &[f32],
+        panel: &[f32],
+        out: &mut [f32; NR],
+    ) {
+        let py = panel.as_ptr();
+        let n = idx.len();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut k = 0;
+        while k + 2 <= n {
+            let y0 = _mm256_loadu_ps(py.add(*idx.get_unchecked(k) as usize * NR));
+            let y1 = _mm256_loadu_ps(py.add(*idx.get_unchecked(k + 1) as usize * NR));
+            acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*vals.get_unchecked(k)), y0, acc0);
+            acc1 = _mm256_fmadd_ps(_mm256_set1_ps(*vals.get_unchecked(k + 1)), y1, acc1);
+            k += 2;
+        }
+        if k < n {
+            let y0 = _mm256_loadu_ps(py.add(*idx.get_unchecked(k) as usize * NR));
+            acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*vals.get_unchecked(k)), y0, acc0);
+        }
+        _mm256_storeu_ps(out.as_mut_ptr(), _mm256_add_ps(acc0, acc1));
+    }
+
+    /// Sparse row-panel product, SSE2 tier (two 4-lane halves per chain).
+    ///
+    /// # Safety
+    /// SSE2 is baseline on x86_64; unsafe for the raw loads/stores, which
+    /// rely on the `CsrMat` column-bound invariant as above.
+    pub unsafe fn sparse_panel_dots_sse2(
+        idx: &[u32],
+        vals: &[f32],
+        panel: &[f32],
+        out: &mut [f32; NR],
+    ) {
+        let py = panel.as_ptr();
+        let n = idx.len();
+        let mut acc0lo = _mm_setzero_ps();
+        let mut acc0hi = _mm_setzero_ps();
+        let mut acc1lo = _mm_setzero_ps();
+        let mut acc1hi = _mm_setzero_ps();
+        let mut k = 0;
+        while k + 2 <= n {
+            let r0 = *idx.get_unchecked(k) as usize * NR;
+            let r1 = *idx.get_unchecked(k + 1) as usize * NR;
+            let v0 = _mm_set1_ps(*vals.get_unchecked(k));
+            let v1 = _mm_set1_ps(*vals.get_unchecked(k + 1));
+            acc0lo = _mm_add_ps(acc0lo, _mm_mul_ps(v0, _mm_loadu_ps(py.add(r0))));
+            acc0hi = _mm_add_ps(acc0hi, _mm_mul_ps(v0, _mm_loadu_ps(py.add(r0 + 4))));
+            acc1lo = _mm_add_ps(acc1lo, _mm_mul_ps(v1, _mm_loadu_ps(py.add(r1))));
+            acc1hi = _mm_add_ps(acc1hi, _mm_mul_ps(v1, _mm_loadu_ps(py.add(r1 + 4))));
+            k += 2;
+        }
+        if k < n {
+            let r0 = *idx.get_unchecked(k) as usize * NR;
+            let v0 = _mm_set1_ps(*vals.get_unchecked(k));
+            acc0lo = _mm_add_ps(acc0lo, _mm_mul_ps(v0, _mm_loadu_ps(py.add(r0))));
+            acc0hi = _mm_add_ps(acc0hi, _mm_mul_ps(v0, _mm_loadu_ps(py.add(r0 + 4))));
+        }
+        _mm_storeu_ps(out.as_mut_ptr(), _mm_add_ps(acc0lo, acc1lo));
+        _mm_storeu_ps(out.as_mut_ptr().add(4), _mm_add_ps(acc0hi, acc1hi));
     }
 }
 
@@ -586,6 +847,159 @@ mod tests {
                     lo = hi;
                 }
                 assert_eq!(whole, pieces, "{tier} split={split}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_fill_matches_dot4_reference() {
+        // dense data round-tripped through CSR must reproduce the dense
+        // oracle within float tolerance on every tier and kernel
+        let mut rng = Rng::new(4);
+        let x = random_mat(&mut rng, 26, 17);
+        let csr = CsrMat::from_dense(&x);
+        let rows: Vec<usize> = vec![0, 9, 25, 3, 3, 14];
+        let cols: Vec<usize> = vec![2, 7, 1, 19, 22, 5, 11, 0, 13];
+        let xn: Vec<f32> = (0..26)
+            .map(|r| x.row(r).iter().map(|v| v * v).sum())
+            .collect();
+        let yn: Vec<f32> = cols.iter().map(|&j| xn[j]).collect();
+        for kernel in [
+            KernelFn::Linear,
+            KernelFn::Rbf { gamma: 0.3 },
+            KernelFn::Poly { degree: 2, c: 1.0 },
+        ] {
+            let mut want = vec![0.0f32; rows.len() * cols.len()];
+            fill_block_dot4(&x, &rows, &cols, kernel, &mut want);
+            let packed = PackedPanel::pack_gather_csr(&csr, &cols);
+            for tier in simd::supported_tiers() {
+                let mut got = vec![0.0f32; rows.len() * cols.len()];
+                fill_gram_rows_csr(tier, &csr, &rows, &packed, &xn, &yn, kernel, &mut got);
+                for (g, w) in got.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-4, "{tier} {kernel:?}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn csr_pack_matches_dense_pack() {
+        let mut rng = Rng::new(5);
+        let x = random_mat(&mut rng, 12, 9);
+        let csr = CsrMat::from_dense(&x);
+        let cols = [4usize, 0, 11, 7, 2];
+        let a = PackedPanel::pack_gather(&x, &cols);
+        let b = PackedPanel::pack_gather_csr(&csr, &cols);
+        assert_eq!(a.data, b.data);
+        assert_eq!((a.ncols, a.depth), (b.ncols, b.depth));
+    }
+
+    #[test]
+    fn csr_row_partition_is_bit_identical() {
+        let mut rng = Rng::new(6);
+        // sparse-ish data: zero out most entries
+        let x = Mat::from_fn(20, 31, |_, _| {
+            if rng.f64() < 0.8 {
+                0.0
+            } else {
+                rng.normal32(0.0, 1.0)
+            }
+        });
+        let csr = CsrMat::from_dense(&x);
+        let rows: Vec<usize> = (0..20).collect();
+        let cols: Vec<usize> = (0..20).step_by(3).collect();
+        let xn: Vec<f32> = (0..20)
+            .map(|r| x.row(r).iter().map(|v| v * v).sum())
+            .collect();
+        let yn: Vec<f32> = cols.iter().map(|&j| xn[j]).collect();
+        let kernel = KernelFn::Rbf { gamma: 0.4 };
+        let packed = PackedPanel::pack_gather_csr(&csr, &cols);
+        for tier in simd::supported_tiers() {
+            let mut whole = vec![0.0f32; rows.len() * cols.len()];
+            fill_gram_rows_csr(tier, &csr, &rows, &packed, &xn, &yn, kernel, &mut whole);
+            for split in [1usize, 4, 7] {
+                let mut pieces = vec![0.0f32; rows.len() * cols.len()];
+                let mut lo = 0;
+                while lo < rows.len() {
+                    let hi = (lo + split).min(rows.len());
+                    fill_gram_rows_csr(
+                        tier,
+                        &csr,
+                        &rows[lo..hi],
+                        &packed,
+                        &xn,
+                        &yn,
+                        kernel,
+                        &mut pieces[lo * cols.len()..hi * cols.len()],
+                    );
+                    lo = hi;
+                }
+                assert_eq!(whole, pieces, "{tier} split={split}");
+            }
+        }
+    }
+
+    #[test]
+    fn csr_degenerate_rows_and_full_density() {
+        // empty rows (all-zero docs) and a fully dense row both work
+        let x = CsrMat::from_rows(
+            6,
+            vec![
+                vec![],
+                vec![(0, 1.0), (1, 1.0), (2, 1.0), (3, 1.0), (4, 1.0), (5, 1.0)],
+                vec![(3, 2.0)],
+            ],
+        );
+        let rows = [0usize, 1, 2];
+        let cols = [0usize, 1, 2];
+        let xn: Vec<f32> = (0..3).map(|r| x.sq_norm(r)).collect();
+        let yn = xn.clone();
+        let packed = PackedPanel::pack_gather_csr(&x, &cols);
+        for tier in simd::supported_tiers() {
+            let mut got = vec![0.0f32; 9];
+            fill_gram_rows_csr(tier, &x, &rows, &packed, &xn, &yn, KernelFn::Linear, &mut got);
+            for (bi, &i) in rows.iter().enumerate() {
+                for (bj, &j) in cols.iter().enumerate() {
+                    let want = x.row_dot(i, &x, j);
+                    assert!((got[bi * 3 + bj] - want).abs() < 1e-5, "{tier} [{i},{j}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn d2_fill_matches_naive_all_tiers() {
+        let mut rng = Rng::new(7);
+        for &(n, d, c) in &[(11usize, 7usize, 5usize), (4, 16, 9), (1, 1, 1), (6, 3, 17)] {
+            let a = random_mat(&mut rng, n, d);
+            let y = random_mat(&mut rng, c, d);
+            let idx: Vec<usize> = (0..c).collect();
+            let packed = PackedPanel::pack_gather(&y, &idx);
+            let an: Vec<f32> = (0..n)
+                .map(|r| a.row(r).iter().map(|v| v * v).sum())
+                .collect();
+            let yn: Vec<f32> = (0..c)
+                .map(|r| y.row(r).iter().map(|v| v * v).sum())
+                .collect();
+            for tier in simd::supported_tiers() {
+                let mut out = vec![0.0f32; n * c];
+                fill_d2_rows(tier, a.data(), n, d, &an, &packed, &yn, &mut out);
+                for i in 0..n {
+                    for j in 0..c {
+                        let want: f32 = a
+                            .row(i)
+                            .iter()
+                            .zip(y.row(j))
+                            .map(|(p, q)| (p - q) * (p - q))
+                            .sum();
+                        let got = out[i * c + j];
+                        assert!(
+                            (got - want).abs() < 1e-3,
+                            "{tier}: [{i},{j}] {got} vs {want} ({n}x{d}x{c})"
+                        );
+                        assert!(got >= 0.0);
+                    }
+                }
             }
         }
     }

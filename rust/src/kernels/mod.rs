@@ -7,9 +7,11 @@
 //! row/column sample indices". Implementations:
 //!
 //! * [`VecGram`] — vector-space data + a [`KernelFn`] (linear, RBF,
-//!   polynomial), evaluated on the blocked multithreaded native path
-//!   (`linalg::pairwise`). The PJRT-accelerated implementation lives in
-//!   `runtime::` and is swapped in by the coordinator.
+//!   polynomial), evaluated on the blocked multithreaded native path.
+//!   Storage-generic: dense rows or CSR rows (`data::CsrMat`), with the
+//!   sparse micro-kernel auto-selected below a density threshold. The
+//!   PJRT-accelerated implementation lives in `runtime::` and is
+//!   swapped in by the coordinator.
 //! * [`RmsdGram`] — MD frames with the QCP-RMSD RBF kernel
 //!   `exp(-rmsd^2 / (2 sigma^2))`, the roto-translationally invariant
 //!   similarity the paper's MD application requires.
@@ -35,7 +37,7 @@ pub mod microkernel;
 pub mod tiles;
 
 pub use diskcache::DiskCachedGram;
-pub use gram::{GramSource, RmsdGram, VecGram};
+pub use gram::{GramSource, RmsdGram, VecGram, VecStorage};
 pub use kernel_fn::KernelFn;
 pub use microkernel::PackedPanel;
 pub use tiles::{

@@ -72,9 +72,9 @@ pub use util::error::{Error, Result};
 pub mod prelude {
     pub use crate::coordinator::{
         BackendChoice, DatasetSpec, Engine, EngineReport, Experiment, KernelSpec,
-        RunConfig, RunReport, Session,
+        RcvStorage, RunConfig, RunReport, Session,
     };
-    pub use crate::data::Sampling;
+    pub use crate::data::{CsrMat, Sampling, SparseDataset};
     pub use crate::kernels::{GramSource, KernelFn, PipelineStats};
     pub use crate::linalg::SimdTier;
     pub use crate::metrics::{accuracy, nmi};

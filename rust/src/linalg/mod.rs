@@ -8,6 +8,6 @@ mod rmsd;
 pub mod simd;
 
 pub use mat::Mat;
-pub use pairwise::{sq_dists_block, sq_dists_block_into, row_sq_norms};
+pub use pairwise::{row_sq_norms, sq_dists_block, sq_dists_block_into, sq_dists_block_reference};
 pub use rmsd::{centroid, kabsch_rmsd, qcp_rmsd, Frame};
 pub use simd::SimdTier;

@@ -6,7 +6,19 @@
 //! same negative clamp. The coordinator uses this both as the fallback for
 //! shapes with no AOT artifact and as the oracle in native-vs-PJRT parity
 //! tests.
+//!
+//! Since PR 5 the dots run through the packed, dispatched compute core
+//! (`kernels::microkernel::fill_d2_rows` — the ROADMAP "pairwise
+//! unification" item). The Lloyd baseline's assignment sweeps
+//! (`baselines::lloyd`) ride this path, so the Tab.1/2 baseline rows
+//! use the same SIMD tiers as the kernel method; the kernelized
+//! k-means++ already rides the core through its `GramSource` blocks.
+//! The pre-unification autovectorized loop is retained as
+//! [`sq_dists_block_reference`], the independent oracle for the routed
+//! path and the PJRT parity tests.
 use super::Mat;
+use crate::kernels::microkernel::{self, PackedPanel};
+use crate::linalg::simd;
 use crate::util::threadpool;
 
 /// Per-row squared norms.
@@ -18,18 +30,63 @@ pub fn row_sq_norms(x: &Mat) -> Vec<f32> {
 
 /// Pairwise squared distances between all rows of `x` and `y`, written
 /// into `out` (len = x.rows * y.rows), parallelized over row chunks.
+/// Routed through the packed micro-kernel: `y` is packed once into
+/// NR-wide depth-major panels, `x` rows stream per worker chunk. Row
+/// results are independent of chunking and thread count.
 pub fn sq_dists_block_into(threads: usize, x: &Mat, y: &Mat, out: &mut [f32]) {
     assert_eq!(x.cols(), y.cols(), "dim mismatch");
     assert_eq!(out.len(), x.rows() * y.rows());
+    let n = y.rows();
+    if n == 0 || x.rows() == 0 {
+        return;
+    }
+    let d = x.cols();
     let xn = row_sq_norms(x);
     let yn = row_sq_norms(y);
-    let n = y.rows();
-    let d = x.cols();
+    let y_idx: Vec<usize> = (0..n).collect();
+    let packed = PackedPanel::pack_gather(y, &y_idx);
+    let tier = simd::active_tier();
     // rows-per-chunk sized so a chunk's x-rows + the whole y panel stream
     // through L2 reasonably; y is re-read per chunk (same as the Pallas
     // kernel re-streams the y tile from HBM per grid row).
     let rows_per_chunk = (256 * 1024 / (d.max(1) * 4)).clamp(8, 256);
-    threadpool::parallel_rows_mut(threads, out, n, rows_per_chunk, |lo, _hi, block| {
+    threadpool::parallel_rows_mut(threads, out, n, rows_per_chunk, |lo, hi, block| {
+        microkernel::fill_d2_rows(
+            tier,
+            &x.data()[lo * d..hi * d],
+            hi - lo,
+            d,
+            &xn[lo..hi],
+            &packed,
+            &yn,
+            block,
+        );
+    });
+}
+
+/// Allocating convenience wrapper.
+pub fn sq_dists_block(threads: usize, x: &Mat, y: &Mat) -> Mat {
+    let mut out = vec![0.0f32; x.rows() * y.rows()];
+    sq_dists_block_into(threads, x, y, &mut out);
+    Mat::from_vec(x.rows(), y.rows(), out).expect("shape by construction")
+}
+
+/// The pre-unification blocked loop (4-way unrolled dot relying on the
+/// autovectorizer). Retained **only** as the independent oracle for the
+/// micro-kernel-routed path above and the native-vs-PJRT parity tests —
+/// do not use it on a hot path, and do not "optimize" it.
+pub fn sq_dists_block_reference(threads: usize, x: &Mat, y: &Mat) -> Mat {
+    assert_eq!(x.cols(), y.cols(), "dim mismatch");
+    let mut out = vec![0.0f32; x.rows() * y.rows()];
+    let xn = row_sq_norms(x);
+    let yn = row_sq_norms(y);
+    let n = y.rows();
+    if n == 0 || x.rows() == 0 {
+        return Mat::zeros(x.rows(), n);
+    }
+    let d = x.cols();
+    let rows_per_chunk = (256 * 1024 / (d.max(1) * 4)).clamp(8, 256);
+    threadpool::parallel_rows_mut(threads, &mut out, n, rows_per_chunk, |lo, _hi, block| {
         for (r, out_row) in block.chunks_mut(n).enumerate() {
             let xi = x.row(lo + r);
             let xin = xn[lo + r];
@@ -54,13 +111,7 @@ pub fn sq_dists_block_into(threads: usize, x: &Mat, y: &Mat, out: &mut [f32]) {
             }
         }
     });
-}
-
-/// Allocating convenience wrapper.
-pub fn sq_dists_block(threads: usize, x: &Mat, y: &Mat) -> Mat {
-    let mut out = vec![0.0f32; x.rows() * y.rows()];
-    sq_dists_block_into(threads, x, y, &mut out);
-    Mat::from_vec(x.rows(), y.rows(), out).expect("shape by construction")
+    Mat::from_vec(x.rows(), n, out).expect("shape by construction")
 }
 
 #[cfg(test)]
@@ -132,6 +183,22 @@ mod tests {
         for t in [2, 4, 8] {
             let b = sq_dists_block(t, &x, &y);
             assert_eq!(a.data(), b.data(), "threads={t}");
+        }
+    }
+
+    #[test]
+    fn routed_path_matches_reference_oracle() {
+        // the micro-kernel routing must reproduce the pre-unification
+        // loop within float tolerance, including awkward shapes
+        let mut rng = Rng::new(5);
+        for &(nx, ny, d) in &[(33usize, 17usize, 11usize), (5, 9, 1), (1, 1, 7), (8, 40, 64)] {
+            let x = random_mat(&mut rng, nx, d);
+            let y = random_mat(&mut rng, ny, d);
+            let got = sq_dists_block(3, &x, &y);
+            let want = sq_dists_block_reference(3, &x, &y);
+            for (g, w) in got.data().iter().zip(want.data()) {
+                assert!((g - w).abs() < 1e-4, "{nx}x{ny}x{d}: {g} vs {w}");
+            }
         }
     }
 

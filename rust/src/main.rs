@@ -16,7 +16,7 @@
 use dkkm::baselines::{sgd_kmeans, SgdConfig};
 use dkkm::coordinator::{
     b_min, build_dataset, footprint_bytes, gamma_for, paper_b_min, run_lloyd_baseline,
-    shared_pjrt, DatasetSpec, Experiment, RunConfig, Session,
+    shared_pjrt, DatasetSpec, Experiment, RcvStorage, RunConfig, Session,
 };
 use dkkm::distributed::{NetModel, ScalingSimulator, Topology};
 use dkkm::kernels::VecGram;
@@ -92,7 +92,7 @@ fn parse_run_experiment(rest: &[String]) -> Result<(Experiment, bool)> {
         return apply_run_flags(Experiment::from_config(base), &remaining);
     }
     let p = Cli::new("dkkm run — cluster a dataset with mini-batch kernel k-means")
-        .req("dataset", "toy2d[:per] | mnist[:train[:test]] | rcv1[:n[:cls[:dim]]] | noisy-mnist[:base[:copies]] | md[:frames]")
+        .req("dataset", "toy2d[:per] | mnist[:train[:test]] | rcv1[:n[:cls[:dim[:dense|sparse]]]] | noisy-mnist[:base[:copies]] | md[:frames]")
         .opt("c", "0", "clusters (0 = elbow criterion)")
         .opt("b", "4", "number of mini-batches B")
         .opt("s", "1.0", "landmark fraction s (Eq.18)")
@@ -198,7 +198,7 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         println!("{j}");
         return Ok(());
     }
-    println!("dataset         : {}", cfg.dataset);
+    println!("dataset         : {} ({} storage)", cfg.dataset, report.storage);
     println!("engine          : {} (B={}, s={})", report.engine.used, cfg.b, cfg.s);
     if let Some(reason) = &report.engine.fallback {
         println!("  (requested '{}': {reason})", report.engine.requested);
@@ -256,11 +256,21 @@ fn cmd_baseline(rest: &[String]) -> Result<()> {
         .opt("sgd-iters", "60", "SGD iterations")
         .parse(rest)?;
     let spec: DatasetSpec = p.str("dataset").parse().map_err(Error::Config)?;
+    // the linear baselines run over dense feature rows; MD frames and a
+    // vocab-space CSR corpus have no dense materialization to hand them
+    if matches!(
+        spec,
+        DatasetSpec::Rcv1 { storage: RcvStorage::Sparse, .. } | DatasetSpec::Md { .. }
+    ) {
+        return Err(Error::Config(
+            "baselines need dense features (MD frames and sparse rcv1 storage have none)".into(),
+        ));
+    }
     let c: usize = p.get("c")?;
     let seed: u64 = p.get("seed")?;
     match p.str("algo") {
         "lloyd" => {
-            let (acc, n, test_acc, test_nmi) = run_lloyd_baseline(&spec, c, seed);
+            let (acc, n, test_acc, test_nmi) = run_lloyd_baseline(&spec, c, seed)?;
             println!("lloyd k-means: train acc {:.2}% nmi {:.4}", acc * 100.0, n);
             if let Some(a) = test_acc {
                 println!("               test  acc {:.2}% nmi {:.4}", a * 100.0, test_nmi.unwrap());

@@ -87,7 +87,8 @@ fn pjrt_fallback_is_recorded_not_silent() {
         eprintln!("skipping: no artifact manifest (run `make artifacts`)");
         return;
     }
-    let session = Experiment::on(DatasetSpec::Rcv1 { n: 200, classes: 4, dim: 33 })
+    let spec = DatasetSpec::Rcv1 { n: 200, classes: 4, dim: 33, storage: RcvStorage::Dense };
+    let session = Experiment::on(spec)
         .clusters(4)
         .batches(2)
         .backend("pjrt")

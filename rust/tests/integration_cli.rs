@@ -40,6 +40,20 @@ fn run_toy_reports_metrics() {
 }
 
 #[test]
+fn sparse_rcv1_runs_and_baseline_rejects_it_structurally() {
+    let (stdout, stderr, ok) =
+        dkkm(&["run", "--dataset", "rcv1:400:6:32:sparse", "--c", "6", "--b", "2"]);
+    assert!(ok, "stderr: {stderr}");
+    assert!(stdout.contains("csr storage"), "{stdout}");
+    // the linear baseline has no dense materialization of a CSR corpus:
+    // a structured config error, never build_dataset's unreachable!()
+    let (_, stderr, ok) = dkkm(&["baseline", "--dataset", "rcv1:400:6:32:sparse", "--c", "6"]);
+    assert!(!ok);
+    assert!(stderr.contains("dense features"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+}
+
+#[test]
 fn run_json_output_parses() {
     let (stdout, stderr, ok) = dkkm(&[
         "run",

@@ -17,9 +17,22 @@ fn every_dataset_family_runs() {
         Experiment::on(DatasetSpec::Mnist { train: 300, test: 60 })
             .clusters(10)
             .batches(2),
-        Experiment::on(DatasetSpec::Rcv1 { n: 400, classes: 6, dim: 32 })
-            .clusters(6)
-            .batches(2),
+        Experiment::on(DatasetSpec::Rcv1 {
+            n: 400,
+            classes: 6,
+            dim: 32,
+            storage: RcvStorage::Dense,
+        })
+        .clusters(6)
+        .batches(2),
+        Experiment::on(DatasetSpec::Rcv1 {
+            n: 400,
+            classes: 6,
+            dim: 32,
+            storage: RcvStorage::Sparse,
+        })
+        .clusters(6)
+        .batches(2),
         Experiment::on(DatasetSpec::NoisyMnist { base: 60, copies: 4 })
             .clusters(10)
             .batches(2),

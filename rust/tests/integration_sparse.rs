@@ -1,0 +1,200 @@
+//! Dense-vs-sparse equivalence: CSR storage is a representation change,
+//! not a math change. Gram blocks must agree across storages within
+//! float tolerance for every kernel family and SIMD tier; clustering
+//! over the two storages must produce identical labels on separable
+//! data; and the CSR source must compose with the tiled/budgeted and
+//! sharded pipelines with their bit-identity guarantees intact.
+use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
+use dkkm::data::synthetic_rcv1_sparse;
+use dkkm::distributed::ShardedBackend;
+use dkkm::kernels::microkernel::{self, PackedPanel};
+use dkkm::kernels::VecGram;
+use dkkm::linalg::{simd, Mat};
+use dkkm::prelude::*;
+use dkkm::util::rng::Rng;
+
+/// Sparse blobs: `classes` clusters with disjoint word blocks, `n_per`
+/// documents each, ~6 words per document. Cleanly separable, so dense
+/// and CSR clustering must agree exactly despite float noise.
+fn sparse_blobs(seed: u64, n_per: usize, classes: usize) -> (CsrMat, Vec<usize>) {
+    let words_per_class = 16usize;
+    let vocab = classes * words_per_class + 40; // trailing words stay unused
+    let mut rng = Rng::new(seed);
+    let mut rows = Vec::with_capacity(n_per * classes);
+    let mut labels = Vec::with_capacity(n_per * classes);
+    for c in 0..classes {
+        for _ in 0..n_per {
+            let mut doc = Vec::with_capacity(6);
+            let mut norm = 0.0f32;
+            for _ in 0..6 {
+                let w = c * words_per_class + rng.below(words_per_class);
+                let v = 0.5 + rng.f32();
+                norm += v * v;
+                doc.push((w, v));
+            }
+            let norm = norm.sqrt();
+            for (_, v) in doc.iter_mut() {
+                *v /= norm;
+            }
+            rows.push(doc);
+            labels.push(c);
+        }
+    }
+    (CsrMat::from_rows(vocab, rows), labels)
+}
+
+#[test]
+fn blocks_agree_across_storages_kernels_and_tiers() {
+    let (csr, _) = sparse_blobs(0, 20, 4);
+    let dense = csr.to_dense();
+    let rows: Vec<usize> = (0..csr.rows()).step_by(3).collect();
+    let cols: Vec<usize> = (1..csr.rows()).step_by(5).collect();
+    let xn = csr.sq_norms().to_vec();
+    let yn: Vec<f32> = cols.iter().map(|&j| xn[j]).collect();
+    for kernel in [
+        KernelFn::Linear,
+        KernelFn::Rbf { gamma: 0.7 },
+        KernelFn::Poly { degree: 3, c: 0.5 },
+    ] {
+        let packed_dense = PackedPanel::pack_gather(&dense, &cols);
+        let packed_csr = PackedPanel::pack_gather_csr(&csr, &cols);
+        for tier in simd::supported_tiers() {
+            let mut a = vec![0.0f32; rows.len() * cols.len()];
+            let mut b = vec![0.0f32; rows.len() * cols.len()];
+            microkernel::fill_gram_rows(
+                tier,
+                &dense,
+                &rows,
+                &packed_dense,
+                &xn,
+                &yn,
+                kernel,
+                &mut a,
+            );
+            microkernel::fill_gram_rows_csr(
+                tier,
+                &csr,
+                &rows,
+                &packed_csr,
+                &xn,
+                &yn,
+                kernel,
+                &mut b,
+            );
+            for (g, w) in b.iter().zip(&a) {
+                assert!((g - w).abs() < 1e-4, "{tier} {kernel:?}: {g} vs {w}");
+            }
+        }
+    }
+}
+
+#[test]
+fn degenerate_shapes_agree_across_storages() {
+    // empty documents, an all-vocab (density 1) document, and a corpus
+    // whose density is ~1 overall — the CSR path must serve them all
+    let vocab = 12usize;
+    let mut rows: Vec<Vec<(usize, f32)>> = vec![Vec::new(), Vec::new()];
+    rows.push((0..vocab).map(|w| (w, 0.3)).collect());
+    let mut rng = Rng::new(9);
+    for _ in 0..17 {
+        rows.push((0..vocab).map(|w| (w, rng.normal32(0.0, 1.0))).collect());
+    }
+    let csr = CsrMat::from_rows(vocab, rows);
+    assert!(csr.density() > 0.8, "meant to stress the dense end");
+    let dense = csr.to_dense();
+    let n = csr.rows();
+    let all: Vec<usize> = (0..n).collect();
+    for kernel in [KernelFn::Linear, KernelFn::Rbf { gamma: 0.2 }] {
+        let a = VecGram::new(dense.clone(), kernel, 2).block_mat(&all, &all);
+        let b = VecGram::from_csr(csr.clone(), kernel, 2).block_mat(&all, &all);
+        for (g, w) in b.data().iter().zip(a.data()) {
+            assert!((g - w).abs() < 1e-4, "{kernel:?}: {g} vs {w}");
+        }
+    }
+    // two empty docs are at distance 0: RBF says identical
+    let g = VecGram::from_csr(csr, KernelFn::Rbf { gamma: 0.2 }, 1);
+    let k = g.block_mat(&[0, 1], &[0, 1]);
+    for v in k.data() {
+        assert!((v - 1.0).abs() < 1e-6, "empty-doc kernel {v}");
+    }
+}
+
+#[test]
+fn clustering_labels_match_across_storages() {
+    let (csr, truth) = sparse_blobs(1, 40, 4);
+    let kernel = KernelFn::Rbf { gamma: 1.0 };
+    let dense_g = VecGram::new(csr.to_dense(), kernel, 2);
+    let sparse_g = VecGram::from_csr(csr, kernel, 2);
+    let cfg = MiniBatchConfig::new(4, 2);
+    let dense_run = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&dense_g);
+    let sparse_run = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&sparse_g);
+    assert_eq!(dense_run.labels, sparse_run.labels, "storage changed the clustering");
+    assert_eq!(dense_run.medoids, sparse_run.medoids);
+    // and both recover the planted blobs
+    assert!(accuracy(&sparse_run.labels, &truth) > 0.95);
+}
+
+#[test]
+fn csr_source_composes_with_tiles_and_shards_bit_identically() {
+    let (csr, _) = sparse_blobs(2, 40, 4); // n = 160, B = 2 -> 80-row panels
+    let g = VecGram::from_csr(csr, KernelFn::Rbf { gamma: 1.0 }, 2);
+    let base = MiniBatchConfig::new(4, 2);
+    let whole = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g);
+    // budgeted tiles over the CSR source: pure scheduling, bit-identical
+    let mut tiled_cfg = base.clone();
+    tiled_cfg.memory_budget = Some(8 * 1024);
+    let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g);
+    assert_eq!(whole.labels, tiled.labels, "tiled CSR diverged");
+    assert_eq!(whole.medoids, tiled.medoids);
+    assert!(tiled.pipeline.tiles > 2, "{:?}", tiled.pipeline);
+    assert!(tiled.pipeline.peak_resident_bytes <= 8 * 1024, "{:?}", tiled.pipeline);
+    // sharded nodes over the CSR source match the native schedule
+    for p in [2usize, 5] {
+        let sharded = MiniBatchKernelKMeans::new(base.clone(), &ShardedBackend::new(p)).run(&g);
+        assert_eq!(whole.labels, sharded.labels, "sharded:{p} CSR diverged");
+        assert_eq!(whole.medoids, sharded.medoids);
+    }
+}
+
+#[test]
+fn sparse_spec_round_trips_and_reports_storage() {
+    let spec: DatasetSpec = "rcv1:400:6:32:sparse".parse().unwrap();
+    let want = DatasetSpec::Rcv1 { n: 400, classes: 6, dim: 32, storage: RcvStorage::Sparse };
+    assert_eq!(spec, want);
+    assert_eq!(spec.to_string(), "rcv1:400:6:32:sparse");
+    // dense specs keep the historical 3-number arity
+    let dense: DatasetSpec = "rcv1:400:6:32".parse().unwrap();
+    assert_eq!(dense.to_string(), "rcv1:400:6:32");
+
+    let report = Experiment::on(spec).clusters(6).batches(2).build().unwrap().fit().unwrap();
+    assert_eq!(report.storage, "csr");
+    assert!(report.test_accuracy.is_some(), "sparse spec keeps a held-out split");
+    let parsed = dkkm::util::json::Json::parse(&report.to_json().to_string()).unwrap();
+    assert_eq!(parsed.get("storage").and_then(|v| v.as_str()), Some("csr"));
+}
+
+#[test]
+fn sparse_and_dense_rcv1_share_the_corpus() {
+    // same seed, same documents: the sparse dataset's labels must equal
+    // the dense materialization's labels (features differ by projection)
+    let sparse = synthetic_rcv1_sparse(&mut Rng::new(11), 250, 5, 2000);
+    let dense = dkkm::data::synthetic_rcv1(&mut Rng::new(11), 250, 5, 2000, 16);
+    assert_eq!(sparse.y, dense.y);
+    assert_eq!(sparse.n(), dense.n());
+}
+
+#[test]
+fn pairwise_routing_matches_reference_oracle() {
+    // the micro-kernel-routed sq_dists_block vs the retained oracle
+    let mut rng = Rng::new(3);
+    let x = Mat::from_fn(40, 23, |_, _| rng.normal32(0.0, 1.0));
+    let y = Mat::from_fn(17, 23, |_, _| rng.normal32(0.0, 1.0));
+    let got = dkkm::linalg::sq_dists_block(4, &x, &y);
+    let want = dkkm::linalg::sq_dists_block_reference(4, &x, &y);
+    for (g, w) in got.data().iter().zip(want.data()) {
+        assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+    }
+    // thread invariance survives the routing
+    let single = dkkm::linalg::sq_dists_block(1, &x, &y);
+    assert_eq!(got.data(), single.data());
+}
