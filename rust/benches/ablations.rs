@@ -16,7 +16,7 @@ use dkkm::util::rng::Rng;
 use dkkm::util::stats::{bench_repeats, bench_scale, mean_std, pm, Table};
 
 fn run(g: &dyn GramSource, truth: &[usize], cfg: MiniBatchConfig) -> (f64, f64) {
-    let r = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(g);
+    let r = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(g).unwrap();
     (accuracy(&r.labels, truth) * 100.0, nmi(&r.labels, truth))
 }
 
@@ -45,7 +45,7 @@ fn main() {
             let mut cfg = MiniBatchConfig::new(10, 8);
             cfg.seed = 600 + r as u64;
             cfg.merge_rule = rule;
-            let res = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
+            let res = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g).unwrap();
             accs.push(accuracy(&res.labels, &data.y) * 100.0);
             nmis.push(nmi(&res.labels, &data.y));
             displ.push(

@@ -1,0 +1,151 @@
+//! bench-json harness: fault-injection and recovery timings.
+//!
+//! Runs the sharded clustering workload under each fault class — clean
+//! baseline, node death at a collective, a dropped straggler past the
+//! deadline — across node counts, plus the checkpoint-write overhead and
+//! interrupt→resume cost of the epoch checkpoint path, and emits
+//! `BENCH_faults.json` (override the path with `DKKM_BENCH_OUT`). Every
+//! faulted run is equivalence-asserted against the fault-free serial
+//! reference, so the bench doubles as a smoke test: recovery must change
+//! the timings, never the labels.
+//!
+//!     cargo bench --bench faults_json
+//!
+//! Knobs: `DKKM_SCALE` multiplies N, `DKKM_REPEATS` sets seeds per
+//! configuration.
+use std::sync::Arc;
+
+use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
+use dkkm::coordinator::{build_dataset, faults_json, gamma_for, DatasetSpec};
+use dkkm::distributed::{FaultPlan, FaultReport, FaultSession, ShardedBackend};
+use dkkm::kernels::{KernelFn, VecGram};
+use dkkm::util::json::Json;
+use dkkm::util::stats::{bench_repeats, bench_scale, mean_std, Table, Timer};
+
+fn session(spec: &str) -> Arc<FaultSession> {
+    Arc::new(FaultSession::new(FaultPlan::parse(spec).expect("fault spec")))
+}
+
+fn main() {
+    let n = ((2_000.0 * bench_scale()) as usize).max(400);
+    let b = 4usize;
+    let c = 10usize;
+    let repeats = bench_repeats();
+    println!("== fault-tolerance bench: synthetic MNIST N={n}, B={b}, C={c}, {repeats} seeds ==\n");
+
+    let (data, _) = build_dataset(&DatasetSpec::Mnist { train: n, test: 0 }, 23);
+    let gamma = gamma_for(&data, 4.0, 23);
+    let source = VecGram::new(data.x.clone(), KernelFn::Rbf { gamma }, 1);
+    let cfg = MiniBatchConfig::new(c, b);
+
+    let t = Timer::start();
+    let reference = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&source).unwrap();
+    let native_s = t.elapsed_s();
+
+    // clean baseline vs node death vs straggler dropped at the deadline
+    let scenarios: Vec<(&'static str, Option<&'static str>)> = vec![
+        ("clean", None),
+        ("kill", Some("kill:1@0")),
+        ("timeout", Some("delay:1@0:80; deadline:25")),
+    ];
+
+    let mut table = Table::new(&["p", "scenario", "seconds", "recovery s", "re-shards"]);
+    let mut rows = Vec::new();
+    for p in [2usize, 4, 8] {
+        for (name, spec) in &scenarios {
+            let mut seconds = Vec::with_capacity(repeats);
+            let mut recovery = Vec::with_capacity(repeats);
+            let mut last = FaultReport::default();
+            for _ in 0..repeats {
+                // fresh session per repeat: one-shot injections re-arm
+                let faults = match spec {
+                    Some(s) => session(s),
+                    None => FaultSession::clean(),
+                };
+                let backend = ShardedBackend::new(p).with_faults(faults.clone());
+                let t = Timer::start();
+                let res = MiniBatchKernelKMeans::new(cfg.clone(), &backend).run(&source).unwrap();
+                seconds.push(t.elapsed_s());
+                assert_eq!(
+                    reference.labels,
+                    res.labels,
+                    "{name} diverged from the fault-free reference at p={p}"
+                );
+                last = faults.report();
+                recovery.push(last.recovery_seconds);
+            }
+            let (sm, ss) = mean_std(&seconds);
+            let (rm, _) = mean_std(&recovery);
+            table.row(&[
+                format!("{p}"),
+                (*name).into(),
+                format!("{sm:.3} ± {ss:.3}"),
+                format!("{rm:.4}"),
+                format!("{}", last.reshard_events),
+            ]);
+            rows.push(Json::obj(vec![
+                ("p", Json::num(p as f64)),
+                ("scenario", Json::str(name)),
+                ("seconds_mean", Json::num(sm)),
+                ("seconds_std", Json::num(ss)),
+                ("recovery_seconds_mean", Json::num(rm)),
+                ("faults", faults_json(&last)),
+            ]));
+        }
+    }
+    println!("{}", table.render());
+
+    // checkpoint overhead + interrupt→resume cost on the native backend
+    let dir = std::env::temp_dir().join(format!("dkkm_bench_ck_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut ck_cfg = cfg.clone();
+    ck_cfg.checkpoint = Some(dir.clone());
+    let t = Timer::start();
+    let ck_run = MiniBatchKernelKMeans::new(ck_cfg.clone(), &NativeBackend).run(&source).unwrap();
+    let ck_s = t.elapsed_s();
+    assert_eq!(reference.labels, ck_run.labels, "checkpointing changed the run");
+
+    let mut int_cfg = ck_cfg.clone();
+    int_cfg.faults = Some(session(&format!("interrupt:{}", b / 2)));
+    let interrupted = MiniBatchKernelKMeans::new(int_cfg, &NativeBackend).run(&source);
+    assert!(interrupted.is_err(), "interrupt fault never fired");
+
+    let mut res_cfg = ck_cfg.clone();
+    res_cfg.resume = true;
+    let resume_session = FaultSession::clean();
+    res_cfg.faults = Some(resume_session.clone());
+    let t = Timer::start();
+    let resumed = MiniBatchKernelKMeans::new(res_cfg, &NativeBackend).run(&source).unwrap();
+    let resume_s = t.elapsed_s();
+    assert_eq!(reference.labels, resumed.labels, "resume diverged from the reference");
+    let resume_rep = resume_session.report();
+    println!(
+        "checkpoint run {ck_s:.3}s vs clean {native_s:.3}s; resume from {:?}: {resume_s:.3}s",
+        resume_rep.resumed_from_epoch
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("faults")),
+        ("n", Json::num(n as f64)),
+        ("b", Json::num(b as f64)),
+        ("c", Json::num(c as f64)),
+        ("repeats", Json::num(repeats as f64)),
+        ("scenarios", Json::arr(rows)),
+        (
+            "checkpoint",
+            Json::obj(vec![
+                ("clean_seconds", Json::num(native_s)),
+                ("checkpointed_seconds", Json::num(ck_s)),
+                ("resume_seconds", Json::num(resume_s)),
+                (
+                    "resumed_from_epoch",
+                    resume_rep.resumed_from_epoch.map(|e| Json::num(e as f64)).unwrap_or(Json::Null),
+                ),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("DKKM_BENCH_OUT").unwrap_or_else(|_| "BENCH_faults.json".into());
+    std::fs::write(&out, report.to_string()).expect("write bench json");
+    println!("\nwrote {out}");
+}

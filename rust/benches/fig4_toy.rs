@@ -35,7 +35,7 @@ fn main() {
         mb.sampling = sampling;
         mb.seed = 21;
         mb.track_cost = true;
-        let res = MiniBatchKernelKMeans::new(mb, &NativeBackend).run(&source);
+        let res = MiniBatchKernelKMeans::new(mb, &NativeBackend).run(&source).unwrap();
         println!("--- {sampling:?} sampling ---");
         println!("final accuracy: {:.2}%", accuracy(&res.labels, &data.y) * 100.0);
         println!("(b) medoid displacement per outer iteration:");

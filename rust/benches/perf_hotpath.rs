@@ -100,8 +100,8 @@ fn main() {
             let reps = 200;
             let t = Timer::start();
             std::thread::scope(|scope| {
-                for _ in 0..8 {
-                    let mut node = comm.node();
+                for rank in 0..8 {
+                    let mut node = comm.node(rank);
                     scope.spawn(move || {
                         let local = vec![1.0f32; msg];
                         for _ in 0..reps {
@@ -126,7 +126,7 @@ fn main() {
         mb.seed = 13;
         mb.offload = offload;
         let t = Timer::start();
-        let res = MiniBatchKernelKMeans::new(mb, &NativeBackend).run(&source);
+        let res = MiniBatchKernelKMeans::new(mb, &NativeBackend).run(&source).unwrap();
         let total = t.elapsed_s();
         match res.overlap {
             Some(ov) => println!(

@@ -52,7 +52,7 @@ fn main() {
             cfg.offload = *offload;
             cfg.memory_budget = *budget;
             let t = Timer::start();
-            let res = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&source);
+            let res = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&source).unwrap();
             seconds.push(t.elapsed_s());
             pipeline = res.pipeline.clone();
         }
@@ -65,7 +65,7 @@ fn main() {
         cfg.seed = 1000;
         cfg.offload = offload;
         cfg.memory_budget = budget;
-        MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&source).labels
+        MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&source).unwrap().labels
     };
     let reference = check(None, false);
     for (name, budget, offload) in &modes[1..] {

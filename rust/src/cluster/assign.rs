@@ -24,6 +24,7 @@
 use crate::kernels::microkernel::{self, PackedPanel};
 use crate::kernels::GramView;
 use crate::linalg::{simd, Mat};
+use crate::util::error::Result;
 
 /// Per-cluster statistics derived from landmark labels.
 #[derive(Clone, Debug)]
@@ -190,17 +191,22 @@ pub fn argmin_rows_into(f: &[f32], c: usize, masked_g: &[f32], out: &mut Vec<usi
 
 /// Cluster average similarity f over a tiled view: one GEMM per tile,
 /// written straight into the assembled `rows x C` matrix (tile rows are
-/// contiguous in `f`, so no per-tile scratch is allocated).
-pub fn similarity_f_view(view: &GramView<'_>, lm_labels: &[usize], stats: &ClusterStats) -> Mat {
+/// contiguous in `f`, so no per-tile scratch is allocated). Errs when a
+/// spilled tile cannot be reloaded after retries.
+pub fn similarity_f_view(
+    view: &GramView<'_>,
+    lm_labels: &[usize],
+    stats: &ClusterStats,
+) -> Result<Mat> {
     let ind = Indicator::scaled(lm_labels, &stats.inv);
     let c = ind.c();
     let mut f = Mat::zeros(view.rows(), c);
     for t in 0..view.n_tiles() {
         let (lo, hi) = view.tile_range(t);
-        let tile = view.tile(t);
+        let tile = view.tile(t)?;
         ind.apply_rows(tile.mat().data(), &mut f.data_mut()[lo * c..hi * c]);
     }
-    f
+    Ok(f)
 }
 
 /// One fused inner-loop iteration on the native path: compute stats from
@@ -213,7 +219,7 @@ pub fn inner_iteration_view(
     k_ll: &Mat,
     lm_labels: &[usize],
     c: usize,
-) -> (Vec<usize>, ClusterStats) {
+) -> Result<(Vec<usize>, ClusterStats)> {
     let stats = ClusterStats::compute(k_ll, lm_labels, c);
     let ind = Indicator::scaled(lm_labels, &stats.inv);
     let masked_g = stats.masked_g();
@@ -221,15 +227,16 @@ pub fn inner_iteration_view(
     let mut scratch = vec![0.0f32; view.max_tile_rows() * c];
     for t in 0..view.n_tiles() {
         let (lo, hi) = view.tile_range(t);
-        let tile = view.tile(t);
+        let tile = view.tile(t)?;
         let f = &mut scratch[..(hi - lo) * c];
         ind.apply_rows(tile.mat().data(), f);
         argmin_rows_into(f, c, &masked_g, &mut labels);
     }
-    (labels, stats)
+    Ok((labels, stats))
 }
 
 /// Whole-matrix convenience wrapper over [`inner_iteration_view`].
+/// Whole views never touch disk, so this stays infallible.
 pub fn inner_iteration(
     k_block: &Mat,
     k_ll: &Mat,
@@ -237,6 +244,7 @@ pub fn inner_iteration(
     c: usize,
 ) -> (Vec<usize>, ClusterStats) {
     inner_iteration_view(&GramView::Whole(k_block), k_ll, lm_labels, c)
+        .expect("whole-panel views cannot fail")
 }
 
 /// Partial kernel k-means cost (Eq.1/9) of a labelled block:

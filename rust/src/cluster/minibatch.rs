@@ -27,12 +27,18 @@
 //! bottom out in the dispatched compute core (`kernels::microkernel`,
 //! tier selected once via `linalg::simd`, override `DKKM_SIMD=`), so
 //! native, sharded and tiled runs share one tuned kernel.
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
 use crate::data::{minibatch_indices, Sampling};
+use crate::distributed::fault::FaultSession;
 use crate::kernels::tiles;
 use crate::kernels::{
     run_pipeline, GramPanel, GramSource, GramView, PanelSpec, PipelineConfig, PipelineStats,
 };
 use crate::linalg::Mat;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::stats::Timer;
 
@@ -46,14 +52,16 @@ use super::init::kernel_kmeans_pp;
 pub trait StepBackend: Sync {
     /// Given the mini-batch kernel view and current landmark labels,
     /// produce new labels for every mini-batch row plus the cluster stats
-    /// used for the update.
+    /// used for the update. Errs on unrecoverable tile/engine/node
+    /// failures (recoverable ones — a dead rank, a transient spill read —
+    /// are handled inside the backend).
     fn iterate(
         &self,
         k_nl: &GramView<'_>,
         k_ll: &Mat,
         lm_labels: &[usize],
         c: usize,
-    ) -> (Vec<usize>, ClusterStats);
+    ) -> Result<(Vec<usize>, ClusterStats)>;
 
     /// Whole-matrix convenience (tests, benches, direct drivers).
     fn iterate_mat(
@@ -62,7 +70,7 @@ pub trait StepBackend: Sync {
         k_ll: &Mat,
         lm_labels: &[usize],
         c: usize,
-    ) -> (Vec<usize>, ClusterStats) {
+    ) -> Result<(Vec<usize>, ClusterStats)> {
         self.iterate(&GramView::Whole(k_nl), k_ll, lm_labels, c)
     }
 
@@ -82,7 +90,7 @@ impl StepBackend for NativeBackend {
         k_ll: &Mat,
         lm_labels: &[usize],
         c: usize,
-    ) -> (Vec<usize>, ClusterStats) {
+    ) -> Result<(Vec<usize>, ClusterStats)> {
         assign::inner_iteration_view(k_nl, k_ll, lm_labels, c)
     }
 }
@@ -140,6 +148,19 @@ pub struct MiniBatchConfig {
     /// already saturate the host, e.g. `sharded:<p>`); `Some(k)` runs a
     /// pool of `k` workers.
     pub pipeline_workers: Option<usize>,
+    /// Directory for per-epoch checkpoints (`ckpt_<seed>.json`): the
+    /// outer-loop state is snapshotted after every processed batch, and
+    /// removed again when the run completes. `None` disables.
+    pub checkpoint: Option<PathBuf>,
+    /// Resume from the checkpoint in `checkpoint` when one exists: the
+    /// deterministic plan phase replays, already-processed batches are
+    /// skipped (their panels are still produced and dropped, so the
+    /// pipeline schedule is unchanged), and state + RNG continue exactly
+    /// where the checkpoint left them.
+    pub resume: bool,
+    /// Fault-injection session threaded into the tile pipeline, the
+    /// backend, and the interrupt/checkpoint machinery (`None` = clean).
+    pub faults: Option<Arc<FaultSession>>,
 }
 
 impl MiniBatchConfig {
@@ -156,6 +177,9 @@ impl MiniBatchConfig {
             merge_rule: MergeRule::Convex,
             memory_budget: None,
             pipeline_workers: None,
+            checkpoint: None,
+            resume: false,
+            faults: None,
         }
     }
 }
@@ -230,8 +254,10 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
         MiniBatchKernelKMeans { config, backend }
     }
 
-    /// Run Alg.1 over the whole source.
-    pub fn run(&self, source: &dyn GramSource) -> MiniBatchResult {
+    /// Run Alg.1 over the whole source. Errs on unrecoverable engine or
+    /// I/O failures and on an injected `interrupt:e` fault
+    /// ([`Error::Interrupted`] — the epoch checkpoint is already on disk).
+    pub fn run(&self, source: &dyn GramSource) -> Result<MiniBatchResult> {
         let cfg = &self.config;
         let n = source.n();
         assert!(cfg.b >= 1 && cfg.b * cfg.c <= n, "B={} C={} too large for N={n}", cfg.b, cfg.c);
@@ -266,6 +292,32 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
             cost_sample,
         };
 
+        // --- checkpoint/resume: restore the epoch snapshot if one exists
+        //     for this (seed, C, B, N) fingerprint, then skip the already
+        //     processed batches below (the pipeline still produces them so
+        //     the producer schedule stays bit-identical)
+        let ckpt_path = cfg
+            .checkpoint
+            .as_ref()
+            .map(|dir| dir.join(format!("ckpt_{:016x}.json", cfg.seed)));
+        let mut start_epoch = 0usize;
+        if cfg.resume {
+            if let Some(path) = &ckpt_path {
+                if path.exists() {
+                    let ck = Checkpoint::load(path)?;
+                    ck.check_fingerprint(cfg.seed, cfg.c, cfg.b, n)?;
+                    state.medoids = ck.medoids.clone();
+                    state.counts = ck.counts.clone();
+                    state.labels = ck.labels.clone();
+                    state.rng = Rng::from_state(ck.rng_s, ck.rng_gauss);
+                    start_epoch = ck.epoch;
+                    if let Some(f) = &cfg.faults {
+                        f.note_resumed(start_epoch);
+                    }
+                }
+            }
+        }
+
         // --- pipeline shape: offload and memory budget are both
         //     configurations of the same tile pipeline (Fig.3 offload =
         //     whole tiles, one producer, lookahead 1). An explicit
@@ -293,20 +345,48 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
             .iter()
             .map(|(batch, lm_pos)| PanelSpec::new(batch, lm_pos))
             .collect();
-        let pipe_cfg = PipelineConfig { budget: cfg.memory_budget, workers };
-        let ((), pstats) = run_pipeline(source, &specs, &pipe_cfg, |feed| {
+        let pipe_cfg = PipelineConfig {
+            budget: cfg.memory_budget,
+            workers,
+            faults: cfg.faults.clone(),
+        };
+        let (run_res, pstats) = run_pipeline(source, &specs, &pipe_cfg, |feed| -> Result<()> {
             for i in 0..cfg.b {
-                let (panel, k_ll) = feed.next_panel();
+                let (panel, k_ll) = feed.next_panel()?;
+                if i < start_epoch {
+                    // already covered by the checkpoint: consume the panel
+                    // (so the producer schedule matches the original run)
+                    // but skip the compute
+                    drop(panel);
+                    continue;
+                }
+                if let Some(f) = &cfg.faults {
+                    if f.should_interrupt(i) {
+                        return Err(Error::Interrupted { epoch: i });
+                    }
+                }
                 let (batch, lm_pos) = &plan[i];
-                self.process_batch(source, i, batch, lm_pos, panel, k_ll, &mut state);
+                self.process_batch(source, i, batch, lm_pos, panel, k_ll, &mut state)?;
+                if let Some(path) = &ckpt_path {
+                    Checkpoint::snapshot(cfg, i + 1, &state, n).save(path)?;
+                    if let Some(f) = &cfg.faults {
+                        f.note_checkpoint();
+                    }
+                }
             }
+            Ok(())
         });
+        run_res?;
+        // clean finish: the checkpoint is no longer needed
+        if let Some(path) = &ckpt_path {
+            let _ = std::fs::remove_file(path);
+        }
         let overlap = (workers > 0).then(|| OverlapStats {
             producer_busy_s: pstats.producer_busy_s,
             consumer_wait_s: pstats.consumer_wait_s,
         });
 
-        MiniBatchResult {
+        Ok(MiniBatchResult {
             medoids: state.medoids,
             labels: state.labels,
             counts: state.counts,
@@ -314,7 +394,7 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
             seconds: total_timer.elapsed_s(),
             overlap,
             pipeline: pstats,
-        }
+        })
     }
 
     /// Steps 2-6 of the outer loop for one mini-batch: init labels from
@@ -329,7 +409,7 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
         panel: GramPanel,
         k_ll: Mat,
         state: &mut RunState,
-    ) {
+    ) -> Result<()> {
         let cfg = &self.config;
         let timer = Timer::start();
         let nb = batch.len();
@@ -359,10 +439,10 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
             inner_iterations += 1;
             refresh_lm_labels(&mut lm_labels, lm_pos, &batch_labels);
             let (new_labels, new_stats) =
-                self.backend.iterate(&view, &k_ll, &lm_labels, cfg.c);
+                self.backend.iterate(&view, &k_ll, &lm_labels, cfg.c)?;
             stats = new_stats;
             if cfg.track_cost {
-                let f = assign::similarity_f_view(&view, &lm_labels, &stats);
+                let f = assign::similarity_f_view(&view, &lm_labels, &stats)?;
                 partial_cost.push(assign::block_cost(&diag, &f, &new_labels, &stats));
             }
             let fixed = new_labels == batch_labels;
@@ -376,7 +456,7 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
         // --- per-cluster batch medoids (Eq.7/10): argmin over batch of
         //     K_ll - 2 f_lj, skipping empty clusters
         refresh_lm_labels(&mut lm_labels, lm_pos, &batch_labels);
-        let f = assign::similarity_f_view(&view, &lm_labels, &stats);
+        let f = assign::similarity_f_view(&view, &lm_labels, &stats)?;
         // the K_nl panel is no longer needed: release its resident bytes
         // (and any spill file) before the merge's own kernel evaluations
         drop(panel);
@@ -458,6 +538,157 @@ impl<'a, B: StepBackend + ?Sized> MiniBatchKernelKMeans<'a, B> {
             medoid_displacement: displacement,
             seconds: timer.elapsed_s(),
         });
+        Ok(())
+    }
+}
+
+/// One epoch snapshot of the mini-batch run, persisted as versioned JSON
+/// after every processed batch so an interrupted `run()` can resume from
+/// the last completed epoch. The RNG words and the seed are stored as hex
+/// strings because `f64` (the JSON number type) cannot hold every `u64`.
+struct Checkpoint {
+    epoch: usize,
+    seed: u64,
+    c: usize,
+    b: usize,
+    n: usize,
+    medoids: Vec<usize>,
+    counts: Vec<usize>,
+    labels: Vec<usize>,
+    rng_s: [u64; 4],
+    rng_gauss: Option<f64>,
+}
+
+const CHECKPOINT_VERSION: usize = 1;
+
+impl Checkpoint {
+    /// Snapshot the state after `epoch` batches have been processed.
+    fn snapshot(cfg: &MiniBatchConfig, epoch: usize, state: &RunState, n: usize) -> Checkpoint {
+        let (rng_s, rng_gauss) = state.rng.state();
+        Checkpoint {
+            epoch,
+            seed: cfg.seed,
+            c: cfg.c,
+            b: cfg.b,
+            n,
+            medoids: state.medoids.clone(),
+            counts: state.counts.clone(),
+            labels: state.labels.clone(),
+            rng_s,
+            rng_gauss,
+        }
+    }
+
+    /// Reject a checkpoint written by a run with a different shape; a
+    /// silent mismatch would corrupt the resumed stream.
+    fn check_fingerprint(&self, seed: u64, c: usize, b: usize, n: usize) -> Result<()> {
+        if self.seed != seed || self.c != c || self.b != b || self.n != n {
+            return Err(Error::Config(format!(
+                "checkpoint fingerprint mismatch: file has seed={:016x} C={} B={} N={}, \
+                 run has seed={:016x} C={} B={} N={}; delete it or disable resume",
+                self.seed, self.c, self.b, self.n, seed, c, b, n
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialize and write atomically (write to `.tmp`, then rename), so
+    /// an interruption mid-write never leaves a truncated checkpoint.
+    fn save(&self, path: &Path) -> Result<()> {
+        // labels may hold the usize::MAX "unassigned" sentinel, which does
+        // not survive an f64 round trip: encode it as -1
+        let labels = Json::arr(self.labels.iter().map(|&u| {
+            if u == usize::MAX {
+                Json::num(-1.0)
+            } else {
+                Json::num(u as f64)
+            }
+        }));
+        let json = Json::obj(vec![
+            ("version", Json::num(CHECKPOINT_VERSION as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("seed", Json::str(&format!("{:016x}", self.seed))),
+            ("c", Json::num(self.c as f64)),
+            ("b", Json::num(self.b as f64)),
+            ("n", Json::num(self.n as f64)),
+            ("medoids", Json::arr(self.medoids.iter().map(|&u| Json::num(u as f64)))),
+            ("counts", Json::arr(self.counts.iter().map(|&u| Json::num(u as f64)))),
+            ("labels", labels),
+            (
+                "rng_s",
+                Json::arr(self.rng_s.iter().map(|w| Json::str(&format!("{w:016x}")))),
+            ),
+            (
+                "rng_gauss",
+                match self.rng_gauss {
+                    Some(g) => Json::num(g),
+                    None => Json::Null,
+                },
+            ),
+        ]);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, json.to_string())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)?;
+        let json = Json::parse(&text)
+            .map_err(|e| Error::Config(format!("checkpoint {}: {e}", path.display())))?;
+        let version = json.req_usize("version")?;
+        if version != CHECKPOINT_VERSION {
+            return Err(Error::Config(format!(
+                "checkpoint version {version} unsupported (expected {CHECKPOINT_VERSION})"
+            )));
+        }
+        let hex_u64 = |s: &str| -> Result<u64> {
+            u64::from_str_radix(s, 16)
+                .map_err(|e| Error::Config(format!("checkpoint hex field: {e}")))
+        };
+        let usize_arr = |key: &str| -> Result<Vec<usize>> {
+            let arr = json
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Config(format!("checkpoint missing array '{key}'")))?;
+            arr.iter()
+                .map(|v| {
+                    v.as_f64()
+                        .map(|f| if f < 0.0 { usize::MAX } else { f as usize })
+                        .ok_or_else(|| Error::Config(format!("checkpoint '{key}': non-number")))
+                })
+                .collect()
+        };
+        let rng_arr = json
+            .get("rng_s")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config("checkpoint missing array 'rng_s'".into()))?;
+        if rng_arr.len() != 4 {
+            return Err(Error::Config("checkpoint rng_s must have 4 words".into()));
+        }
+        let mut rng_s = [0u64; 4];
+        for (dst, v) in rng_s.iter_mut().zip(rng_arr) {
+            *dst = hex_u64(
+                v.as_str()
+                    .ok_or_else(|| Error::Config("checkpoint rng_s: non-string word".into()))?,
+            )?;
+        }
+        let rng_gauss = json.get("rng_gauss").and_then(Json::as_f64);
+        Ok(Checkpoint {
+            epoch: json.req_usize("epoch")?,
+            seed: hex_u64(json.req_str("seed")?)?,
+            c: json.req_usize("c")?,
+            b: json.req_usize("b")?,
+            n: json.req_usize("n")?,
+            medoids: usize_arr("medoids")?,
+            counts: usize_arr("counts")?,
+            labels: usize_arr("labels")?,
+            rng_s,
+            rng_gauss,
+        })
     }
 }
 
@@ -607,7 +838,7 @@ mod tests {
     fn single_batch_recovers_toy_clusters() {
         let (g, truth) = toy_gram(0, 100);
         let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 1), &NativeBackend);
-        let res = algo.run(&g);
+        let res = algo.run(&g).unwrap();
         assert_eq!(res.labels.len(), 400);
         assert!(res.labels.iter().all(|&u| u < 4));
         let p = purity(&res.labels, &truth, 4, 4);
@@ -618,7 +849,7 @@ mod tests {
     fn multi_batch_still_clusters() {
         let (g, truth) = toy_gram(1, 100);
         let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 4), &NativeBackend);
-        let res = algo.run(&g);
+        let res = algo.run(&g).unwrap();
         assert_eq!(res.history.len(), 4);
         let p = purity(&res.labels, &truth, 4, 4);
         assert!(p > 0.85, "purity {p}");
@@ -630,7 +861,7 @@ mod tests {
         let mut cfg = MiniBatchConfig::new(4, 2);
         cfg.s = 0.5;
         let algo = MiniBatchKernelKMeans::new(cfg, &NativeBackend);
-        let res = algo.run(&g);
+        let res = algo.run(&g).unwrap();
         for rec in &res.history {
             assert_eq!(rec.landmarks, rec.batch_size / 2);
         }
@@ -642,7 +873,7 @@ mod tests {
     fn counts_sum_to_n() {
         let (g, _) = toy_gram(3, 50);
         let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 4), &NativeBackend);
-        let res = algo.run(&g);
+        let res = algo.run(&g).unwrap();
         assert_eq!(res.counts.iter().sum::<usize>(), 200);
     }
 
@@ -652,7 +883,7 @@ mod tests {
         for b in [1usize, 3, 5] {
             let algo =
                 MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, b), &NativeBackend);
-            let res = algo.run(&g);
+            let res = algo.run(&g).unwrap();
             assert!(
                 res.labels.iter().all(|&u| u != usize::MAX),
                 "unlabelled samples with b={b}"
@@ -664,7 +895,7 @@ mod tests {
     fn medoids_are_valid_indices_and_distinct_on_toy() {
         let (g, _) = toy_gram(5, 50);
         let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 2), &NativeBackend);
-        let res = algo.run(&g);
+        let res = algo.run(&g).unwrap();
         assert_eq!(res.medoids.len(), 4);
         assert!(res.medoids.iter().all(|&m| m < 200));
         let mut s = res.medoids.clone();
@@ -679,7 +910,7 @@ mod tests {
         let mut cfg = MiniBatchConfig::new(4, 2);
         cfg.track_cost = true;
         let algo = MiniBatchKernelKMeans::new(cfg, &NativeBackend);
-        let res = algo.run(&g);
+        let res = algo.run(&g).unwrap();
         for rec in &res.history {
             assert!(!rec.partial_cost.is_empty());
             for w in rec.partial_cost.windows(2) {
@@ -694,8 +925,8 @@ mod tests {
         let (g, _) = toy_gram(7, 40);
         let algo1 = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 3), &NativeBackend);
         let algo2 = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 3), &NativeBackend);
-        let a = algo1.run(&g);
-        let b = algo2.run(&g);
+        let a = algo1.run(&g).unwrap();
+        let b = algo2.run(&g).unwrap();
         assert_eq!(a.labels, b.labels);
         assert_eq!(a.medoids, b.medoids);
     }
@@ -704,7 +935,7 @@ mod tests {
     fn assign_to_medoids_is_nearest() {
         let (g, truth) = toy_gram(8, 50);
         let algo = MiniBatchKernelKMeans::new(MiniBatchConfig::new(4, 1), &NativeBackend);
-        let res = algo.run(&g);
+        let res = algo.run(&g).unwrap();
         // assigning training samples to final medoids should agree well
         // with the training labels
         let idx: Vec<usize> = (0..200).collect();
@@ -728,7 +959,7 @@ mod tests {
         let mut cfg = MiniBatchConfig::new(4, 4);
         cfg.sampling = Sampling::Block;
         let algo = MiniBatchKernelKMeans::new(cfg, &NativeBackend);
-        let res = algo.run(&g);
+        let res = algo.run(&g).unwrap();
         // toy2d shuffles samples, so block sampling is still representative
         let p = purity(&res.labels, &truth, 4, 4);
         assert!(p > 0.8, "purity {p}");
@@ -757,9 +988,9 @@ mod offload_tests {
         let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
         let mut cfg = MiniBatchConfig::new(4, 4);
         cfg.offload = false;
-        let inline = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+        let inline = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
         cfg.offload = true;
-        let off = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
+        let off = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g).unwrap();
         assert_eq!(inline.labels, off.labels);
         assert_eq!(inline.medoids, off.medoids);
         assert_eq!(inline.counts, off.counts);
@@ -774,7 +1005,7 @@ mod offload_tests {
         let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
         let mut cfg = MiniBatchConfig::new(4, 5);
         cfg.offload = true;
-        let res = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
+        let res = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g).unwrap();
         let ov = res.overlap.unwrap();
         assert!(ov.producer_busy_s > 0.0);
         assert!((0.0..=1.0).contains(&ov.overlap_efficiency()));
@@ -796,12 +1027,12 @@ mod budget_tests {
         let d = toy2d(&mut rng, 80); // n = 320, B = 2 -> 160x160 panels
         let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
         let cfg = MiniBatchConfig::new(4, 2);
-        let whole = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+        let whole = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
         // a budget well below the 102 KiB panel forces tiling + spills
         let budget = 24 * 1024;
         let mut tiled_cfg = cfg;
         tiled_cfg.memory_budget = Some(budget);
-        let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g);
+        let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g).unwrap();
         assert_eq!(whole.labels, tiled.labels);
         assert_eq!(whole.medoids, tiled.medoids);
         assert_eq!(whole.counts, tiled.counts);
@@ -830,6 +1061,116 @@ mod budget_tests {
 }
 
 #[cfg(test)]
+mod checkpoint_tests {
+    use super::*;
+    use crate::data::toy2d;
+    use crate::distributed::fault::{FaultPlan, FaultSession};
+    use crate::kernels::{KernelFn, VecGram};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dkkm_ckpt_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn toy_gram(seed: u64, per_cluster: usize) -> VecGram {
+        let mut rng = Rng::new(seed);
+        let d = toy2d(&mut rng, per_cluster);
+        VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2)
+    }
+
+    #[test]
+    fn interrupted_run_resumes_bit_identically() {
+        let g = toy_gram(11, 60); // n = 240, B = 4
+        let dir = tmpdir("resume");
+
+        // reference: clean uninterrupted run, no checkpointing at all
+        let mut cfg = MiniBatchConfig::new(4, 4);
+        cfg.track_cost = true;
+        let clean = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend)
+            .run(&g)
+            .unwrap();
+
+        // interrupted run: dies right before batch 2, after the epoch-2
+        // checkpoint (written at the end of batch 1) landed on disk
+        let faults =
+            Arc::new(FaultSession::new(FaultPlan::parse("interrupt:2").unwrap()));
+        let mut icfg = cfg.clone();
+        icfg.checkpoint = Some(dir.clone());
+        icfg.faults = Some(faults.clone());
+        let err = MiniBatchKernelKMeans::new(icfg, &NativeBackend)
+            .run(&g)
+            .unwrap_err();
+        assert!(
+            matches!(err, Error::Interrupted { epoch: 2 }),
+            "unexpected error: {err}"
+        );
+        let rep = faults.report();
+        assert_eq!(rep.checkpoints_written, 2, "{rep:?}");
+
+        // resume: picks the checkpoint up and finishes batches 2..4
+        let resumed_faults = Arc::new(FaultSession::new(FaultPlan::none()));
+        let mut rcfg = cfg.clone();
+        rcfg.checkpoint = Some(dir.clone());
+        rcfg.resume = true;
+        rcfg.faults = Some(resumed_faults.clone());
+        let resumed = MiniBatchKernelKMeans::new(rcfg, &NativeBackend)
+            .run(&g)
+            .unwrap();
+        assert_eq!(resumed.labels, clean.labels);
+        assert_eq!(resumed.medoids, clean.medoids);
+        assert_eq!(resumed.counts, clean.counts);
+        let rrep = resumed_faults.report();
+        assert_eq!(rrep.resumed_from_epoch, Some(2), "{rrep:?}");
+        // the clean finish removed the checkpoint file
+        assert!(!dir.join(format!("ckpt_{:016x}.json", cfg.seed)).exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatched_fingerprint_is_rejected() {
+        let g = toy_gram(12, 50); // n = 200
+        let dir = tmpdir("fingerprint");
+        let faults =
+            Arc::new(FaultSession::new(FaultPlan::parse("interrupt:1").unwrap()));
+        let mut cfg = MiniBatchConfig::new(4, 2);
+        cfg.checkpoint = Some(dir.clone());
+        cfg.faults = Some(faults);
+        let err = MiniBatchKernelKMeans::new(cfg, &NativeBackend)
+            .run(&g)
+            .unwrap_err();
+        assert!(matches!(err, Error::Interrupted { epoch: 1 }));
+
+        // same seed (same checkpoint file name), different C: refuse
+        let mut bad = MiniBatchConfig::new(5, 2);
+        bad.checkpoint = Some(dir.clone());
+        bad.resume = true;
+        let err = MiniBatchKernelKMeans::new(bad, &NativeBackend)
+            .run(&g)
+            .unwrap_err();
+        match err {
+            Error::Config(msg) => {
+                assert!(msg.contains("fingerprint mismatch"), "{msg}")
+            }
+            other => panic!("expected Config error, got {other}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clean_run_reports_zero_faults() {
+        let g = toy_gram(13, 40);
+        let faults = FaultSession::clean();
+        let mut cfg = MiniBatchConfig::new(4, 2);
+        cfg.faults = Some(faults.clone());
+        MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g).unwrap();
+        let rep = faults.report();
+        assert!(rep.is_clean(), "clean run reported faults: {rep:?}");
+    }
+}
+
+#[cfg(test)]
 mod merge_rule_tests {
     use super::*;
     use crate::data::toy2d;
@@ -842,9 +1183,9 @@ mod merge_rule_tests {
         let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 1);
         let mut cfg = MiniBatchConfig::new(4, 8);
         cfg.track_cost = false;
-        let convex = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+        let convex = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
         cfg.merge_rule = MergeRule::Replace;
-        let replace = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
+        let replace = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g).unwrap();
         let displ = |r: &MiniBatchResult| -> f64 {
             r.history.iter().map(|h| h.medoid_displacement).sum()
         };

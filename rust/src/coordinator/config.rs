@@ -203,6 +203,16 @@ pub struct RunConfig {
     /// pinned cache + ring buffers stay under the budget (excess spills
     /// to disk). Validated against the B x C plan at `build()`.
     pub memory_budget: Option<usize>,
+    /// Directory for per-epoch checkpoints (`ckpt_<seed-hex>.json`);
+    /// `None` disables checkpointing.
+    pub checkpoint: Option<std::path::PathBuf>,
+    /// Resume from an existing epoch checkpoint when one matches the
+    /// run's (seed, C, B, N) fingerprint.
+    pub resume: bool,
+    /// Deterministic fault-injection spec
+    /// (`kill:r@k | delay:r@k:ms | spill:n | interrupt:e | deadline:ms`,
+    /// `;`-separated); the `DKKM_FAULT` env var overrides it.
+    pub fault: Option<String>,
 }
 
 impl RunConfig {
@@ -222,6 +232,9 @@ impl RunConfig {
             track_cost: false,
             offload: false,
             memory_budget: None,
+            checkpoint: None,
+            resume: false,
+            fault: None,
         }
     }
 
@@ -263,7 +276,7 @@ impl RunConfig {
         const KNOWN: &[&str] = &[
             "dataset", "c", "b", "s", "sampling", "backend", "threads", "seed",
             "restarts", "sigma_factor", "gamma", "track_cost", "offload",
-            "memory_budget",
+            "memory_budget", "checkpoint", "resume", "fault",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -350,6 +363,31 @@ impl RunConfig {
                 })?),
             };
         }
+        if let Some(v) = j.get("checkpoint") {
+            cfg.checkpoint = match v {
+                Json::Null => None,
+                other => Some(std::path::PathBuf::from(other.as_str().ok_or_else(
+                    || Error::Config("'checkpoint' must be a directory path or null".into()),
+                )?)),
+            };
+        }
+        if let Some(v) = j.get("resume") {
+            cfg.resume =
+                v.as_bool().ok_or_else(|| Error::Config("'resume' not a bool".into()))?;
+        }
+        if let Some(v) = j.get("fault") {
+            cfg.fault = match v {
+                Json::Null => None,
+                other => Some(
+                    other
+                        .as_str()
+                        .ok_or_else(|| {
+                            Error::Config("'fault' must be a fault spec string or null".into())
+                        })?
+                        .to_string(),
+                ),
+            };
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -380,6 +418,18 @@ impl RunConfig {
                 self.memory_budget
                     .map(|b| Json::num(b as f64))
                     .unwrap_or(Json::Null),
+            ),
+            (
+                "checkpoint",
+                self.checkpoint
+                    .as_ref()
+                    .map(|p| Json::str(&p.display().to_string()))
+                    .unwrap_or(Json::Null),
+            ),
+            ("resume", Json::Bool(self.resume)),
+            (
+                "fault",
+                self.fault.as_deref().map(Json::str).unwrap_or(Json::Null),
             ),
         ])
     }
@@ -576,6 +626,30 @@ mod tests {
         cfg.memory_budget = Some(1 << 20);
         let echoed = Json::parse(&cfg.to_json().to_string()).unwrap();
         assert_eq!(RunConfig::from_json(&echoed).unwrap().memory_budget, Some(1 << 20));
+    }
+
+    #[test]
+    fn from_json_fault_tolerance_fields() {
+        let j = Json::parse(
+            r#"{"dataset": "toy2d:100", "checkpoint": "/tmp/ck",
+                "resume": true, "fault": "kill:1@0; deadline:500"}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.checkpoint, Some(std::path::PathBuf::from("/tmp/ck")));
+        assert!(cfg.resume);
+        assert_eq!(cfg.fault.as_deref(), Some("kill:1@0; deadline:500"));
+        // the echo round-trips the new knobs
+        let echoed = Json::parse(&cfg.to_json().to_string()).unwrap();
+        let back = RunConfig::from_json(&echoed).unwrap();
+        assert_eq!(back.checkpoint, cfg.checkpoint);
+        assert_eq!(back.resume, cfg.resume);
+        assert_eq!(back.fault, cfg.fault);
+        // bad types are rejected
+        let j = Json::parse(r#"{"dataset": "toy2d", "resume": "yes"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"dataset": "toy2d", "fault": 3}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -18,7 +18,7 @@ use std::sync::{Arc, OnceLock};
 
 use crate::cluster::minibatch::{NativeBackend, StepBackend};
 use crate::data::CsrMat;
-use crate::distributed::ShardedBackend;
+use crate::distributed::{FaultSession, ShardedBackend};
 use crate::kernels::{GramSource, KernelFn, RmsdGram, VecGram};
 use crate::linalg::{Frame, Mat};
 use crate::runtime::{Manifest, PjrtGram, PjrtRuntime};
@@ -227,6 +227,15 @@ impl ShardedEngine {
             step: ShardedBackend::new(nodes),
         }
     }
+
+    /// Sharded engine with a fault-injection session wired into the
+    /// node runtime (deadline overrides included).
+    pub fn with_faults(nodes: usize, faults: Arc<FaultSession>) -> ShardedEngine {
+        ShardedEngine {
+            name: format!("sharded:{nodes}"),
+            step: ShardedBackend::new(nodes).with_faults(faults),
+        }
+    }
 }
 
 impl Engine for ShardedEngine {
@@ -255,6 +264,17 @@ impl Engine for ShardedEngine {
 /// `pjrt` requires the artifact manifest (an actionable `Runtime` error
 /// otherwise — run `make artifacts` or set `DKKM_ARTIFACTS`).
 pub fn create_engine(choice: &BackendChoice) -> Result<Box<dyn Engine>> {
+    create_engine_with(choice, None)
+}
+
+/// [`create_engine`] with a fault-injection session plumbed into the
+/// engines that execute fault sites (today: the sharded node runtime).
+/// Engines without fault sites ignore the session; their runs simply
+/// never report injections.
+pub fn create_engine_with(
+    choice: &BackendChoice,
+    faults: Option<Arc<FaultSession>>,
+) -> Result<Box<dyn Engine>> {
     match choice {
         BackendChoice::Native => Ok(Box::new(NativeEngine::new())),
         BackendChoice::Pjrt => Ok(Box::new(PjrtEngine::new(shared_pjrt()?))),
@@ -264,7 +284,10 @@ pub fn create_engine(choice: &BackendChoice) -> Result<Box<dyn Engine>> {
                     "sharded engine needs at least 1 node (sharded:<p>, p >= 1)".into(),
                 ));
             }
-            Ok(Box::new(ShardedEngine::new(*p)))
+            Ok(Box::new(match faults {
+                Some(f) => ShardedEngine::with_faults(*p, f),
+                None => ShardedEngine::new(*p),
+            }))
         }
     }
 }
@@ -324,6 +347,16 @@ mod tests {
     fn registry_rejects_zero_nodes() {
         assert!(create_engine(&BackendChoice::Sharded(0)).is_err());
         assert!(create_engine(&BackendChoice::Sharded(2)).is_ok());
+    }
+
+    #[test]
+    fn registry_wires_fault_session_into_sharded() {
+        let faults = FaultSession::clean();
+        let e = create_engine_with(&BackendChoice::Sharded(2), Some(faults)).unwrap();
+        assert_eq!(e.name(), "sharded:2");
+        // engines without fault sites accept and ignore the session
+        let n = create_engine_with(&BackendChoice::Native, Some(FaultSession::clean())).unwrap();
+        assert_eq!(n.name(), "native");
     }
 
     #[test]

@@ -11,11 +11,14 @@
 //! silently ignored flag. `build()` materializes the dataset and Gram
 //! source once into a [`Session`], which `fit()` can then drive
 //! repeatedly.
+use std::sync::Arc;
+
 use crate::data::Sampling;
+use crate::distributed::{FaultPlan, FaultSession};
 use crate::util::error::{Error, Result};
 
 use super::config::{BackendChoice, DatasetSpec, RunConfig};
-use super::engine::create_engine;
+use super::engine::create_engine_with;
 use super::session::Session;
 
 /// Kernel selection for the builder.
@@ -178,6 +181,31 @@ impl Experiment {
         self
     }
 
+    /// Directory for per-epoch checkpoints: each restart writes
+    /// `ckpt_<seed-hex>.json` after every completed mini-batch, and
+    /// removes it on a clean finish.
+    pub fn checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Experiment {
+        self.cfg.checkpoint = Some(dir.into());
+        self
+    }
+
+    /// Resume interrupted runs from their checkpoint files (requires
+    /// [`Experiment::checkpoint_dir`]); fingerprint mismatches are a
+    /// structured error, never a silent restart.
+    pub fn resume(mut self, on: bool) -> Experiment {
+        self.cfg.resume = on;
+        self
+    }
+
+    /// Deterministic fault-injection spec (`kill:r@k`, `delay:r@k:ms`,
+    /// `spill:n`, `interrupt:e`, `deadline:ms`; `;`-separated). Parsed
+    /// — and rejected with a message — at `build()`. The `DKKM_FAULT`
+    /// environment variable overrides this value.
+    pub fn fault(mut self, spec: &str) -> Experiment {
+        self.cfg.fault = Some(spec.to_string());
+        self
+    }
+
     /// Validate the combination, resolve the engine, and materialize
     /// the dataset + Gram source into a reusable [`Session`].
     pub fn build(mut self) -> Result<Session> {
@@ -196,7 +224,16 @@ impl Experiment {
                 )));
             }
         }
-        let engine = create_engine(&self.cfg.backend)?;
+        // fault plan parses (and fails) before any engine spins up; the
+        // DKKM_FAULT env var overrides the config spec
+        let plan = FaultPlan::from_config_and_env(self.cfg.fault.as_deref())?;
+        let faults = Arc::new(FaultSession::new(plan));
+        if self.cfg.resume && self.cfg.checkpoint.is_none() {
+            return Err(Error::Config(
+                "resume needs a checkpoint directory (set checkpoint_dir)".into(),
+            ));
+        }
+        let engine = create_engine_with(&self.cfg.backend, Some(faults.clone()))?;
         // the budget must admit at least 1-row tiles for the largest
         // panel the plan will produce (one tile per pipeline slot). The
         // slot count depends on the engine: offload-capable engines run
@@ -230,7 +267,7 @@ impl Experiment {
                 engine.name()
             )));
         }
-        Session::materialize(self.cfg, engine)
+        Session::materialize(self.cfg, engine, faults)
     }
 }
 
@@ -348,6 +385,32 @@ mod tests {
             .build()
             .unwrap();
         assert_ne!(session.gamma(), 20.0);
+    }
+
+    #[test]
+    fn bad_fault_spec_fails_at_build() {
+        let err = toy().fault("explode:everything").build().unwrap_err();
+        assert!(err.to_string().contains("explode"), "{err}");
+        // a well-formed spec builds fine on any engine
+        assert!(toy().fault("spill:1").build().is_ok());
+    }
+
+    #[test]
+    fn resume_without_checkpoint_dir_fails_at_build() {
+        let err = toy().resume(true).build().unwrap_err();
+        assert!(err.to_string().contains("checkpoint"), "{err}");
+        let dir = std::env::temp_dir().join(format!("dkkm_exp_ck_{}", std::process::id()));
+        assert!(toy().checkpoint_dir(&dir).resume(true).build().is_ok());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn fault_and_checkpoint_knobs_echo_into_config() {
+        let exp = toy().fault("kill:1@0").checkpoint_dir("/tmp/ck").resume(true);
+        let cfg = exp.config();
+        assert_eq!(cfg.fault.as_deref(), Some("kill:1@0"));
+        assert_eq!(cfg.checkpoint.as_deref(), Some(std::path::Path::new("/tmp/ck")));
+        assert!(cfg.resume);
     }
 
     #[test]

@@ -15,10 +15,12 @@ pub mod report;
 pub mod session;
 
 pub use config::{BackendChoice, DatasetSpec, RcvStorage, RunConfig};
-pub use engine::{create_engine, engine_for_name, shared_pjrt, Engine, GramBuild};
+pub use engine::{
+    create_engine, create_engine_with, engine_for_name, shared_pjrt, Engine, GramBuild,
+};
 pub use experiment::{Experiment, KernelSpec};
 pub use memory::{b_min, footprint_bytes, paper_b_min};
-pub use report::{pipeline_json, EngineReport, RunReport};
+pub use report::{faults_json, pipeline_json, EngineReport, RunReport};
 pub use session::{
     assign_test_set, assign_test_set_sparse, build_dataset, build_sparse_rcv1, gamma_for,
     gamma_for_sparse, run_lloyd_baseline, Session,

@@ -1,5 +1,6 @@
 //! Experiment reports: metrics, timings, and honest engine provenance.
 use crate::cluster::MiniBatchResult;
+use crate::distributed::fault::FaultReport;
 use crate::kernels::PipelineStats;
 use crate::util::json::Json;
 
@@ -59,6 +60,9 @@ pub struct RunReport {
     /// Tile-pipeline accounting of the best restart: tiles produced /
     /// pinned / spilled, peak resident `K_nl` bytes, overlap efficiency.
     pub pipeline: PipelineStats,
+    /// Fault-injection and recovery accounting for the fit. Honestly
+    /// all-zero on clean runs — the counters record real events only.
+    pub faults: FaultReport,
     pub result: MiniBatchResult,
 }
 
@@ -85,6 +89,7 @@ impl RunReport {
             // GEMM dispatched to in this process (DKKM_SIMD override)
             ("simd", Json::str(crate::linalg::simd::active_tier().name())),
             ("pipeline", pipeline_json(&self.pipeline)),
+            ("faults", faults_json(&self.faults)),
             (
                 "outer_iterations",
                 Json::num(self.result.history.len() as f64),
@@ -101,6 +106,23 @@ impl RunReport {
             ),
         ])
     }
+}
+
+/// Machine-readable echo of the fault/recovery accounting.
+pub fn faults_json(f: &FaultReport) -> Json {
+    Json::obj(vec![
+        ("injected", Json::num(f.injected as f64)),
+        ("detected", Json::num(f.detected as f64)),
+        ("recovered", Json::num(f.recovered as f64)),
+        ("reshard_events", Json::num(f.reshard_events as f64)),
+        ("spill_retries", Json::num(f.spill_retries as f64)),
+        ("recovery_seconds", Json::num(f.recovery_seconds)),
+        ("checkpoints_written", Json::num(f.checkpoints_written as f64)),
+        (
+            "resumed_from_epoch",
+            f.resumed_from_epoch.map(|e| Json::num(e as f64)).unwrap_or(Json::Null),
+        ),
+    ])
 }
 
 /// Machine-readable echo of the tile-pipeline accounting.
@@ -145,6 +167,30 @@ mod tests {
         assert!((eff - 0.75).abs() < 1e-12);
         let none = pipeline_json(&PipelineStats::default());
         assert_eq!(none.get("budget_bytes"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn faults_json_roundtrips_counters() {
+        let clean = faults_json(&FaultReport::default());
+        assert_eq!(clean.get("injected").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(clean.get("resumed_from_epoch"), Some(&Json::Null));
+
+        let busy = FaultReport {
+            injected: 2,
+            detected: 2,
+            recovered: 2,
+            reshard_events: 1,
+            spill_retries: 3,
+            recovery_seconds: 0.125,
+            checkpoints_written: 4,
+            resumed_from_epoch: Some(2),
+        };
+        let j = faults_json(&busy);
+        assert_eq!(j.get("reshard_events").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("spill_retries").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(j.get("resumed_from_epoch").and_then(|v| v.as_usize()), Some(2));
+        let rs = j.get("recovery_seconds").and_then(|v| v.as_f64()).unwrap();
+        assert!((rs - 0.125).abs() < 1e-12);
     }
 
     #[test]

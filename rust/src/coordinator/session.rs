@@ -20,6 +20,7 @@ use crate::data::{
     noisy_mnist, synthetic_mnist, synthetic_rcv1, synthetic_rcv1_sparse, toy2d, Dataset,
     SparseDataset,
 };
+use crate::distributed::fault::FaultSession;
 use crate::kernels::{GramSource, KernelFn};
 use crate::linalg::{qcp_rmsd, Frame, Mat};
 use crate::metrics::{accuracy, nmi};
@@ -62,6 +63,9 @@ pub struct Session {
     workload: Workload,
     gamma: f32,
     engine_report: EngineReport,
+    /// Fault-injection plan + recovery accounting for this session; a
+    /// clean plan when no `fault` spec / `DKKM_FAULT` is set.
+    faults: Arc<FaultSession>,
     /// Gram operand storage in effect (`dense` | `csr` | `frames`).
     storage: &'static str,
     /// Default elbow scan range when `cfg.c` is None (paper §4.4/4.5).
@@ -71,7 +75,11 @@ pub struct Session {
 impl Session {
     /// Materialize dataset + Gram source + engine state. Called by
     /// `Experiment::build()` after validation.
-    pub(super) fn materialize(cfg: RunConfig, engine: Box<dyn Engine>) -> Result<Session> {
+    pub(super) fn materialize(
+        cfg: RunConfig,
+        engine: Box<dyn Engine>,
+        faults: Arc<FaultSession>,
+    ) -> Result<Session> {
         let (workload, build, gamma, elbow_range) = match cfg.dataset {
             DatasetSpec::Md { frames: n_frames } => {
                 let mut rng = Rng::new(cfg.seed ^ 0x3D);
@@ -136,6 +144,7 @@ impl Session {
             source,
             workload,
             gamma,
+            faults,
             storage,
             elbow_range,
         })
@@ -185,13 +194,17 @@ impl Session {
                 )));
             }
         }
+        // per-fit fault accounting starts clean; one-shot injections
+        // re-arm so repeated fits stay deterministic
+        self.faults.reset();
         let (result, best_cost, restart_seconds) = run_restarts(
             self.source.as_ref(),
             &self.cfg,
             c,
             self.engine.step(),
             self.engine.supports_offload(),
-        );
+            &self.faults,
+        )?;
         let truth = self.truth();
         let train_accuracy = accuracy(&result.labels, truth);
         let train_nmi = nmi(&result.labels, truth);
@@ -220,6 +233,7 @@ impl Session {
             engine: self.engine_report.clone(),
             storage: self.storage.to_string(),
             pipeline: result.pipeline.clone(),
+            faults: self.faults.report(),
             result,
         })
     }
@@ -246,9 +260,15 @@ impl Session {
         }
         let mut c = start;
         while c <= c_max {
-            let mut mb_cfg = minibatch_config(&self.cfg, c, self.cfg.seed, async_production);
+            let mut mb_cfg = minibatch_config(&self.cfg, c, self.cfg.seed, async_production, None);
             mb_cfg.max_inner = 30;
-            let result = MiniBatchKernelKMeans::new(mb_cfg, &NativeBackend).run(source);
+            // the scan is exploratory: never checkpoint it or inject
+            // faults into it
+            mb_cfg.checkpoint = None;
+            mb_cfg.resume = false;
+            let Ok(result) = MiniBatchKernelKMeans::new(mb_cfg, &NativeBackend).run(source) else {
+                break;
+            };
             curve.push((c, cost_vs_medoids(source, &sample, &result.medoids)));
             // geometric-ish steps keep the scan tractable on big ranges
             c += ((c / 4).max(1)).min(4);
@@ -444,6 +464,7 @@ fn minibatch_config(
     c: usize,
     seed: u64,
     async_production: bool,
+    faults: Option<Arc<FaultSession>>,
 ) -> MiniBatchConfig {
     MiniBatchConfig {
         c,
@@ -457,6 +478,9 @@ fn minibatch_config(
         merge_rule: MergeRule::Convex,
         memory_budget: cfg.memory_budget,
         pipeline_workers: if async_production { None } else { Some(0) },
+        checkpoint: cfg.checkpoint.clone(),
+        resume: cfg.resume,
+        faults,
     }
 }
 
@@ -466,7 +490,8 @@ fn run_restarts(
     c: usize,
     backend: &dyn StepBackend,
     async_production: bool,
-) -> (MiniBatchResult, f64, Vec<f64>) {
+    faults: &Arc<FaultSession>,
+) -> Result<(MiniBatchResult, f64, Vec<f64>)> {
     let n = source.n();
     let mut eval_rng = Rng::new(cfg.seed ^ 0xE7A1);
     let sample = eval_rng.sample_indices(n, n.min(2048));
@@ -478,9 +503,10 @@ fn run_restarts(
             c,
             cfg.seed.wrapping_add(r as u64 * 7919),
             async_production,
+            Some(faults.clone()),
         );
         let timer = Timer::start();
-        let result = MiniBatchKernelKMeans::new(mb_cfg, backend).run(source);
+        let result = MiniBatchKernelKMeans::new(mb_cfg, backend).run(source)?;
         times.push(timer.elapsed_s());
         let cost = cost_vs_medoids(source, &sample, &result.medoids);
         if best.as_ref().map_or(true, |(_, bc)| cost < *bc) {
@@ -488,7 +514,7 @@ fn run_restarts(
         }
     }
     let (result, cost) = best.expect("restarts >= 1");
-    (result, cost, times)
+    Ok((result, cost, times))
 }
 
 /// Assign held-out vector samples to the trained medoids.
@@ -618,6 +644,18 @@ mod tests {
         assert_eq!(multi.restart_seconds.len(), 3);
         let single = toy_exp().restarts(1).build().unwrap().fit().unwrap();
         assert!(multi.best_cost <= single.best_cost * 1.001);
+    }
+
+    #[test]
+    fn clean_fit_reports_zero_faults() {
+        // RunReport.faults must stay honestly zero when nothing was
+        // injected — the counters are real events, not defaults
+        let report = toy_exp().build().unwrap().fit().unwrap();
+        assert!(report.faults.is_clean(), "{:?}", report.faults);
+        let j = report.to_json();
+        let f = j.get("faults").expect("faults block in the report");
+        assert_eq!(f.get("injected").and_then(|v| v.as_usize()), Some(0));
+        assert_eq!(f.get("recovered").and_then(|v| v.as_usize()), Some(0));
     }
 
     #[test]

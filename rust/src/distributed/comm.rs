@@ -1,44 +1,165 @@
 //! In-process collectives for the sharded execution mode.
 //!
 //! A `Communicator` connects P node threads; each node holds its own
-//! [`NodeComm`] handle carrying a local collective sequence number, so
-//! every collective call rendezvouses on its own numbered slot. A slot is
-//! created by the first arriver, merged into by everyone, read back by
-//! everyone, and freed by the last reader — fast nodes can already be
-//! merging collective k+1 while slow nodes are still reading collective
-//! k, with no cross-talk (regression-tested below).
+//! [`NodeComm`] handle carrying its rank and a local collective sequence
+//! number, so every collective call rendezvouses on its own numbered
+//! slot. A slot stores one contribution per rank and is reduced in rank
+//! order at read time — the result is bit-identical regardless of thread
+//! arrival order — then freed by the last reader. Fast nodes can already
+//! be contributing to collective k+1 while slow nodes are still reading
+//! collective k, with no cross-talk (regression-tested below).
+//!
+//! Fault tolerance: every wait is bounded by a configurable deadline
+//! (`wait_timeout`), a dead rank is marked via [`Communicator::mark_failed`]
+//! and wakes all waiters, and every operation returns a structured
+//! [`CollectiveError`] instead of hanging or poisoning peers. Once a
+//! collective fails, the communicator is aborted for good — the sharded
+//! backend re-shards over survivors with a fresh communicator, so a
+//! timed-out laggard that wakes up later gets an error, never a hang.
 //!
 //! The operations mirror Alg.1's needs: allreduce-sum of `g` (line 13),
 //! allgather of label slices (line 10), allreduce-min with payload for
 //! the medoid steps (lines 18/20). Byte counts are accounted for reports.
 use std::collections::HashMap;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
-/// Scratch for one in-flight collective.
-#[derive(Default)]
+/// Default per-collective deadline — generous enough that clean runs
+/// (including CI under load) never trip it.
+pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Structured failure of a collective operation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CollectiveError {
+    /// A peer died (panic detected by the spawner) during `seq`.
+    NodeFailed { rank: usize, seq: u64 },
+    /// This rank waited `waited_ms` at `seq` without hearing from
+    /// `missing` (ranks that never contributed).
+    Timeout { rank: usize, seq: u64, waited_ms: u64, missing: Vec<usize> },
+    /// The communicator was aborted by an earlier failure; collective
+    /// `seq` was not attempted.
+    Aborted { seq: u64 },
+    /// Contract violation (e.g. an allgather with uncovered elements).
+    Protocol { seq: u64, msg: String },
+}
+
+impl CollectiveError {
+    /// The collective sequence number the failure surfaced at.
+    pub fn seq(&self) -> u64 {
+        match self {
+            CollectiveError::NodeFailed { seq, .. }
+            | CollectiveError::Timeout { seq, .. }
+            | CollectiveError::Aborted { seq }
+            | CollectiveError::Protocol { seq, .. } => *seq,
+        }
+    }
+
+    /// Ranks this error implicates as dead/unresponsive (slot indices).
+    pub fn dead_ranks(&self) -> Vec<usize> {
+        match self {
+            CollectiveError::NodeFailed { rank, .. } => vec![*rank],
+            CollectiveError::Timeout { missing, .. } => missing.clone(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+impl fmt::Display for CollectiveError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CollectiveError::NodeFailed { rank, seq } => {
+                write!(f, "rank {rank} failed during collective {seq}")
+            }
+            CollectiveError::Timeout { rank, seq, waited_ms, missing } => write!(
+                f,
+                "rank {rank} timed out after {waited_ms}ms at collective {seq} waiting for ranks {missing:?}"
+            ),
+            CollectiveError::Aborted { seq } => {
+                write!(f, "communicator aborted before collective {seq}")
+            }
+            CollectiveError::Protocol { seq, msg } => {
+                write!(f, "protocol violation at collective {seq}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CollectiveError {}
+
+/// Result alias for collective operations.
+pub type CollectiveResult<T> = std::result::Result<T, CollectiveError>;
+
+/// One rank's contribution to a collective.
+enum Contrib {
+    Empty,
+    Floats(Vec<f32>),
+    Usizes { offset: usize, vals: Vec<usize> },
+    Pairs(Vec<(f32, usize)>),
+}
+
+/// Scratch for one in-flight collective: per-rank contributions, reduced
+/// in rank order at read time.
 struct Slot {
-    arrived: usize,
+    contribs: Vec<Option<Contrib>>,
     taken: usize,
-    floats: Vec<f32>,
-    usizes: Vec<usize>,
-    pairs: Vec<(f32, usize)>,
+}
+
+impl Slot {
+    fn new(p: usize) -> Slot {
+        Slot { contribs: (0..p).map(|_| None).collect(), taken: 0 }
+    }
+
+    fn complete(&self) -> bool {
+        self.contribs.iter().all(|c| c.is_some())
+    }
+
+    fn missing(&self) -> Vec<usize> {
+        self.contribs
+            .iter()
+            .enumerate()
+            .filter_map(|(r, c)| c.is_none().then_some(r))
+            .collect()
+    }
+}
+
+/// Mutex-protected communicator state.
+struct CommState {
+    slots: HashMap<u64, Slot>,
+    /// Sticky abort: set on the first failure, errors every in-flight and
+    /// future collective (a retrying backend builds a fresh communicator).
+    abort: Option<CollectiveError>,
 }
 
 /// Shared rendezvous state for `p` nodes.
 pub struct Communicator {
     p: usize,
-    slots: Mutex<HashMap<u64, Slot>>,
+    deadline: Duration,
+    state: Mutex<CommState>,
     cv: Condvar,
     traffic: AtomicU64,
 }
 
+/// Recover the guard even if a peer panicked while holding the lock —
+/// slot state is kept consistent by construction, so poison only means
+/// "someone died", which the abort machinery reports structurally.
+fn unpoison<T>(r: Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
 impl Communicator {
     pub fn new(p: usize) -> Arc<Communicator> {
+        Communicator::with_deadline(p, DEFAULT_DEADLINE)
+    }
+
+    /// Communicator with an explicit per-collective deadline.
+    pub fn with_deadline(p: usize, deadline: Duration) -> Arc<Communicator> {
         assert!(p > 0);
         Arc::new(Communicator {
             p,
-            slots: Mutex::new(HashMap::new()),
+            deadline,
+            state: Mutex::new(CommState { slots: HashMap::new(), abort: None }),
             cv: Condvar::new(),
             traffic: AtomicU64::new(0),
         })
@@ -54,45 +175,128 @@ impl Communicator {
     }
 
     /// Create the per-node handle for `rank` (one per node thread).
-    pub fn node(self: &Arc<Self>) -> NodeComm {
-        NodeComm { comm: self.clone(), seq: 0 }
+    pub fn node(self: &Arc<Self>, rank: usize) -> NodeComm {
+        assert!(rank < self.p, "rank {rank} out of range for p={}", self.p);
+        NodeComm { comm: self.clone(), rank, seq: 0 }
     }
 
+    /// Mark `rank` dead (its thread panicked or was dropped): abort the
+    /// communicator and wake every waiter with a structured error.
+    pub fn mark_failed(&self, rank: usize) {
+        let mut st = unpoison(self.state.lock());
+        if st.abort.is_none() {
+            // the seq peers are stuck on: the oldest incomplete slot, or
+            // 0 when the failure happened before any rendezvous
+            let seq = st
+                .slots
+                .iter()
+                .filter(|(_, s)| !s.complete())
+                .map(|(&k, _)| k)
+                .min()
+                .unwrap_or(0);
+            st.abort = Some(CollectiveError::NodeFailed { rank, seq });
+        }
+        self.cv.notify_all();
+    }
+
+    /// The rendezvous core: deposit `contrib` for `rank` at `seq`, wait
+    /// (bounded) for all ranks, reduce in rank order via `take`.
     fn collective<T>(
         &self,
+        rank: usize,
         seq: u64,
-        merge: impl FnOnce(&mut Slot),
-        take: impl FnOnce(&Slot) -> T,
-    ) -> T {
-        let mut map = self.slots.lock().unwrap();
+        contrib: Contrib,
+        take: impl FnOnce(&Slot) -> CollectiveResult<T>,
+    ) -> CollectiveResult<T> {
+        let deadline_at = Instant::now() + self.deadline;
+        let mut st = unpoison(self.state.lock());
+        if let Some(abort) = &st.abort {
+            return Err(if abort.seq() == seq {
+                abort.clone()
+            } else {
+                CollectiveError::Aborted { seq }
+            });
+        }
+        let p = self.p;
         {
-            let slot = map.entry(seq).or_default();
-            merge(slot);
-            slot.arrived += 1;
-            if slot.arrived == self.p {
+            let slot = st.slots.entry(seq).or_insert_with(|| Slot::new(p));
+            slot.contribs[rank] = Some(contrib);
+            if slot.complete() {
                 self.cv.notify_all();
             }
         }
-        while map.get(&seq).expect("slot vanished early").arrived < self.p {
-            map = self.cv.wait(map).unwrap();
+        loop {
+            if let Some(abort) = &st.abort {
+                return Err(if abort.seq() == seq {
+                    abort.clone()
+                } else {
+                    CollectiveError::Aborted { seq }
+                });
+            }
+            if st.slots.get(&seq).map(|s| s.complete()).unwrap_or(false) {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline_at {
+                let missing =
+                    st.slots.get(&seq).map(|s| s.missing()).unwrap_or_default();
+                let err = CollectiveError::Timeout {
+                    rank,
+                    seq,
+                    waited_ms: self.deadline.as_millis() as u64,
+                    missing,
+                };
+                st.abort = Some(err.clone());
+                self.cv.notify_all();
+                return Err(err);
+            }
+            let (guard, _timeout) = unpoison_wait(self.cv.wait_timeout(st, deadline_at - now));
+            st = guard;
         }
-        let slot = map.get_mut(&seq).expect("slot vanished");
+        let slot = st.slots.get_mut(&seq).expect("slot vanished");
         let out = take(slot);
         slot.taken += 1;
         if slot.taken == self.p {
-            map.remove(&seq);
+            st.slots.remove(&seq);
         }
         out
     }
+
+    #[cfg(test)]
+    fn live_slots(&self) -> usize {
+        unpoison(self.state.lock()).slots.len()
+    }
 }
 
-/// Per-node handle: carries the node's collective sequence counter.
+/// `unpoison` for the `(guard, WaitTimeoutResult)` pair of `wait_timeout`.
+fn unpoison_wait<'a>(
+    r: Result<
+        (MutexGuard<'a, CommState>, std::sync::WaitTimeoutResult),
+        PoisonError<(MutexGuard<'a, CommState>, std::sync::WaitTimeoutResult)>,
+    >,
+) -> (MutexGuard<'a, CommState>, std::sync::WaitTimeoutResult) {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Per-node handle: carries the node's rank and collective sequence
+/// counter.
 pub struct NodeComm {
     comm: Arc<Communicator>,
+    rank: usize,
     seq: u64,
 }
 
 impl NodeComm {
+    /// This node's rank (slot index within the communicator).
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The sequence number the *next* collective will use.
+    pub fn next_seq_id(&self) -> u64 {
+        self.seq
+    }
+
     fn next_seq(&mut self) -> u64 {
         let s = self.seq;
         self.seq += 1;
@@ -100,79 +304,143 @@ impl NodeComm {
     }
 
     /// Plain barrier.
-    pub fn barrier(&mut self) {
+    pub fn barrier(&mut self) -> CollectiveResult<()> {
         let seq = self.next_seq();
-        self.comm.collective(seq, |_| (), |_| ());
+        self.comm.collective(self.rank, seq, Contrib::Empty, |_| Ok(()))
     }
 
     /// Element-wise sum across nodes; every node receives the total.
-    pub fn allreduce_sum(&mut self, local: &[f32]) -> Vec<f32> {
+    /// Contributions are reduced in rank order, so the float sum is
+    /// bit-identical regardless of thread arrival order.
+    pub fn allreduce_sum(&mut self, local: &[f32]) -> CollectiveResult<Vec<f32>> {
         let seq = self.next_seq();
         let n = local.len();
         self.comm
             .traffic
             .fetch_add((n * 4) as u64, Ordering::Relaxed);
         self.comm.collective(
+            self.rank,
             seq,
-            |slot| {
-                if slot.floats.len() != n {
-                    slot.floats = vec![0.0; n];
+            Contrib::Floats(local.to_vec()),
+            move |slot| {
+                let mut acc = vec![0.0f32; n];
+                for (r, c) in slot.contribs.iter().enumerate() {
+                    let Some(Contrib::Floats(v)) = c else {
+                        return Err(CollectiveError::Protocol {
+                            seq,
+                            msg: format!("rank {r} sent a non-float contribution to allreduce_sum"),
+                        });
+                    };
+                    if v.len() != n {
+                        return Err(CollectiveError::Protocol {
+                            seq,
+                            msg: format!(
+                                "rank {r} sent {} floats, expected {n}",
+                                v.len()
+                            ),
+                        });
+                    }
+                    for (a, &x) in acc.iter_mut().zip(v) {
+                        *a += x;
+                    }
                 }
-                for (acc, &v) in slot.floats.iter_mut().zip(local) {
-                    *acc += v;
-                }
+                Ok(acc)
             },
-            |slot| slot.floats.clone(),
         )
     }
 
     /// Element-wise (value, payload) min — the paper's "allreduce min M"
     /// for medoid selection. Ties break on the smaller payload so runs
     /// are deterministic regardless of thread arrival order.
-    pub fn allreduce_min(&mut self, local: &[(f32, usize)]) -> Vec<(f32, usize)> {
+    pub fn allreduce_min(
+        &mut self,
+        local: &[(f32, usize)],
+    ) -> CollectiveResult<Vec<(f32, usize)>> {
         let seq = self.next_seq();
         let n = local.len();
         self.comm
             .traffic
             .fetch_add((n * 12) as u64, Ordering::Relaxed);
         self.comm.collective(
+            self.rank,
             seq,
-            |slot| {
-                if slot.pairs.len() != n {
-                    slot.pairs = vec![(f32::INFINITY, usize::MAX); n];
-                }
-                for (acc, &v) in slot.pairs.iter_mut().zip(local) {
-                    if v.0 < acc.0 || (v.0 == acc.0 && v.1 < acc.1) {
-                        *acc = v;
+            Contrib::Pairs(local.to_vec()),
+            move |slot| {
+                let mut acc = vec![(f32::INFINITY, usize::MAX); n];
+                for (r, c) in slot.contribs.iter().enumerate() {
+                    let Some(Contrib::Pairs(v)) = c else {
+                        return Err(CollectiveError::Protocol {
+                            seq,
+                            msg: format!("rank {r} sent a non-pair contribution to allreduce_min"),
+                        });
+                    };
+                    if v.len() != n {
+                        return Err(CollectiveError::Protocol {
+                            seq,
+                            msg: format!("rank {r} sent {} pairs, expected {n}", v.len()),
+                        });
+                    }
+                    for (a, &x) in acc.iter_mut().zip(v) {
+                        if x.0 < a.0 || (x.0 == a.0 && x.1 < a.1) {
+                            *a = x;
+                        }
                     }
                 }
+                Ok(acc)
             },
-            |slot| slot.pairs.clone(),
         )
     }
 
     /// Allgather: this node contributes `local` at `offset` within a
     /// `total`-length vector; everyone receives the assembled vector.
+    /// The assembly is validated — a gapped or short contribution set is
+    /// a [`CollectiveError::Protocol`], never silent garbage.
     pub fn allgather_usize(
         &mut self,
         offset: usize,
         total: usize,
         local: &[usize],
-    ) -> Vec<usize> {
+    ) -> CollectiveResult<Vec<usize>> {
         assert!(offset + local.len() <= total);
         let seq = self.next_seq();
         self.comm
             .traffic
             .fetch_add((local.len() * 8) as u64, Ordering::Relaxed);
         self.comm.collective(
+            self.rank,
             seq,
-            |slot| {
-                if slot.usizes.len() != total {
-                    slot.usizes = vec![usize::MAX; total];
+            Contrib::Usizes { offset, vals: local.to_vec() },
+            move |slot| {
+                let mut out = vec![0usize; total];
+                let mut covered = vec![false; total];
+                for (r, c) in slot.contribs.iter().enumerate() {
+                    let Some(Contrib::Usizes { offset, vals }) = c else {
+                        return Err(CollectiveError::Protocol {
+                            seq,
+                            msg: format!("rank {r} sent a non-usize contribution to allgather"),
+                        });
+                    };
+                    let (lo, hi) = (*offset, *offset + vals.len());
+                    if hi > total {
+                        return Err(CollectiveError::Protocol {
+                            seq,
+                            msg: format!("rank {r} contribution [{lo}, {hi}) exceeds total {total}"),
+                        });
+                    }
+                    out[lo..hi].copy_from_slice(vals);
+                    for flag in &mut covered[lo..hi] {
+                        *flag = true;
+                    }
                 }
-                slot.usizes[offset..offset + local.len()].copy_from_slice(local);
+                let gaps = covered.iter().filter(|&&done| !done).count();
+                if gaps > 0 {
+                    return Err(CollectiveError::Protocol {
+                        seq,
+                        msg: format!("allgather left {gaps} of {total} elements uncovered"),
+                    });
+                }
+                Ok(out)
             },
-            |slot| slot.usizes.clone(),
         )
     }
 }
@@ -189,7 +457,7 @@ mod tests {
         let f = Arc::new(f);
         let mut handles = Vec::new();
         for rank in 0..p {
-            let node = comm.node();
+            let node = comm.node(rank);
             let f = f.clone();
             handles.push(std::thread::spawn(move || f(rank, node)));
         }
@@ -199,7 +467,7 @@ mod tests {
     #[test]
     fn allreduce_sum_totals() {
         let results = run_nodes(4, |rank, mut comm| {
-            comm.allreduce_sum(&[rank as f32, 1.0])
+            comm.allreduce_sum(&[rank as f32, 1.0]).unwrap()
         });
         for r in results {
             assert_eq!(r, vec![6.0, 4.0]);
@@ -211,12 +479,12 @@ mod tests {
         // regression: fast nodes entering collective k+1 must not clobber
         // slow readers of collective k
         let results = run_nodes(3, |rank, mut comm| {
-            let a = comm.allreduce_sum(&[1.0]);
+            let a = comm.allreduce_sum(&[1.0]).unwrap();
             if rank == 0 {
                 std::thread::sleep(std::time::Duration::from_millis(20));
             }
-            let b = comm.allreduce_sum(&[2.0]);
-            let c = comm.allreduce_sum(&[1.0, 1.0, 1.0]);
+            let b = comm.allreduce_sum(&[2.0]).unwrap();
+            let c = comm.allreduce_sum(&[1.0, 1.0, 1.0]).unwrap();
             (a, b, c)
         });
         for (a, b, c) in results {
@@ -230,6 +498,7 @@ mod tests {
     fn allreduce_min_picks_global_min_with_payload() {
         let results = run_nodes(5, |rank, mut comm| {
             comm.allreduce_min(&[(10.0 - rank as f32, rank * 100), (rank as f32, rank)])
+                .unwrap()
         });
         for r in results {
             assert_eq!(r[0], (6.0, 400));
@@ -243,7 +512,7 @@ mod tests {
         let results = run_nodes(3, move |rank, mut comm| {
             let (lo, hi) = shards[rank];
             let local: Vec<usize> = (lo..hi).map(|i| i * i).collect();
-            comm.allgather_usize(lo, 10, &local)
+            comm.allgather_usize(lo, 10, &local).unwrap()
         });
         let want: Vec<usize> = (0..10).map(|i| i * i).collect();
         for r in results {
@@ -252,21 +521,41 @@ mod tests {
     }
 
     #[test]
+    fn allgather_gap_is_protocol_error() {
+        // two nodes covering [0,2) and [5,8) of 8 leave a hole
+        let results = run_nodes(2, |rank, mut comm| {
+            if rank == 0 {
+                comm.allgather_usize(0, 8, &[1, 2])
+            } else {
+                comm.allgather_usize(5, 8, &[6, 7, 8])
+            }
+        });
+        for r in results {
+            match r {
+                Err(CollectiveError::Protocol { msg, .. }) => {
+                    assert!(msg.contains("uncovered"), "{msg}");
+                }
+                other => panic!("expected protocol error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn traffic_accounted() {
         let comm = Communicator::new(1);
-        let mut node = comm.node();
-        let _ = node.allreduce_sum(&[0.0; 8]);
-        let _ = node.allgather_usize(0, 4, &[1, 2, 3, 4]);
+        let mut node = comm.node(0);
+        let _ = node.allreduce_sum(&[0.0; 8]).unwrap();
+        let _ = node.allgather_usize(0, 4, &[1, 2, 3, 4]).unwrap();
         assert_eq!(comm.traffic_bytes(), 8 * 4 + 4 * 8);
     }
 
     #[test]
     fn single_node_identity() {
         let comm = Communicator::new(1);
-        let mut node = comm.node();
-        assert_eq!(node.allreduce_sum(&[5.0, 7.0]), vec![5.0, 7.0]);
-        assert_eq!(node.allreduce_min(&[(2.0, 9)]), vec![(2.0, 9)]);
-        assert_eq!(node.allgather_usize(0, 2, &[3, 4]), vec![3, 4]);
+        let mut node = comm.node(0);
+        assert_eq!(node.allreduce_sum(&[5.0, 7.0]).unwrap(), vec![5.0, 7.0]);
+        assert_eq!(node.allreduce_min(&[(2.0, 9)]).unwrap(), vec![(2.0, 9)]);
+        assert_eq!(node.allgather_usize(0, 2, &[3, 4]).unwrap(), vec![3, 4]);
     }
 
     #[test]
@@ -274,7 +563,7 @@ mod tests {
         let results = run_nodes(8, |rank, mut comm| {
             let mut acc = 0.0;
             for round in 0..100 {
-                acc += comm.allreduce_sum(&[(rank + round) as f32])[0];
+                acc += comm.allreduce_sum(&[(rank + round) as f32]).unwrap()[0];
             }
             acc
         });
@@ -291,14 +580,104 @@ mod tests {
         let comm = Communicator::new(2);
         let c2 = comm.clone();
         let t = std::thread::spawn(move || {
-            let mut node = c2.node();
-            node.allreduce_sum(&[1.0]);
-            node.barrier();
+            let mut node = c2.node(1);
+            node.allreduce_sum(&[1.0]).unwrap();
+            node.barrier().unwrap();
         });
-        let mut node = comm.node();
-        node.allreduce_sum(&[2.0]);
-        node.barrier();
+        let mut node = comm.node(0);
+        node.allreduce_sum(&[2.0]).unwrap();
+        node.barrier().unwrap();
         t.join().unwrap();
-        assert!(comm.slots.lock().unwrap().is_empty());
+        assert_eq!(comm.live_slots(), 0);
+    }
+
+    #[test]
+    fn timeout_reports_missing_ranks_and_never_hangs() {
+        // rank 1 never shows up; rank 0 must get a Timeout naming it
+        let comm = Communicator::with_deadline(2, Duration::from_millis(50));
+        let mut node = comm.node(0);
+        let start = Instant::now();
+        let err = node.allreduce_sum(&[1.0]).unwrap_err();
+        assert!(start.elapsed() < Duration::from_secs(5), "wait was not bounded");
+        match err {
+            CollectiveError::Timeout { rank, seq, missing, .. } => {
+                assert_eq!(rank, 0);
+                assert_eq!(seq, 0);
+                assert_eq!(missing, vec![1]);
+            }
+            other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mark_failed_wakes_waiters_with_node_failed() {
+        let comm = Communicator::new(3); // default (long) deadline
+        let c2 = comm.clone();
+        let killer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            c2.mark_failed(2);
+        });
+        let mut handles = Vec::new();
+        for rank in 0..2 {
+            let c = comm.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut node = c.node(rank);
+                node.allreduce_sum(&[1.0])
+            }));
+        }
+        for h in handles {
+            let err = h.join().unwrap().unwrap_err();
+            assert_eq!(err, CollectiveError::NodeFailed { rank: 2, seq: 0 });
+        }
+        killer.join().unwrap();
+    }
+
+    #[test]
+    fn abort_is_sticky_for_later_collectives() {
+        let comm = Communicator::new(2);
+        comm.mark_failed(1);
+        let mut node = comm.node(0);
+        // seq 0 was the stuck collective; later seqs report Aborted
+        assert_eq!(
+            node.allreduce_sum(&[1.0]).unwrap_err(),
+            CollectiveError::NodeFailed { rank: 1, seq: 0 }
+        );
+        assert_eq!(node.barrier().unwrap_err(), CollectiveError::Aborted { seq: 1 });
+        assert_eq!(
+            node.allgather_usize(0, 1, &[0]).unwrap_err(),
+            CollectiveError::Aborted { seq: 2 }
+        );
+    }
+
+    #[test]
+    fn timed_out_laggard_gets_error_not_hang() {
+        // rank 0 times out first and aborts; the late rank 1 must get a
+        // structured error immediately instead of waiting out its own
+        // deadline against an abandoned communicator
+        let comm = Communicator::with_deadline(2, Duration::from_millis(40));
+        let c2 = comm.clone();
+        let late = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(120));
+            let mut node = c2.node(1);
+            let start = Instant::now();
+            let r = node.allreduce_sum(&[1.0]);
+            (r, start.elapsed())
+        });
+        let mut node = comm.node(0);
+        assert!(matches!(
+            node.allreduce_sum(&[1.0]),
+            Err(CollectiveError::Timeout { .. })
+        ));
+        let (r, took) = late.join().unwrap();
+        assert!(r.is_err());
+        assert!(took < Duration::from_millis(30), "laggard waited {took:?}");
+    }
+
+    #[test]
+    fn dead_ranks_extraction() {
+        assert_eq!(CollectiveError::NodeFailed { rank: 3, seq: 1 }.dead_ranks(), vec![3]);
+        let t = CollectiveError::Timeout { rank: 0, seq: 2, waited_ms: 5, missing: vec![1, 2] };
+        assert_eq!(t.dead_ranks(), vec![1, 2]);
+        assert!(CollectiveError::Aborted { seq: 0 }.dead_ranks().is_empty());
     }
 }

@@ -13,11 +13,14 @@
 //!   so the Fig.6 strong-scaling curves extend to P = 1024 nodes on a
 //!   single machine (DESIGN.md §3 substitutions).
 pub mod comm;
+pub mod fault;
 pub mod netmodel;
 pub mod shard;
 pub mod sharded;
 pub mod scaling;
 
+pub use comm::{CollectiveError, Communicator, DEFAULT_DEADLINE};
+pub use fault::{Fault, FaultPlan, FaultReport, FaultSession};
 pub use netmodel::{NetModel, Topology};
 pub use shard::row_shards;
 pub use sharded::ShardedBackend;

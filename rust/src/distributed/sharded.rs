@@ -13,23 +13,274 @@
 //! The result is bit-identical to the serial backend (tested below),
 //! which is exactly the paper's point: the distribution touches only the
 //! schedule, not the math.
+//!
+//! # Fault tolerance
+//!
+//! An iteration is an *attempt* over the current survivor set. A node
+//! that panics (injected `kill:r@k` faults, or a real bug) is caught by
+//! `catch_unwind`; it marks itself failed on the communicator, which
+//! wakes every peer with a structured [`CollectiveError`]. A node that
+//! stalls past the per-collective deadline surfaces as a `Timeout`
+//! naming the missing ranks. The recovery loop drops the dead ranks
+//! from the survivor set, re-shards the SAME panel over the remainder,
+//! and re-runs the attempt — because an inner iteration is a pure
+//! function of `(K_nl, K_ll, lm_labels)`, the recovered result is
+//! bit-identical to a fault-free run at any node count. Failures change
+//! the schedule, not the math.
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
 use crate::cluster::assign::{argmin_rows_into, masked_g, ClusterStats, Indicator};
 use crate::cluster::minibatch::StepBackend;
+use crate::kernels::tiles::panic_message;
 use crate::kernels::GramView;
 use crate::linalg::Mat;
+use crate::util::error::{Error, Result};
 
-use super::comm::Communicator;
+use super::comm::{CollectiveError, Communicator, DEFAULT_DEADLINE};
+use super::fault::FaultSession;
 use super::shard::row_shards;
 
-/// Sharded implementation of one inner-loop iteration.
+/// Sharded implementation of one inner-loop iteration, with survivor
+/// re-shard recovery.
 pub struct ShardedBackend {
     pub nodes: usize,
+    faults: Option<Arc<FaultSession>>,
+    deadline: Duration,
+}
+
+/// What one node's closure produced.
+enum NodeError {
+    /// A collective failed (peer death, deadline, abort).
+    Collective(CollectiveError),
+    /// The node itself panicked (caught; communicator already aborted).
+    Panic { msg: String },
+    /// Unrecoverable engine failure (e.g. unreadable spilled tile after
+    /// retries) — retrying on fewer nodes cannot help.
+    Engine(String),
+}
+
+/// Why a whole attempt failed.
+enum AttemptFailure {
+    /// These slots (indices into the attempt's survivor set) are dead;
+    /// drop them and re-shard.
+    Dead { slots: Vec<usize>, seq: u64, msg: String },
+    /// Not survivable by re-sharding.
+    Hard(Error),
 }
 
 impl ShardedBackend {
     pub fn new(nodes: usize) -> ShardedBackend {
         assert!(nodes > 0);
-        ShardedBackend { nodes }
+        ShardedBackend { nodes, faults: None, deadline: DEFAULT_DEADLINE }
+    }
+
+    /// Attach a fault session: injects its plan into every node closure
+    /// and records detection/recovery accounting. A `deadline:ms` fault
+    /// overrides the per-collective deadline.
+    pub fn with_faults(mut self, faults: Arc<FaultSession>) -> ShardedBackend {
+        if let Some(d) = faults.plan().deadline_override() {
+            self.deadline = d;
+        }
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Override the per-collective deadline (default 30 s).
+    pub fn with_deadline(mut self, deadline: Duration) -> ShardedBackend {
+        self.deadline = deadline;
+        self
+    }
+
+    /// One attempt over `survivors` (original ranks). Re-shards rows,
+    /// tiles, and landmark slices over the attempt's node count and runs
+    /// the two-collective iteration on a fresh communicator.
+    #[allow(clippy::too_many_arguments)]
+    fn attempt(
+        &self,
+        survivors: &[usize],
+        k_nl: &GramView<'_>,
+        k_ll: &Mat,
+        lm_labels: &[usize],
+        c: usize,
+        counts: &[usize],
+        inv: &[f32],
+        ind: &Indicator,
+        onehot: &Indicator,
+    ) -> std::result::Result<(Vec<usize>, Vec<f32>), AttemptFailure> {
+        let n = k_nl.rows();
+        let l = lm_labels.len();
+        let p = survivors.len();
+        // whole panels shard by rows (historical layout); tiled panels
+        // shard by tiles, which are contiguous row ranges, so each node
+        // still owns a contiguous label slice for the allgather
+        let tile_shards = match k_nl {
+            GramView::Whole(_) => None,
+            GramView::Tiled(_) => Some(row_shards(k_nl.n_tiles(), p)),
+        };
+        let row_shards_whole = row_shards(n, p);
+        let lm_shards = row_shards(l, p);
+        let comm = Communicator::with_deadline(p, self.deadline);
+
+        let results: Vec<std::result::Result<(Vec<usize>, Vec<f32>), NodeError>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::new();
+                for slot in 0..p {
+                    let orig = survivors[slot];
+                    let mut node = comm.node(slot);
+                    let comm = comm.clone();
+                    let view = *k_nl;
+                    let (llo, lhi) = lm_shards[slot];
+                    let tile_shards = tile_shards.as_deref();
+                    let row_shards_whole = &row_shards_whole;
+                    let faults = self.faults.as_deref();
+                    handles.push(scope.spawn(move || {
+                        let run = move || -> std::result::Result<(Vec<usize>, Vec<f32>), NodeError> {
+                            // --- partial g from this node's landmark rows:
+                            // g_j = inv_j^2 sum_{m in shard, n: u_n = u_m = j} K_mn
+                            // = inv_j^2 * (K_ll[shard] · M_onehot)[m][u_m] summed
+                            let mut g_partial = vec![0.0f32; c];
+                            if lhi > llo {
+                                let mut t = vec![0.0f32; (lhi - llo) * c];
+                                onehot.apply_rows(&k_ll.data()[llo * l..lhi * l], &mut t);
+                                for (r, m) in (llo..lhi).enumerate() {
+                                    let um = lm_labels[m];
+                                    g_partial[um] += t[r * c + um] * inv[um] * inv[um];
+                                }
+                            }
+                            // --- collective 1: allreduce(sum) of g
+                            if let Some(f) = faults {
+                                f.before_collective(orig, node.next_seq_id());
+                            }
+                            let g = node
+                                .allreduce_sum(&g_partial)
+                                .map_err(NodeError::Collective)?;
+                            let g_mask = masked_g(&g, counts);
+                            // --- local f (one GEMM per slice/tile into a reused
+                            //     scratch buffer) + argmin over this node's rows
+                            let scratch_rows = match (&view, tile_shards) {
+                                (GramView::Whole(_), _) => {
+                                    let (lo, hi) = row_shards_whole[slot];
+                                    hi - lo
+                                }
+                                (GramView::Tiled(_), _) => view.max_tile_rows(),
+                            };
+                            let mut scratch = vec![0.0f32; scratch_rows * c];
+                            let mut local_labels = Vec::new();
+                            let lo = match (&view, tile_shards) {
+                                (GramView::Whole(mat), _) => {
+                                    let (lo, hi) = row_shards_whole[slot];
+                                    if hi > lo {
+                                        let f = &mut scratch[..(hi - lo) * c];
+                                        ind.apply_rows(&mat.data()[lo * l..hi * l], f);
+                                        argmin_rows_into(f, c, &g_mask, &mut local_labels);
+                                    }
+                                    lo
+                                }
+                                (GramView::Tiled(_), Some(shards)) => {
+                                    let (tlo, thi) = shards[slot];
+                                    if thi > tlo {
+                                        for t in tlo..thi {
+                                            let (rlo, rhi) = view.tile_range(t);
+                                            let tile = view
+                                                .tile(t)
+                                                .map_err(|e| NodeError::Engine(e.to_string()))?;
+                                            let f = &mut scratch[..(rhi - rlo) * c];
+                                            ind.apply_rows(tile.mat().data(), f);
+                                            argmin_rows_into(f, c, &g_mask, &mut local_labels);
+                                        }
+                                        view.tile_range(tlo).0
+                                    } else {
+                                        n
+                                    }
+                                }
+                                (GramView::Tiled(_), None) => {
+                                    unreachable!("tile shards computed above")
+                                }
+                            };
+                            // --- collective 2: allgather of label slices
+                            if let Some(f) = faults {
+                                f.before_collective(orig, node.next_seq_id());
+                            }
+                            let all = node
+                                .allgather_usize(lo, n, &local_labels)
+                                .map_err(NodeError::Collective)?;
+                            Ok((all, g))
+                        };
+                        match catch_unwind(AssertUnwindSafe(run)) {
+                            Ok(r) => r,
+                            Err(payload) => {
+                                // this node died: abort the communicator so
+                                // peers stop waiting on it
+                                comm.mark_failed(slot);
+                                Err(NodeError::Panic { msg: panic_message(payload) })
+                            }
+                        }
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| {
+                        h.join().unwrap_or_else(|payload| {
+                            Err(NodeError::Panic { msg: panic_message(payload) })
+                        })
+                    })
+                    .collect()
+            });
+
+        // classify: dead slots are survivable (re-shard), engine errors
+        // and collective errors naming nobody are not
+        let mut dead: Vec<usize> = Vec::new();
+        let mut fail_seq = 0u64;
+        let mut fail_msg = String::new();
+        let mut hard: Option<Error> = None;
+        let mut ok: Option<(Vec<usize>, Vec<f32>)> = None;
+        for (slot, r) in results.into_iter().enumerate() {
+            match r {
+                Ok(pair) => {
+                    // every surviving node received identical vectors;
+                    // keep the lowest-slot copy
+                    if ok.is_none() {
+                        ok = Some(pair);
+                    }
+                }
+                Err(NodeError::Panic { msg }) => {
+                    dead.push(slot);
+                    if fail_msg.is_empty() {
+                        fail_msg = msg;
+                    }
+                }
+                Err(NodeError::Collective(e)) => {
+                    let named = e.dead_ranks();
+                    if named.is_empty() {
+                        hard = Some(Error::Node {
+                            rank: survivors[slot],
+                            seq: e.seq(),
+                            msg: e.to_string(),
+                        });
+                    } else {
+                        dead.extend(named);
+                        fail_seq = e.seq();
+                        if fail_msg.is_empty() {
+                            fail_msg = e.to_string();
+                        }
+                    }
+                }
+                Err(NodeError::Engine(msg)) => {
+                    hard = Some(Error::Runtime(msg));
+                }
+            }
+        }
+        if let Some(e) = hard {
+            return Err(AttemptFailure::Hard(e));
+        }
+        if !dead.is_empty() {
+            dead.sort_unstable();
+            dead.dedup();
+            return Err(AttemptFailure::Dead { slots: dead, seq: fail_seq, msg: fail_msg });
+        }
+        Ok(ok.expect("p >= 1 nodes all succeeded"))
     }
 }
 
@@ -40,22 +291,12 @@ impl StepBackend for ShardedBackend {
         k_ll: &Mat,
         lm_labels: &[usize],
         c: usize,
-    ) -> (Vec<usize>, ClusterStats) {
+    ) -> Result<(Vec<usize>, ClusterStats)> {
         let n = k_nl.rows();
         let l = lm_labels.len();
         assert_eq!(k_nl.cols(), l, "K_nl columns must match landmark count");
         assert_eq!(k_ll.cols(), l, "K_ll must be L x L");
         let p = self.nodes.min(n.max(1));
-        // whole panels shard by rows (historical layout); tiled panels
-        // shard by tiles, which are contiguous row ranges, so each node
-        // still owns a contiguous label slice for the allgather
-        let tile_shards = match k_nl {
-            GramView::Whole(_) => None,
-            GramView::Tiled(_) => Some(row_shards(k_nl.n_tiles(), p)),
-        };
-        let row_shards_whole = row_shards(n, p);
-        let lm_shards = row_shards(l, p);
-        let comm = Communicator::new(p);
 
         // landmark counts are cheap and label-only: every node derives
         // them locally (the paper ships labels, not counts)
@@ -75,89 +316,49 @@ impl StepBackend for ShardedBackend {
         let ind = Indicator::scaled(lm_labels, &inv);
         let onehot = Indicator::onehot(lm_labels, c);
 
-        let mut labels_out: Vec<usize> = vec![0; n];
-        let mut g_out: Vec<f32> = vec![0.0; c];
-        std::thread::scope(|scope| {
-            let mut handles = Vec::new();
-            for rank in 0..p {
-                let mut comm = comm.node();
-                let view = *k_nl;
-                let (llo, lhi) = lm_shards[rank];
-                let tile_shards = tile_shards.as_deref();
-                let row_shards_whole = &row_shards_whole;
-                let inv = &inv;
-                let counts = &counts;
-                let ind = &ind;
-                let onehot = &onehot;
-                handles.push(scope.spawn(move || {
-                    // --- partial g from this node's landmark rows:
-                    // g_j = inv_j^2 sum_{m in shard, n: u_n = u_m = j} K_mn
-                    // = inv_j^2 * (K_ll[shard] · M_onehot)[m][u_m] summed
-                    let mut g_partial = vec![0.0f32; c];
-                    if lhi > llo {
-                        let mut t = vec![0.0f32; (lhi - llo) * c];
-                        onehot.apply_rows(&k_ll.data()[llo * l..lhi * l], &mut t);
-                        for (r, m) in (llo..lhi).enumerate() {
-                            let um = lm_labels[m];
-                            g_partial[um] += t[r * c + um] * inv[um] * inv[um];
+        // recovery loop: drop dead ranks, re-shard over the survivors,
+        // re-run. Terminates within p attempts (each failed attempt
+        // removes at least one rank).
+        let mut survivors: Vec<usize> = (0..p).collect();
+        let mut resharded = false;
+        let mut recovery_timer: Option<Instant> = None;
+        loop {
+            match self.attempt(
+                &survivors, k_nl, k_ll, lm_labels, c, &counts, &inv, &ind, &onehot,
+            ) {
+                Ok((labels, g)) => {
+                    if resharded {
+                        if let Some(f) = &self.faults {
+                            f.note_recovered();
+                            if let Some(t0) = recovery_timer {
+                                f.note_recovery_time(t0.elapsed());
+                            }
                         }
                     }
-                    // --- collective 1: allreduce(sum) of g
-                    let g = comm.allreduce_sum(&g_partial);
-                    let g_mask = masked_g(&g, counts);
-                    // --- local f (one GEMM per slice/tile into a reused
-                    //     scratch buffer) + argmin over this node's rows
-                    let scratch_rows = match (&view, tile_shards) {
-                        (GramView::Whole(_), _) => {
-                            let (lo, hi) = row_shards_whole[rank];
-                            hi - lo
-                        }
-                        (GramView::Tiled(_), _) => view.max_tile_rows(),
-                    };
-                    let mut scratch = vec![0.0f32; scratch_rows * c];
-                    let mut local_labels = Vec::new();
-                    let lo = match (&view, tile_shards) {
-                        (GramView::Whole(mat), _) => {
-                            let (lo, hi) = row_shards_whole[rank];
-                            if hi > lo {
-                                let f = &mut scratch[..(hi - lo) * c];
-                                ind.apply_rows(&mat.data()[lo * l..hi * l], f);
-                                argmin_rows_into(f, c, &g_mask, &mut local_labels);
-                            }
-                            lo
-                        }
-                        (GramView::Tiled(_), Some(shards)) => {
-                            let (tlo, thi) = shards[rank];
-                            if thi > tlo {
-                                for t in tlo..thi {
-                                    let (rlo, rhi) = view.tile_range(t);
-                                    let tile = view.tile(t);
-                                    let f = &mut scratch[..(rhi - rlo) * c];
-                                    ind.apply_rows(tile.mat().data(), f);
-                                    argmin_rows_into(f, c, &g_mask, &mut local_labels);
-                                }
-                                view.tile_range(tlo).0
-                            } else {
-                                n
-                            }
-                        }
-                        (GramView::Tiled(_), None) => unreachable!("tile shards computed above"),
-                    };
-                    // --- collective 2: allgather of label slices
-                    let all = comm.allgather_usize(lo, n, &local_labels);
-                    (all, g)
-                }));
+                    let stats = ClusterStats { counts, inv, g };
+                    return Ok((labels, stats));
+                }
+                Err(AttemptFailure::Hard(e)) => return Err(e),
+                Err(AttemptFailure::Dead { slots, seq, msg }) => {
+                    if let Some(f) = &self.faults {
+                        f.note_detected();
+                    }
+                    if recovery_timer.is_none() {
+                        recovery_timer = Some(Instant::now());
+                    }
+                    let dead_ranks: Vec<usize> =
+                        slots.iter().map(|&s| survivors[s]).collect();
+                    survivors.retain(|r| !dead_ranks.contains(r));
+                    if survivors.is_empty() {
+                        return Err(Error::Node { rank: dead_ranks[0], seq, msg });
+                    }
+                    if let Some(f) = &self.faults {
+                        f.note_reshard();
+                    }
+                    resharded = true;
+                }
             }
-            let mut results: Vec<(Vec<usize>, Vec<f32>)> =
-                handles.into_iter().map(|h| h.join().unwrap()).collect();
-            // every node received identical vectors; take rank 0's
-            let (labels, g) = results.swap_remove(0);
-            labels_out = labels;
-            g_out = g;
-        });
-
-        let stats = ClusterStats { counts, inv, g: g_out };
-        (labels_out, stats)
+        }
     }
 
     fn name(&self) -> &'static str {
@@ -171,6 +372,7 @@ mod tests {
     use crate::cluster::assign;
     use crate::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
     use crate::data::toy2d;
+    use crate::distributed::fault::{FaultPlan, FaultSession};
     use crate::kernels::{GramSource, KernelFn, VecGram};
     use crate::util::rng::Rng;
 
@@ -186,6 +388,10 @@ mod tests {
         (k_nl, k_ll, labels)
     }
 
+    fn session(spec: &str) -> Arc<FaultSession> {
+        Arc::new(FaultSession::new(FaultPlan::parse(spec).unwrap()))
+    }
+
     #[test]
     fn matches_serial_for_any_p_property() {
         // the core distribution invariant: identical labels AND g for
@@ -195,7 +401,8 @@ mod tests {
             assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 5);
         for p in [1usize, 2, 3, 4, 8, 16, 64] {
             let backend = ShardedBackend::new(p);
-            let (labels, stats) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 5);
+            let (labels, stats) =
+                backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 5).unwrap();
             assert_eq!(labels, want_labels, "labels diverge at p={p}");
             for j in 0..5 {
                 assert!(
@@ -215,9 +422,10 @@ mod tests {
         let d = toy2d(&mut rng, 60);
         let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
         let cfg = MiniBatchConfig::new(4, 3);
-        let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+        let native =
+            MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
         let backend = ShardedBackend::new(4);
-        let sharded = MiniBatchKernelKMeans::new(cfg, &backend).run(&g);
+        let sharded = MiniBatchKernelKMeans::new(cfg, &backend).run(&g).unwrap();
         assert_eq!(native.labels, sharded.labels);
         assert_eq!(native.medoids, sharded.medoids);
         assert_eq!(native.counts, sharded.counts);
@@ -231,11 +439,13 @@ mod tests {
         let d = toy2d(&mut rng, 60);
         let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
         let cfg = MiniBatchConfig::new(4, 2);
-        let reference = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+        let reference =
+            MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
         let mut budget_cfg = cfg;
         budget_cfg.memory_budget = Some(16 * 1024); // 120x120 panel = 56 KiB
         let backend = ShardedBackend::new(3);
-        let sharded = MiniBatchKernelKMeans::new(budget_cfg, &backend).run(&g);
+        let sharded =
+            MiniBatchKernelKMeans::new(budget_cfg, &backend).run(&g).unwrap();
         assert_eq!(reference.labels, sharded.labels);
         assert_eq!(reference.medoids, sharded.medoids);
         assert_eq!(reference.counts, sharded.counts);
@@ -248,8 +458,91 @@ mod tests {
         let (k_nl, k_ll, mut lm_labels) = random_setup(2, 20, 10, 6);
         lm_labels.iter_mut().for_each(|u| *u %= 2);
         let backend = ShardedBackend::new(3);
-        let (labels, stats) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 6);
+        let (labels, stats) =
+            backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 6).unwrap();
         assert!(labels.iter().all(|&u| u < 2));
         assert_eq!(&stats.counts[2..], &[0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn kill_at_each_collective_recovers_bit_identically() {
+        // node death at the allreduce (k=0) and at the allgather (k=1),
+        // across node counts: the survivors re-shard and the recovered
+        // result is bit-identical to the fault-free serial reference
+        let (k_nl, k_ll, lm_labels) = random_setup(3, 41, 23, 5);
+        let (want_labels, want_stats) =
+            assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 5);
+        for p in [2usize, 3, 4, 8] {
+            for k in [0u64, 1] {
+                let faults = session(&format!("kill:1@{k}"));
+                let backend = ShardedBackend::new(p).with_faults(faults.clone());
+                let (labels, stats) = backend
+                    .iterate_mat(&k_nl, &k_ll, &lm_labels, 5)
+                    .unwrap_or_else(|e| panic!("p={p} k={k}: {e}"));
+                assert_eq!(labels, want_labels, "labels diverge at p={p} k={k}");
+                for j in 0..5 {
+                    assert!(
+                        (stats.g[j] - want_stats.g[j]).abs() < 1e-4,
+                        "g[{j}] diverges at p={p} k={k}"
+                    );
+                }
+                assert_eq!(stats.counts, want_stats.counts);
+                let rep = faults.report();
+                assert_eq!(rep.injected, 1, "p={p} k={k}: {rep:?}");
+                assert_eq!(rep.reshard_events, 1, "p={p} k={k}: {rep:?}");
+                assert!(rep.recovered >= 1, "p={p} k={k}: {rep:?}");
+                assert!(rep.detected >= 1, "p={p} k={k}: {rep:?}");
+                assert!(rep.recovery_seconds >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_timeout_drops_the_straggler() {
+        // rank 0 sleeps 200 ms inside its first collective while the
+        // deadline is 40 ms: peers time out naming rank 0 as missing,
+        // the survivors re-shard, and the answer is unchanged
+        let (k_nl, k_ll, lm_labels) = random_setup(4, 30, 15, 4);
+        let (want_labels, _) = assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 4);
+        let faults = session("delay:0@0:200; deadline:40");
+        let backend = ShardedBackend::new(3).with_faults(faults.clone());
+        let (labels, _) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 4).unwrap();
+        assert_eq!(labels, want_labels);
+        let rep = faults.report();
+        assert_eq!(rep.injected, 1, "{rep:?}");
+        assert_eq!(rep.reshard_events, 1, "{rep:?}");
+        assert!(rep.recovered >= 1, "{rep:?}");
+    }
+
+    #[test]
+    fn all_ranks_dead_is_a_structured_error() {
+        let (k_nl, k_ll, lm_labels) = random_setup(5, 20, 10, 3);
+        let faults = session("kill:0@0; kill:1@0");
+        let backend = ShardedBackend::new(2).with_faults(faults);
+        let err = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 3).unwrap_err();
+        match err {
+            Error::Node { .. } => {}
+            other => panic!("expected Node error, got {other}"),
+        }
+    }
+
+    #[test]
+    fn full_minibatch_run_with_kill_matches_native() {
+        // a node death mid-fit: the engine-level answer is unchanged
+        let mut rng = Rng::new(6);
+        let d = toy2d(&mut rng, 60);
+        let g = VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2);
+        let cfg = MiniBatchConfig::new(4, 3);
+        let native =
+            MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
+        let faults = session("kill:2@0");
+        let backend = ShardedBackend::new(4).with_faults(faults.clone());
+        let sharded = MiniBatchKernelKMeans::new(cfg, &backend).run(&g).unwrap();
+        assert_eq!(native.labels, sharded.labels);
+        assert_eq!(native.medoids, sharded.medoids);
+        assert_eq!(native.counts, sharded.counts);
+        let rep = faults.report();
+        assert_eq!(rep.injected, 1, "{rep:?}");
+        assert_eq!(rep.reshard_events, 1, "{rep:?}");
     }
 }

@@ -12,10 +12,16 @@
 //! The on-disk rows live in the same [`SpillFile`] tier the tile
 //! pipeline (`kernels::tiles`) spills into, not a parallel format.
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, PoisonError};
 
-use super::tiles::SpillFile;
+use crate::distributed::fault::FaultSession;
+
+use super::tiles::{spill_read_with_retry, SpillFile};
 use super::GramSource;
+
+fn unpoison<T>(r: std::result::Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
 
 /// One cached panel: a fixed column set and per-row kernel values.
 struct Panel {
@@ -35,6 +41,7 @@ pub struct DiskCachedGram<'a> {
     state: Mutex<CacheState>,
     hot_rows_per_panel: usize,
     dir: std::path::PathBuf,
+    faults: Option<Arc<FaultSession>>,
 }
 
 struct CacheState {
@@ -68,12 +75,19 @@ impl<'a> DiskCachedGram<'a> {
             state: Mutex::new(CacheState { panels: HashMap::new(), hits: 0, misses: 0 }),
             hot_rows_per_panel: hot_rows_per_panel.max(1),
             dir: dir.to_path_buf(),
+            faults: None,
         })
+    }
+
+    /// Attach a fault-injection session to the spill-read path.
+    pub fn with_faults(mut self, faults: Option<Arc<FaultSession>>) -> DiskCachedGram<'a> {
+        self.faults = faults;
+        self
     }
 
     /// (hits, misses) row-level counters.
     pub fn stats(&self) -> (u64, u64) {
-        let st = self.state.lock().unwrap();
+        let st = unpoison(self.state.lock());
         (st.hits, st.misses)
     }
 }
@@ -87,7 +101,7 @@ impl GramSource for DiskCachedGram<'_> {
         assert_eq!(out.len(), rows.len() * cols.len());
         let key = cols_key(cols);
         let ncols = cols.len();
-        let mut st = self.state.lock().unwrap();
+        let mut st = unpoison(self.state.lock());
         if !st.panels.contains_key(&key) {
             let spill = SpillFile::create_in(&self.dir, &format!("panel_{key:016x}.bin"))
                 .expect("open spill file");
@@ -111,11 +125,18 @@ impl GramSource for DiskCachedGram<'_> {
                 if let Some(vals) = panel.hot.get(&r) {
                     out[slot * ncols..(slot + 1) * ncols].copy_from_slice(vals);
                 } else if let Some(&off) = panel.row_offsets.get(&r) {
-                    // disk hit: read straight into the caller's block
-                    panel
-                        .spill
-                        .read(off, &mut out[slot * ncols..(slot + 1) * ncols])
-                        .expect("read spilled row");
+                    // disk hit: read straight into the caller's block,
+                    // retrying transient failures; a row whose disk copy
+                    // stays unreadable is dropped from the index and
+                    // re-evaluated below — the cache degrades, the
+                    // answer stays exact
+                    let dst = &mut out[slot * ncols..(slot + 1) * ncols];
+                    if spill_read_with_retry(&mut panel.spill, off, dst, self.faults.as_deref())
+                        .is_err()
+                    {
+                        panel.row_offsets.remove(&r);
+                        missing.push((slot, r));
+                    }
                 } else {
                     missing.push((slot, r));
                     continue;
@@ -132,16 +153,18 @@ impl GramSource for DiskCachedGram<'_> {
         let mut fresh = vec![0.0f32; miss_rows.len() * ncols];
         drop(st); // release the lock across the (expensive) inner eval
         self.inner.block(&miss_rows, cols, &mut fresh);
-        let mut st = self.state.lock().unwrap();
+        let mut st = unpoison(self.state.lock());
         let hot_cap = self.hot_rows_per_panel;
         let panel = st.panels.get_mut(&key).unwrap();
         for (m, &(slot, r)) in missing.iter().enumerate() {
             let vals = &fresh[m * ncols..(m + 1) * ncols];
             out[slot * ncols..(slot + 1) * ncols].copy_from_slice(vals);
-            // spill to disk
+            // spill to disk; an append failure skips the disk copy (the
+            // row stays re-evaluable) instead of killing the run
             if !panel.row_offsets.contains_key(&r) {
-                let off = panel.spill.append(vals).expect("append spilled row");
-                panel.row_offsets.insert(r, off);
+                if let Ok(off) = panel.spill.append(vals) {
+                    panel.row_offsets.insert(r, off);
+                }
             }
             // hot LRU insert
             if panel.hot.len() >= hot_cap {
@@ -252,12 +275,47 @@ mod tests {
         let dir = tmpdir("run");
         let cached = DiskCachedGram::new(&inner, &dir, 16).unwrap();
         let cfg = MiniBatchConfig::new(4, 2);
-        let direct = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&inner);
-        let via_cache = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&cached);
+        let direct = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&inner).unwrap();
+        let via_cache = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&cached).unwrap();
         assert_eq!(direct.labels, via_cache.labels);
         assert_eq!(direct.medoids, via_cache.medoids);
         // the driver materializes K^i once per batch, so cache hits are
         // not guaranteed here — correctness is the contract under test
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_read_faults_recover_or_reevaluate() {
+        use crate::distributed::fault::{FaultPlan, FaultSession};
+        let inner = setup(5, 50);
+        let rows: Vec<usize> = (0..50).collect();
+        let cols: Vec<usize> = (0..20).collect();
+        let want = inner.block_mat(&rows, &cols);
+
+        // transient: one injected failure, the retry succeeds
+        let dir = tmpdir("fault_transient");
+        let faults = Arc::new(FaultSession::new(FaultPlan::parse("spill:1").unwrap()));
+        let cached =
+            DiskCachedGram::new(&inner, &dir, 2).unwrap().with_faults(Some(Arc::clone(&faults)));
+        let first = cached.block_mat(&rows, &cols); // populate
+        let second = cached.block_mat(&rows, &cols); // disk reads, one faulted
+        assert_eq!(first.data(), want.data());
+        assert_eq!(second.data(), want.data());
+        let report = faults.report();
+        assert_eq!(report.injected, 1, "{report:?}");
+        assert!(report.recovered >= 1, "{report:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // persistent: every disk read fails; rows re-evaluate instead
+        let dir = tmpdir("fault_persistent");
+        let faults = Arc::new(FaultSession::new(FaultPlan::parse("spill:100000").unwrap()));
+        let cached =
+            DiskCachedGram::new(&inner, &dir, 2).unwrap().with_faults(Some(Arc::clone(&faults)));
+        let first = cached.block_mat(&rows, &cols);
+        let second = cached.block_mat(&rows, &cols);
+        assert_eq!(first.data(), want.data());
+        assert_eq!(second.data(), want.data(), "re-evaluation fallback diverged");
+        assert!(faults.report().detected > 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -25,15 +25,37 @@
 //! on/off stays bit-identical by construction.
 use std::collections::HashMap;
 use std::io::{Read, Seek, SeekFrom, Write};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
+use std::time::Duration;
 
+use crate::distributed::fault::FaultSession;
 use crate::linalg::Mat;
+use crate::util::error::{Error, Result};
 use crate::util::stats::Timer;
 use crate::util::threadpool::WorkQueue;
 
 use super::GramSource;
+
+/// Recover a lock guard from a poisoned mutex: a panicking producer must
+/// surface as a structured error downstream, never as a poison cascade
+/// in unrelated threads.
+fn unpoison<T>(r: std::result::Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Extract a human-readable message from a caught panic payload.
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panicked with a non-string payload".to_string()
+    }
+}
 
 /// Read buffers reserved for re-loading spilled tiles during the inner
 /// GD loop (bounds concurrent loads from sharded node threads).
@@ -156,15 +178,15 @@ impl Permits {
     }
 
     fn acquire(&self) {
-        let mut avail = self.avail.lock().unwrap();
+        let mut avail = unpoison(self.avail.lock());
         while *avail == 0 {
-            avail = self.cv.wait(avail).unwrap();
+            avail = unpoison(self.cv.wait(avail));
         }
         *avail -= 1;
     }
 
     fn release(&self) {
-        *self.avail.lock().unwrap() += 1;
+        *unpoison(self.avail.lock()) += 1;
         self.cv.notify_one();
     }
 }
@@ -254,6 +276,52 @@ impl Drop for SpillFile {
     }
 }
 
+/// Attempts per spill read before the error is surfaced to the caller.
+pub(crate) const SPILL_READ_ATTEMPTS: u32 = 3;
+
+/// Read `out.len()` f32s from `offset`, retrying transient failures with
+/// a short exponential backoff (1 ms, 2 ms). Shared by the tile cache
+/// and [`super::DiskCachedGram`]. An attached [`FaultSession`] can
+/// inject read failures deterministically; the fault counters record
+/// every detected failure, retry, and recovery.
+pub(crate) fn spill_read_with_retry(
+    spill: &mut SpillFile,
+    offset: u64,
+    out: &mut [f32],
+    faults: Option<&FaultSession>,
+) -> std::io::Result<()> {
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..SPILL_READ_ATTEMPTS {
+        if attempt > 0 {
+            std::thread::sleep(Duration::from_millis(1u64 << (attempt - 1)));
+            if let Some(f) = faults {
+                f.note_spill_retry();
+            }
+        }
+        let result = match faults.and_then(|f| f.spill_read_fault()) {
+            Some(injected) => Err(injected),
+            None => spill.read(offset, out),
+        };
+        match result {
+            Ok(()) => {
+                if attempt > 0 {
+                    if let Some(f) = faults {
+                        f.note_recovered();
+                    }
+                }
+                return Ok(());
+            }
+            Err(e) => {
+                if let Some(f) = faults {
+                    f.note_detected();
+                }
+                last = Some(e);
+            }
+        }
+    }
+    Err(last.expect("at least one attempt ran"))
+}
+
 /// Where one produced tile currently lives.
 enum TileSlot {
     /// Not yet produced (only during panel assembly).
@@ -276,10 +344,17 @@ pub struct TiledPanel {
     reads: Permits,
     pin_budget: usize,
     pinned_bytes: usize,
+    faults: Option<Arc<FaultSession>>,
 }
 
 impl TiledPanel {
-    fn new(plan: TilePlan, meter: Arc<ResidentMeter>, budget: usize, workers: usize) -> TiledPanel {
+    fn new(
+        plan: TilePlan,
+        meter: Arc<ResidentMeter>,
+        budget: usize,
+        workers: usize,
+        faults: Option<Arc<FaultSession>>,
+    ) -> TiledPanel {
         let t = plan.tile_bytes();
         // When the whole panel plus producer lookahead fits, pin
         // everything: no spills means no read buffers to reserve.
@@ -297,6 +372,7 @@ impl TiledPanel {
             reads: Permits::new(READ_PERMITS),
             pin_budget,
             pinned_bytes: 0,
+            faults,
         }
     }
 
@@ -327,47 +403,55 @@ impl TiledPanel {
     }
 
     /// Place a produced tile: pin while the budget allows, spill beyond.
-    /// Returns true when the tile was pinned.
-    fn place(&mut self, t: usize, mat: Mat) -> bool {
+    /// Returns true when the tile was pinned; errs when the spill tier
+    /// cannot be created or written.
+    fn place(&mut self, t: usize, mat: Mat) -> Result<bool> {
         let bytes = mat_bytes(&mat);
         if self.pinned_bytes + bytes <= self.pin_budget {
             self.pinned_bytes += bytes;
             self.slots[t] = TileSlot::Resident(mat);
-            return true;
+            return Ok(true);
         }
         let offset = {
-            let mut guard = self.spill.lock().unwrap();
-            let spill = guard
-                .get_or_insert_with(|| SpillFile::temp("tile").expect("create tile spill file"));
-            spill.append(mat.data()).expect("tile spill write")
+            let mut guard = unpoison(self.spill.lock());
+            let spill = match guard.as_mut() {
+                Some(s) => s,
+                None => {
+                    *guard = Some(SpillFile::temp("tile")?);
+                    guard.as_mut().expect("just inserted")
+                }
+            };
+            spill.append(mat.data())?
         };
         self.slots[t] = TileSlot::Spilled { offset };
         drop(mat);
         self.meter.sub(bytes);
-        false
+        Ok(false)
     }
 
     /// Fetch tile `t`: a borrow when pinned, a metered read-back buffer
-    /// when spilled.
-    pub fn tile(&self, t: usize) -> TileRef<'_> {
+    /// when spilled. Spill reads are retried with backoff; a read that
+    /// keeps failing surfaces as a structured error, not a panic.
+    pub fn tile(&self, t: usize) -> Result<TileRef<'_>> {
         match &self.slots[t] {
-            TileSlot::Resident(m) => TileRef::Mem(m),
+            TileSlot::Resident(m) => Ok(TileRef::Mem(m)),
             TileSlot::Spilled { offset } => {
                 self.reads.acquire();
                 let (lo, hi) = self.plan.tile_range(t);
                 let mut mat = Mat::zeros(hi - lo, self.plan.cols);
-                {
-                    let mut guard = self.spill.lock().unwrap();
-                    guard
-                        .as_mut()
-                        .expect("spilled tile without spill file")
-                        .read(*offset, mat.data_mut())
-                        .expect("tile spill read");
+                let read = {
+                    let mut guard = unpoison(self.spill.lock());
+                    let spill = guard.as_mut().expect("spilled tile without spill file");
+                    spill_read_with_retry(spill, *offset, mat.data_mut(), self.faults.as_deref())
+                };
+                if let Err(e) = read {
+                    self.reads.release();
+                    return Err(Error::Runtime(format!("spilled tile {t} unreadable: {e}")));
                 }
                 self.meter.add(mat_bytes(&mat));
-                TileRef::Loaded(LoadedTile { mat, panel: self })
+                Ok(TileRef::Loaded(LoadedTile { mat, panel: self }))
             }
-            TileSlot::Pending => panic!("tile {t} was never produced"),
+            TileSlot::Pending => Err(Error::Runtime(format!("tile {t} was never produced"))),
         }
     }
 }
@@ -490,12 +574,12 @@ impl<'a> GramView<'a> {
         }
     }
 
-    pub fn tile(&self, t: usize) -> TileRef<'a> {
+    pub fn tile(&self, t: usize) -> Result<TileRef<'a>> {
         // match by value (the view is Copy) so the 'a references move out
         match *self {
             GramView::Whole(m) => {
                 assert_eq!(t, 0, "whole panel has one tile");
-                TileRef::Mem(m)
+                Ok(TileRef::Mem(m))
             }
             GramView::Tiled(p) => p.tile(t),
         }
@@ -522,10 +606,19 @@ impl<'a> PanelSpec<'a> {
 /// behavior); `workers = 0` produces synchronously in the consumer
 /// thread (inline), `workers >= 1` runs the producer pool with
 /// per-worker lookahead 1 over a bounded ring.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct PipelineConfig {
     pub budget: Option<usize>,
     pub workers: usize,
+    /// Fault-injection hooks threaded into spill reads (`None` = clean).
+    pub faults: Option<Arc<FaultSession>>,
+}
+
+impl PipelineConfig {
+    /// Fault-free pipeline configuration.
+    pub fn new(budget: Option<usize>, workers: usize) -> PipelineConfig {
+        PipelineConfig { budget, workers, faults: None }
+    }
 }
 
 /// Production/residency accounting for one pipeline run.
@@ -563,11 +656,13 @@ impl PipelineStats {
     }
 }
 
-/// One produced tile in flight between a worker and the consumer.
+/// One produced tile in flight between a worker and the consumer; a
+/// worker that panicked sends its panic message instead of a tile, so
+/// the consumer gets a structured error rather than a hung ring.
 struct Produced {
     batch: usize,
     tile: usize,
-    mat: Mat,
+    mat: std::result::Result<Mat, String>,
     busy: f64,
     permit: Option<PermitGuard>,
 }
@@ -581,6 +676,7 @@ pub struct PanelFeed<'a> {
     plans: &'a [TilePlan],
     budget: Option<usize>,
     workers: usize,
+    faults: Option<Arc<FaultSession>>,
     meter: Arc<ResidentMeter>,
     rx: Option<mpsc::Receiver<Produced>>,
     stash: HashMap<(usize, usize), (Mat, Option<PermitGuard>)>,
@@ -593,8 +689,10 @@ pub struct PanelFeed<'a> {
 }
 
 impl PanelFeed<'_> {
-    /// Assemble the next panel in plan order.
-    pub fn next_panel(&mut self) -> (GramPanel, Mat) {
+    /// Assemble the next panel in plan order. Errs when a producer
+    /// failed or the spill tier gave out; the pipeline never hangs on a
+    /// dead worker.
+    pub fn next_panel(&mut self) -> Result<(GramPanel, Mat)> {
         let i = self.next_batch;
         self.next_batch += 1;
         assert!(i < self.specs.len(), "pipeline over-consumed: no panel {i}");
@@ -606,11 +704,11 @@ impl PanelFeed<'_> {
             // whole-panel mode: one tile per panel, bit-identical to the
             // historical fetch_blocks path (and with workers = 1 to the
             // Fig.3 offload producer).
-            let (mat, permit) = self.obtain(i, 0);
+            let (mat, permit) = self.obtain(i, 0)?;
             let k_ll = mat.gather(spec.lm_pos);
             drop(permit);
             let panel = GramPanel::whole(mat, Arc::clone(&self.meter));
-            return (panel, k_ll);
+            return Ok((panel, k_ll));
         }
         let budget = self.budget.expect("checked above");
         let l = spec.lm_pos.len();
@@ -620,9 +718,10 @@ impl PanelFeed<'_> {
             Arc::clone(&self.meter),
             budget,
             self.workers,
+            self.faults.clone(),
         );
         for t in 0..panel.n_tiles() {
-            let (mat, permit) = self.obtain(i, t);
+            let (mat, permit) = self.obtain(i, t)?;
             let (lo, hi) = panel.tile_range(t);
             // gather the K_ll rows that live in this tile: row j of K_ll
             // is row lm_pos[j] of K_nl, exactly as gather() would copy it
@@ -631,18 +730,18 @@ impl PanelFeed<'_> {
                     k_ll.row_mut(j).copy_from_slice(mat.row(p - lo));
                 }
             }
-            if panel.place(t, mat) {
+            if panel.place(t, mat)? {
                 self.pinned += 1;
             } else {
                 self.spilled += 1;
             }
             drop(permit);
         }
-        (GramPanel::tiled(panel, Arc::clone(&self.meter)), k_ll)
+        Ok((GramPanel::tiled(panel, Arc::clone(&self.meter)), k_ll))
     }
 
     /// Get tile `(b, t)` from the producers (or produce it inline).
-    fn obtain(&mut self, b: usize, t: usize) -> (Mat, Option<PermitGuard>) {
+    fn obtain(&mut self, b: usize, t: usize) -> Result<(Mat, Option<PermitGuard>)> {
         self.tiles += 1;
         if self.rx.is_none() {
             // synchronous production in the consumer thread
@@ -653,26 +752,40 @@ impl PanelFeed<'_> {
             let mat = source.block_mat(&spec.rows[lo..hi], &spec.cols);
             self.producer_busy_s += timer.elapsed_s();
             self.meter.add(mat_bytes(&mat));
-            return (mat, None);
+            return Ok((mat, None));
         }
         if let Some(found) = self.stash.remove(&(b, t)) {
-            return found;
+            return Ok(found);
         }
         loop {
             let timer = Timer::start();
-            let item = self
-                .rx
-                .as_ref()
-                .expect("async feed lost its receiver")
-                .recv()
-                .expect("tile producer died");
+            let item = match self.rx.as_ref().expect("async feed lost its receiver").recv() {
+                Ok(item) => item,
+                Err(_) => {
+                    // every worker exited (panic after send failure, or a
+                    // bug): structured error instead of a deadlock
+                    return Err(Error::Runtime(format!(
+                        "tile producers exited before producing panel {b} tile {t}"
+                    )));
+                }
+            };
             self.consumer_wait_s += timer.elapsed_s();
             self.producer_busy_s += item.busy;
-            if item.batch == b && item.tile == t {
-                return (item.mat, item.permit);
+            let Produced { batch, tile, mat, permit, .. } = item;
+            let mat = match mat {
+                Ok(m) => m,
+                Err(msg) => {
+                    drop(permit);
+                    return Err(Error::Runtime(format!(
+                        "tile producer failed on panel {batch} tile {tile}: {msg}"
+                    )));
+                }
+            };
+            if batch == b && tile == t {
+                return Ok((mat, permit));
             }
             // a racing worker finished a later tile first; park it
-            self.stash.insert((item.batch, item.tile), (item.mat, item.permit));
+            self.stash.insert((batch, tile), (mat, permit));
         }
     }
 }
@@ -710,6 +823,7 @@ pub fn run_pipeline<R>(
             plans: &plans,
             budget: cfg.budget,
             workers: 0,
+            faults: cfg.faults.clone(),
             meter: Arc::clone(&meter),
             rx: None,
             stash: HashMap::new(),
@@ -755,16 +869,37 @@ pub fn run_pipeline<R>(
                 let spec = &specs[b];
                 let (lo, hi) = plans_ref[b].tile_range(t);
                 let timer = Timer::start();
-                let mat = source.block_mat(&spec.rows[lo..hi], &spec.cols);
+                // a panicking source must not kill the worker silently:
+                // catch it and ship the message through the ring so the
+                // consumer errors instead of waiting forever
+                let produced =
+                    catch_unwind(AssertUnwindSafe(|| source.block_mat(&spec.rows[lo..hi], &spec.cols)));
                 let busy = timer.elapsed_s();
-                let bytes = mat_bytes(&mat);
-                meter.add(bytes);
-                let item = Produced { batch: b, tile: t, mat, busy, permit: Some(guard) };
-                if tx.send(item).is_err() {
-                    // consumer gone early: the dropped item released its
-                    // permit; roll the meter back and stop
-                    meter.sub(bytes);
-                    break;
+                match produced {
+                    Ok(mat) => {
+                        let bytes = mat_bytes(&mat);
+                        meter.add(bytes);
+                        let item =
+                            Produced { batch: b, tile: t, mat: Ok(mat), busy, permit: Some(guard) };
+                        if tx.send(item).is_err() {
+                            // consumer gone early: the dropped item
+                            // released its permit; roll the meter back
+                            meter.sub(bytes);
+                            break;
+                        }
+                    }
+                    Err(payload) => {
+                        let msg = panic_message(payload);
+                        let item = Produced {
+                            batch: b,
+                            tile: t,
+                            mat: Err(msg),
+                            busy,
+                            permit: Some(guard),
+                        };
+                        let _ = tx.send(item);
+                        break; // this worker stops; peers keep draining
+                    }
                 }
             });
         }
@@ -775,6 +910,7 @@ pub fn run_pipeline<R>(
             plans: &plans,
             budget: cfg.budget,
             workers: cfg.workers,
+            faults: cfg.faults.clone(),
             meter: Arc::clone(&meter),
             rx: Some(rx),
             stash: HashMap::new(),
@@ -791,7 +927,9 @@ pub fn run_pipeline<R>(
         if let Some(rx) = feed.rx.take() {
             while let Ok(item) = rx.try_recv() {
                 feed.producer_busy_s += item.busy;
-                meter.sub(mat_bytes(&item.mat));
+                if let Ok(mat) = &item.mat {
+                    meter.sub(mat_bytes(mat));
+                }
             }
             drop(rx);
         }
@@ -819,7 +957,7 @@ mod tests {
         let mut out = Mat::zeros(view.rows(), view.cols());
         for t in 0..view.n_tiles() {
             let (lo, _hi) = view.tile_range(t);
-            let tile = view.tile(t);
+            let tile = view.tile(t).unwrap();
             let m = tile.mat();
             for r in 0..m.rows() {
                 out.row_mut(lo + r).copy_from_slice(m.row(r));
@@ -896,11 +1034,11 @@ mod tests {
             (Some(budget), 1),
             (Some(budget), 3),
         ] {
-            let cfg = PipelineConfig { budget, workers };
+            let cfg = PipelineConfig::new(budget, workers);
             let (got, stats) = run_pipeline(&g, &specs, &cfg, |feed| {
                 let mut out = Vec::new();
                 for _ in 0..2 {
-                    let (panel, k_ll) = feed.next_panel();
+                    let (panel, k_ll) = feed.next_panel().unwrap();
                     out.push((collect_panel(&panel.view()), k_ll));
                 }
                 out
@@ -939,10 +1077,10 @@ mod tests {
         let specs = vec![PanelSpec::new(&batch, &lm_pos)];
         // just above the minimum: almost everything must spill
         let budget = min_pipeline_budget(40, 1) + 4 * 40;
-        let cfg = PipelineConfig { budget: Some(budget), workers: 1 };
+        let cfg = PipelineConfig::new(Some(budget), 1);
         let want = g.block_mat(&batch, &specs[0].cols);
         let (reads, stats) = run_pipeline(&g, &specs, &cfg, |feed| {
-            let (panel, _k_ll) = feed.next_panel();
+            let (panel, _k_ll) = feed.next_panel().unwrap();
             // re-read the panel several times, like the inner GD loop
             (0..3).map(|_| collect_panel(&panel.view())).collect::<Vec<_>>()
         });
@@ -973,5 +1111,104 @@ mod tests {
         assert!((s.overlap_efficiency() - 0.75).abs() < 1e-12);
         s.consumer_wait_s = 9.0;
         assert_eq!(s.overlap_efficiency(), 0.0);
+    }
+
+    use crate::distributed::fault::FaultPlan;
+    use crate::kernels::GramSource;
+
+    /// Source whose `fail_at`-th block evaluation panics — a stand-in
+    /// for any producer-side crash.
+    struct ExplodingSource {
+        inner: VecGram,
+        calls: AtomicUsize,
+        fail_at: usize,
+    }
+
+    impl GramSource for ExplodingSource {
+        fn n(&self) -> usize {
+            self.inner.n()
+        }
+
+        fn block(&self, rows: &[usize], cols: &[usize], out: &mut [f32]) {
+            if self.calls.fetch_add(1, Ordering::SeqCst) == self.fail_at {
+                panic!("injected producer failure");
+            }
+            self.inner.block(rows, cols, out);
+        }
+    }
+
+    #[test]
+    fn producer_panic_propagates_structured_error() {
+        let src = ExplodingSource { inner: source(60, 4), calls: AtomicUsize::new(0), fail_at: 1 };
+        let batch: Vec<usize> = (0..60).collect();
+        let lm_pos: Vec<usize> = (0..10).collect();
+        let specs = vec![PanelSpec::new(&batch, &lm_pos)];
+        let budget = min_pipeline_budget(10, 2) * 2;
+        let cfg = PipelineConfig::new(Some(budget), 2);
+        let (res, _stats) =
+            run_pipeline(&src, &specs, &cfg, |feed| feed.next_panel().map(|_| ()));
+        let err = res.expect_err("producer panic must surface as an error");
+        let msg = err.to_string();
+        assert!(msg.contains("injected producer failure"), "{msg}");
+        assert!(msg.contains("tile producer failed"), "{msg}");
+    }
+
+    #[test]
+    fn persistent_spill_fault_propagates_error() {
+        let g = source(80, 5);
+        let batch: Vec<usize> = (0..80).collect();
+        let lm_pos: Vec<usize> = (0..40).collect();
+        let specs = vec![PanelSpec::new(&batch, &lm_pos)];
+        // just above the minimum so most tiles spill
+        let budget = min_pipeline_budget(40, 1) + 4 * 40;
+        let faults = Arc::new(FaultSession::new(FaultPlan::parse("spill:1000").unwrap()));
+        let cfg = PipelineConfig {
+            budget: Some(budget),
+            workers: 1,
+            faults: Some(Arc::clone(&faults)),
+        };
+        let (res, stats) = run_pipeline(&g, &specs, &cfg, |feed| -> Result<()> {
+            let (panel, _k_ll) = feed.next_panel()?;
+            let view = panel.view();
+            for t in 0..view.n_tiles() {
+                let _tile = view.tile(t)?;
+            }
+            Ok(())
+        });
+        assert!(stats.spilled_tiles > 0, "nothing spilled: {stats:?}");
+        let err = res.expect_err("persistent spill fault must surface");
+        assert!(err.to_string().contains("unreadable"), "{err}");
+        let report = faults.report();
+        assert_eq!(report.detected, SPILL_READ_ATTEMPTS as usize, "{report:?}");
+        assert_eq!(report.recovered, 0, "{report:?}");
+    }
+
+    #[test]
+    fn transient_spill_fault_retries_bit_identically() {
+        let g = source(80, 5);
+        let batch: Vec<usize> = (0..80).collect();
+        let lm_pos: Vec<usize> = (0..40).collect();
+        let specs = vec![PanelSpec::new(&batch, &lm_pos)];
+        let budget = min_pipeline_budget(40, 1) + 4 * 40;
+        let want = g.block_mat(&batch, &specs[0].cols);
+        let faults = Arc::new(FaultSession::new(FaultPlan::parse("spill:1").unwrap()));
+        let cfg = PipelineConfig {
+            budget: Some(budget),
+            workers: 1,
+            faults: Some(Arc::clone(&faults)),
+        };
+        let (reads, stats) = run_pipeline(&g, &specs, &cfg, |feed| {
+            let (panel, _k_ll) = feed.next_panel().unwrap();
+            (0..2).map(|_| collect_panel(&panel.view())).collect::<Vec<_>>()
+        });
+        assert!(stats.spilled_tiles > 0, "nothing spilled: {stats:?}");
+        for r in &reads {
+            assert_eq!(r.data(), want.data(), "retried run diverged from fault-free result");
+        }
+        let report = faults.report();
+        assert_eq!(report.injected, 1, "{report:?}");
+        assert_eq!(report.detected, 1, "{report:?}");
+        assert!(report.spill_retries >= 1, "{report:?}");
+        assert!(report.recovered >= 1, "{report:?}");
     }
 }

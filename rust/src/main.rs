@@ -103,6 +103,9 @@ fn parse_run_experiment(rest: &[String]) -> Result<(Experiment, bool)> {
         .opt("restarts", "1", "k-means++ restarts, keep min cost")
         .opt("sigma-factor", "4.0", "sigma = factor * d_max (paper: 4)")
         .opt("memory-budget-mb", "0", "resident K_nl MiB for the tile pipeline (0 = whole panels)")
+        .opt("checkpoint-dir", "", "write per-epoch checkpoints here")
+        .opt("fault", "", "fault-injection spec (kill:r@k; delay:r@k:ms; spill:n; interrupt:e; deadline:ms)")
+        .flag("resume", "resume from checkpoint files (needs --checkpoint-dir)")
         .flag("track-cost", "record Fig.4 cost observables")
         .flag("offload", "Fig.3 producer-consumer pipeline")
         .flag("json", "emit machine-readable report")
@@ -127,6 +130,15 @@ fn parse_run_experiment(rest: &[String]) -> Result<(Experiment, bool)> {
     if budget_mb > 0 {
         exp = exp.memory_budget(budget_mb << 20);
     }
+    if !p.str("checkpoint-dir").is_empty() {
+        exp = exp.checkpoint_dir(p.str("checkpoint-dir"));
+    }
+    if !p.str("fault").is_empty() {
+        exp = exp.fault(p.str("fault"));
+    }
+    if p.get_bool("resume") {
+        exp = exp.resume(true);
+    }
     Ok((exp, p.get_bool("json")))
 }
 
@@ -142,6 +154,9 @@ fn apply_run_flags(mut exp: Experiment, rest: &[String]) -> Result<(Experiment, 
         .opt("seed", "", "override seed")
         .opt("restarts", "", "override restarts")
         .opt("memory-budget-mb", "", "override tile-pipeline budget (MiB)")
+        .opt("checkpoint-dir", "", "override checkpoint directory")
+        .opt("fault", "", "override fault-injection spec")
+        .flag("resume", "resume from checkpoint files")
         .flag("offload", "enable offload")
         .flag("json", "emit machine-readable report")
         .parse(rest)?;
@@ -178,6 +193,15 @@ fn apply_run_flags(mut exp: Experiment, rest: &[String]) -> Result<(Experiment, 
         } else {
             exp.no_memory_budget()
         };
+    }
+    if !p.str("checkpoint-dir").is_empty() {
+        exp = exp.checkpoint_dir(p.str("checkpoint-dir"));
+    }
+    if !p.str("fault").is_empty() {
+        exp = exp.fault(p.str("fault"));
+    }
+    if p.get_bool("resume") {
+        exp = exp.resume(true);
     }
     if p.get_bool("offload") {
         exp = exp.offload(true);
@@ -220,6 +244,18 @@ fn cmd_run(rest: &[String]) -> Result<()> {
             "offload overlap : {:.0}% of block production hidden",
             ov.overlap_efficiency() * 100.0
         );
+    }
+    if !report.faults.is_clean() {
+        let f = &report.faults;
+        println!(
+            "fault tolerance : {} injected, {} detected, {} recovered ({} re-shards, \
+             {} spill retries, {:.3}s recovering)",
+            f.injected, f.detected, f.recovered, f.reshard_events, f.spill_retries,
+            f.recovery_seconds
+        );
+        if let Some(e) = f.resumed_from_epoch {
+            println!("  resumed from epoch {e} ({} checkpoints written)", f.checkpoints_written);
+        }
     }
     if report.pipeline.budget_bytes.is_some() {
         let p = &report.pipeline;

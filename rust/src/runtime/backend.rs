@@ -82,7 +82,7 @@ impl PjrtBackend {
         // fixed N_TILE rows; per-row results are independent of the
         // chunk boundaries, so tiled and whole panels agree
         for t in 0..k_nl.n_tiles() {
-            let tile = k_nl.tile(t);
+            let tile = k_nl.tile(t)?;
             let m = tile.mat();
             for lo in (0..m.rows()).step_by(N_TILE) {
                 let hi = (lo + N_TILE).min(m.rows());
@@ -118,13 +118,12 @@ impl StepBackend for PjrtBackend {
         k_ll: &Mat,
         lm_labels: &[usize],
         c: usize,
-    ) -> (Vec<usize>, ClusterStats) {
-        match self.iterate_pjrt(k_nl, k_ll, lm_labels, c) {
-            Ok(Some(result)) => result,
+    ) -> Result<(Vec<usize>, ClusterStats)> {
+        match self.iterate_pjrt(k_nl, k_ll, lm_labels, c)? {
+            Some(result) => Ok(result),
             // graceful fallback: shapes outside the lowered variants run
             // natively (same math, tested for parity)
-            Ok(None) => assign::inner_iteration_view(k_nl, k_ll, lm_labels, c),
-            Err(e) => panic!("PJRT backend failed: {e}"),
+            None => assign::inner_iteration_view(k_nl, k_ll, lm_labels, c),
         }
     }
 
@@ -161,7 +160,7 @@ mod tests {
             return;
         };
         let backend = PjrtBackend::new(rt);
-        let (got, stats) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 7);
+        let (got, stats) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 7).unwrap();
         assert_eq!(got, want);
         for j in 0..7 {
             assert!(
@@ -184,7 +183,7 @@ mod tests {
             return;
         };
         let backend = PjrtBackend::new(rt);
-        let (got, _) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 10);
+        let (got, _) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 10).unwrap();
         let diff = got.iter().zip(&want).filter(|(a, b)| a != b).count();
         assert_eq!(diff, 0, "{diff} label mismatches");
     }
@@ -198,7 +197,7 @@ mod tests {
             return;
         };
         let backend = PjrtBackend::new(rt);
-        let (labels, stats) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 8);
+        let (labels, stats) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 8).unwrap();
         assert!(labels.iter().all(|&u| u < 3));
         assert_eq!(&stats.counts[3..], &[0; 5]);
     }
@@ -212,7 +211,7 @@ mod tests {
             return;
         };
         let backend = PjrtBackend::new(rt);
-        let (got, _) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 4);
+        let (got, _) = backend.iterate_mat(&k_nl, &k_ll, &lm_labels, 4).unwrap();
         assert_eq!(got, want);
     }
 }

@@ -13,6 +13,21 @@ pub enum Error {
     Runtime(String),
     /// I/O failure.
     Io(std::io::Error),
+    /// A distributed node failed (panic, deadline, or dropped collective).
+    Node {
+        /// Original rank of the failed node.
+        rank: usize,
+        /// Collective sequence number at which the failure surfaced.
+        seq: u64,
+        /// Human-readable cause.
+        msg: String,
+    },
+    /// A run was interrupted (e.g. injected `interrupt:e` fault) after
+    /// writing an epoch checkpoint; re-run with `resume` to continue.
+    Interrupted {
+        /// Epoch (batch index) at which the run stopped.
+        epoch: usize,
+    },
 }
 
 impl fmt::Display for Error {
@@ -22,6 +37,12 @@ impl fmt::Display for Error {
             Error::Shape(msg) => write!(f, "shape error: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Io(e) => write!(f, "{e}"),
+            Error::Node { rank, seq, msg } => {
+                write!(f, "node error: rank {rank} failed at collective {seq}: {msg}")
+            }
+            Error::Interrupted { epoch } => {
+                write!(f, "run interrupted at epoch {epoch} (resume from checkpoint to continue)")
+            }
         }
     }
 }

@@ -10,9 +10,9 @@ use dkkm::util::rng::Rng;
 
 fn run_pair(g: &VecGram, c: usize, b: usize, p: usize) -> (Vec<usize>, Vec<usize>) {
     let cfg = MiniBatchConfig::new(c, b);
-    let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(g);
+    let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(g).unwrap();
     let backend = ShardedBackend::new(p);
-    let sharded = MiniBatchKernelKMeans::new(cfg, &backend).run(g);
+    let sharded = MiniBatchKernelKMeans::new(cfg, &backend).run(g).unwrap();
     (native.labels, sharded.labels)
 }
 
@@ -43,9 +43,9 @@ fn sharded_identical_on_rcv1_with_landmarks() {
     let g = VecGram::new(data.x, KernelFn::rbf_from_sigma(4.0), 1);
     let mut cfg = MiniBatchConfig::new(8, 3);
     cfg.s = 0.5; // landmark sparsification active
-    let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+    let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
     let backend = ShardedBackend::new(4);
-    let sharded = MiniBatchKernelKMeans::new(cfg, &backend).run(&g);
+    let sharded = MiniBatchKernelKMeans::new(cfg, &backend).run(&g).unwrap();
     assert_eq!(native.labels, sharded.labels);
     assert_eq!(native.medoids, sharded.medoids);
     assert_eq!(native.counts, sharded.counts);

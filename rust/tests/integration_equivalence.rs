@@ -18,7 +18,7 @@ fn b1_s1_minibatch_equals_full_batch_fixed_point() {
 
     // mini-batch driver, B = 1 (single batch = the whole dataset)
     let cfg = MiniBatchConfig::new(4, 1);
-    let mb = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g);
+    let mb = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
 
     // full-batch driver from the *same* initialization: k-means++ with
     // the driver's seed stream (the plan phase consumes sample_indices
@@ -44,14 +44,14 @@ fn s_one_landmarks_are_identity() {
     let g = VecGram::new(data.x.clone(), KernelFn::rbf_from_sigma(30.0), 1);
     let mut c1 = MiniBatchConfig::new(10, 2);
     c1.s = 1.0;
-    let r1 = MiniBatchKernelKMeans::new(c1, &NativeBackend).run(&g);
+    let r1 = MiniBatchKernelKMeans::new(c1, &NativeBackend).run(&g).unwrap();
     // different seed => different landmark order, same landmark *set*
     // (the k-means++ init differs though, so compare via quality not
     // labels)
     let mut c2 = MiniBatchConfig::new(10, 2);
     c2.s = 1.0;
     c2.seed = 999;
-    let r2 = MiniBatchKernelKMeans::new(c2, &NativeBackend).run(&g);
+    let r2 = MiniBatchKernelKMeans::new(c2, &NativeBackend).run(&g).unwrap();
     let a1 = accuracy(&r1.labels, &data.y);
     let a2 = accuracy(&r2.labels, &data.y);
     assert!((a1 - a2).abs() < 0.25, "s=1 runs wildly inconsistent: {a1} vs {a2}");
@@ -68,7 +68,7 @@ fn landmark_fraction_degrades_gracefully() {
         let mut cfg = MiniBatchConfig::new(10, 2);
         cfg.s = s;
         cfg.seed = 7;
-        let r = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
+        let r = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g).unwrap();
         nmi(&r.labels, &data.y)
     };
     let full = run(1.0);
@@ -93,7 +93,7 @@ fn stride_beats_block_on_sorted_stream() {
         let mut cfg = MiniBatchConfig::new(10, 8);
         cfg.sampling = sampling;
         cfg.seed = 11;
-        let r = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
+        let r = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g).unwrap();
         accuracy(&r.labels, &data.y)
     };
     let stride = run(Sampling::Stride);
@@ -115,7 +115,7 @@ fn counts_and_labels_consistent_property() {
         let mut cfg = MiniBatchConfig::new(4, b);
         cfg.s = s;
         cfg.seed = seed;
-        let r = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g);
+        let r = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&g).unwrap();
         assert_eq!(r.counts.iter().sum::<usize>(), 240, "b={b} s={s}");
         assert!(r.labels.iter().all(|&u| u < 4));
         assert_eq!(r.medoids.len(), 4);

@@ -1,0 +1,162 @@
+//! Fault-tolerance equivalence suite: injected failures change the
+//! schedule, never the math. For every fault class — node death at a
+//! collective, a dropped straggler (deadline timeout), transient
+//! spill-read failures — the recovered run must be bit-identical to the
+//! fault-free serial reference across node counts, and the accounting
+//! must record what actually happened (honestly zero on clean runs).
+use std::sync::Arc;
+
+use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
+use dkkm::coordinator::{DatasetSpec, Experiment};
+use dkkm::distributed::{FaultPlan, FaultSession, ShardedBackend};
+use dkkm::kernels::{KernelFn, VecGram};
+use dkkm::util::error::Error;
+use dkkm::util::rng::Rng;
+
+fn toy_source(seed: u64, per_cluster: usize) -> VecGram {
+    let mut rng = Rng::new(seed);
+    let d = dkkm::data::toy2d(&mut rng, per_cluster);
+    VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2)
+}
+
+fn session(spec: &str) -> Arc<FaultSession> {
+    Arc::new(FaultSession::new(FaultPlan::parse(spec).unwrap()))
+}
+
+#[test]
+fn node_death_recovers_bit_identically_across_p() {
+    let g = toy_source(0, 60); // n = 240
+    let cfg = MiniBatchConfig::new(4, 2);
+    let reference = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
+    for p in [2usize, 3, 4, 8] {
+        let faults = session("kill:1@0");
+        let backend = ShardedBackend::new(p).with_faults(faults.clone());
+        let run = MiniBatchKernelKMeans::new(cfg.clone(), &backend).run(&g).unwrap();
+        assert_eq!(reference.labels, run.labels, "labels diverge at p={p}");
+        assert_eq!(reference.medoids, run.medoids, "medoids diverge at p={p}");
+        assert_eq!(reference.counts, run.counts, "counts diverge at p={p}");
+        let rep = faults.report();
+        assert_eq!(rep.injected, 1, "p={p}: {rep:?}");
+        assert!(rep.detected >= 1, "p={p}: {rep:?}");
+        assert!(rep.recovered >= 1, "p={p}: {rep:?}");
+        assert_eq!(rep.reshard_events, 1, "p={p}: {rep:?}");
+        assert!(rep.recovery_seconds >= 0.0, "p={p}: {rep:?}");
+    }
+}
+
+#[test]
+fn deadline_timeout_drops_the_straggler_bit_identically() {
+    let g = toy_source(1, 60);
+    let cfg = MiniBatchConfig::new(4, 2);
+    let reference = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
+    for p in [2usize, 3, 4, 8] {
+        // rank 1 sleeps through its first collective far past the
+        // deadline: peers must drop it and re-shard, not hang
+        let faults = session("delay:1@0:200; deadline:40");
+        let backend = ShardedBackend::new(p).with_faults(faults.clone());
+        let run = MiniBatchKernelKMeans::new(cfg.clone(), &backend).run(&g).unwrap();
+        assert_eq!(reference.labels, run.labels, "labels diverge at p={p}");
+        assert_eq!(reference.medoids, run.medoids, "medoids diverge at p={p}");
+        let rep = faults.report();
+        assert_eq!(rep.injected, 1, "p={p}: {rep:?}");
+        assert!(rep.recovered >= 1, "p={p}: {rep:?}");
+    }
+}
+
+#[test]
+fn transient_spill_read_failures_retry_bit_identically() {
+    let g = toy_source(2, 80); // n = 320, B = 4 -> 80x80 panels
+    let mut cfg = MiniBatchConfig::new(4, 4);
+    cfg.memory_budget = Some(8 * 1024); // forces tiles + spills per panel
+    let reference = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
+    assert!(reference.pipeline.spilled_tiles > 0, "{:?}", reference.pipeline);
+    for p in [2usize, 3, 4, 8] {
+        let faults = session("spill:2");
+        let mut fcfg = cfg.clone();
+        fcfg.faults = Some(faults.clone());
+        let backend = ShardedBackend::new(p).with_faults(faults.clone());
+        let run = MiniBatchKernelKMeans::new(fcfg, &backend).run(&g).unwrap();
+        assert_eq!(reference.labels, run.labels, "labels diverge at p={p}");
+        assert_eq!(reference.medoids, run.medoids, "medoids diverge at p={p}");
+        let rep = faults.report();
+        assert_eq!(rep.injected, 2, "p={p}: {rep:?}");
+        assert!(rep.spill_retries >= 2, "p={p}: {rep:?}");
+    }
+}
+
+fn toy_exp() -> Experiment {
+    let spec = DatasetSpec::Toy2d { per_cluster: 100 };
+    Experiment::on(spec).clusters(4).batches(2).sigma_factor(0.1)
+}
+
+#[test]
+fn experiment_level_kill_fault_matches_native_and_reports() {
+    let native = toy_exp().build().unwrap().fit().unwrap();
+    assert!(native.faults.is_clean(), "clean run reported faults: {:?}", native.faults);
+    let report = toy_exp()
+        .backend("sharded:4")
+        .fault("kill:2@0")
+        .build()
+        .unwrap()
+        .fit()
+        .unwrap();
+    assert_eq!(native.result.labels, report.result.labels);
+    assert_eq!(native.result.medoids, report.result.medoids);
+    assert_eq!(report.faults.injected, 1, "{:?}", report.faults);
+    assert!(report.faults.recovered >= 1, "{:?}", report.faults);
+    assert_eq!(report.faults.reshard_events, 1, "{:?}", report.faults);
+    // the machine-readable report carries the same accounting
+    let j = report.to_json();
+    let f = j.get("faults").expect("faults block");
+    assert_eq!(f.get("injected").and_then(|v| v.as_usize()), Some(1));
+    assert_eq!(f.get("reshard_events").and_then(|v| v.as_usize()), Some(1));
+}
+
+#[test]
+fn interrupted_fit_resumes_to_identical_labels() {
+    let dir = std::env::temp_dir().join(format!("dkkm_faults_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let exp = || toy_exp().batches(4);
+    let clean = exp().build().unwrap().fit().unwrap();
+
+    // interrupt after 2 of 4 epochs: fit() fails structurally, leaving
+    // a checkpoint behind
+    let err = exp()
+        .checkpoint_dir(&dir)
+        .fault("interrupt:2")
+        .build()
+        .unwrap()
+        .fit()
+        .unwrap_err();
+    assert!(matches!(err, Error::Interrupted { epoch: 2 }), "{err:?}");
+    assert!(std::fs::read_dir(&dir).unwrap().count() >= 1, "no checkpoint written");
+
+    // the resumed fit finishes epochs 2..4 and lands on the same answer
+    let resumed = exp()
+        .checkpoint_dir(&dir)
+        .resume(true)
+        .build()
+        .unwrap()
+        .fit()
+        .unwrap();
+    assert_eq!(clean.result.labels, resumed.result.labels);
+    assert_eq!(clean.result.medoids, resumed.result.medoids);
+    assert_eq!(clean.result.counts, resumed.result.counts);
+    assert_eq!(resumed.faults.resumed_from_epoch, Some(2), "{:?}", resumed.faults);
+    assert!(resumed.faults.checkpoints_written >= 1, "{:?}", resumed.faults);
+    // a clean finish removes its checkpoint file
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 0, "stale checkpoint left behind");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn clean_runs_report_zero_faults_on_every_engine() {
+    for backend in ["native", "sharded:3"] {
+        let report = toy_exp().backend(backend).build().unwrap().fit().unwrap();
+        assert!(
+            report.faults.is_clean(),
+            "clean {backend} run reported faults: {:?}",
+            report.faults
+        );
+    }
+}

@@ -72,7 +72,7 @@ fn inner_iteration_matches_native_across_shapes() {
         let labels: Vec<usize> = (0..l).map(|_| rng.below(c)).collect();
         let (want, want_stats) = assign::inner_iteration(&k_nl, &k_ll, &labels, c);
         let backend = PjrtBackend::new(runtime_or_skip!());
-        let (got, stats) = backend.iterate_mat(&k_nl, &k_ll, &labels, c);
+        let (got, stats) = backend.iterate_mat(&k_nl, &k_ll, &labels, c).unwrap();
         assert_eq!(got, want, "labels diverge at n={n} l={l} c={c}");
         for j in 0..c {
             assert!(
@@ -96,9 +96,9 @@ fn full_clustering_run_parity() {
     let pjrt_g = PjrtGram::new(rt.clone(), data.x.clone(), gamma).unwrap();
 
     let cfg = MiniBatchConfig::new(10, 2);
-    let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&native_g);
+    let native = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&native_g).unwrap();
     let backend = PjrtBackend::new(rt);
-    let pjrt = MiniBatchKernelKMeans::new(cfg, &backend).run(&pjrt_g);
+    let pjrt = MiniBatchKernelKMeans::new(cfg, &backend).run(&pjrt_g).unwrap();
 
     let agree = native
         .labels
@@ -132,7 +132,7 @@ fn hypothesis_style_shape_sweep() {
         let k_ll = g.block_mat(&lms, &lms);
         let labels: Vec<usize> = (0..l).map(|_| rng.below(c)).collect();
         let (want, _) = assign::inner_iteration(&k_nl, &k_ll, &labels, c);
-        let (got, _) = backend.iterate_mat(&k_nl, &k_ll, &labels, c);
+        let (got, _) = backend.iterate_mat(&k_nl, &k_ll, &labels, c).unwrap();
         assert_eq!(got, want, "case {case}: n={n} l={l} c={c}");
     }
 }

@@ -126,8 +126,8 @@ fn clustering_labels_match_across_storages() {
     let dense_g = VecGram::new(csr.to_dense(), kernel, 2);
     let sparse_g = VecGram::from_csr(csr, kernel, 2);
     let cfg = MiniBatchConfig::new(4, 2);
-    let dense_run = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&dense_g);
-    let sparse_run = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&sparse_g);
+    let dense_run = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&dense_g).unwrap();
+    let sparse_run = MiniBatchKernelKMeans::new(cfg, &NativeBackend).run(&sparse_g).unwrap();
     assert_eq!(dense_run.labels, sparse_run.labels, "storage changed the clustering");
     assert_eq!(dense_run.medoids, sparse_run.medoids);
     // and both recover the planted blobs
@@ -139,18 +139,19 @@ fn csr_source_composes_with_tiles_and_shards_bit_identically() {
     let (csr, _) = sparse_blobs(2, 40, 4); // n = 160, B = 2 -> 80-row panels
     let g = VecGram::from_csr(csr, KernelFn::Rbf { gamma: 1.0 }, 2);
     let base = MiniBatchConfig::new(4, 2);
-    let whole = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g);
+    let whole = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g).unwrap();
     // budgeted tiles over the CSR source: pure scheduling, bit-identical
     let mut tiled_cfg = base.clone();
     tiled_cfg.memory_budget = Some(8 * 1024);
-    let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g);
+    let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g).unwrap();
     assert_eq!(whole.labels, tiled.labels, "tiled CSR diverged");
     assert_eq!(whole.medoids, tiled.medoids);
     assert!(tiled.pipeline.tiles > 2, "{:?}", tiled.pipeline);
     assert!(tiled.pipeline.peak_resident_bytes <= 8 * 1024, "{:?}", tiled.pipeline);
     // sharded nodes over the CSR source match the native schedule
     for p in [2usize, 5] {
-        let sharded = MiniBatchKernelKMeans::new(base.clone(), &ShardedBackend::new(p)).run(&g);
+        let sharded =
+            MiniBatchKernelKMeans::new(base.clone(), &ShardedBackend::new(p)).run(&g).unwrap();
         assert_eq!(whole.labels, sharded.labels, "sharded:{p} CSR diverged");
         assert_eq!(whole.medoids, sharded.medoids);
     }

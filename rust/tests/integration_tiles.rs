@@ -28,11 +28,11 @@ fn tiled_equals_whole_native_both_samplings() {
     for sampling in [Sampling::Stride, Sampling::Block] {
         let mut base = MiniBatchConfig::new(4, 4);
         base.sampling = sampling;
-        let whole = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g);
+        let whole = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g).unwrap();
         let budget = 8 * 1024; // forces several tiles + spills per panel
         let mut tiled_cfg = base;
         tiled_cfg.memory_budget = Some(budget);
-        let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g);
+        let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g).unwrap();
         assert_same(&whole, &tiled, &format!("native, {sampling}"));
         assert!(tiled.pipeline.tiles > 4, "{:?}", tiled.pipeline);
         assert!(tiled.pipeline.spilled_tiles > 0, "{:?}", tiled.pipeline);
@@ -50,14 +50,14 @@ fn tiled_equals_whole_sharded() {
     for p in [1usize, 3, 7] {
         let backend = ShardedBackend::new(p);
         let base = MiniBatchConfig::new(4, 2); // 160x160 panels
-        let whole = MiniBatchKernelKMeans::new(base.clone(), &backend).run(&g);
+        let whole = MiniBatchKernelKMeans::new(base.clone(), &backend).run(&g).unwrap();
         let native_whole =
-            MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g);
+            MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g).unwrap();
         assert_same(&whole, &native_whole, &format!("sharded:{p} vs native, whole"));
         let budget = 20 * 1024;
         let mut tiled_cfg = base;
         tiled_cfg.memory_budget = Some(budget);
-        let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &backend).run(&g);
+        let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &backend).run(&g).unwrap();
         assert_same(&whole, &tiled, &format!("sharded:{p}, tiled"));
         assert!(tiled.pipeline.peak_resident_bytes <= budget, "{:?}", tiled.pipeline);
     }
@@ -67,17 +67,17 @@ fn tiled_equals_whole_sharded() {
 fn tiled_equals_whole_with_offload() {
     let g = toy_source(2, 60);
     let base = MiniBatchConfig::new(4, 3);
-    let reference = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g);
+    let reference = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g).unwrap();
     // offload without budget: whole panels, one producer (Fig.3)
     let mut off = base.clone();
     off.offload = true;
-    let offload = MiniBatchKernelKMeans::new(off, &NativeBackend).run(&g);
+    let offload = MiniBatchKernelKMeans::new(off, &NativeBackend).run(&g).unwrap();
     assert_same(&reference, &offload, "offload whole");
     // offload + budget: tiles stream one batch ahead through the ring
     let mut off_budget = base.clone();
     off_budget.offload = true;
     off_budget.memory_budget = Some(10 * 1024);
-    let both = MiniBatchKernelKMeans::new(off_budget, &NativeBackend).run(&g);
+    let both = MiniBatchKernelKMeans::new(off_budget, &NativeBackend).run(&g).unwrap();
     assert_same(&reference, &both, "offload + budget");
     assert!(both.overlap.is_some());
     assert!(both.pipeline.peak_resident_bytes <= 10 * 1024, "{:?}", both.pipeline);
@@ -85,13 +85,13 @@ fn tiled_equals_whole_with_offload() {
     let mut pool = base.clone();
     pool.memory_budget = Some(10 * 1024);
     pool.pipeline_workers = Some(3);
-    let pooled = MiniBatchKernelKMeans::new(pool, &NativeBackend).run(&g);
+    let pooled = MiniBatchKernelKMeans::new(pool, &NativeBackend).run(&g).unwrap();
     assert_same(&reference, &pooled, "worker pool");
     // forced-inline production under a budget is the same run again
     let mut inline = base;
     inline.memory_budget = Some(10 * 1024);
     inline.pipeline_workers = Some(0);
-    let inlined = MiniBatchKernelKMeans::new(inline, &NativeBackend).run(&g);
+    let inlined = MiniBatchKernelKMeans::new(inline, &NativeBackend).run(&g).unwrap();
     assert_same(&reference, &inlined, "inline tiled");
     assert!(inlined.overlap.is_none());
 }
@@ -103,10 +103,10 @@ fn landmark_fraction_and_tiles_compose() {
     let g = toy_source(3, 80);
     let mut base = MiniBatchConfig::new(4, 2);
     base.s = 0.4;
-    let whole = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g);
+    let whole = MiniBatchKernelKMeans::new(base.clone(), &NativeBackend).run(&g).unwrap();
     let mut tiled_cfg = base;
     tiled_cfg.memory_budget = Some(6 * 1024);
-    let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g);
+    let tiled = MiniBatchKernelKMeans::new(tiled_cfg, &NativeBackend).run(&g).unwrap();
     assert_same(&whole, &tiled, "s=0.4 tiled");
 }
 
