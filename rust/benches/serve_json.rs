@@ -1,0 +1,150 @@
+//! bench-json harness: serve-loop latency and throughput.
+//!
+//! Fits a synthetic-MNIST session, freezes it into a `ServeModel`, and
+//! drives the serve loop at 1-, 8- and 64-row request sizes (p50/p99
+//! service latency per micro-batch from the loop's own counters), then
+//! floods it with single-row queries under coalescing to measure QPS at
+//! saturation. Emits `BENCH_serve.json` (override the path with
+//! `DKKM_BENCH_OUT`). Every served label vector is equivalence-asserted
+//! bit-for-bit against the model's direct assignment and label-for-
+//! label against the serial scalar reference, so the bench doubles as a
+//! smoke test: batching and coalescing must change the timings, never
+//! the labels.
+//!
+//!     cargo bench --bench serve_json
+//!
+//! Knobs: `DKKM_SCALE` multiplies the query count, `DKKM_REPEATS` sets
+//! timing repeats per request size.
+use dkkm::coordinator::{assign_test_set_reference, DatasetSpec, Experiment};
+use dkkm::kernels::KernelFn;
+use dkkm::serve::{RowBlock, ServeLoop, ServeOptions};
+use dkkm::util::json::Json;
+use dkkm::util::stats::{bench_repeats, bench_scale, Table, Timer};
+
+fn main() {
+    // queries come from the held-out split; keep it a multiple of 64 so
+    // every request size divides it evenly
+    let n_q = ((((512.0 * bench_scale()) as usize).max(128) + 63) / 64) * 64;
+    let n_train = 2_000usize;
+    let c = 10usize;
+    let repeats = bench_repeats();
+    println!("== serve bench: synthetic MNIST train={n_train}, {n_q} query rows, C={c} ==\n");
+
+    let session = Experiment::on(DatasetSpec::Mnist { train: n_train, test: n_q })
+        .clusters(c)
+        .batches(4)
+        .seed(23)
+        .build()
+        .expect("build session");
+    let report = session.fit().expect("fit");
+    let model = session.serve_model(&report).expect("serve model");
+    let train = session.train().expect("dense workload");
+    let test = session.test().expect("held-out split");
+
+    // the two references: bit-level (direct model assignment) and
+    // label-level (the serial scalar oracle predating the serve path)
+    let direct = model.assign_dense(&test.x).expect("direct assign");
+    let oracle = assign_test_set_reference(
+        test,
+        train,
+        &report.result.medoids,
+        KernelFn::Rbf { gamma: session.gamma() },
+    );
+    assert_eq!(direct, oracle, "serve model diverged from the scalar oracle");
+
+    let mut table = Table::new(&["request rows", "p50 us", "p99 us", "rows/s"]);
+    let mut sizes = Vec::new();
+    for &bs in &[1usize, 8, 64] {
+        // one worker, coalescing capped at the request size: every
+        // micro-batch is exactly `bs` rows, so the counter bucket is
+        // the request size and p50/p99 are clean per-size service times
+        let handle = ServeLoop::spawn(
+            model.clone(),
+            ServeOptions { workers: 1, max_batch_rows: bs },
+        );
+        let mut wall = f64::INFINITY;
+        for _ in 0..repeats {
+            let mut served = Vec::with_capacity(n_q);
+            let t = Timer::start();
+            for lo in (0..n_q).step_by(bs) {
+                let idx: Vec<usize> = (lo..lo + bs).collect();
+                let resp = handle
+                    .assign(RowBlock::Dense(test.x.gather(&idx)))
+                    .expect("serve");
+                served.extend(resp.labels);
+            }
+            wall = wall.min(t.elapsed_s());
+            assert_eq!(served, direct, "{bs}-row requests diverged from direct assign");
+        }
+        let snap = handle.counters();
+        let (label, p50, p99) = snap
+            .buckets
+            .iter()
+            .find(|(_, count, _, _)| *count > 0)
+            .map(|(label, _, p50, p99)| (*label, *p50, *p99))
+            .expect("latency bucket populated");
+        let rows_per_s = n_q as f64 / wall;
+        table.row(&[
+            format!("{bs}"),
+            format!("{p50:.1}"),
+            format!("{p99:.1}"),
+            format!("{rows_per_s:.0}"),
+        ]);
+        sizes.push(Json::obj(vec![
+            ("request_rows", Json::num(bs as f64)),
+            ("bucket", Json::str(label)),
+            ("p50_us", Json::num(p50)),
+            ("p99_us", Json::num(p99)),
+            ("round_trip_rows_per_s", Json::num(rows_per_s)),
+            ("service_qps", Json::num(snap.qps())),
+        ]));
+    }
+    println!("{}", table.render());
+
+    // saturation: flood single-row queries through a multi-worker loop
+    // with coalescing on — micro-batches grow toward the cap and QPS is
+    // rows over busy seconds
+    let handle = ServeLoop::spawn(
+        model.clone(),
+        ServeOptions { workers: 4, max_batch_rows: 64 },
+    );
+    let mut served = vec![0usize; n_q];
+    let receivers: Vec<_> = (0..n_q)
+        .map(|r| handle.query(RowBlock::Dense(test.x.gather(&[r])), None))
+        .collect();
+    for (r, rx) in receivers.into_iter().enumerate() {
+        let resp = rx.recv().expect("reply").expect("serve");
+        served[r] = resp.labels[0];
+    }
+    assert_eq!(served, direct, "coalesced single-row flood diverged from direct assign");
+    let sat = handle.counters();
+    println!(
+        "saturation: {:.0} rows/s over {} coalesced micro-batches ({} rows, {:.3}s busy)",
+        sat.qps(),
+        sat.batches,
+        sat.rows,
+        sat.busy_s
+    );
+
+    let report_json = Json::obj(vec![
+        ("bench", Json::str("serve")),
+        ("n_train", Json::num(n_train as f64)),
+        ("n_queries", Json::num(n_q as f64)),
+        ("c", Json::num(c as f64)),
+        ("repeats", Json::num(repeats as f64)),
+        ("equivalence", Json::str("bit-identical to direct assign; label-identical to scalar oracle")),
+        ("sizes", Json::arr(sizes)),
+        (
+            "saturation",
+            Json::obj(vec![
+                ("workers", Json::num(4.0)),
+                ("qps", Json::num(sat.qps())),
+                ("micro_batches", Json::num(sat.batches as f64)),
+                ("counters", sat.to_json()),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("DKKM_BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".into());
+    std::fs::write(&out, report_json.to_string()).expect("write bench json");
+    println!("\nwrote {out}");
+}

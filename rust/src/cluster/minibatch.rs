@@ -720,8 +720,9 @@ fn kernel_distance(source: &dyn GramSource, a: usize, b: usize) -> f64 {
 
 /// Eq.12: medoid of the convex combination (1-alpha) phi(m_old) +
 /// alpha phi(m_new), restricted to the batch plus both current medoids
-/// (including them keeps alpha -> 0/1 exact).
-fn merge_medoid(
+/// (including them keeps alpha -> 0/1 exact). Public so the serve
+/// subsystem's background refresh continues the same merge rule.
+pub fn merge_medoid(
     source: &dyn GramSource,
     batch: &[usize],
     batch_diag: &[f32],

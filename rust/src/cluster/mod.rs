@@ -20,6 +20,6 @@ pub use assign::ClusterStats;
 pub use full::{full_kernel_kmeans, FullResult};
 pub use init::kernel_kmeans_pp;
 pub use minibatch::{
-    assign_to_medoids, MergeRule, MiniBatchConfig, MiniBatchKernelKMeans,
-    MiniBatchResult, OuterRecord,
+    assign_to_medoids, merge_medoid, MergeRule, MiniBatchConfig,
+    MiniBatchKernelKMeans, MiniBatchResult, OuterRecord,
 };

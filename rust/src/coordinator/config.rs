@@ -213,6 +213,10 @@ pub struct RunConfig {
     /// (`kill:r@k | delay:r@k:ms | spill:n | interrupt:e | deadline:ms`,
     /// `;`-separated); the `DKKM_FAULT` env var overrides it.
     pub fault: Option<String>,
+    /// Directory to write a servable model snapshot into after a
+    /// successful fit (`manifest.json` + `model.json`); `None` skips it.
+    /// Vector workloads only — validated at `build()` for MD specs.
+    pub snapshot: Option<std::path::PathBuf>,
 }
 
 impl RunConfig {
@@ -235,6 +239,7 @@ impl RunConfig {
             checkpoint: None,
             resume: false,
             fault: None,
+            snapshot: None,
         }
     }
 
@@ -263,6 +268,15 @@ impl RunConfig {
                 "memory_budget must be > 0 bytes (omit it for whole panels)".into(),
             ));
         }
+        if self.snapshot.is_some() {
+            if let DatasetSpec::Md { .. } = self.dataset {
+                return Err(Error::Config(
+                    "snapshots need vector features; the MD workload has none \
+                     (drop the snapshot directory or pick a vector dataset)"
+                        .into(),
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -276,7 +290,7 @@ impl RunConfig {
         const KNOWN: &[&str] = &[
             "dataset", "c", "b", "s", "sampling", "backend", "threads", "seed",
             "restarts", "sigma_factor", "gamma", "track_cost", "offload",
-            "memory_budget", "checkpoint", "resume", "fault",
+            "memory_budget", "checkpoint", "resume", "fault", "snapshot",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -388,6 +402,14 @@ impl RunConfig {
                 ),
             };
         }
+        if let Some(v) = j.get("snapshot") {
+            cfg.snapshot = match v {
+                Json::Null => None,
+                other => Some(std::path::PathBuf::from(other.as_str().ok_or_else(
+                    || Error::Config("'snapshot' must be a directory path or null".into()),
+                )?)),
+            };
+        }
         cfg.validate()?;
         Ok(cfg)
     }
@@ -430,6 +452,13 @@ impl RunConfig {
             (
                 "fault",
                 self.fault.as_deref().map(Json::str).unwrap_or(Json::Null),
+            ),
+            (
+                "snapshot",
+                self.snapshot
+                    .as_ref()
+                    .map(|p| Json::str(&p.display().to_string()))
+                    .unwrap_or(Json::Null),
             ),
         ])
     }
@@ -650,6 +679,22 @@ mod tests {
         assert!(RunConfig::from_json(&j).is_err());
         let j = Json::parse(r#"{"dataset": "toy2d", "fault": 3}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_snapshot_field() {
+        let j = Json::parse(r#"{"dataset": "toy2d:100", "snapshot": "/tmp/snap"}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.snapshot, Some(std::path::PathBuf::from("/tmp/snap")));
+        // the echo round-trips the knob
+        let echoed = Json::parse(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(RunConfig::from_json(&echoed).unwrap().snapshot, cfg.snapshot);
+        // bad type rejected; MD + snapshot rejected at validate()
+        let j = Json::parse(r#"{"dataset": "toy2d", "snapshot": 3}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+        let j = Json::parse(r#"{"dataset": "md:100", "snapshot": "/tmp/snap"}"#).unwrap();
+        let err = RunConfig::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("vector"), "{err}");
     }
 
     #[test]

@@ -189,6 +189,15 @@ impl Experiment {
         self
     }
 
+    /// Write a servable model snapshot (`manifest.json` + `model.json`)
+    /// into `dir` after every successful fit. A reloaded snapshot
+    /// assigns bit-identically to the fitting session. Vector
+    /// workloads only — MD specs fail at `build()`.
+    pub fn snapshot_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Experiment {
+        self.cfg.snapshot = Some(dir.into());
+        self
+    }
+
     /// Resume interrupted runs from their checkpoint files (requires
     /// [`Experiment::checkpoint_dir`]); fingerprint mismatches are a
     /// structured error, never a silent restart.

@@ -22,6 +22,7 @@ pub use experiment::{Experiment, KernelSpec};
 pub use memory::{b_min, footprint_bytes, paper_b_min};
 pub use report::{faults_json, pipeline_json, EngineReport, RunReport};
 pub use session::{
-    assign_test_set, assign_test_set_sparse, build_dataset, build_sparse_rcv1, gamma_for,
+    assign_test_set, assign_test_set_reference, assign_test_set_sparse,
+    assign_test_set_sparse_reference, build_dataset, build_sparse_rcv1, gamma_for,
     gamma_for_sparse, run_lloyd_baseline, Session,
 };

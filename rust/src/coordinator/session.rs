@@ -24,6 +24,7 @@ use crate::distributed::fault::FaultSession;
 use crate::kernels::{GramSource, KernelFn};
 use crate::linalg::{qcp_rmsd, Frame, Mat};
 use crate::metrics::{accuracy, nmi};
+use crate::serve::{RowBlock, ServeModel, SnapshotFingerprint, SnapshotWriter};
 use crate::sim::md::{simulate, MdConfig};
 use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
@@ -220,7 +221,7 @@ impl Session {
             _ => (None, None),
         };
         let seconds = restart_seconds.iter().cloned().reduce(f64::min);
-        Ok(RunReport {
+        let report = RunReport {
             c_used: c,
             gamma: self.gamma,
             train_accuracy,
@@ -235,7 +236,59 @@ impl Session {
             pipeline: result.pipeline.clone(),
             faults: self.faults.report(),
             result,
-        })
+        };
+        if let Some(dir) = &self.cfg.snapshot {
+            let model = self.serve_model(&report)?;
+            let path = SnapshotWriter::new(dir.clone()).write(&model)?;
+            eprintln!("dkkm: model snapshot written to {}", path.display());
+        }
+        Ok(report)
+    }
+
+    /// Freeze the fitted model into a servable form: medoid feature
+    /// rows, accumulated cluster weights, and a fingerprint tying the
+    /// snapshot back to this exact fit. Vector workloads only — MD
+    /// frames have no feature rows to pack.
+    pub fn serve_model(&self, report: &RunReport) -> Result<ServeModel> {
+        let features = match &self.workload {
+            Workload::Vectors { train, .. } => {
+                RowBlock::Dense(train.x.gather(&report.result.medoids))
+            }
+            Workload::SparseVectors { train, .. } => {
+                RowBlock::Csr(train.x.gather(&report.result.medoids))
+            }
+            Workload::Frames { .. } => {
+                return Err(Error::Config(
+                    "serving needs vector features; the MD workload assigns \
+                     through QCP-RMSD, not a servable medoid panel"
+                        .into(),
+                ));
+            }
+        };
+        let kernel = KernelFn::Rbf { gamma: self.gamma };
+        let fingerprint = self.snapshot_fingerprint(report.c_used);
+        ServeModel::from_features(
+            features,
+            kernel,
+            report.result.counts.clone(),
+            report.result.medoids.clone(),
+            fingerprint,
+        )
+    }
+
+    /// The fingerprint [`Session::serve_model`] stamps on snapshots —
+    /// for readers that want to demand a matching snapshot via
+    /// [`crate::serve::SnapshotReader::load_expecting`].
+    pub fn snapshot_fingerprint(&self, c_used: usize) -> SnapshotFingerprint {
+        SnapshotFingerprint {
+            dataset: self.cfg.dataset.to_string(),
+            seed: self.cfg.seed,
+            b: self.cfg.b,
+            c: c_used,
+            n: self.source.n(),
+            storage: self.storage.to_string(),
+            engine: self.engine_report.used.clone(),
+        }
     }
 
     /// Elbow scan over `[c_min, c_max]` (paper §4.4/4.5), reusing the
@@ -353,6 +406,14 @@ impl Session {
     pub fn test(&self) -> Option<&Dataset> {
         match &self.workload {
             Workload::Vectors { test, .. } => test.as_ref(),
+            _ => None,
+        }
+    }
+
+    /// Held-out dataset, when the spec carries one (sparse workloads).
+    pub fn test_sparse(&self) -> Option<&SparseDataset> {
+        match &self.workload {
+            Workload::SparseVectors { test, .. } => test.as_ref(),
             _ => None,
         }
     }
@@ -517,8 +578,62 @@ fn run_restarts(
     Ok((result, cost, times))
 }
 
-/// Assign held-out vector samples to the trained medoids.
+/// Assign held-out vector samples to the trained medoids, through the
+/// serve subsystem's shared batched-assign helper (packed-panel GEMM +
+/// branchless argmin). The same [`ServeModel`] path serves snapshots
+/// and the serve loop, so held-out metrics, reloaded models and live
+/// queries agree by construction. The pre-serve scalar path survives
+/// as [`assign_test_set_reference`], the test oracle.
 pub fn assign_test_set(
+    test: &Dataset,
+    train: &Dataset,
+    medoids: &[usize],
+    kernel: KernelFn,
+) -> Vec<usize> {
+    let c = medoids.len();
+    let model = ServeModel::from_features(
+        RowBlock::Dense(train.x.gather(medoids)),
+        kernel,
+        vec![1; c],
+        medoids.to_vec(),
+        SnapshotFingerprint::adhoc("dense", c, train.n()),
+    )
+    .expect("medoids from a fitted session are a well-formed model");
+    model
+        .assign_dense(&test.x)
+        .expect("a held-out split shares the training dimension")
+}
+
+/// Assign held-out CSR samples to the trained medoids: the sparse twin
+/// of [`assign_test_set`], through the same shared helper (one packed
+/// panel, one argmin — only the Gram fill differs). The pre-serve
+/// scalar path survives as [`assign_test_set_sparse_reference`].
+pub fn assign_test_set_sparse(
+    test: &SparseDataset,
+    train: &SparseDataset,
+    medoids: &[usize],
+    kernel: KernelFn,
+) -> Vec<usize> {
+    let c = medoids.len();
+    let model = ServeModel::from_features(
+        RowBlock::Csr(train.x.gather(medoids)),
+        kernel,
+        vec![1; c],
+        medoids.to_vec(),
+        SnapshotFingerprint::adhoc("csr", c, train.n()),
+    )
+    .expect("medoids from a fitted session are a well-formed model");
+    model
+        .assign_csr(&test.x)
+        .expect("a held-out split shares the training dimension")
+}
+
+/// Serial per-row oracle for [`assign_test_set`]: direct kernel
+/// evaluations, no packing, no micro-batching. Kept for equivalence
+/// tests — label-level agreement with the serve path is asserted, not
+/// bit-level distances (`K(x,m)` here comes from the direct `Σ(x−y)²`
+/// form, the serve path reconstructs `d²` from cached norms).
+pub fn assign_test_set_reference(
     test: &Dataset,
     train: &Dataset,
     medoids: &[usize],
@@ -542,10 +657,10 @@ pub fn assign_test_set(
         .collect()
 }
 
-/// Assign held-out CSR samples to the trained medoids: the sparse twin
-/// of [`assign_test_set`], with kernel values rebuilt from cached norms
-/// and sparse dots (`d² = ‖x‖² + ‖m‖² − 2·x·m`).
-pub fn assign_test_set_sparse(
+/// Serial per-row oracle for [`assign_test_set_sparse`], with kernel
+/// values rebuilt from cached norms and sparse dots
+/// (`d² = ‖x‖² + ‖m‖² − 2·x·m`). Kept for equivalence tests.
+pub fn assign_test_set_sparse_reference(
     test: &SparseDataset,
     train: &SparseDataset,
     medoids: &[usize],
@@ -798,6 +913,72 @@ mod tests {
         let err = run_lloyd_baseline(&sparse, 3, 1).unwrap_err();
         assert!(matches!(err, Error::Config(_)), "{err:?}");
         let err = run_lloyd_baseline(&DatasetSpec::Md { frames: 50 }, 3, 1).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err:?}");
+    }
+
+    #[test]
+    fn serve_assign_agrees_with_reference_oracle() {
+        // the packed-panel serve path vs the serial scalar oracle:
+        // label-level agreement (distances differ in the last ulp —
+        // direct Σ(x−y)² vs norm-reconstructed d²)
+        let session = Experiment::on(DatasetSpec::Mnist { train: 400, test: 100 })
+            .clusters(10)
+            .batches(2)
+            .build()
+            .unwrap();
+        let report = session.fit().unwrap();
+        let (train, test) = (session.train().unwrap(), session.test().unwrap());
+        let kernel = KernelFn::Rbf { gamma: session.gamma() };
+        let served = assign_test_set(test, train, &report.result.medoids, kernel);
+        let oracle = assign_test_set_reference(test, train, &report.result.medoids, kernel);
+        assert_eq!(served, oracle);
+    }
+
+    #[test]
+    fn sparse_serve_assign_agrees_with_reference_oracle() {
+        let spec = DatasetSpec::Rcv1 { n: 300, classes: 4, dim: 32, storage: RcvStorage::Sparse };
+        let session = Experiment::on(spec).clusters(4).batches(2).build().unwrap();
+        let report = session.fit().unwrap();
+        let train = session.train_sparse().unwrap();
+        let test = session.test_sparse().unwrap();
+        let kernel = KernelFn::Rbf { gamma: session.gamma() };
+        let served = assign_test_set_sparse(test, train, &report.result.medoids, kernel);
+        let oracle =
+            assign_test_set_sparse_reference(test, train, &report.result.medoids, kernel);
+        assert_eq!(served, oracle);
+    }
+
+    #[test]
+    fn serve_model_freezes_the_fit() {
+        let session = toy_exp().build().unwrap();
+        let report = session.fit().unwrap();
+        let model = session.serve_model(&report).unwrap();
+        assert_eq!(model.c(), report.c_used);
+        assert_eq!(model.weights(), &report.result.counts[..]);
+        assert_eq!(model.medoids(), &report.result.medoids[..]);
+        assert_eq!(model.fingerprint(), &session.snapshot_fingerprint(report.c_used));
+        // the frozen model relabels the training set exactly as the
+        // held-out path would (same helper, same panels)
+        let train = session.train().unwrap();
+        let labels = model.assign_dense(&train.x).unwrap();
+        let direct = assign_test_set(
+            train,
+            train,
+            &report.result.medoids,
+            KernelFn::Rbf { gamma: session.gamma() },
+        );
+        assert_eq!(labels, direct);
+    }
+
+    #[test]
+    fn serve_model_rejects_frame_workloads() {
+        let session = Experiment::on(DatasetSpec::Md { frames: 200 })
+            .clusters(4)
+            .batches(2)
+            .build()
+            .unwrap();
+        let report = session.fit().unwrap();
+        let err = session.serve_model(&report).unwrap_err();
         assert!(matches!(err, Error::Config(_)), "{err:?}");
     }
 

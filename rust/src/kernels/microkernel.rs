@@ -63,7 +63,9 @@ fn mr_for(tier: SimdTier) -> usize {
 /// Column panels packed for the micro-kernel: [`NR`] columns interleaved
 /// depth-major (`panel[k * NR + t]` = element `k` of panel column `t`),
 /// zero-padded to a multiple of [`NR`] columns. Padding lanes produce
-/// garbage dots that the epilogue never reads.
+/// garbage dots that the epilogue never reads. `Clone` is cheap enough
+/// for model snapshots (one packed medoid panel, C columns).
+#[derive(Clone, Debug)]
 pub struct PackedPanel {
     data: Vec<f32>,
     ncols: usize,

@@ -63,6 +63,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 
@@ -78,5 +79,9 @@ pub mod prelude {
     pub use crate::kernels::{GramSource, KernelFn, PipelineStats};
     pub use crate::linalg::SimdTier;
     pub use crate::metrics::{accuracy, nmi};
+    pub use crate::serve::{
+        ModelSlot, RowBlock, ServeLoop, ServeModel, ServeOptions, SnapshotFingerprint,
+        SnapshotReader, SnapshotWriter,
+    };
     pub use crate::util::error::{Error, Result};
 }

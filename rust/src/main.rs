@@ -7,6 +7,8 @@
 //!   bmin      Eq.19 memory planner
 //!   elbow     cost-vs-C scan
 //!   md        MD trajectory clustering + Fig.7 medoid RMSD matrix
+//!   snapshot  fit, persist a servable model, verify the reload
+//!   serve     serve assignments from a snapshot through the serve loop
 //!   info      artifact manifest summary
 //!
 //! Every clustering command goes through the `Experiment` builder:
@@ -15,15 +17,17 @@
 //! and the resulting `Session` runs the unified `fit()` path.
 use dkkm::baselines::{sgd_kmeans, SgdConfig};
 use dkkm::coordinator::{
-    b_min, build_dataset, footprint_bytes, gamma_for, paper_b_min, run_lloyd_baseline,
-    shared_pjrt, DatasetSpec, Experiment, RcvStorage, RunConfig, Session,
+    b_min, build_dataset, build_sparse_rcv1, footprint_bytes, gamma_for, paper_b_min,
+    run_lloyd_baseline, shared_pjrt, DatasetSpec, Experiment, RcvStorage, RunConfig, Session,
 };
 use dkkm::distributed::{NetModel, ScalingSimulator, Topology};
 use dkkm::kernels::VecGram;
 use dkkm::metrics::{accuracy, nmi};
+use dkkm::serve::{RowBlock, ServeLoop, ServeOptions, SnapshotReader};
 use dkkm::util::cli::Cli;
 use dkkm::util::error::{Error, Result};
 use dkkm::util::json::Json;
+use dkkm::util::rng::Rng;
 use dkkm::util::stats::Table;
 
 fn main() {
@@ -53,6 +57,8 @@ Commands:
   bmin      Eq.19 memory planner
   elbow     cost-vs-C elbow scan
   md        MD clustering + Fig.7 medoid RMSD matrix
+  snapshot  fit + persist a servable model snapshot (verified reload)
+  serve     serve assignments from a snapshot (micro-batched loop)
   info      artifact manifest summary
 ";
 
@@ -69,6 +75,8 @@ fn dispatch(args: &[String]) -> Result<()> {
         "bmin" => cmd_bmin(rest),
         "elbow" => cmd_elbow(rest),
         "md" => cmd_md(rest),
+        "snapshot" => cmd_snapshot(rest),
+        "serve" => cmd_serve(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
@@ -462,6 +470,191 @@ fn cmd_md(rest: &[String]) -> Result<()> {
         }
         println!();
     }
+    Ok(())
+}
+
+fn cmd_snapshot(rest: &[String]) -> Result<()> {
+    // --out <dir> is spliced out; everything else is a `dkkm run` flag
+    let mut rest = rest.to_vec();
+    let out = match rest.iter().position(|a| a == "--out") {
+        Some(pos) => {
+            let path = rest
+                .get(pos + 1)
+                .cloned()
+                .ok_or_else(|| Error::Config("--out needs a directory".into()))?;
+            rest.drain(pos..pos + 2);
+            path
+        }
+        None => {
+            return Err(Error::Config(
+                "snapshot needs --out <dir>; every other flag is a `dkkm run` flag \
+                 (e.g. `dkkm snapshot --dataset mnist:400:100 --c 10 --out /tmp/snap`)"
+                    .into(),
+            ))
+        }
+    };
+    let (exp, as_json) = parse_run_experiment(&rest)?;
+    let session = exp.snapshot_dir(&out).build()?;
+    // fit() writes the snapshot through the config knob
+    let report = session.fit()?;
+    // reload and verify: the round trip must assign the training set
+    // exactly as the in-session model does — this is the subsystem's
+    // core guarantee, so the CLI checks it on every snapshot
+    let direct = session.serve_model(&report)?;
+    let reloaded = SnapshotReader::new(std::path::PathBuf::from(&out))
+        .load_expecting(&session.snapshot_fingerprint(report.c_used))?;
+    let queries = if let Some(tr) = session.train() {
+        RowBlock::Dense(tr.x.clone())
+    } else if let Some(tr) = session.train_sparse() {
+        RowBlock::Csr(tr.x.clone())
+    } else {
+        return Err(Error::Config("snapshots need a vector workload".into()));
+    };
+    let a = direct.assign_rows(&queries)?;
+    let b = reloaded.assign_rows(&queries)?;
+    if a != b {
+        return Err(Error::Runtime(
+            "reloaded snapshot diverged from the in-session model (corrupt write?)".into(),
+        ));
+    }
+    let cfg = session.config();
+    if as_json {
+        let j = Json::obj(vec![
+            ("config", cfg.to_json()),
+            ("report", report.to_json()),
+            ("snapshot", Json::str(&out)),
+            ("verified_rows", Json::num(a.len() as f64)),
+        ]);
+        println!("{j}");
+        return Ok(());
+    }
+    println!("dataset         : {} ({} storage)", cfg.dataset, report.storage);
+    println!("engine          : {}", report.engine.used);
+    println!("clusters        : {} (gamma={:.3e})", report.c_used, report.gamma);
+    println!("train accuracy  : {:.2}%", report.train_accuracy * 100.0);
+    println!("snapshot        : {out} ({} packed bytes)", direct.packed_bytes());
+    println!("verified        : reload re-assigned {} training rows identically", a.len());
+    Ok(())
+}
+
+/// Draw query rows for `dkkm serve` from a dataset spec, matching the
+/// model's feature storage.
+fn build_queries(
+    spec: &DatasetSpec,
+    storage: &str,
+    count: usize,
+    seed: u64,
+) -> Result<RowBlock> {
+    match (storage, spec) {
+        (_, DatasetSpec::Md { .. }) => Err(Error::Config(
+            "MD frames cannot be served; pass a vector dataset via --queries".into(),
+        )),
+        ("csr", DatasetSpec::Rcv1 { n, classes, storage: RcvStorage::Sparse, .. }) => {
+            let (train, _) = build_sparse_rcv1(*n, *classes, seed);
+            let idx = Rng::new(seed ^ 0x5E57E).sample_indices(train.n(), count.min(train.n()));
+            Ok(RowBlock::Csr(train.x.gather(&idx)))
+        }
+        ("csr", _) => Err(Error::Config(
+            "this snapshot stores CSR features; --queries must be a :sparse spec".into(),
+        )),
+        (_, DatasetSpec::Rcv1 { storage: RcvStorage::Sparse, .. }) => Err(Error::Config(
+            "this snapshot stores dense features; --queries must be a dense spec".into(),
+        )),
+        (_, _) => {
+            let (train, _) = build_dataset(spec, seed);
+            let idx = Rng::new(seed ^ 0x5E57E).sample_indices(train.n(), count.min(train.n()));
+            Ok(RowBlock::Dense(train.x.gather(&idx)))
+        }
+    }
+}
+
+/// Slice rows `[lo, hi)` out of a query block.
+fn slice_rows(q: &RowBlock, lo: usize, hi: usize) -> RowBlock {
+    let idx: Vec<usize> = (lo..hi).collect();
+    match q {
+        RowBlock::Dense(m) => RowBlock::Dense(m.gather(&idx)),
+        RowBlock::Csr(x) => RowBlock::Csr(x.gather(&idx)),
+    }
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let p = Cli::new("dkkm serve — serve assignments from a model snapshot")
+        .req("snapshot", "snapshot directory (from `dkkm snapshot --out`)")
+        .opt("queries", "", "dataset spec to draw query rows from (default: the fingerprint's dataset)")
+        .opt("count", "256", "query rows to draw")
+        .opt("batch", "1,8,64", "request sizes (rows per query) to exercise")
+        .opt("workers", "2", "serve-loop worker threads")
+        .opt("seed", "7", "rng seed for query sampling")
+        .flag("json", "emit machine-readable counters")
+        .parse(rest)?;
+    let dir = std::path::PathBuf::from(p.str("snapshot"));
+    let model = SnapshotReader::new(dir).load()?;
+    let spec_str = if p.str("queries").is_empty() {
+        model.fingerprint().dataset.clone()
+    } else {
+        p.str("queries").to_string()
+    };
+    if spec_str == "adhoc" {
+        return Err(Error::Config(
+            "this snapshot carries no dataset fingerprint; pass --queries <spec>".into(),
+        ));
+    }
+    let spec: DatasetSpec = spec_str.parse().map_err(Error::Config)?;
+    let queries = build_queries(&spec, model.storage(), p.get("count")?, p.get("seed")?)?;
+    let n = queries.rows();
+    // the serial reference the served labels must match bit-for-bit
+    let direct = model.assign_rows(&queries)?;
+    let c = model.c();
+    let handle = ServeLoop::spawn(
+        model,
+        ServeOptions { workers: p.get("workers")?, max_batch_rows: 64 },
+    );
+    for bs in p.list::<usize>("batch")? {
+        let bs = bs.max(1);
+        let blocks: Vec<RowBlock> = (0..n)
+            .step_by(bs)
+            .map(|lo| slice_rows(&queries, lo, (lo + bs).min(n)))
+            .collect();
+        let receivers: Vec<_> =
+            blocks.into_iter().map(|blk| handle.query(blk, None)).collect();
+        let mut served = Vec::with_capacity(n);
+        for rx in receivers {
+            let resp = rx
+                .recv()
+                .map_err(|_| Error::Runtime("serve loop dropped a reply".into()))??;
+            served.extend(resp.labels);
+        }
+        if served != direct {
+            return Err(Error::Runtime(format!(
+                "{bs}-row requests diverged from the serial reference"
+            )));
+        }
+    }
+    let snap = handle.counters();
+    if p.get_bool("json") {
+        println!("{}", snap.to_json());
+        return Ok(());
+    }
+    println!("model           : C={c}, generation {}", handle.generation());
+    println!("queries         : {n} rows x {} request sizes (all bit-identical)", p.list::<usize>("batch")?.len());
+    let mut table = Table::new(&["micro-batch", "batches", "p50 us", "p99 us"]);
+    for (label, count, p50, p99) in &snap.buckets {
+        if *count > 0 {
+            table.row(&[
+                label.to_string(),
+                count.to_string(),
+                format!("{p50:.1}"),
+                format!("{p99:.1}"),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!(
+        "throughput      : {:.0} rows/s over {} micro-batches ({:.3}s busy)",
+        snap.qps(),
+        snap.batches,
+        snap.busy_s
+    );
     Ok(())
 }
 

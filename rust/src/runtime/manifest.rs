@@ -55,44 +55,77 @@ fn parse_shape(j: &Json) -> Result<(DType, Vec<usize>)> {
     Ok((dt, dims))
 }
 
+fn parse_entry(dir: &Path, e: &Json) -> Result<ArtifactEntry> {
+    let name = e.req_str("name")?.to_string();
+    let file = dir.join(e.req_str("file")?);
+    let inputs = e
+        .req("inputs")?
+        .as_arr()
+        .ok_or_else(|| Error::Config("inputs not an array".into()))?
+        .iter()
+        .map(parse_shape)
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = e
+        .req("outputs")?
+        .as_arr()
+        .ok_or_else(|| Error::Config("outputs not an array".into()))?
+        .iter()
+        .map(parse_shape)
+        .collect::<Result<Vec<_>>>()?;
+    let params = e.req("params")?.clone();
+    Ok(ArtifactEntry { name, file, inputs, outputs, params })
+}
+
 impl Manifest {
-    /// Load `<dir>/manifest.json`.
+    /// Load `<dir>/manifest.json`. Every failure mode — missing file,
+    /// truncated/corrupt JSON, wrong schema — is a structured
+    /// [`Error::Config`] naming the file (and entry) at fault, never a
+    /// panic: manifests also guard model snapshots now, and a corrupt
+    /// snapshot must refuse to load with a diagnosable message.
     pub fn load(dir: &Path) -> Result<Manifest> {
-        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
             Error::Config(format!(
                 "cannot read {}/manifest.json (run `make artifacts`): {e}",
                 dir.display()
             ))
         })?;
-        let root = Json::parse(&text)?;
-        let version = root.req_usize("version")?;
-        if version != 1 {
-            return Err(Error::Config(format!("unsupported manifest version {version}")));
+        let root = Json::parse(&text).map_err(|e| {
+            Error::Config(format!(
+                "{}: not valid JSON (truncated or corrupt write?): {e}",
+                path.display()
+            ))
+        })?;
+        if root.as_obj().is_none() {
+            return Err(Error::Config(format!(
+                "{}: manifest root must be a JSON object",
+                path.display()
+            )));
         }
-        let mut entries = Vec::new();
-        for e in root
-            .req("entries")?
-            .as_arr()
-            .ok_or_else(|| Error::Config("entries not an array".into()))?
-        {
-            let name = e.req_str("name")?.to_string();
-            let file = dir.join(e.req_str("file")?);
-            let inputs = e
-                .req("inputs")?
-                .as_arr()
-                .ok_or_else(|| Error::Config("inputs not an array".into()))?
-                .iter()
-                .map(parse_shape)
-                .collect::<Result<Vec<_>>>()?;
-            let outputs = e
-                .req("outputs")?
-                .as_arr()
-                .ok_or_else(|| Error::Config("outputs not an array".into()))?
-                .iter()
-                .map(parse_shape)
-                .collect::<Result<Vec<_>>>()?;
-            let params = e.req("params")?.clone();
-            entries.push(ArtifactEntry { name, file, inputs, outputs, params });
+        let version = root.get("version").and_then(|v| v.as_usize()).ok_or_else(|| {
+            Error::Config(format!(
+                "{}: missing or non-integer 'version' field",
+                path.display()
+            ))
+        })?;
+        if version != 1 {
+            return Err(Error::Config(format!(
+                "{}: unsupported manifest version {version} (this build reads 1)",
+                path.display()
+            )));
+        }
+        let raw_entries = root.get("entries").and_then(|e| e.as_arr()).ok_or_else(|| {
+            Error::Config(format!(
+                "{}: missing 'entries' array",
+                path.display()
+            ))
+        })?;
+        let mut entries = Vec::with_capacity(raw_entries.len());
+        for (i, e) in raw_entries.iter().enumerate() {
+            let entry = parse_entry(dir, e).map_err(|err| {
+                Error::Config(format!("{}: entry {i}: {err}", path.display()))
+            })?;
+            entries.push(entry);
         }
         Ok(Manifest { dir: dir.to_path_buf(), entries })
     }
@@ -183,5 +216,72 @@ mod tests {
         let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
         let msg = format!("{err}");
         assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    /// Write `text` as `<tmp>/manifest.json` and return the load error.
+    fn load_error(tag: &str, text: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("dkkm_mani_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        let _ = std::fs::remove_dir_all(&dir);
+        format!("{err}")
+    }
+
+    #[test]
+    fn truncated_json_names_the_file() {
+        let msg = load_error("trunc", r#"{"version": 1, "entries": [{"name": "x""#);
+        assert!(msg.contains("manifest.json"), "{msg}");
+        assert!(msg.contains("truncated") || msg.contains("JSON"), "{msg}");
+    }
+
+    #[test]
+    fn non_object_root_is_rejected() {
+        let msg = load_error("root", r#"[1, 2, 3]"#);
+        assert!(msg.contains("object"), "{msg}");
+    }
+
+    #[test]
+    fn missing_or_bad_version_is_rejected() {
+        let msg = load_error("nover", r#"{"entries": []}"#);
+        assert!(msg.contains("version"), "{msg}");
+        let msg = load_error("strver", r#"{"version": "one", "entries": []}"#);
+        assert!(msg.contains("version"), "{msg}");
+    }
+
+    #[test]
+    fn future_version_is_rejected_with_the_supported_one() {
+        let msg = load_error("v9", r#"{"version": 9, "entries": []}"#);
+        assert!(msg.contains("version 9") && msg.contains("reads 1"), "{msg}");
+    }
+
+    #[test]
+    fn missing_entries_is_rejected() {
+        let msg = load_error("noent", r#"{"version": 1}"#);
+        assert!(msg.contains("entries"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_entry_names_its_index() {
+        let msg = load_error(
+            "badent",
+            r#"{"version": 1, "entries": [
+                {"name": "ok", "file": "a.bin", "inputs": [], "outputs": [], "params": {}},
+                {"file": "b.bin"}
+            ]}"#,
+        );
+        assert!(msg.contains("entry 1"), "{msg}");
+    }
+
+    #[test]
+    fn malformed_shape_is_a_structured_error() {
+        let msg = load_error(
+            "badshape",
+            r#"{"version": 1, "entries": [
+                {"name": "x", "file": "x.bin", "inputs": [["f64", [2]]],
+                 "outputs": [], "params": {}}
+            ]}"#,
+        );
+        assert!(msg.contains("entry 0") && msg.contains("dtype"), "{msg}");
     }
 }

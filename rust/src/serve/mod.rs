@@ -1,0 +1,33 @@
+//! Clustering-as-a-service: snapshot a fitted model, serve assignments,
+//! hot-swap refreshed models without dropping queries.
+//!
+//! Three layers, each usable alone:
+//!
+//! * [`model`] — [`ServeModel`]: the frozen medoid set with packed
+//!   panels and the one shared batched-assign helper. Everything that
+//!   assigns labels after a fit (held-out metrics, the serve loop, a
+//!   reloaded snapshot) routes through it, which is what makes
+//!   "reload assigns bit-identically to the fitting session" a
+//!   structural guarantee instead of a test hope.
+//! * [`snapshot`] — [`SnapshotWriter`]/[`SnapshotReader`]: persist a
+//!   model through the `runtime/manifest` artifact machinery with f32s
+//!   as IEEE-754 bit patterns (exact round-trip) and a fit fingerprint
+//!   checked on reload.
+//! * [`server`] + [`swap`] + [`refresh`] — the serving runtime:
+//!   [`ServeLoop`] workers coalesce queries into GEMM-sized
+//!   micro-batches against a [`ModelSlot`] that a background
+//!   [`Refresher`] hot-swaps per epoch; every response carries its
+//!   generation so tests (and cautious clients) can pin one.
+pub mod model;
+pub mod refresh;
+pub mod server;
+pub mod snapshot;
+pub mod swap;
+
+pub use model::{RowBlock, ServeModel, SnapshotFingerprint, MICRO_BATCH};
+pub use refresh::{refresh_epoch, RefreshConfig, Refresher};
+pub use server::{
+    CountersSnapshot, QueryResponse, ServeCounters, ServeHandle, ServeLoop, ServeOptions,
+};
+pub use snapshot::{SnapshotReader, SnapshotWriter};
+pub use swap::{ModelSlot, PinnedModel};

@@ -1,0 +1,456 @@
+//! The servable model: fixed medoid features + packed panels + the one
+//! shared batched-assign helper every query path routes through.
+//!
+//! Once a fit finishes, assignment is rank-C linear algebra against the
+//! medoid set (the embed-and-conquer observation: landmarks fixed →
+//! queries are cheap GEMMs). A [`ServeModel`] freezes exactly that:
+//! the medoid feature rows (dense or CSR), their [`PackedPanel`] for
+//! the micro-kernel, the per-medoid norms/diagonal, and the
+//! [`ClusterStats`] over the medoid landmark set (identity labels —
+//! each medoid is its own cluster, so `g_j = K(m_j, m_j)` and the
+//! Eq.8 assignment `argmin_j g_j − 2 K(x, m_j)` is the same branchless
+//! row-argmin the inner loop uses).
+//!
+//! **Bit-identity discipline.** Every consumer — `Session`'s held-out
+//! metrics, the serve loop's micro-batches, a model reloaded from a
+//! snapshot — builds through [`ServeModel::from_features`] and assigns
+//! through [`ServeModel::assign_rows`]. The micro-kernel guarantees
+//! per-row results independent of row grouping, so any micro-batch
+//! partition (1-row, 8-row, 64-row) of the same model yields identical
+//! labels, and a reloaded model with bit-identical features yields
+//! labels identical to the fitting session's.
+use crate::cluster::assign::{argmin_rows_into, ClusterStats};
+use crate::data::CsrMat;
+use crate::kernels::microkernel::{self, PackedPanel};
+use crate::kernels::KernelFn;
+use crate::linalg::{row_sq_norms, simd, Mat};
+use crate::util::error::{Error, Result};
+
+/// Default micro-batch row count for query coalescing: a multiple of
+/// the micro-kernel's register block that amortizes dispatch without
+/// hurting tail latency.
+pub const MICRO_BATCH: usize = 64;
+
+/// A block of feature rows in either Gram operand storage. Used for the
+/// model's medoid features, for appended refresh data, and for query
+/// payloads — one enum, so dense and CSR route through the same helper.
+#[derive(Clone, Debug)]
+pub enum RowBlock {
+    Dense(Mat),
+    Csr(CsrMat),
+}
+
+impl RowBlock {
+    pub fn rows(&self) -> usize {
+        match self {
+            RowBlock::Dense(m) => m.rows(),
+            RowBlock::Csr(x) => x.rows(),
+        }
+    }
+
+    /// Feature dimension (Gram operand depth).
+    pub fn dim(&self) -> usize {
+        match self {
+            RowBlock::Dense(m) => m.cols(),
+            RowBlock::Csr(x) => x.cols(),
+        }
+    }
+
+    /// Storage kind name, matching `Session::storage()`.
+    pub fn storage(&self) -> &'static str {
+        match self {
+            RowBlock::Dense(_) => "dense",
+            RowBlock::Csr(_) => "csr",
+        }
+    }
+}
+
+/// Identity of the fit a model came from. Persisted with every
+/// snapshot and checked on reload (like the epoch-checkpoint
+/// fingerprint): a silent mismatch would serve another run's medoids.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapshotFingerprint {
+    /// Canonical dataset spec string (`toy2d:200`, `rcv1:...:sparse`).
+    pub dataset: String,
+    pub seed: u64,
+    pub b: usize,
+    pub c: usize,
+    /// Training set size the medoid indices refer to.
+    pub n: usize,
+    /// Gram operand storage (`dense` | `csr`).
+    pub storage: String,
+    /// Engine that ran the fit (`native`, `sharded:<p>`, ...).
+    pub engine: String,
+}
+
+impl SnapshotFingerprint {
+    /// Fingerprint for a transient model never meant for persistence
+    /// (the `assign_test_set` path builds one per call).
+    pub fn adhoc(storage: &str, c: usize, n: usize) -> SnapshotFingerprint {
+        SnapshotFingerprint {
+            dataset: "adhoc".into(),
+            seed: 0,
+            b: 0,
+            c,
+            n,
+            storage: storage.into(),
+            engine: "adhoc".into(),
+        }
+    }
+
+    fn render(&self) -> String {
+        format!(
+            "dataset={} seed={:016x} B={} C={} N={} storage={} engine={}",
+            self.dataset, self.seed, self.b, self.c, self.n, self.storage, self.engine
+        )
+    }
+
+    /// Reject a snapshot written by a different fit; the error names
+    /// both fingerprints so the mismatch is diagnosable.
+    pub fn check(&self, expect: &SnapshotFingerprint) -> Result<()> {
+        if self != expect {
+            return Err(Error::Config(format!(
+                "snapshot fingerprint mismatch: file has [{}], expected [{}]; \
+                 refit or point at the matching snapshot",
+                self.render(),
+                expect.render()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A fitted, immutable, servable model (see module docs). Cheap to
+/// share read-only across worker threads behind an `Arc`: the packed
+/// panel is packed once at construction and never mutated.
+#[derive(Clone, Debug)]
+pub struct ServeModel {
+    kernel: KernelFn,
+    /// Medoid feature rows, in cluster order (row `j` = cluster `j`).
+    features: RowBlock,
+    /// Medoid columns packed for the micro-kernel GEMM.
+    packed: PackedPanel,
+    /// `‖m_j‖²` in packed (= cluster) order.
+    med_norms: Vec<f32>,
+    /// `ClusterStats` over the medoid landmark set with identity
+    /// labels: counts all 1, `g_j = K(m_j, m_j)`.
+    stats: ClusterStats,
+    /// `stats.masked_g()` cached for the assignment argmin.
+    g: Vec<f32>,
+    /// Global cluster weights `|w_j|` from the fit (Eq.11 merge state,
+    /// carried so background refresh can continue the convex merge).
+    weights: Vec<usize>,
+    /// Medoid sample indices in the fitting (or refresh) working set —
+    /// provenance only, never dereferenced by the serve path.
+    medoids: Vec<usize>,
+    fingerprint: SnapshotFingerprint,
+}
+
+impl ServeModel {
+    /// Build a model from medoid features. This is the **single**
+    /// construction path — the fitting session, the snapshot reader and
+    /// the refresh epoch all come through here, so every derived
+    /// quantity (norms, packed panel, diagonal, stats) is computed by
+    /// one code path and reloads stay bit-identical.
+    pub fn from_features(
+        features: RowBlock,
+        kernel: KernelFn,
+        weights: Vec<usize>,
+        medoids: Vec<usize>,
+        fingerprint: SnapshotFingerprint,
+    ) -> Result<ServeModel> {
+        let c = features.rows();
+        if c == 0 {
+            return Err(Error::Config("a servable model needs at least one medoid".into()));
+        }
+        if features.dim() == 0 {
+            return Err(Error::Shape("medoid features have zero dimension".into()));
+        }
+        if weights.len() != c || medoids.len() != c {
+            return Err(Error::Shape(format!(
+                "medoid metadata mismatch: {c} feature rows, {} weights, {} indices",
+                weights.len(),
+                medoids.len()
+            )));
+        }
+        let cols: Vec<usize> = (0..c).collect();
+        let (packed, med_norms) = match &features {
+            RowBlock::Dense(m) => (PackedPanel::pack_gather(m, &cols), row_sq_norms(m)),
+            RowBlock::Csr(x) => (PackedPanel::pack_gather_csr(x, &cols), x.sq_norms().to_vec()),
+        };
+        // exact diagonal from the cached norm (d² = 0), mirroring
+        // `VecGram::diag` — never the GEMM's norm-reconstructed d²
+        let med_diag: Vec<f32> =
+            med_norms.iter().map(|&nn| kernel.from_parts(0.0, nn)).collect();
+        // ClusterStats over the medoid landmark set with identity
+        // labels: only K_mm's diagonal enters g, so the off-diagonal
+        // can stay zero without changing any derived value
+        let identity: Vec<usize> = (0..c).collect();
+        let k_mm = Mat::from_fn(c, c, |i, j| if i == j { med_diag[i] } else { 0.0 });
+        let stats = ClusterStats::compute(&k_mm, &identity, c);
+        let g = stats.masked_g();
+        Ok(ServeModel {
+            kernel,
+            features,
+            packed,
+            med_norms,
+            stats,
+            g,
+            weights,
+            medoids,
+            fingerprint,
+        })
+    }
+
+    pub fn c(&self) -> usize {
+        self.features.rows()
+    }
+
+    /// Feature dimension queries must match.
+    pub fn dim(&self) -> usize {
+        self.features.dim()
+    }
+
+    pub fn storage(&self) -> &'static str {
+        self.features.storage()
+    }
+
+    pub fn kernel(&self) -> KernelFn {
+        self.kernel
+    }
+
+    pub fn features(&self) -> &RowBlock {
+        &self.features
+    }
+
+    pub fn stats(&self) -> &ClusterStats {
+        &self.stats
+    }
+
+    pub fn weights(&self) -> &[usize] {
+        &self.weights
+    }
+
+    pub fn medoids(&self) -> &[usize] {
+        &self.medoids
+    }
+
+    pub fn med_norms(&self) -> &[f32] {
+        &self.med_norms
+    }
+
+    pub fn fingerprint(&self) -> &SnapshotFingerprint {
+        &self.fingerprint
+    }
+
+    /// Resident bytes of the packed medoid panel (reporting only).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.n_panels() * self.packed.depth() * microkernel::NR
+            * std::mem::size_of::<f32>()
+    }
+
+    /// Assign a set of dense rows (by index into `x`, with `xn` squared
+    /// norms indexed by sample id) and push labels onto `out`. One
+    /// fused Gram fill against the packed medoid panel, then the shared
+    /// branchless argmin of `g_j − 2 K(x, m_j)`.
+    pub fn assign_dense_rows(
+        &self,
+        x: &Mat,
+        rows: &[usize],
+        xn: &[f32],
+        out: &mut Vec<usize>,
+    ) -> Result<()> {
+        if x.cols() != self.packed.depth() {
+            return Err(Error::Shape(format!(
+                "query dimension {} does not match the model's {}",
+                x.cols(),
+                self.packed.depth()
+            )));
+        }
+        let c = self.c();
+        let mut k = vec![0.0f32; rows.len() * c];
+        microkernel::fill_gram_rows(
+            simd::active_tier(),
+            x,
+            rows,
+            &self.packed,
+            xn,
+            &self.med_norms,
+            self.kernel,
+            &mut k,
+        );
+        argmin_rows_into(&k, c, &self.g, out);
+        Ok(())
+    }
+
+    /// CSR twin of [`ServeModel::assign_dense_rows`], sharing the same
+    /// packed panel, epilogue and argmin.
+    pub fn assign_csr_rows(
+        &self,
+        x: &CsrMat,
+        rows: &[usize],
+        out: &mut Vec<usize>,
+    ) -> Result<()> {
+        if x.cols() != self.packed.depth() {
+            return Err(Error::Shape(format!(
+                "query dimension {} does not match the model's {}",
+                x.cols(),
+                self.packed.depth()
+            )));
+        }
+        let c = self.c();
+        let mut k = vec![0.0f32; rows.len() * c];
+        microkernel::fill_gram_rows_csr(
+            simd::active_tier(),
+            x,
+            rows,
+            &self.packed,
+            x.sq_norms(),
+            &self.med_norms,
+            self.kernel,
+            &mut k,
+        );
+        argmin_rows_into(&k, c, &self.g, out);
+        Ok(())
+    }
+
+    /// Assign every row of a dense matrix, micro-batched at
+    /// [`MICRO_BATCH`] rows (bit-identical to any other chunking).
+    pub fn assign_dense(&self, x: &Mat) -> Result<Vec<usize>> {
+        let xn = row_sq_norms(x);
+        let all: Vec<usize> = (0..x.rows()).collect();
+        let mut out = Vec::with_capacity(x.rows());
+        for chunk in all.chunks(MICRO_BATCH) {
+            self.assign_dense_rows(x, chunk, &xn, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Assign every row of a CSR matrix (micro-batched as above).
+    pub fn assign_csr(&self, x: &CsrMat) -> Result<Vec<usize>> {
+        let all: Vec<usize> = (0..x.rows()).collect();
+        let mut out = Vec::with_capacity(x.rows());
+        for chunk in all.chunks(MICRO_BATCH) {
+            self.assign_csr_rows(x, chunk, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// The shared batched-assign helper: dense and CSR query blocks
+    /// through one entry point (the serve loop and the CLI route here).
+    pub fn assign_rows(&self, rows: &RowBlock) -> Result<Vec<usize>> {
+        match rows {
+            RowBlock::Dense(m) => self.assign_dense(m),
+            RowBlock::Csr(x) => self.assign_csr(x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy_model(seed: u64, c: usize, d: usize) -> (ServeModel, Mat) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(40, d, |_, _| rng.normal32(0.0, 2.0));
+        let medoids: Vec<usize> = (0..c).map(|j| j * 3).collect();
+        let model = ServeModel::from_features(
+            RowBlock::Dense(x.gather(&medoids)),
+            KernelFn::Rbf { gamma: 0.3 },
+            vec![1; c],
+            medoids,
+            SnapshotFingerprint::adhoc("dense", c, 40),
+        )
+        .unwrap();
+        (model, x)
+    }
+
+    #[test]
+    fn identity_stats_are_unit_counts_and_rbf_diag() {
+        let (model, _) = toy_model(7, 5, 6);
+        assert_eq!(model.stats().counts, vec![1; 5]);
+        for &g in &model.stats().g {
+            assert_eq!(g, 1.0, "RBF diagonal must be exactly 1");
+        }
+    }
+
+    #[test]
+    fn chunked_assign_matches_whole_assign() {
+        let (model, x) = toy_model(11, 4, 6);
+        let whole = model.assign_dense(&x).unwrap();
+        let xn = row_sq_norms(&x);
+        let all: Vec<usize> = (0..x.rows()).collect();
+        for chunk_size in [1usize, 3, 8, 17] {
+            let mut labels = Vec::new();
+            for chunk in all.chunks(chunk_size) {
+                model.assign_dense_rows(&x, chunk, &xn, &mut labels).unwrap();
+            }
+            assert_eq!(whole, labels, "chunk size {chunk_size} diverged");
+        }
+    }
+
+    #[test]
+    fn csr_and_dense_views_of_same_data_agree() {
+        let mut rng = Rng::new(3);
+        // sparse-ish data with exact zero runs
+        let x = Mat::from_fn(30, 8, |_, _| {
+            if rng.below(4) == 0 {
+                rng.normal32(0.0, 1.0)
+            } else {
+                0.0
+            }
+        });
+        let medoids = vec![0usize, 5, 9];
+        let dense = ServeModel::from_features(
+            RowBlock::Dense(x.gather(&medoids)),
+            KernelFn::Rbf { gamma: 0.5 },
+            vec![1; 3],
+            medoids.clone(),
+            SnapshotFingerprint::adhoc("dense", 3, 30),
+        )
+        .unwrap();
+        let xc = CsrMat::from_dense(&x);
+        let csr = ServeModel::from_features(
+            RowBlock::Csr(xc.gather(&medoids)),
+            KernelFn::Rbf { gamma: 0.5 },
+            vec![1; 3],
+            medoids,
+            SnapshotFingerprint::adhoc("csr", 3, 30),
+        )
+        .unwrap();
+        let a = dense.assign_dense(&x).unwrap();
+        let b = csr.assign_csr(&xc).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dimension_mismatch_is_a_shape_error() {
+        let (model, _) = toy_model(5, 3, 6);
+        let bad = Mat::zeros(4, 7);
+        assert!(model.assign_dense(&bad).is_err());
+    }
+
+    #[test]
+    fn fingerprint_mismatch_names_both_sides() {
+        let a = SnapshotFingerprint::adhoc("dense", 3, 40);
+        let mut b = a.clone();
+        b.seed = 9;
+        let err = a.check(&b).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("fingerprint mismatch"), "{msg}");
+        assert!(msg.contains("seed=0000000000000009"), "{msg}");
+    }
+
+    #[test]
+    fn empty_model_is_rejected() {
+        let err = ServeModel::from_features(
+            RowBlock::Dense(Mat::zeros(0, 4)),
+            KernelFn::Linear,
+            vec![],
+            vec![],
+            SnapshotFingerprint::adhoc("dense", 0, 0),
+        );
+        assert!(err.is_err());
+    }
+}

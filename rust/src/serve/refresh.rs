@@ -1,0 +1,308 @@
+//! Background refresh: continue mini-batch iteration on appended data
+//! and publish a new model per epoch through the hot-swap slot.
+//!
+//! One refresh epoch is one outer-loop step of Alg.1 over the appended
+//! block, seeded from the *serving* medoids instead of k-means++: Eq.8
+//! assignment of the appended rows to the current medoids, the inner GD
+//! loop (Eq.15-17) to a label fixed point with the appended rows as
+//! landmarks, Eq.7/10 medoid extraction, and the Eq.11-13 convex merge
+//! against the carried cluster weights — the exact
+//! [`crate::cluster::merge_medoid`] rule the fit used, so a refreshed
+//! model is what the fit would have produced had the data arrived one
+//! batch later. The epoch is RNG-free and therefore deterministic:
+//! generation-pinned equivalence tests can replay it.
+//!
+//! The working set is small (C medoid rows + the appended block), so
+//! each epoch builds a throwaway [`VecGram`] over it; the serving path
+//! never waits — [`Refresher`] computes off-lock and swaps via
+//! [`ModelSlot::publish`].
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::cluster::assign::{inner_iteration, similarity_f};
+use crate::cluster::{assign_to_medoids, merge_medoid};
+use crate::data::CsrMat;
+use crate::kernels::{GramSource, VecGram};
+use crate::linalg::Mat;
+use crate::util::error::{Error, Result};
+
+use super::model::{RowBlock, ServeModel};
+use super::swap::ModelSlot;
+
+/// Knobs for one refresh epoch.
+#[derive(Clone, Copy, Debug)]
+pub struct RefreshConfig {
+    /// Inner GD iteration cap (the fit's default is 100; refresh blocks
+    /// are small, 30 converges in practice).
+    pub max_inner: usize,
+}
+
+impl Default for RefreshConfig {
+    fn default() -> RefreshConfig {
+        RefreshConfig { max_inner: 30 }
+    }
+}
+
+/// Concatenate the model's medoid rows with the appended block into one
+/// working set (rows `0..c` = medoids, `c..c+nb` = appended).
+fn combined_gram(model: &ServeModel, appended: &RowBlock) -> Result<VecGram> {
+    if appended.rows() == 0 {
+        return Err(Error::Config("refresh needs at least one appended row".into()));
+    }
+    if appended.dim() != model.dim() {
+        return Err(Error::Shape(format!(
+            "appended rows have dimension {}, the model serves {}",
+            appended.dim(),
+            model.dim()
+        )));
+    }
+    match (model.features(), appended) {
+        (RowBlock::Dense(med), RowBlock::Dense(rows)) => {
+            let mut data = Vec::with_capacity((med.rows() + rows.rows()) * med.cols());
+            data.extend_from_slice(med.data());
+            data.extend_from_slice(rows.data());
+            let combined = Mat::from_vec(med.rows() + rows.rows(), med.cols(), data)?;
+            Ok(VecGram::new(combined, model.kernel(), 1))
+        }
+        (RowBlock::Csr(med), RowBlock::Csr(rows)) => {
+            let mut entry_rows = Vec::with_capacity(med.rows() + rows.rows());
+            for r in 0..med.rows() {
+                let (idx, vals) = med.row(r);
+                entry_rows.push(
+                    idx.iter().map(|&i| i as usize).zip(vals.iter().copied()).collect(),
+                );
+            }
+            for r in 0..rows.rows() {
+                let (idx, vals) = rows.row(r);
+                entry_rows.push(
+                    idx.iter().map(|&i| i as usize).zip(vals.iter().copied()).collect(),
+                );
+            }
+            let combined = CsrMat::from_rows(med.cols(), entry_rows);
+            Ok(VecGram::from_csr(combined, model.kernel(), 1))
+        }
+        _ => Err(Error::Config(format!(
+            "appended rows are {} but the model stores {} features",
+            appended.storage(),
+            model.features().storage()
+        ))),
+    }
+}
+
+/// Run one refresh epoch (see module docs) and return the new model.
+/// Deterministic in (model, appended) — no RNG is consulted.
+pub fn refresh_epoch(
+    model: &ServeModel,
+    appended: &RowBlock,
+    cfg: &RefreshConfig,
+) -> Result<ServeModel> {
+    let c = model.c();
+    let gram = combined_gram(model, appended)?;
+    let nb = appended.rows();
+    let meds: Vec<usize> = (0..c).collect();
+    let batch: Vec<usize> = (c..c + nb).collect();
+
+    // Eq.8 seeding from the serving medoids
+    let mut batch_labels = assign_to_medoids(&gram, &batch, &meds);
+    let mut diag = vec![0.0f32; nb];
+    gram.diag(&batch, &mut diag);
+
+    // inner GD loop to a label fixed point; the appended rows are both
+    // the block and the landmark set, so K_bl = K_ll
+    let k_ll = gram.block_mat(&batch, &batch);
+    let mut stats;
+    let mut iters = 0;
+    loop {
+        let (new_labels, new_stats) = inner_iteration(&k_ll, &k_ll, &batch_labels, c);
+        stats = new_stats;
+        let fixed = new_labels == batch_labels;
+        batch_labels = new_labels;
+        iters += 1;
+        if fixed || iters >= cfg.max_inner.max(1) {
+            break;
+        }
+    }
+
+    // Eq.7/10 medoid extraction over the appended block
+    let f = similarity_f(&k_ll, &batch_labels, &stats);
+    let batch_medoids: Vec<Option<usize>> = (0..c)
+        .map(|j| {
+            if stats.counts[j] == 0 {
+                return None;
+            }
+            let mut best = None;
+            let mut best_v = f32::INFINITY;
+            for r in 0..nb {
+                let v = diag[r] - 2.0 * f.at(r, j);
+                if v < best_v {
+                    best_v = v;
+                    best = Some(batch[r]);
+                }
+            }
+            best
+        })
+        .collect();
+    let mut batch_counts = vec![0usize; c];
+    for &u in &batch_labels {
+        batch_counts[u] += 1;
+    }
+
+    // Eq.11-13 convex merge against the carried weights
+    let mut weights = model.weights().to_vec();
+    let mut new_meds: Vec<usize> = meds.clone();
+    for j in 0..c {
+        let Some(m_new) = batch_medoids[j] else {
+            continue; // cluster empty in this block: alpha = 0
+        };
+        if weights[j] == 0 {
+            new_meds[j] = m_new; // first real content: alpha = 1
+        } else {
+            let alpha = batch_counts[j] as f64 / (batch_counts[j] + weights[j]) as f64;
+            new_meds[j] = merge_medoid(&gram, &batch, &diag, j, m_new, alpha);
+        }
+        weights[j] += batch_counts[j];
+    }
+
+    // re-materialize medoid features from the working set
+    let features = match gram.storage() {
+        crate::kernels::VecStorage::Dense(x) => RowBlock::Dense(x.gather(&new_meds)),
+        crate::kernels::VecStorage::Csr(x) => RowBlock::Csr(x.gather(&new_meds)),
+    };
+    ServeModel::from_features(
+        features,
+        model.kernel(),
+        weights,
+        new_meds,
+        model.fingerprint().clone(),
+    )
+}
+
+/// Background refresh thread: appended blocks in, one published
+/// generation out per block. Dropping the handle (or calling
+/// [`Refresher::finish`]) closes the channel and joins the thread.
+pub struct Refresher {
+    tx: Option<Sender<RowBlock>>,
+    handle: Option<JoinHandle<Result<u64>>>,
+}
+
+impl Refresher {
+    pub fn spawn(slot: Arc<ModelSlot>, cfg: RefreshConfig) -> Refresher {
+        let (tx, rx) = channel::<RowBlock>();
+        let handle = std::thread::spawn(move || -> Result<u64> {
+            let mut epochs = 0u64;
+            while let Ok(block) = rx.recv() {
+                let pinned = slot.load();
+                let next = refresh_epoch(&pinned.model, &block, &cfg)?;
+                slot.publish(next);
+                epochs += 1;
+            }
+            Ok(epochs)
+        });
+        Refresher { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Queue an appended block for the next epoch (non-blocking).
+    pub fn append(&self, rows: RowBlock) -> Result<()> {
+        self.tx
+            .as_ref()
+            .expect("refresher channel alive until finish()")
+            .send(rows)
+            .map_err(|_| Error::Runtime("refresh thread exited early".into()))
+    }
+
+    /// Close the queue, drain remaining blocks, join; returns how many
+    /// epochs were published.
+    pub fn finish(mut self) -> Result<u64> {
+        drop(self.tx.take());
+        let handle = self.handle.take().expect("finish() runs once");
+        handle
+            .join()
+            .map_err(|_| Error::Runtime("refresh thread panicked".into()))?
+    }
+}
+
+impl Drop for Refresher {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelFn;
+    use crate::serve::model::SnapshotFingerprint;
+    use crate::util::rng::Rng;
+
+    fn clustered_data(seed: u64, per: usize) -> Mat {
+        let mut rng = Rng::new(seed);
+        let centers = [(-4.0f32, -4.0f32), (4.0, 4.0), (4.0, -4.0)];
+        Mat::from_fn(per * 3, 2, |r, c| {
+            let (cx, cy) = centers[r / per];
+            let base = if c == 0 { cx } else { cy };
+            base + rng.normal32(0.0, 0.5)
+        })
+    }
+
+    fn seed_model(x: &Mat) -> ServeModel {
+        let medoids = vec![0usize, 1, 2]; // all from cluster 0: refresh must fix this
+        ServeModel::from_features(
+            RowBlock::Dense(x.gather(&medoids)),
+            KernelFn::Rbf { gamma: 0.2 },
+            vec![1; 3],
+            medoids,
+            SnapshotFingerprint::adhoc("dense", 3, x.rows()),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn refresh_epoch_is_deterministic() {
+        let x = clustered_data(9, 12);
+        let model = seed_model(&x);
+        let appended = RowBlock::Dense(x.clone());
+        let cfg = RefreshConfig::default();
+        let a = refresh_epoch(&model, &appended, &cfg).unwrap();
+        let b = refresh_epoch(&model, &appended, &cfg).unwrap();
+        assert_eq!(a.medoids(), b.medoids());
+        assert_eq!(a.weights(), b.weights());
+        let labels_a = a.assign_dense(&x).unwrap();
+        let labels_b = b.assign_dense(&x).unwrap();
+        assert_eq!(labels_a, labels_b);
+    }
+
+    #[test]
+    fn refresh_accumulates_weights() {
+        let x = clustered_data(5, 10);
+        let model = seed_model(&x);
+        let appended = RowBlock::Dense(x.clone());
+        let next = refresh_epoch(&model, &appended, &RefreshConfig::default()).unwrap();
+        let total: usize = next.weights().iter().sum();
+        assert_eq!(total, 3 + x.rows(), "every appended row joins a cluster once");
+    }
+
+    #[test]
+    fn storage_mismatch_is_structured() {
+        let x = clustered_data(5, 6);
+        let model = seed_model(&x);
+        let appended = RowBlock::Csr(CsrMat::from_dense(&x));
+        let err = refresh_epoch(&model, &appended, &RefreshConfig::default()).unwrap_err();
+        assert!(format!("{err}").contains("dense"), "{err}");
+    }
+
+    #[test]
+    fn refresher_publishes_per_block() {
+        let x = clustered_data(3, 8);
+        let slot = Arc::new(ModelSlot::new(seed_model(&x)));
+        let refresher = Refresher::spawn(slot.clone(), RefreshConfig::default());
+        refresher.append(RowBlock::Dense(x.clone())).unwrap();
+        refresher.append(RowBlock::Dense(x.clone())).unwrap();
+        let epochs = refresher.finish().unwrap();
+        assert_eq!(epochs, 2);
+        assert_eq!(slot.generation(), 2);
+    }
+}

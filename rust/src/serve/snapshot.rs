@@ -1,0 +1,486 @@
+//! Model snapshots: persist a fitted [`ServeModel`] through the
+//! `runtime/manifest.rs` artifact machinery and reload it bit-identical.
+//!
+//! A snapshot is an artifact directory:
+//!
+//! ```text
+//! <dir>/manifest.json   version-1 manifest with one "model" entry
+//! <dir>/model.json      the payload that entry points at
+//! ```
+//!
+//! The manifest is the same schema `runtime::Manifest` loads (so the
+//! reader rides on its hardened error path); the payload carries the
+//! fingerprint of the fitting run plus the medoid features. Every `f32`
+//! is stored as its IEEE-754 bit pattern in hex — JSON's decimal
+//! numbers do not round-trip every `f32`, and bit-exact features are
+//! what makes a reloaded model assign identically to the fitting
+//! session. `u64` seeds are hex for the same reason (`f64` cannot hold
+//! every `u64`). Writes are atomic (`.tmp` + rename), like the epoch
+//! checkpoints.
+use std::path::{Path, PathBuf};
+
+use crate::data::CsrMat;
+use crate::kernels::KernelFn;
+use crate::linalg::Mat;
+use crate::runtime::Manifest;
+use crate::util::error::{Error, Result};
+use crate::util::json::Json;
+
+use super::model::{RowBlock, ServeModel, SnapshotFingerprint};
+
+const SNAPSHOT_VERSION: usize = 1;
+/// Manifest entry name the reader looks up.
+const MODEL_ENTRY: &str = "model";
+const MODEL_FILE: &str = "model.json";
+
+fn bits(v: f32) -> Json {
+    Json::str(&format!("{:08x}", v.to_bits()))
+}
+
+fn from_bits(j: &Json, what: &str) -> Result<f32> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| Error::Config(format!("snapshot {what}: expected a hex bit string")))?;
+    u32::from_str_radix(s, 16)
+        .map(f32::from_bits)
+        .map_err(|e| Error::Config(format!("snapshot {what}: bad hex '{s}': {e}")))
+}
+
+fn usize_arr(j: &Json, key: &str) -> Result<Vec<usize>> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Config(format!("snapshot missing array '{key}'")))?;
+    arr.iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| Error::Config(format!("snapshot '{key}': non-integer entry")))
+        })
+        .collect()
+}
+
+fn f32_arr(j: &Json, what: &str) -> Result<Vec<f32>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| Error::Config(format!("snapshot {what}: expected an array")))?;
+    arr.iter().map(|v| from_bits(v, what)).collect()
+}
+
+fn fingerprint_json(fp: &SnapshotFingerprint) -> Json {
+    Json::obj(vec![
+        ("dataset", Json::str(&fp.dataset)),
+        ("seed", Json::str(&format!("{:016x}", fp.seed))),
+        ("b", Json::num(fp.b as f64)),
+        ("c", Json::num(fp.c as f64)),
+        ("n", Json::num(fp.n as f64)),
+        ("storage", Json::str(&fp.storage)),
+        ("engine", Json::str(&fp.engine)),
+    ])
+}
+
+fn fingerprint_from_json(j: &Json) -> Result<SnapshotFingerprint> {
+    let fp = j
+        .get("fingerprint")
+        .ok_or_else(|| Error::Config("snapshot missing 'fingerprint'".into()))?;
+    let seed_hex = fp.req_str("seed")?;
+    let seed = u64::from_str_radix(seed_hex, 16)
+        .map_err(|e| Error::Config(format!("snapshot fingerprint seed '{seed_hex}': {e}")))?;
+    Ok(SnapshotFingerprint {
+        dataset: fp.req_str("dataset")?.to_string(),
+        seed,
+        b: fp.req_usize("b")?,
+        c: fp.req_usize("c")?,
+        n: fp.req_usize("n")?,
+        storage: fp.req_str("storage")?.to_string(),
+        engine: fp.req_str("engine")?.to_string(),
+    })
+}
+
+fn kernel_json(k: KernelFn) -> Json {
+    match k {
+        KernelFn::Linear => Json::obj(vec![("type", Json::str("linear"))]),
+        KernelFn::Rbf { gamma } => {
+            Json::obj(vec![("type", Json::str("rbf")), ("gamma_bits", bits(gamma))])
+        }
+        KernelFn::Poly { degree, c } => Json::obj(vec![
+            ("type", Json::str("poly")),
+            ("degree", Json::num(degree as f64)),
+            ("c_bits", bits(c)),
+        ]),
+    }
+}
+
+fn kernel_from_json(j: &Json) -> Result<KernelFn> {
+    let k = j
+        .get("kernel")
+        .ok_or_else(|| Error::Config("snapshot missing 'kernel'".into()))?;
+    match k.req_str("type")? {
+        "linear" => Ok(KernelFn::Linear),
+        "rbf" => Ok(KernelFn::Rbf { gamma: from_bits(k.req("gamma_bits")?, "kernel gamma")? }),
+        "poly" => Ok(KernelFn::Poly {
+            degree: k.req_usize("degree")? as u32,
+            c: from_bits(k.req("c_bits")?, "kernel c")?,
+        }),
+        other => Err(Error::Config(format!("snapshot kernel type '{other}' unknown"))),
+    }
+}
+
+fn features_json(features: &RowBlock) -> Json {
+    match features {
+        RowBlock::Dense(m) => Json::obj(vec![
+            ("storage", Json::str("dense")),
+            ("dim", Json::num(m.cols() as f64)),
+            (
+                "rows",
+                Json::arr((0..m.rows()).map(|r| Json::arr(m.row(r).iter().map(|&v| bits(v))))),
+            ),
+        ]),
+        RowBlock::Csr(x) => Json::obj(vec![
+            ("storage", Json::str("csr")),
+            ("dim", Json::num(x.cols() as f64)),
+            (
+                "rows",
+                Json::arr((0..x.rows()).map(|r| {
+                    let (idx, vals) = x.row(r);
+                    Json::obj(vec![
+                        ("idx", Json::arr(idx.iter().map(|&i| Json::num(i as f64)))),
+                        ("val", Json::arr(vals.iter().map(|&v| bits(v)))),
+                    ])
+                })),
+            ),
+        ]),
+    }
+}
+
+fn features_from_json(j: &Json) -> Result<RowBlock> {
+    let f = j
+        .get("features")
+        .ok_or_else(|| Error::Config("snapshot missing 'features'".into()))?;
+    let dim = f.req_usize("dim")?;
+    let rows = f
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Config("snapshot features missing 'rows' array".into()))?;
+    match f.req_str("storage")? {
+        "dense" => {
+            let mut data = Vec::with_capacity(rows.len() * dim);
+            for (r, row) in rows.iter().enumerate() {
+                let vals = f32_arr(row, "dense feature row")?;
+                if vals.len() != dim {
+                    return Err(Error::Shape(format!(
+                        "snapshot dense row {r} has {} values, expected {dim}",
+                        vals.len()
+                    )));
+                }
+                data.extend_from_slice(&vals);
+            }
+            Ok(RowBlock::Dense(Mat::from_vec(rows.len(), dim, data)?))
+        }
+        "csr" => {
+            let mut entry_rows = Vec::with_capacity(rows.len());
+            for (r, row) in rows.iter().enumerate() {
+                let idx = usize_arr(row, "idx")?;
+                let vals = f32_arr(
+                    row.get("val")
+                        .ok_or_else(|| Error::Config("snapshot csr row missing 'val'".into()))?,
+                    "csr feature value",
+                )?;
+                if idx.len() != vals.len() {
+                    return Err(Error::Shape(format!(
+                        "snapshot csr row {r}: {} indices vs {} values",
+                        idx.len(),
+                        vals.len()
+                    )));
+                }
+                if let Some(&bad) = idx.iter().find(|&&i| i >= dim) {
+                    return Err(Error::Shape(format!(
+                        "snapshot csr row {r}: column {bad} out of dim {dim}"
+                    )));
+                }
+                entry_rows.push(idx.into_iter().zip(vals).collect::<Vec<(usize, f32)>>());
+            }
+            Ok(RowBlock::Csr(CsrMat::from_rows(dim, entry_rows)))
+        }
+        other => Err(Error::Config(format!("snapshot storage '{other}' unknown"))),
+    }
+}
+
+fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Writes model snapshots into an artifact directory.
+pub struct SnapshotWriter {
+    dir: PathBuf,
+}
+
+impl SnapshotWriter {
+    pub fn new(dir: impl Into<PathBuf>) -> SnapshotWriter {
+        SnapshotWriter { dir: dir.into() }
+    }
+
+    /// Persist `model` as `<dir>/manifest.json` + `<dir>/model.json`
+    /// (both written atomically; the manifest last, so a readable
+    /// manifest always points at a complete payload). Returns the
+    /// manifest path.
+    pub fn write(&self, model: &ServeModel) -> Result<PathBuf> {
+        let fp = model.fingerprint();
+        let payload = Json::obj(vec![
+            ("version", Json::num(SNAPSHOT_VERSION as f64)),
+            ("fingerprint", fingerprint_json(fp)),
+            ("kernel", kernel_json(model.kernel())),
+            ("features", features_json(model.features())),
+            // landmark labels over the medoid set are the identity —
+            // recorded explicitly so the file is self-describing
+            (
+                "lm_labels",
+                Json::arr((0..model.c()).map(|j| Json::num(j as f64))),
+            ),
+            (
+                "weights",
+                Json::arr(model.weights().iter().map(|&w| Json::num(w as f64))),
+            ),
+            (
+                "medoids",
+                Json::arr(model.medoids().iter().map(|&m| Json::num(m as f64))),
+            ),
+            // norms are derivable from the features; persisted so the
+            // reader can verify the rebuild is bit-exact
+            (
+                "med_norms",
+                Json::arr(model.med_norms().iter().map(|&v| bits(v))),
+            ),
+        ]);
+        let model_path = self.dir.join(MODEL_FILE);
+        write_atomic(&model_path, &payload.to_string())?;
+        let manifest = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            (
+                "entries",
+                Json::arr([Json::obj(vec![
+                    ("name", Json::str(MODEL_ENTRY)),
+                    ("file", Json::str(MODEL_FILE)),
+                    ("inputs", Json::Arr(vec![])),
+                    ("outputs", Json::Arr(vec![])),
+                    (
+                        "params",
+                        Json::obj(vec![
+                            ("kind", Json::str("dkkm-model")),
+                            ("c", Json::num(model.c() as f64)),
+                            ("d", Json::num(model.dim() as f64)),
+                            ("storage", Json::str(model.storage())),
+                            ("snapshot_version", Json::num(SNAPSHOT_VERSION as f64)),
+                        ]),
+                    ),
+                ])]),
+            ),
+        ]);
+        let manifest_path = self.dir.join("manifest.json");
+        write_atomic(&manifest_path, &manifest.to_string())?;
+        Ok(manifest_path)
+    }
+}
+
+/// Reads model snapshots written by [`SnapshotWriter`].
+pub struct SnapshotReader {
+    dir: PathBuf,
+}
+
+impl SnapshotReader {
+    pub fn new(dir: impl Into<PathBuf>) -> SnapshotReader {
+        SnapshotReader { dir: dir.into() }
+    }
+
+    /// Load and rebuild the model. Structured errors on missing or
+    /// corrupt files; the rebuilt medoid norms are verified against the
+    /// persisted bit patterns, so a loaded model either assigns
+    /// bit-identically to the fitting session or refuses to load.
+    pub fn load(&self) -> Result<ServeModel> {
+        let manifest = Manifest::load(&self.dir).map_err(|e| {
+            Error::Config(format!("snapshot {}: {e}", self.dir.display()))
+        })?;
+        let entry = manifest.find(MODEL_ENTRY).map_err(|e| {
+            Error::Config(format!("snapshot {}: {e}", self.dir.display()))
+        })?;
+        let text = std::fs::read_to_string(&entry.file).map_err(|e| {
+            Error::Config(format!("snapshot payload {}: {e}", entry.file.display()))
+        })?;
+        let j = Json::parse(&text).map_err(|e| {
+            Error::Config(format!("snapshot payload {}: {e}", entry.file.display()))
+        })?;
+        let version = j.req_usize("version")?;
+        if version != SNAPSHOT_VERSION {
+            return Err(Error::Config(format!(
+                "snapshot version {version} unsupported (expected {SNAPSHOT_VERSION})"
+            )));
+        }
+        let fingerprint = fingerprint_from_json(&j)?;
+        let kernel = kernel_from_json(&j)?;
+        let features = features_from_json(&j)?;
+        let weights = usize_arr(&j, "weights")?;
+        let medoids = usize_arr(&j, "medoids")?;
+        let model =
+            ServeModel::from_features(features, kernel, weights, medoids, fingerprint)?;
+        let stored_norms = f32_arr(
+            j.get("med_norms")
+                .ok_or_else(|| Error::Config("snapshot missing 'med_norms'".into()))?,
+            "medoid norm",
+        )?;
+        if stored_norms.len() != model.med_norms().len()
+            || stored_norms
+                .iter()
+                .zip(model.med_norms())
+                .any(|(a, b)| a.to_bits() != b.to_bits())
+        {
+            return Err(Error::Config(
+                "snapshot medoid norms did not rebuild bit-exactly; the payload is corrupt"
+                    .into(),
+            ));
+        }
+        Ok(model)
+    }
+
+    /// [`SnapshotReader::load`] plus a fingerprint check against the
+    /// expected fit identity (the checkpoint-style guard).
+    pub fn load_expecting(&self, expect: &SnapshotFingerprint) -> Result<ServeModel> {
+        let model = self.load()?;
+        model.fingerprint().check(expect)?;
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dkkm_snap_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn dense_model(seed: u64) -> ServeModel {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(24, 5, |_, _| rng.normal32(0.0, 1.5));
+        let medoids = vec![1usize, 7, 13];
+        ServeModel::from_features(
+            RowBlock::Dense(x.gather(&medoids)),
+            KernelFn::Rbf { gamma: 0.7 },
+            vec![8, 9, 7],
+            medoids,
+            SnapshotFingerprint {
+                dataset: "toy2d:8".into(),
+                seed,
+                b: 2,
+                c: 3,
+                n: 24,
+                storage: "dense".into(),
+                engine: "native".into(),
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dense_round_trip_is_bit_exact() {
+        let dir = tmp_dir("dense");
+        let model = dense_model(5);
+        SnapshotWriter::new(&dir).write(&model).unwrap();
+        let loaded = SnapshotReader::new(&dir).load().unwrap();
+        assert_eq!(loaded.fingerprint(), model.fingerprint());
+        assert_eq!(loaded.weights(), model.weights());
+        let (RowBlock::Dense(a), RowBlock::Dense(b)) =
+            (model.features(), loaded.features())
+        else {
+            panic!("storage changed in flight");
+        };
+        assert_eq!(a.data().len(), b.data().len());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn csr_round_trip_preserves_norm_bits() {
+        let dir = tmp_dir("csr");
+        let rows = vec![
+            vec![(0usize, 0.25f32), (3, -1.5)],
+            vec![(1, 2.0), (2, 0.125), (4, -0.75)],
+        ];
+        let x = CsrMat::from_rows(5, rows);
+        let model = ServeModel::from_features(
+            RowBlock::Csr(x),
+            KernelFn::Rbf { gamma: 0.3 },
+            vec![4, 5],
+            vec![0, 1],
+            SnapshotFingerprint::adhoc("csr", 2, 9),
+        )
+        .unwrap();
+        SnapshotWriter::new(&dir).write(&model).unwrap();
+        let loaded = SnapshotReader::new(&dir).load().unwrap();
+        for (a, b) in model.med_norms().iter().zip(loaded.med_norms()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_guard_rejects_other_fit() {
+        let dir = tmp_dir("fp");
+        let model = dense_model(5);
+        SnapshotWriter::new(&dir).write(&model).unwrap();
+        let mut other = model.fingerprint().clone();
+        other.seed = 6;
+        let err = SnapshotReader::new(&dir).load_expecting(&other).unwrap_err();
+        assert!(format!("{err}").contains("fingerprint mismatch"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_payload_is_a_structured_error() {
+        let dir = tmp_dir("trunc");
+        let model = dense_model(5);
+        SnapshotWriter::new(&dir).write(&model).unwrap();
+        let payload = dir.join(MODEL_FILE);
+        let text = std::fs::read_to_string(&payload).unwrap();
+        std::fs::write(&payload, &text[..text.len() / 2]).unwrap();
+        let err = SnapshotReader::new(&dir).load().unwrap_err();
+        assert!(format!("{err}").contains("model.json"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_is_a_structured_error() {
+        let err = SnapshotReader::new("/nonexistent/dkkm_snap").load().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("snapshot"), "{msg}");
+    }
+
+    #[test]
+    fn corrupt_norm_bits_refuse_to_load() {
+        let dir = tmp_dir("norms");
+        let model = dense_model(5);
+        SnapshotWriter::new(&dir).write(&model).unwrap();
+        let payload = dir.join(MODEL_FILE);
+        let text = std::fs::read_to_string(&payload).unwrap();
+        // flip one feature value without touching the stored norms
+        let needle = "\"features\"";
+        assert!(text.contains(needle));
+        let bit_pat = format!("{:08x}", model.med_norms()[0].to_bits());
+        // corrupt the first stored norm instead: guaranteed present
+        let corrupt = text.replacen(&bit_pat, "deadbeef", 1);
+        std::fs::write(&payload, corrupt).unwrap();
+        let err = SnapshotReader::new(&dir).load().unwrap_err();
+        assert!(format!("{err}").contains("bit-exact"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

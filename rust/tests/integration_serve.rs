@@ -1,0 +1,223 @@
+//! Serving integration: fit → snapshot → reload → assign must be
+//! bit-identical to the fitting session, across dense/CSR storage and
+//! native/sharded engines; plus hot-swap generation pinning through the
+//! serve loop and the CLI snapshot/serve round trip.
+use std::path::PathBuf;
+use std::process::Command;
+
+use dkkm::coordinator::{DatasetSpec, Experiment, RcvStorage};
+use dkkm::serve::{
+    refresh_epoch, RefreshConfig, RowBlock, ServeLoop, ServeOptions, SnapshotReader,
+    SnapshotWriter,
+};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dkkm_iserve_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Fit, snapshot through the session knob, reload, and assert the
+/// reloaded model assigns the training set bit-identically to the
+/// in-session model. Returns nothing — panics on any divergence.
+fn round_trip(tag: &str, exp: Experiment) {
+    let dir = tmp_dir(tag);
+    let session = exp.snapshot_dir(&dir).build().unwrap();
+    let report = session.fit().unwrap();
+    let in_session = session.serve_model(&report).unwrap();
+    let reloaded = SnapshotReader::new(dir.clone())
+        .load_expecting(&session.snapshot_fingerprint(report.c_used))
+        .unwrap();
+    let queries = if let Some(tr) = session.train() {
+        RowBlock::Dense(tr.x.clone())
+    } else {
+        RowBlock::Csr(session.train_sparse().unwrap().x.clone())
+    };
+    let a = in_session.assign_rows(&queries).unwrap();
+    let b = reloaded.assign_rows(&queries).unwrap();
+    assert_eq!(a, b, "{tag}: reload diverged from the fitting session");
+    // derived quantities round-trip bit-exactly, not just labels
+    assert_eq!(in_session.med_norms(), reloaded.med_norms(), "{tag}: norm bits");
+    assert_eq!(in_session.weights(), reloaded.weights(), "{tag}");
+    assert_eq!(in_session.medoids(), reloaded.medoids(), "{tag}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dense_native_snapshot_round_trip() {
+    round_trip(
+        "dense_native",
+        Experiment::on(DatasetSpec::Mnist { train: 400, test: 100 })
+            .clusters(10)
+            .batches(2),
+    );
+}
+
+#[test]
+fn dense_sharded_snapshot_round_trip() {
+    round_trip(
+        "dense_sharded",
+        Experiment::on(DatasetSpec::Mnist { train: 400, test: 100 })
+            .clusters(10)
+            .batches(2)
+            .backend("sharded:3"),
+    );
+}
+
+#[test]
+fn csr_native_snapshot_round_trip() {
+    let spec = DatasetSpec::Rcv1 { n: 300, classes: 4, dim: 32, storage: RcvStorage::Sparse };
+    round_trip("csr_native", Experiment::on(spec).clusters(4).batches(2));
+}
+
+#[test]
+fn csr_sharded_snapshot_round_trip() {
+    let spec = DatasetSpec::Rcv1 { n: 300, classes: 4, dim: 32, storage: RcvStorage::Sparse };
+    round_trip(
+        "csr_sharded",
+        Experiment::on(spec).clusters(4).batches(2).backend("sharded:3"),
+    );
+}
+
+#[test]
+fn snapshot_fingerprint_guards_against_foreign_fits() {
+    let dir = tmp_dir("fp_guard");
+    let session = Experiment::on(DatasetSpec::Toy2d { per_cluster: 100 })
+        .clusters(4)
+        .batches(2)
+        .sigma_factor(0.1)
+        .snapshot_dir(&dir)
+        .build()
+        .unwrap();
+    let report = session.fit().unwrap();
+    // demanding a different seed's fingerprint is a structured error
+    let other = Experiment::on(DatasetSpec::Toy2d { per_cluster: 100 })
+        .clusters(4)
+        .batches(2)
+        .sigma_factor(0.1)
+        .seed(777)
+        .build()
+        .unwrap();
+    let err = SnapshotReader::new(dir.clone())
+        .load_expecting(&other.snapshot_fingerprint(report.c_used))
+        .unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("fingerprint mismatch"), "{msg}");
+    // but an un-pinned load still works
+    assert!(SnapshotReader::new(dir.clone()).load().is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serve_loop_matches_in_session_assignment_end_to_end() {
+    let session = Experiment::on(DatasetSpec::Mnist { train: 400, test: 100 })
+        .clusters(10)
+        .batches(2)
+        .build()
+        .unwrap();
+    let report = session.fit().unwrap();
+    let model = session.serve_model(&report).unwrap();
+    let test = session.test().unwrap();
+    let direct = model.assign_dense(&test.x).unwrap();
+    let handle = ServeLoop::spawn(model, ServeOptions { workers: 2, max_batch_rows: 16 });
+    // mixed request sizes, all answered from generation 0
+    let mut served = Vec::new();
+    for lo in (0..test.n()).step_by(7) {
+        let idx: Vec<usize> = (lo..(lo + 7).min(test.n())).collect();
+        let resp = handle.assign(RowBlock::Dense(test.x.gather(&idx))).unwrap();
+        assert_eq!(resp.generation, 0);
+        served.extend(resp.labels);
+    }
+    assert_eq!(served, direct);
+}
+
+#[test]
+fn hot_swap_pins_generations_and_never_blocks_serving() {
+    let session = Experiment::on(DatasetSpec::Mnist { train: 400, test: 100 })
+        .clusters(10)
+        .batches(2)
+        .build()
+        .unwrap();
+    let report = session.fit().unwrap();
+    let model = session.serve_model(&report).unwrap();
+    let test = session.test().unwrap();
+    let gen0_labels = model.assign_dense(&test.x).unwrap();
+
+    let handle = ServeLoop::spawn(model, ServeOptions::default());
+    // pin generation 0 by holding the loaded Arc
+    let pin = handle.current();
+    assert_eq!(pin.generation, 0);
+
+    // refresh on appended rows (the test split) and hot-swap: refresh
+    // is deterministic, so a re-run pins the same generation-1 model
+    let appended = RowBlock::Dense(test.x.clone());
+    let next = refresh_epoch(&pin.model, &appended, &RefreshConfig::default()).unwrap();
+    let next_again = refresh_epoch(&pin.model, &appended, &RefreshConfig::default()).unwrap();
+    assert_eq!(next.medoids(), next_again.medoids(), "refresh must be deterministic");
+    let gen = handle.publish(next);
+    assert_eq!(gen, 1);
+
+    // the pinned model still answers exactly as generation 0 did
+    assert_eq!(pin.model.assign_dense(&test.x).unwrap(), gen0_labels);
+    // a pinned request against the swapped-out generation is a
+    // structured stale error, not a silent answer from the wrong model
+    let idx: Vec<usize> = (0..8).collect();
+    let err = handle
+        .assign_pinned(RowBlock::Dense(test.x.gather(&idx)), 0)
+        .unwrap_err();
+    assert!(format!("{err}").contains("stale"), "{err}");
+    // un-pinned queries flow through the new generation immediately
+    let resp = handle.assign(RowBlock::Dense(test.x.clone())).unwrap();
+    assert_eq!(resp.generation, 1);
+    // and the new model serves the refresh result bit-for-bit
+    let direct_gen1 = handle.current().model.assign_dense(&test.x).unwrap();
+    assert_eq!(resp.labels, direct_gen1);
+}
+
+#[test]
+fn cli_snapshot_then_serve_round_trip() {
+    let dir = tmp_dir("cli");
+    let dir_s = dir.display().to_string();
+    let out = Command::new(env!("CARGO_BIN_EXE_dkkm"))
+        .args([
+            "snapshot", "--dataset", "mnist:300:60", "--c", "6", "--b", "2", "--out", &dir_s,
+        ])
+        .output()
+        .expect("spawn dkkm snapshot");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stderr: {stderr}");
+    assert!(stdout.contains("verified"), "{stdout}");
+    assert!(dir.join("manifest.json").is_file());
+    assert!(dir.join("model.json").is_file());
+
+    let out = Command::new(env!("CARGO_BIN_EXE_dkkm"))
+        .args(["serve", "--snapshot", &dir_s, "--count", "128", "--json"])
+        .output()
+        .expect("spawn dkkm serve");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "stderr: {stderr}");
+    let j = dkkm::util::json::Json::parse(stdout.trim()).expect("counters json");
+    assert!(j.get("qps").is_some(), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_writer_is_usable_standalone() {
+    // the writer works outside the session knob too (library users)
+    let session = Experiment::on(DatasetSpec::Toy2d { per_cluster: 80 })
+        .clusters(4)
+        .batches(2)
+        .sigma_factor(0.1)
+        .build()
+        .unwrap();
+    let report = session.fit().unwrap();
+    let model = session.serve_model(&report).unwrap();
+    let dir = tmp_dir("standalone");
+    SnapshotWriter::new(dir.clone()).write(&model).unwrap();
+    let back = SnapshotReader::new(dir.clone()).load().unwrap();
+    let x = &session.train().unwrap().x;
+    assert_eq!(model.assign_dense(x).unwrap(), back.assign_dense(x).unwrap());
+    let _ = std::fs::remove_dir_all(&dir);
+}
