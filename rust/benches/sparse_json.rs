@@ -4,13 +4,20 @@
 //! vocabulary sizes (vocabulary width controls density: merged documents
 //! hold ~60-100 distinct words regardless of vocab), then fills the same
 //! RBF Gram block through the dense packed micro-kernel (over the
-//! densified matrix) and the sparse CSR micro-kernel, asserting the two
-//! agree before reporting. Emits `BENCH_sparse.json` (override the path
-//! with `DKKM_BENCH_OUT`) with dense-equivalent GFLOP/s, effective
-//! GFLOP/s per stored entry, and the sparse-over-dense speedup — so "the
-//! CSR path beats the dense core by the sparsity factor" is a tracked
+//! densified matrix) and the sparse CSR micro-kernel on **every SIMD
+//! tier this host can execute**, asserting the storages agree before
+//! reporting. Emits `BENCH_sparse.json` (override the path with
+//! `DKKM_BENCH_OUT`) with dense-equivalent GFLOP/s, effective GFLOP/s
+//! per stored entry, and the sparse-over-dense speedup — so "the CSR
+//! path beats the dense core by the sparsity factor" is a tracked
 //! number, not a claim. Single-threaded on purpose: this measures the
 //! kernels, not the thread pool.
+//!
+//! The CSR path is where the exp epilogue matters most — dot cost
+//! shrinks by the density factor, the exp does not — so every per-tier
+//! row also records `speedup_vs_scalar_exp` (same fill, retained libm
+//! `exp` epilogue) and `epilogue_fraction` (measured against a
+//! linear-kernel fill, which skips the epilogue entirely).
 //!
 //!     cargo bench --bench sparse_json
 //!
@@ -44,24 +51,29 @@ fn main() {
     let rows = ((1024.0 * scale) as usize).max(256);
     let cols = (rows / 4).clamp(64, 256);
     let repeats = bench_repeats();
-    let tier = simd::active_tier();
+    let tiers = simd::supported_tiers();
+    let default_tier = simd::active_tier();
     // L2-normalized documents have d² in [0, 2]; gamma = 0.5 keeps RBF
     // values in [e^-1, 1] so the equivalence check compares real numbers
     let kernel = KernelFn::Rbf { gamma: 0.5 };
     println!(
         "== Sparse CSR vs dense Gram bench: {rows}x{cols} RBF blocks, \
-         tier {tier}, {repeats} repeats =="
+         {repeats} repeats ==\n\
+         host tiers: {:?}, dispatching: {default_tier}",
+        tiers.iter().map(|t| t.name()).collect::<Vec<_>>()
     );
     println!("(vocab sweeps density: ~60-100 stored words per doc)\n");
 
     let mut table = Table::new(&[
         "vocab",
         "density",
+        "simd",
         "dense s",
         "sparse s",
         "speedup",
-        "dense GF/s",
         "nnz GF/s",
+        "vs scalar-exp",
+        "epi frac",
     ]);
     let mut results = Vec::new();
     for &vocab in &[300usize, 1000, 4000] {
@@ -75,80 +87,124 @@ fn main() {
         let xn_csr = csr.sq_norms().to_vec();
         let yn: Vec<f32> = col_idx.iter().map(|&j| xn_csr[j]).collect();
 
-        // --- dense core over the densified matrix (packing timed: it is
-        // part of every block fill on both paths)
-        let mut dense_out = vec![0.0f32; rows * cols];
-        let dense_s = best_of(repeats, || {
-            let packed = PackedPanel::pack_gather(&dense, &col_idx);
-            microkernel::fill_gram_rows(
-                tier,
-                &dense,
-                &row_idx,
-                &packed,
-                &xn_dense,
-                &yn,
-                kernel,
-                &mut dense_out,
-            );
-        });
+        for &tier in &tiers {
+            // --- dense core over the densified matrix (packing timed:
+            // it is part of every block fill on both paths)
+            let mut dense_out = vec![0.0f32; rows * cols];
+            let dense_s = best_of(repeats, || {
+                let packed = PackedPanel::pack_gather(&dense, &col_idx);
+                microkernel::fill_gram_rows(
+                    tier,
+                    &dense,
+                    &row_idx,
+                    &packed,
+                    &xn_dense,
+                    &yn,
+                    kernel,
+                    &mut dense_out,
+                );
+            });
 
-        // --- sparse core over the CSR rows
-        let mut sparse_out = vec![0.0f32; rows * cols];
-        let sparse_s = best_of(repeats, || {
-            let packed = PackedPanel::pack_gather_csr(&csr, &col_idx);
-            microkernel::fill_gram_rows_csr(
-                tier,
-                &csr,
-                &row_idx,
-                &packed,
-                &xn_csr,
-                &yn,
-                kernel,
-                &mut sparse_out,
-            );
-        });
+            // --- sparse core over the CSR rows
+            let mut sparse_out = vec![0.0f32; rows * cols];
+            let sparse_s = best_of(repeats, || {
+                let packed = PackedPanel::pack_gather_csr(&csr, &col_idx);
+                microkernel::fill_gram_rows_csr(
+                    tier,
+                    &csr,
+                    &row_idx,
+                    &packed,
+                    &xn_csr,
+                    &yn,
+                    kernel,
+                    &mut sparse_out,
+                );
+            });
 
-        // the two storages must agree before any speedup is reported
-        let diff = max_abs_diff(&sparse_out, &dense_out);
-        assert!(
-            diff < 1e-3,
-            "sparse diverges from dense at vocab={vocab}: max |diff| = {diff}"
-        );
-
-        let dense_equiv_flops = 2.0 * rows as f64 * cols as f64 * vocab as f64;
-        let nnz_flops = 2.0 * csr.nnz() as f64 * cols as f64;
-        let speedup = dense_s / sparse_s;
-        let dense_gflops = dense_equiv_flops / dense_s / 1e9;
-        let nnz_gflops = nnz_flops / sparse_s / 1e9;
-        // the acceptance bar: at text-corpus density the CSR path must
-        // clearly beat the dense core, not just edge it out
-        if density <= 0.10 {
+            // the two storages must agree before any speedup is reported
+            let diff = max_abs_diff(&sparse_out, &dense_out);
             assert!(
-                speedup >= 2.0,
-                "CSR path only {speedup:.2}x over dense at density {density:.4} \
-                 (vocab={vocab}); expected >= 2x below 10% density"
+                diff < 1e-3,
+                "sparse diverges from dense at vocab={vocab} ({tier}): \
+                 max |diff| = {diff}"
             );
+
+            // --- epilogue metrics: retained libm-exp baseline and the
+            // no-epilogue linear floor, both on the CSR path
+            let scalar_exp_s = best_of(repeats, || {
+                let packed = PackedPanel::pack_gather_csr(&csr, &col_idx);
+                microkernel::fill_gram_rows_csr_scalar_exp(
+                    tier,
+                    &csr,
+                    &row_idx,
+                    &packed,
+                    &xn_csr,
+                    &yn,
+                    kernel,
+                    &mut sparse_out,
+                );
+            });
+            let linear_s = best_of(repeats, || {
+                let packed = PackedPanel::pack_gather_csr(&csr, &col_idx);
+                microkernel::fill_gram_rows_csr(
+                    tier,
+                    &csr,
+                    &row_idx,
+                    &packed,
+                    &xn_csr,
+                    &yn,
+                    KernelFn::Linear,
+                    &mut sparse_out,
+                );
+            });
+
+            let dense_equiv_flops = 2.0 * rows as f64 * cols as f64 * vocab as f64;
+            let nnz_flops = 2.0 * csr.nnz() as f64 * cols as f64;
+            let speedup = dense_s / sparse_s;
+            let exp_speedup = scalar_exp_s / sparse_s;
+            let epi_frac = ((sparse_s - linear_s) / sparse_s).max(0.0);
+            let epi_frac_scalar = ((scalar_exp_s - linear_s) / scalar_exp_s).max(0.0);
+            let dense_gflops = dense_equiv_flops / dense_s / 1e9;
+            let nnz_gflops = nnz_flops / sparse_s / 1e9;
+            // the acceptance bar: at text-corpus density the CSR path
+            // must clearly beat the dense core, not just edge it out —
+            // the work ratio is density-driven, so it holds on every tier
+            if density <= 0.10 {
+                assert!(
+                    speedup >= 2.0,
+                    "CSR path only {speedup:.2}x over dense at density {density:.4} \
+                     (vocab={vocab}, {tier}); expected >= 2x below 10% density"
+                );
+            }
+            table.row(&[
+                format!("{vocab}"),
+                format!("{:.2}%", density * 100.0),
+                tier.name().into(),
+                format!("{dense_s:.4}"),
+                format!("{sparse_s:.4}"),
+                format!("{speedup:.2}x"),
+                format!("{nnz_gflops:.2}"),
+                format!("{exp_speedup:.2}x"),
+                format!("{epi_frac:.2}"),
+            ]);
+            results.push(Json::obj(vec![
+                ("vocab", Json::num(vocab as f64)),
+                ("density", Json::num(density)),
+                ("nnz", Json::num(csr.nnz() as f64)),
+                ("simd", Json::str(tier.name())),
+                ("dense_seconds_best", Json::num(dense_s)),
+                ("sparse_seconds_best", Json::num(sparse_s)),
+                ("sparse_seconds_scalar_exp", Json::num(scalar_exp_s)),
+                ("sparse_seconds_linear", Json::num(linear_s)),
+                ("speedup_vs_dense", Json::num(speedup)),
+                ("speedup_vs_scalar_exp", Json::num(exp_speedup)),
+                ("epilogue_fraction", Json::num(epi_frac)),
+                ("epilogue_fraction_scalar_exp", Json::num(epi_frac_scalar)),
+                ("dense_equiv_gflops", Json::num(dense_gflops)),
+                ("effective_gflops_per_nnz", Json::num(nnz_gflops)),
+                ("max_abs_diff", Json::num(diff as f64)),
+            ]));
         }
-        table.row(&[
-            format!("{vocab}"),
-            format!("{:.2}%", density * 100.0),
-            format!("{dense_s:.4}"),
-            format!("{sparse_s:.4}"),
-            format!("{speedup:.2}x"),
-            format!("{dense_gflops:.2}"),
-            format!("{nnz_gflops:.2}"),
-        ]);
-        results.push(Json::obj(vec![
-            ("vocab", Json::num(vocab as f64)),
-            ("density", Json::num(density)),
-            ("nnz", Json::num(csr.nnz() as f64)),
-            ("dense_seconds_best", Json::num(dense_s)),
-            ("sparse_seconds_best", Json::num(sparse_s)),
-            ("speedup_vs_dense", Json::num(speedup)),
-            ("dense_equiv_gflops", Json::num(dense_gflops)),
-            ("effective_gflops_per_nnz", Json::num(nnz_gflops)),
-            ("max_abs_diff", Json::num(diff as f64)),
-        ]));
     }
     println!("{}", table.render());
 
@@ -166,8 +222,8 @@ fn main() {
         let mut b = vec![0.0f32; 128 * 32];
         let pd = PackedPanel::pack_gather(&dense, &cols_small);
         let ps = PackedPanel::pack_gather_csr(&csr, &cols_small);
-        microkernel::fill_gram_rows(tier, &dense, &idx, &pd, &xn, &yn, k, &mut a);
-        microkernel::fill_gram_rows_csr(tier, &csr, &idx, &ps, &xn, &yn, k, &mut b);
+        microkernel::fill_gram_rows(default_tier, &dense, &idx, &pd, &xn, &yn, k, &mut a);
+        microkernel::fill_gram_rows_csr(default_tier, &csr, &idx, &ps, &xn, &yn, k, &mut b);
         let diff = max_abs_diff(&a, &b);
         assert!(diff < 1e-3, "{k:?} diverges across storages: {diff}");
     }
@@ -178,7 +234,11 @@ fn main() {
         ("rows", Json::num(rows as f64)),
         ("cols", Json::num(cols as f64)),
         ("repeats", Json::num(repeats as f64)),
-        ("dispatch_tier", Json::str(tier.name())),
+        ("dispatch_tier", Json::str(default_tier.name())),
+        (
+            "host_tiers",
+            Json::arr(tiers.iter().map(|t| Json::str(t.name()))),
+        ),
         ("results", Json::arr(results)),
     ]);
     let out = std::env::var("DKKM_BENCH_OUT").unwrap_or_else(|_| "BENCH_sparse.json".into());

@@ -86,8 +86,20 @@ impl RunReport {
             ("engine", self.engine.to_json()),
             ("storage", Json::str(&self.storage)),
             // the compute-core tier every native Gram fill and indicator
-            // GEMM dispatched to in this process (DKKM_SIMD override)
+            // GEMM dispatched to in this process (DKKM_SIMD override);
+            // when the override could not be honored, `simd_fallback`
+            // records why and `simd` names the tier that actually ran —
+            // a run on the wrong hardware never masquerades as the
+            // requested tier
             ("simd", Json::str(crate::linalg::simd::active_tier().name())),
+            (
+                "simd_fallback",
+                crate::linalg::simd::active_selection()
+                    .fallback
+                    .as_deref()
+                    .map(Json::str)
+                    .unwrap_or(Json::Null),
+            ),
             ("pipeline", pipeline_json(&self.pipeline)),
             ("faults", faults_json(&self.faults)),
             (

@@ -439,11 +439,18 @@ fn log_fallback_once(engine: &str, reason: &str) {
 fn log_simd_tier_once() {
     static LOGGED: OnceLock<()> = OnceLock::new();
     LOGGED.get_or_init(|| {
+        let sel = crate::linalg::simd::active_selection();
         eprintln!(
             "dkkm: compute core dispatching '{}' micro-kernels \
-             (override: DKKM_SIMD=avx2|sse2|scalar)",
-            crate::linalg::simd::active_tier()
+             (override: DKKM_SIMD=avx2|sse2|neon|scalar)",
+            sel.used
         );
+        // active_selection() already warned once at resolution time; a
+        // second line here ties the degradation to the session the user
+        // is watching
+        if let Some(reason) = &sel.fallback {
+            eprintln!("dkkm: note: DKKM_SIMD was not honored ({reason})");
+        }
     });
 }
 

@@ -65,6 +65,77 @@ fn dot(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }
 
+/// The vectorized-exponential polynomial — the **single shared
+/// definition** every SIMD tier's fused RBF epilogue implements.
+///
+/// Classic `exp_ps`-style range reduction (Cephes lineage): clamp the
+/// argument, split `x = k·ln2 + r` with a two-step Cody–Waite `ln2` so
+/// `r ∈ [−ln2/2, ln2/2]` stays exact, evaluate a degree-5 polynomial on
+/// `r`, and scale by `2^k` assembled directly in the exponent field.
+/// Accuracy on the RBF domain (`x = −γ·d² ≤ 0` down to the clamp) is
+/// ~2 ULP, property-bounded at ≤4 ULP / ≤1e-6 absolute in
+/// `tests/integration_simd.rs`. Arguments below the clamp flush to the
+/// clamp value and, once `2^k` underflows the exponent field (`k <
+/// −126`), to zero — an absolute error below `1.2e-38`, far inside the
+/// bound (`f32::exp` would return a subnormal there).
+///
+/// Every operation here is a plain IEEE mul/add/sub — **no FMA, no
+/// `mul_add`** — and the vector implementations in
+/// `kernels::microkernel` mirror the exact operation order lane-wise.
+/// That makes [`exp_approx`](vexp::exp_approx) a *bit-equal* scalar
+/// emulation of all of them: remainder/tail columns that fall off the
+/// 8-lane panels, and the pure-scalar tier, produce identical bits to
+/// the vector lanes, which is what keeps row results independent of how
+/// columns split into full panels and tails.
+pub mod vexp {
+    /// Upper clamp: just below `ln(f32::MAX)`.
+    pub const EXP_HI: f32 = 88.376_26;
+    /// Lower clamp: symmetric; beyond it results flush toward zero.
+    pub const EXP_LO: f32 = -88.376_26;
+    /// `log2(e)` for the `k = round(x / ln 2)` split.
+    pub const LOG2EF: f32 = 1.442_695;
+    /// High part of `ln 2` (exact in 11 bits: `0.693359375`).
+    pub const LN2_HI: f32 = 0.693_359_4;
+    /// Low (correction) part of `ln 2`.
+    pub const LN2_LO: f32 = -2.121_944_4e-4;
+    /// Degree-5 minimax coefficients for `(e^r − 1 − r) / r²`, Horner
+    /// order from highest degree down.
+    pub const P0: f32 = 1.987_569_1e-4;
+    pub const P1: f32 = 1.398_199_9e-3;
+    pub const P2: f32 = 8.333_452e-3;
+    pub const P3: f32 = 4.166_579_6e-2;
+    pub const P4: f32 = 1.666_666_5e-1;
+    pub const P5: f32 = 0.5;
+
+    /// Scalar reference evaluation of the shared polynomial. Bit-equal
+    /// to one lane of every tier's vector implementation for the same
+    /// input (the property the epilogue's tail handling relies on).
+    #[inline]
+    pub fn exp_approx(x: f32) -> f32 {
+        let x = x.min(EXP_HI).max(EXP_LO);
+        // k = floor(x * log2(e) + 0.5): round-to-nearest via floor, the
+        // same emulation the SSE2 lane code uses
+        let fx = (x * LOG2EF + 0.5).floor();
+        // r = x - k*ln2, two-step so the subtraction is nearly exact
+        let r = x - fx * LN2_HI;
+        let r = r - fx * LN2_LO;
+        let mut y = P0;
+        y = y * r + P1;
+        y = y * r + P2;
+        y = y * r + P3;
+        y = y * r + P4;
+        y = y * r + P5;
+        let z = r * r;
+        y = y * z + r;
+        y += 1.0;
+        // 2^k assembled in the exponent field; k ∈ [-127, 127] after the
+        // clamp, and k = -127 gives a zero exponent word (flush to zero)
+        let k = fx as i32;
+        let pow2k = f32::from_bits(((k + 127) as u32) << 23);
+        y * pow2k
+    }
+}
+
 impl FromStr for KernelFn {
     type Err = String;
 
@@ -138,6 +209,46 @@ mod tests {
         ] {
             assert!((k.eval(&a, &b) - k.from_parts(d2, dp)).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn vexp_matches_libm_on_rbf_domain() {
+        // the RBF argument is -gamma*d2 <= 0; sweep it densely down to
+        // the clamp and check the polynomial against f32::exp
+        let mut x = 0.0f32;
+        while x > -87.0 {
+            let got = vexp::exp_approx(x);
+            let want = x.exp();
+            let abs = (got - want).abs();
+            let rel = abs / want.max(f32::MIN_POSITIVE);
+            assert!(
+                abs <= 1e-6 || rel <= 4.0 * f32::EPSILON,
+                "exp_approx({x}) = {got}, libm = {want}"
+            );
+            x -= 0.0173; // irrational-ish step to avoid hitting only round args
+        }
+    }
+
+    #[test]
+    fn vexp_identity_and_edges() {
+        // exp(0) must be exactly 1 (the Gram diagonal contract) and -0.0
+        // must agree with it bit-for-bit
+        assert_eq!(vexp::exp_approx(0.0).to_bits(), 1.0f32.to_bits());
+        assert_eq!(vexp::exp_approx(-0.0).to_bits(), 1.0f32.to_bits());
+        // tiny arguments stay within a ULP of 1
+        assert!((vexp::exp_approx(-1e-20) - 1.0).abs() <= f32::EPSILON);
+        // beyond the clamp: flush toward zero, never negative, and the
+        // absolute error vs the true (subnormal) value stays tiny
+        for x in [-88.0f32, -88.376_26, -100.0, -1.0e4, -1.0e30, f32::NEG_INFINITY] {
+            let got = vexp::exp_approx(x);
+            assert!(
+                (0.0..=1.2e-38).contains(&got),
+                "exp_approx({x}) = {got} must flush toward zero"
+            );
+        }
+        // upper clamp (unused by RBF but part of the contract): finite
+        let hi = vexp::exp_approx(1.0e4);
+        assert!(hi.is_finite() && (hi - vexp::EXP_HI.exp()).abs() / vexp::EXP_HI.exp() < 1e-5);
     }
 
     #[test]

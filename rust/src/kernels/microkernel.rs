@@ -13,13 +13,21 @@
 //!   contiguous [`NR`]-lane load per depth step no matter how scattered
 //!   the source columns were;
 //! * rows are register-blocked `MR` at a time (4 for AVX2+FMA, 2 for
-//!   SSE2), each row owning two independent accumulator chains (depth
-//!   unrolled by 2) so the FMA latency is hidden behind 2·MR chains;
+//!   SSE2 and NEON), each row owning two independent accumulator chains
+//!   (depth unrolled by 2) so the FMA latency is hidden behind 2·MR
+//!   chains; NEON consumes the same NR=8 depth-major panels as two
+//!   `float32x4` halves, exactly as SSE2 does;
 //! * the Gram entry point fuses the kernel-function epilogue: squared
 //!   distances are assembled from the accumulated dots plus cached
-//!   row/column squared norms (`d² = ‖x‖² + ‖y‖² − 2·x·y`, clamped), and
-//!   `KernelFn::from_parts` maps them to RBF/poly/linear values while the
-//!   dot block is still hot;
+//!   row/column squared norms (`d² = ‖x‖² + ‖y‖² − 2·x·y`, clamped),
+//!   and the kernel function is applied while the dot block is still
+//!   hot. The epilogue is selected **once per fill** (not per element):
+//!   linear kernels write the dots straight through with no `d²` and no
+//!   `exp`; RBF runs the shared polynomial range-reduction exponential
+//!   (`kernel_fn::vexp`) vectorized per tier, with tail columns that
+//!   fall off the 8-lane panels going through the bit-equal scalar
+//!   emulation — so a column's bits never depend on whether it landed
+//!   in a full panel or a remainder;
 //! * sparse (CSR) rows run through the **same packed panels** via
 //!   [`fill_gram_rows_csr`]: each stored entry broadcasts its value
 //!   against one contiguous [`NR`]-lane panel load, so per-row cost is
@@ -35,11 +43,14 @@
 //! `fill_block_dot4` preserves the pre-micro-kernel path (the
 //! autovectorizer-dependent 4-column `dot4` loop) as the baseline that
 //! `benches/gram_json.rs` reports speedups against and the oracle the
-//! property suite compares every tier to.
+//! property suite compares every tier to; `fill_gram_rows_scalar_exp` /
+//! `fill_gram_rows_csr_scalar_exp` preserve the pre-PR-8 libm-`exp`
+//! epilogue the same way, as the `speedup_vs_scalar_exp` baseline.
 use crate::data::CsrMat;
 use crate::linalg::simd::SimdTier;
 use crate::linalg::Mat;
 
+use super::kernel_fn::vexp;
 use super::KernelFn;
 
 /// Packed panel width: one AVX2 register of `f32` lanes. SSE2 consumes
@@ -54,7 +65,8 @@ pub const MR_MAX: usize = 4;
 fn mr_for(tier: SimdTier) -> usize {
     match tier {
         SimdTier::Avx2Fma => 4,
-        SimdTier::Sse2 => 2,
+        // 2 chains x 2 rows x 2 halves = 8 live q-registers each
+        SimdTier::Sse2 | SimdTier::Neon => 2,
         // scalar rows are independent; 4 amortizes the panel stream
         SimdTier::Scalar => 4,
     }
@@ -145,13 +157,132 @@ impl PackedPanel {
     }
 }
 
+/// The fused kernel-function epilogue a fill dispatches to, chosen once
+/// per fill from the [`KernelFn`] — one branch per register block/panel
+/// chunk downstream, never one per element.
+#[derive(Clone, Copy)]
+enum Epilogue {
+    /// Linear kernel: the accumulated dot IS the Gram value. No `d²`
+    /// assembly, no exponential — the whole epilogue is a lane copy.
+    Linear,
+    /// RBF through the shared vectorized polynomial (`kernel_fn::vexp`),
+    /// per-tier vector lanes with a bit-equal scalar tail.
+    Rbf { neg_gamma: f32 },
+    /// RBF through libm `f32::exp` per element — the pre-PR-8 epilogue,
+    /// retained as the `speedup_vs_scalar_exp` bench baseline and an
+    /// independent accuracy oracle. Do not "optimize" it.
+    RbfLibm { neg_gamma: f32 },
+    /// Polynomial (and any future) kernels via `KernelFn::from_parts`.
+    General(KernelFn),
+}
+
+impl Epilogue {
+    /// Production mapping: RBF rides the vectorized polynomial exp.
+    fn vector(kernel: KernelFn) -> Epilogue {
+        match kernel {
+            KernelFn::Linear => Epilogue::Linear,
+            KernelFn::Rbf { gamma } => Epilogue::Rbf { neg_gamma: -gamma },
+            k => Epilogue::General(k),
+        }
+    }
+
+    /// Baseline mapping: RBF keeps the scalar libm exp. Only the RBF arm
+    /// differs from [`Epilogue::vector`].
+    fn scalar_exp(kernel: KernelFn) -> Epilogue {
+        match kernel {
+            KernelFn::Linear => Epilogue::Linear,
+            KernelFn::Rbf { gamma } => Epilogue::RbfLibm { neg_gamma: -gamma },
+            k => Epilogue::General(k),
+        }
+    }
+}
+
+/// Map one register-block row's panel dots (`w <= NR` live lanes) to
+/// kernel values. `yn` and `out` are the `w`-wide column slices of the
+/// current panel. A lane's result depends only on (`xnr`, `yn[t]`,
+/// `dots[t]`, `epi`, `tier`) — never on its neighbors — so row grouping
+/// and full-vs-tail panel placement cannot change bits (the RBF vector
+/// exp is bit-equal to its scalar emulation, see `kernel_fn::vexp`).
+#[inline]
+fn apply_epilogue(
+    tier: SimdTier,
+    epi: Epilogue,
+    xnr: f32,
+    yn: &[f32],
+    dots: &[f32; NR],
+    out: &mut [f32],
+) {
+    let w = out.len();
+    debug_assert!(w <= NR && yn.len() == w);
+    match epi {
+        Epilogue::Linear => out.copy_from_slice(&dots[..w]),
+        Epilogue::Rbf { neg_gamma } => {
+            if w == NR {
+                rbf_full_panel(tier, neg_gamma, xnr, yn, dots, out);
+            } else {
+                // tail columns: the bit-equal scalar emulation of the
+                // same polynomial the vector lanes run
+                for t in 0..w {
+                    let d2 = (xnr + yn[t] - 2.0 * dots[t]).max(0.0);
+                    out[t] = vexp::exp_approx(neg_gamma * d2);
+                }
+            }
+        }
+        Epilogue::RbfLibm { neg_gamma } => {
+            for t in 0..w {
+                let d2 = (xnr + yn[t] - 2.0 * dots[t]).max(0.0);
+                out[t] = (neg_gamma * d2).exp();
+            }
+        }
+        Epilogue::General(k) => {
+            for t in 0..w {
+                let d2 = (xnr + yn[t] - 2.0 * dots[t]).max(0.0);
+                out[t] = k.from_parts(d2, dots[t]);
+            }
+        }
+    }
+}
+
+/// One full 8-lane RBF epilogue: `out[t] = exp(neg_gamma * d²[t])`
+/// through the tier's vector implementation of the shared polynomial.
+/// Every tier (and the scalar fallback) produces identical bits for the
+/// same inputs — the polynomial uses plain mul/add on all of them.
+fn rbf_full_panel(
+    tier: SimdTier,
+    neg_gamma: f32,
+    xnr: f32,
+    yn: &[f32],
+    dots: &[f32; NR],
+    out: &mut [f32],
+) {
+    debug_assert!(out.len() == NR && yn.len() == NR);
+    match tier {
+        // SAFETY: the public entry points assert `tier.is_available()`,
+        // and `yn`/`out` are exactly NR lanes here.
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2Fma => unsafe { x86::rbf_epilogue_avx2(neg_gamma, xnr, yn, dots, out) },
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Sse2 => unsafe { x86::rbf_epilogue_sse2(neg_gamma, xnr, yn, dots, out) },
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::rbf_epilogue_neon(neg_gamma, xnr, yn, dots, out) },
+        _ => {
+            for t in 0..NR {
+                let d2 = (xnr + yn[t] - 2.0 * dots[t]).max(0.0);
+                out[t] = vexp::exp_approx(neg_gamma * d2);
+            }
+        }
+    }
+}
+
 /// Fill a Gram block: `out[i][j] = kernel(x[rows[i]], packed column j)`.
 ///
 /// `xn` holds squared norms indexed by **sample id** (so `xn[rows[i]]`
 /// is row `i`'s norm); `yn` holds squared norms of the packed columns in
 /// packed order. Row results are independent of how rows are chunked
 /// across calls or grouped into register blocks, so any row partition of
-/// the same (tier, packed panel) is bit-identical.
+/// the same (tier, packed panel) is bit-identical. RBF blocks run the
+/// vectorized polynomial exp epilogue; linear blocks skip the epilogue
+/// entirely (the dispatch happens once per fill).
 #[allow(clippy::too_many_arguments)]
 pub fn fill_gram_rows(
     tier: SimdTier,
@@ -161,6 +292,39 @@ pub fn fill_gram_rows(
     xn: &[f32],
     yn: &[f32],
     kernel: KernelFn,
+    out: &mut [f32],
+) {
+    fill_gram_rows_impl(tier, x, rows, packed, xn, yn, Epilogue::vector(kernel), out);
+}
+
+/// [`fill_gram_rows`] with the retained scalar libm-`exp` RBF epilogue
+/// (identical for linear/poly kernels). This is the pre-PR-8 path, kept
+/// as the `speedup_vs_scalar_exp` baseline of `benches/gram_json.rs`
+/// and an independent accuracy oracle for the vectorized exp — do not
+/// route production fills through it.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_gram_rows_scalar_exp(
+    tier: SimdTier,
+    x: &Mat,
+    rows: &[usize],
+    packed: &PackedPanel,
+    xn: &[f32],
+    yn: &[f32],
+    kernel: KernelFn,
+    out: &mut [f32],
+) {
+    fill_gram_rows_impl(tier, x, rows, packed, xn, yn, Epilogue::scalar_exp(kernel), out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fill_gram_rows_impl(
+    tier: SimdTier,
+    x: &Mat,
+    rows: &[usize],
+    packed: &PackedPanel,
+    xn: &[f32],
+    yn: &[f32],
+    epi: Epilogue,
     out: &mut [f32],
 ) {
     let ncols = packed.ncols();
@@ -188,11 +352,7 @@ pub fn fill_gram_rows(
             for i in 0..m {
                 let xnr = xn[rows[r + i]];
                 let orow = &mut out[(r + i) * ncols..(r + i + 1) * ncols];
-                for (t, j) in (jlo..jhi).enumerate() {
-                    let dot = dots[i][t];
-                    let d2 = (xnr + yn[j] - 2.0 * dot).max(0.0);
-                    orow[j] = kernel.from_parts(d2, dot);
-                }
+                apply_epilogue(tier, epi, xnr, &yn[jlo..jhi], &dots[i], &mut orow[jlo..jhi]);
             }
         }
         r += m;
@@ -220,6 +380,40 @@ pub fn fill_gram_rows_csr(
     kernel: KernelFn,
     out: &mut [f32],
 ) {
+    fill_gram_rows_csr_impl(tier, x, rows, packed, xn, yn, Epilogue::vector(kernel), out);
+}
+
+/// [`fill_gram_rows_csr`] with the retained scalar libm-`exp` RBF
+/// epilogue — the sparse twin of [`fill_gram_rows_scalar_exp`], kept as
+/// the `speedup_vs_scalar_exp` baseline of `benches/sparse_json.rs`.
+/// The epilogue dominated the sparse path's cost (dot cost shrank by
+/// the density factor; the exp did not), which is exactly why this
+/// baseline is worth tracking.
+#[allow(clippy::too_many_arguments)]
+pub fn fill_gram_rows_csr_scalar_exp(
+    tier: SimdTier,
+    x: &CsrMat,
+    rows: &[usize],
+    packed: &PackedPanel,
+    xn: &[f32],
+    yn: &[f32],
+    kernel: KernelFn,
+    out: &mut [f32],
+) {
+    fill_gram_rows_csr_impl(tier, x, rows, packed, xn, yn, Epilogue::scalar_exp(kernel), out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fill_gram_rows_csr_impl(
+    tier: SimdTier,
+    x: &CsrMat,
+    rows: &[usize],
+    packed: &PackedPanel,
+    xn: &[f32],
+    yn: &[f32],
+    epi: Epilogue,
+    out: &mut [f32],
+) {
     let ncols = packed.ncols();
     assert_eq!(out.len(), rows.len() * ncols);
     assert_eq!(yn.len(), ncols);
@@ -237,11 +431,7 @@ pub fn fill_gram_rows_csr(
             sparse_panel_dots(tier, idx, vals, packed.panel(p), &mut dots);
             let jlo = p * NR;
             let jhi = (jlo + NR).min(ncols);
-            for (t, j) in (jlo..jhi).enumerate() {
-                let dot = dots[t];
-                let d2 = (xnr + yn[j] - 2.0 * dot).max(0.0);
-                orow[j] = kernel.from_parts(d2, dot);
-            }
+            apply_epilogue(tier, epi, xnr, &yn[jlo..jhi], &dots, &mut orow[jlo..jhi]);
         }
     }
 }
@@ -366,9 +556,13 @@ fn panel_dots(
         SimdTier::Avx2Fma => unsafe { x86::panel_dots_avx2(arows, panel, depth, out) },
         #[cfg(target_arch = "x86_64")]
         SimdTier::Sse2 => unsafe { x86::panel_dots_sse2(arows, panel, depth, out) },
-        #[cfg(not(target_arch = "x86_64"))]
-        SimdTier::Avx2Fma | SimdTier::Sse2 => panel_dots_scalar(arows, panel, depth, out),
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::panel_dots_neon(arows, panel, depth, out) },
         SimdTier::Scalar => panel_dots_scalar(arows, panel, depth, out),
+        // tiers this architecture does not compile can never be
+        // dispatched (availability is asserted at the entry points)
+        #[allow(unreachable_patterns)]
+        _ => panel_dots_scalar(arows, panel, depth, out),
     }
 }
 
@@ -396,9 +590,13 @@ fn sparse_panel_dots(
         SimdTier::Avx2Fma => unsafe { x86::sparse_panel_dots_avx2(idx, vals, panel, out) },
         #[cfg(target_arch = "x86_64")]
         SimdTier::Sse2 => unsafe { x86::sparse_panel_dots_sse2(idx, vals, panel, out) },
-        #[cfg(not(target_arch = "x86_64"))]
-        SimdTier::Avx2Fma | SimdTier::Sse2 => sparse_panel_dots_scalar(idx, vals, panel, out),
+        #[cfg(target_arch = "aarch64")]
+        SimdTier::Neon => unsafe { neon::sparse_panel_dots_neon(idx, vals, panel, out) },
         SimdTier::Scalar => sparse_panel_dots_scalar(idx, vals, panel, out),
+        // tiers this architecture does not compile can never be
+        // dispatched (availability is asserted at the entry points)
+        #[allow(unreachable_patterns)]
+        _ => sparse_panel_dots_scalar(idx, vals, panel, out),
     }
 }
 
@@ -470,10 +668,13 @@ fn panel_dots_scalar(arows: &[&[f32]], panel: &[f32], depth: usize, out: &mut [[
 mod x86 {
     //! Intrinsic tiers. Both keep one accumulator pair per row with the
     //! depth loop unrolled by 2, mirroring `panel_dots_scalar`'s shape,
-    //! and never let a row's arithmetic depend on its block-mates.
+    //! and never let a row's arithmetic depend on its block-mates. The
+    //! RBF epilogues evaluate the shared `vexp` polynomial with plain
+    //! mul/add (never FMA), so each lane is bit-equal to
+    //! `vexp::exp_approx` of the same input.
     use std::arch::x86_64::*;
 
-    use super::{MR_MAX, NR};
+    use super::{vexp, MR_MAX, NR};
 
     /// # Safety
     /// Requires AVX2 + FMA (asserted by the public entry points).
@@ -627,6 +828,290 @@ mod x86 {
         }
         _mm_storeu_ps(out.as_mut_ptr(), _mm_add_ps(acc0lo, acc1lo));
         _mm_storeu_ps(out.as_mut_ptr().add(4), _mm_add_ps(acc0hi, acc1hi));
+    }
+
+    /// 8-lane `exp` of the shared polynomial (`vexp`), AVX form. Plain
+    /// mul/add only — FMA would change the rounding and break the
+    /// bit-equality with the scalar emulation that tail columns use.
+    ///
+    /// # Safety
+    /// Requires AVX2 (`_mm256_floor_ps` is AVX; the integer exponent
+    /// assembly is AVX2).
+    #[target_feature(enable = "avx2")]
+    unsafe fn exp256(x: __m256) -> __m256 {
+        let x = _mm256_min_ps(x, _mm256_set1_ps(vexp::EXP_HI));
+        let x = _mm256_max_ps(x, _mm256_set1_ps(vexp::EXP_LO));
+        let fx = _mm256_floor_ps(_mm256_add_ps(
+            _mm256_mul_ps(x, _mm256_set1_ps(vexp::LOG2EF)),
+            _mm256_set1_ps(0.5),
+        ));
+        let r = _mm256_sub_ps(x, _mm256_mul_ps(fx, _mm256_set1_ps(vexp::LN2_HI)));
+        let r = _mm256_sub_ps(r, _mm256_mul_ps(fx, _mm256_set1_ps(vexp::LN2_LO)));
+        let mut y = _mm256_set1_ps(vexp::P0);
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(vexp::P1));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(vexp::P2));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(vexp::P3));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(vexp::P4));
+        y = _mm256_add_ps(_mm256_mul_ps(y, r), _mm256_set1_ps(vexp::P5));
+        let z = _mm256_mul_ps(r, r);
+        y = _mm256_add_ps(_mm256_mul_ps(y, z), r);
+        y = _mm256_add_ps(y, _mm256_set1_ps(1.0));
+        // 2^k via the exponent field; fx is integral and in [-127, 127]
+        let k = _mm256_cvttps_epi32(fx);
+        let pow2k = _mm256_castsi256_ps(_mm256_slli_epi32(
+            _mm256_add_epi32(k, _mm256_set1_epi32(127)),
+            23,
+        ));
+        _mm256_mul_ps(y, pow2k)
+    }
+
+    /// 4-lane `exp` of the shared polynomial, SSE2 form. Floor is
+    /// emulated (truncate, then subtract one where the truncation went
+    /// up) — exact for the clamped range, so lanes stay bit-equal to
+    /// `vexp::exp_approx`.
+    ///
+    /// # Safety
+    /// SSE2 is baseline on x86_64.
+    unsafe fn exp128(x: __m128) -> __m128 {
+        let x = _mm_min_ps(x, _mm_set1_ps(vexp::EXP_HI));
+        let x = _mm_max_ps(x, _mm_set1_ps(vexp::EXP_LO));
+        let fx0 = _mm_add_ps(_mm_mul_ps(x, _mm_set1_ps(vexp::LOG2EF)), _mm_set1_ps(0.5));
+        let trunc = _mm_cvtepi32_ps(_mm_cvttps_epi32(fx0));
+        let went_up = _mm_and_ps(_mm_cmpgt_ps(trunc, fx0), _mm_set1_ps(1.0));
+        let fx = _mm_sub_ps(trunc, went_up);
+        let r = _mm_sub_ps(x, _mm_mul_ps(fx, _mm_set1_ps(vexp::LN2_HI)));
+        let r = _mm_sub_ps(r, _mm_mul_ps(fx, _mm_set1_ps(vexp::LN2_LO)));
+        let mut y = _mm_set1_ps(vexp::P0);
+        y = _mm_add_ps(_mm_mul_ps(y, r), _mm_set1_ps(vexp::P1));
+        y = _mm_add_ps(_mm_mul_ps(y, r), _mm_set1_ps(vexp::P2));
+        y = _mm_add_ps(_mm_mul_ps(y, r), _mm_set1_ps(vexp::P3));
+        y = _mm_add_ps(_mm_mul_ps(y, r), _mm_set1_ps(vexp::P4));
+        y = _mm_add_ps(_mm_mul_ps(y, r), _mm_set1_ps(vexp::P5));
+        let z = _mm_mul_ps(r, r);
+        y = _mm_add_ps(_mm_mul_ps(y, z), r);
+        y = _mm_add_ps(y, _mm_set1_ps(1.0));
+        let k = _mm_cvttps_epi32(fx);
+        let pow2k =
+            _mm_castsi128_ps(_mm_slli_epi32(_mm_add_epi32(k, _mm_set1_epi32(127)), 23));
+        _mm_mul_ps(y, pow2k)
+    }
+
+    /// Fused RBF epilogue, AVX2 tier: assemble `d²` from cached norms
+    /// and the accumulated dots, clamp, and exponentiate — one 8-lane
+    /// pass. The `d²` assembly uses the same add/sub/mul order as the
+    /// scalar tail path.
+    ///
+    /// # Safety
+    /// Requires AVX2; `yn` and `out` must hold exactly [`NR`] lanes.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn rbf_epilogue_avx2(
+        neg_gamma: f32,
+        xnr: f32,
+        yn: &[f32],
+        dots: &[f32; NR],
+        out: &mut [f32],
+    ) {
+        let d2 = _mm256_sub_ps(
+            _mm256_add_ps(_mm256_set1_ps(xnr), _mm256_loadu_ps(yn.as_ptr())),
+            _mm256_mul_ps(_mm256_set1_ps(2.0), _mm256_loadu_ps(dots.as_ptr())),
+        );
+        let d2 = _mm256_max_ps(d2, _mm256_setzero_ps());
+        let e = exp256(_mm256_mul_ps(_mm256_set1_ps(neg_gamma), d2));
+        _mm256_storeu_ps(out.as_mut_ptr(), e);
+    }
+
+    /// Fused RBF epilogue, SSE2 tier: the same pass as
+    /// [`rbf_epilogue_avx2`] in two 4-lane halves.
+    ///
+    /// # Safety
+    /// SSE2 is baseline on x86_64; `yn` and `out` must hold exactly
+    /// [`NR`] lanes.
+    pub unsafe fn rbf_epilogue_sse2(
+        neg_gamma: f32,
+        xnr: f32,
+        yn: &[f32],
+        dots: &[f32; NR],
+        out: &mut [f32],
+    ) {
+        let xn_v = _mm_set1_ps(xnr);
+        let two = _mm_set1_ps(2.0);
+        let ng = _mm_set1_ps(neg_gamma);
+        let zero = _mm_setzero_ps();
+        for half in 0..2 {
+            let o = half * 4;
+            let d2 = _mm_sub_ps(
+                _mm_add_ps(xn_v, _mm_loadu_ps(yn.as_ptr().add(o))),
+                _mm_mul_ps(two, _mm_loadu_ps(dots.as_ptr().add(o))),
+            );
+            let d2 = _mm_max_ps(d2, zero);
+            let e = exp128(_mm_mul_ps(ng, d2));
+            _mm_storeu_ps(out.as_mut_ptr().add(o), e);
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    //! NEON (ASIMD) tier: the aarch64 twin of the SSE2 kernel. The
+    //! NR=8 depth-major packed panels are consumed as two `float32x4`
+    //! halves with the same two-accumulator-chain, depth-unrolled-by-2
+    //! shape; rows are register-blocked 2 at a time for the dense fill
+    //! and streamed one at a time for CSR. Dot chains use fused
+    //! multiply-add (`vfmaq`) — the same rounding class as the AVX2+FMA
+    //! tier — while the RBF epilogue uses plain mul/add so its lanes
+    //! stay bit-equal to the shared scalar `vexp` emulation.
+    use std::arch::aarch64::*;
+
+    use super::{vexp, NR};
+
+    /// Dense register block: up to 2 rows against one NR-wide panel.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; unsafe for the raw loads/stores.
+    /// `panel` must hold at least `depth * NR` floats and every row in
+    /// `arows` exactly `depth`.
+    pub unsafe fn panel_dots_neon(
+        arows: &[&[f32]],
+        panel: &[f32],
+        depth: usize,
+        out: &mut [[f32; NR]],
+    ) {
+        debug_assert!(arows.len() <= 2);
+        let m = arows.len();
+        let py = panel.as_ptr();
+        let mut acc0lo = [vdupq_n_f32(0.0); 2];
+        let mut acc0hi = [vdupq_n_f32(0.0); 2];
+        let mut acc1lo = [vdupq_n_f32(0.0); 2];
+        let mut acc1hi = [vdupq_n_f32(0.0); 2];
+        let mut k = 0;
+        while k + 2 <= depth {
+            let y0lo = vld1q_f32(py.add(k * NR));
+            let y0hi = vld1q_f32(py.add(k * NR + 4));
+            let y1lo = vld1q_f32(py.add((k + 1) * NR));
+            let y1hi = vld1q_f32(py.add((k + 1) * NR + 4));
+            for i in 0..m {
+                let a = arows[i];
+                let a0 = *a.get_unchecked(k);
+                let a1 = *a.get_unchecked(k + 1);
+                acc0lo[i] = vfmaq_n_f32(acc0lo[i], y0lo, a0);
+                acc0hi[i] = vfmaq_n_f32(acc0hi[i], y0hi, a0);
+                acc1lo[i] = vfmaq_n_f32(acc1lo[i], y1lo, a1);
+                acc1hi[i] = vfmaq_n_f32(acc1hi[i], y1hi, a1);
+            }
+            k += 2;
+        }
+        if k < depth {
+            let y0lo = vld1q_f32(py.add(k * NR));
+            let y0hi = vld1q_f32(py.add(k * NR + 4));
+            for i in 0..m {
+                let a0 = *arows[i].get_unchecked(k);
+                acc0lo[i] = vfmaq_n_f32(acc0lo[i], y0lo, a0);
+                acc0hi[i] = vfmaq_n_f32(acc0hi[i], y0hi, a0);
+            }
+        }
+        for i in 0..m {
+            vst1q_f32(out[i].as_mut_ptr(), vaddq_f32(acc0lo[i], acc1lo[i]));
+            vst1q_f32(out[i].as_mut_ptr().add(4), vaddq_f32(acc0hi[i], acc1hi[i]));
+        }
+    }
+
+    /// Sparse row-panel product, NEON tier: broadcast each stored value
+    /// against one NR-wide panel row, two chains, two halves each.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; every `idx` entry must satisfy
+    /// `(idx + 1) * NR <= panel.len()` (the `CsrMat` column-bound
+    /// invariant).
+    pub unsafe fn sparse_panel_dots_neon(
+        idx: &[u32],
+        vals: &[f32],
+        panel: &[f32],
+        out: &mut [f32; NR],
+    ) {
+        let py = panel.as_ptr();
+        let n = idx.len();
+        let mut acc0lo = vdupq_n_f32(0.0);
+        let mut acc0hi = vdupq_n_f32(0.0);
+        let mut acc1lo = vdupq_n_f32(0.0);
+        let mut acc1hi = vdupq_n_f32(0.0);
+        let mut k = 0;
+        while k + 2 <= n {
+            let r0 = *idx.get_unchecked(k) as usize * NR;
+            let r1 = *idx.get_unchecked(k + 1) as usize * NR;
+            let v0 = *vals.get_unchecked(k);
+            let v1 = *vals.get_unchecked(k + 1);
+            acc0lo = vfmaq_n_f32(acc0lo, vld1q_f32(py.add(r0)), v0);
+            acc0hi = vfmaq_n_f32(acc0hi, vld1q_f32(py.add(r0 + 4)), v0);
+            acc1lo = vfmaq_n_f32(acc1lo, vld1q_f32(py.add(r1)), v1);
+            acc1hi = vfmaq_n_f32(acc1hi, vld1q_f32(py.add(r1 + 4)), v1);
+            k += 2;
+        }
+        if k < n {
+            let r0 = *idx.get_unchecked(k) as usize * NR;
+            let v0 = *vals.get_unchecked(k);
+            acc0lo = vfmaq_n_f32(acc0lo, vld1q_f32(py.add(r0)), v0);
+            acc0hi = vfmaq_n_f32(acc0hi, vld1q_f32(py.add(r0 + 4)), v0);
+        }
+        vst1q_f32(out.as_mut_ptr(), vaddq_f32(acc0lo, acc1lo));
+        vst1q_f32(out.as_mut_ptr().add(4), vaddq_f32(acc0hi, acc1hi));
+    }
+
+    /// 4-lane `exp` of the shared polynomial, NEON form. `vrndmq_f32`
+    /// is an exact floor; plain mul/add keeps lanes bit-equal to
+    /// `vexp::exp_approx`.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64.
+    unsafe fn exp_f32x4(x: float32x4_t) -> float32x4_t {
+        let x = vminq_f32(x, vdupq_n_f32(vexp::EXP_HI));
+        let x = vmaxq_f32(x, vdupq_n_f32(vexp::EXP_LO));
+        let fx = vrndmq_f32(vaddq_f32(
+            vmulq_f32(x, vdupq_n_f32(vexp::LOG2EF)),
+            vdupq_n_f32(0.5),
+        ));
+        let r = vsubq_f32(x, vmulq_f32(fx, vdupq_n_f32(vexp::LN2_HI)));
+        let r = vsubq_f32(r, vmulq_f32(fx, vdupq_n_f32(vexp::LN2_LO)));
+        let mut y = vdupq_n_f32(vexp::P0);
+        y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(vexp::P1));
+        y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(vexp::P2));
+        y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(vexp::P3));
+        y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(vexp::P4));
+        y = vaddq_f32(vmulq_f32(y, r), vdupq_n_f32(vexp::P5));
+        let z = vmulq_f32(r, r);
+        y = vaddq_f32(vmulq_f32(y, z), r);
+        y = vaddq_f32(y, vdupq_n_f32(1.0));
+        let k = vcvtq_s32_f32(fx);
+        let pow2k = vreinterpretq_f32_s32(vshlq_n_s32(vaddq_s32(k, vdupq_n_s32(127)), 23));
+        vmulq_f32(y, pow2k)
+    }
+
+    /// Fused RBF epilogue, NEON tier: `d²` assembly + clamp + the shared
+    /// polynomial exp, in two 4-lane halves.
+    ///
+    /// # Safety
+    /// NEON is baseline on aarch64; `yn` and `out` must hold exactly
+    /// [`NR`] lanes.
+    pub unsafe fn rbf_epilogue_neon(
+        neg_gamma: f32,
+        xnr: f32,
+        yn: &[f32],
+        dots: &[f32; NR],
+        out: &mut [f32],
+    ) {
+        let xn_v = vdupq_n_f32(xnr);
+        let two = vdupq_n_f32(2.0);
+        let ng = vdupq_n_f32(neg_gamma);
+        let zero = vdupq_n_f32(0.0);
+        for half in 0..2 {
+            let o = half * 4;
+            let d2 = vsubq_f32(
+                vaddq_f32(xn_v, vld1q_f32(yn.as_ptr().add(o))),
+                vmulq_f32(two, vld1q_f32(dots.as_ptr().add(o))),
+            );
+            let d2 = vmaxq_f32(d2, zero);
+            let e = exp_f32x4(vmulq_f32(ng, d2));
+            vst1q_f32(out.as_mut_ptr().add(o), e);
+        }
     }
 }
 
@@ -1003,6 +1488,103 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn vector_exp_epilogue_matches_libm_baseline() {
+        // the production (polynomial) fill vs the retained libm fill:
+        // RBF values live in (0, 1], so a plain absolute tolerance well
+        // above the polynomial's ~1e-7 error is the right check — on
+        // every tier, both storages
+        let mut rng = Rng::new(8);
+        let x = random_mat(&mut rng, 21, 14);
+        let csr = CsrMat::from_dense(&x);
+        let rows: Vec<usize> = (0..21).collect();
+        let cols: Vec<usize> = vec![0, 5, 10, 15, 20, 2, 7, 12, 17, 3, 9];
+        let xn: Vec<f32> = (0..21)
+            .map(|r| x.row(r).iter().map(|v| v * v).sum())
+            .collect();
+        let yn: Vec<f32> = cols.iter().map(|&j| xn[j]).collect();
+        let kernel = KernelFn::Rbf { gamma: 0.7 };
+        let packed = PackedPanel::pack_gather(&x, &cols);
+        let packed_csr = PackedPanel::pack_gather_csr(&csr, &cols);
+        for tier in simd::supported_tiers() {
+            let n = rows.len() * cols.len();
+            let (mut vec_d, mut libm_d) = (vec![0.0f32; n], vec![0.0f32; n]);
+            fill_gram_rows(tier, &x, &rows, &packed, &xn, &yn, kernel, &mut vec_d);
+            fill_gram_rows_scalar_exp(tier, &x, &rows, &packed, &xn, &yn, kernel, &mut libm_d);
+            let (mut vec_s, mut libm_s) = (vec![0.0f32; n], vec![0.0f32; n]);
+            fill_gram_rows_csr(tier, &csr, &rows, &packed_csr, &xn, &yn, kernel, &mut vec_s);
+            fill_gram_rows_csr_scalar_exp(
+                tier, &csr, &rows, &packed_csr, &xn, &yn, kernel, &mut libm_s,
+            );
+            for (g, w) in vec_d.iter().zip(&libm_d).chain(vec_s.iter().zip(&libm_s)) {
+                assert!((g - w).abs() < 1e-5, "{tier}: poly {g} vs libm {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_tail_lanes_bit_equal_full_panel() {
+        // a column's bits must not depend on whether it landed in a full
+        // 8-lane panel or a remainder: fill against all 8 columns, then
+        // against only the first 5 (a tail panel), and compare the
+        // shared columns bit-for-bit on every tier
+        let mut rng = Rng::new(9);
+        let x = random_mat(&mut rng, 10, 13);
+        let rows: Vec<usize> = (0..10).collect();
+        let full_cols: Vec<usize> = (0..8).collect();
+        let tail_cols: Vec<usize> = (0..5).collect();
+        let xn: Vec<f32> = (0..10)
+            .map(|r| x.row(r).iter().map(|v| v * v).sum())
+            .collect();
+        let kernel = KernelFn::Rbf { gamma: 0.5 };
+        let packed_full = PackedPanel::pack_gather(&x, &full_cols);
+        let packed_tail = PackedPanel::pack_gather(&x, &tail_cols);
+        let yn_full: Vec<f32> = full_cols.iter().map(|&j| xn[j]).collect();
+        let yn_tail: Vec<f32> = tail_cols.iter().map(|&j| xn[j]).collect();
+        for tier in simd::supported_tiers() {
+            let mut full = vec![0.0f32; rows.len() * 8];
+            let mut tail = vec![0.0f32; rows.len() * 5];
+            fill_gram_rows(tier, &x, &rows, &packed_full, &xn, &yn_full, kernel, &mut full);
+            fill_gram_rows(tier, &x, &rows, &packed_tail, &xn, &yn_tail, kernel, &mut tail);
+            for i in 0..rows.len() {
+                for j in 0..5 {
+                    assert_eq!(
+                        full[i * 8 + j].to_bits(),
+                        tail[i * 5 + j].to_bits(),
+                        "{tier}: [{i},{j}] full-panel vs tail bits differ"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn linear_fill_is_bitwise_the_dots() {
+        // the Linear epilogue is a lane copy selected once per fill — the
+        // Gram fill must equal the raw matmul bit-for-bit
+        let mut rng = Rng::new(10);
+        let x = random_mat(&mut rng, 9, 11);
+        let rows: Vec<usize> = (0..9).collect();
+        let cols: Vec<usize> = vec![8, 1, 6, 3, 0, 7, 2];
+        let xn: Vec<f32> = (0..9)
+            .map(|r| x.row(r).iter().map(|v| v * v).sum())
+            .collect();
+        let yn: Vec<f32> = cols.iter().map(|&j| xn[j]).collect();
+        let packed = PackedPanel::pack_gather(&x, &cols);
+        let a = x.gather(&rows);
+        for tier in simd::supported_tiers() {
+            let mut gram = vec![0.0f32; rows.len() * cols.len()];
+            fill_gram_rows(tier, &x, &rows, &packed, &xn, &yn, KernelFn::Linear, &mut gram);
+            let mut dots = vec![0.0f32; rows.len() * cols.len()];
+            matmul_packed(tier, &a, &packed, &mut dots);
+            assert_eq!(
+                gram.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                dots.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{tier}"
+            );
         }
     }
 

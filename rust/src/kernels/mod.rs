@@ -26,10 +26,11 @@
 //! the resulting [`GramView`] instead of a materialized `Mat`.
 //!
 //! [`microkernel`] is the compute core underneath the native paths: a
-//! CPU-feature-dispatched (AVX2+FMA / SSE2 / scalar, see
+//! CPU-feature-dispatched (AVX2+FMA / SSE2 / NEON / scalar, see
 //! `linalg::simd`), packed, register-blocked micro-kernel that fills
-//! Gram blocks with a fused kernel-function epilogue and serves the
-//! inner loop's `K · M` indicator contractions.
+//! Gram blocks with a fused kernel-function epilogue — vectorized
+//! polynomial `exp` for RBF ([`vexp`]), a straight lane copy for linear
+//! — and serves the inner loop's `K · M` indicator contractions.
 mod diskcache;
 mod gram;
 mod kernel_fn;
@@ -38,7 +39,7 @@ pub mod tiles;
 
 pub use diskcache::DiskCachedGram;
 pub use gram::{GramSource, RmsdGram, VecGram, VecStorage};
-pub use kernel_fn::KernelFn;
+pub use kernel_fn::{vexp, KernelFn};
 pub use microkernel::PackedPanel;
 pub use tiles::{
     run_pipeline, GramPanel, GramView, PanelFeed, PanelSpec, PipelineConfig, PipelineStats,

@@ -1,19 +1,26 @@
 //! CPU-feature dispatch for the packed Gram micro-kernel.
 //!
-//! The compute core (`kernels::microkernel`) ships three implementations
-//! of the same register-blocked panel kernel: AVX2+FMA, SSE2, and a
-//! plain-Rust scalar reference. Which one runs is decided **once** at
-//! startup — first use of [`active_tier`] — from CPUID feature detection,
-//! overridable via the `DKKM_SIMD` environment variable (`avx2`, `sse2`,
-//! `scalar`) for testing and apples-to-apples benchmarking. Requesting a
-//! tier the host cannot execute falls back to detection with a warning
-//! rather than dispatching illegal instructions.
+//! The compute core (`kernels::microkernel`) ships four implementations
+//! of the same register-blocked panel kernel: AVX2+FMA and SSE2 on
+//! x86_64, NEON on aarch64, and a plain-Rust scalar reference that runs
+//! anywhere. Which one runs is decided **once** at startup — first use
+//! of [`active_tier`] — from CPU feature detection, overridable via the
+//! `DKKM_SIMD` environment variable (`avx2`, `sse2`, `neon`, `scalar`)
+//! for testing and apples-to-apples benchmarking. Requesting a tier the
+//! host cannot execute falls back to detection with a warning rather
+//! than dispatching illegal instructions; the request, the tier that
+//! actually ran, and the fallback reason are recorded in
+//! [`TierSelection`] so `RunReport` can report them honestly
+//! (`active_selection`).
 //!
 //! Tiers differ only in rounding (FMA contracts the multiply-add, and
 //! lane counts change the split of the accumulation tree); every tier is
 //! deterministic, independent of threading and of how rows are grouped
 //! into register blocks, and matches the scalar reference within 1e-4
-//! (property-tested in `tests/integration_simd.rs`).
+//! (property-tested in `tests/integration_simd.rs`). The fused RBF
+//! epilogue is tighter still: its polynomial `exp` produces identical
+//! bits on every tier for the same `d²` input (see
+//! `kernels::kernel_fn::vexp`).
 use std::fmt;
 use std::str::FromStr;
 use std::sync::OnceLock;
@@ -21,10 +28,14 @@ use std::sync::OnceLock;
 /// One dispatchable implementation of the packed panel micro-kernel.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SimdTier {
-    /// 256-bit FMA kernel (8 lanes, 4-row register block).
+    /// 256-bit FMA kernel (8 lanes, 4-row register block; x86_64).
     Avx2Fma,
-    /// 128-bit mul+add kernel (two 4-lane halves, 2-row register block).
+    /// 128-bit mul+add kernel (two 4-lane halves, 2-row register block;
+    /// x86_64 baseline).
     Sse2,
+    /// 128-bit FMA kernel (two `float32x4` halves per 8-lane panel
+    /// step, 2-row register block; aarch64 baseline).
+    Neon,
     /// Plain-Rust reference (8-lane arrays the autovectorizer may widen).
     Scalar,
 }
@@ -35,13 +46,15 @@ impl SimdTier {
         match self {
             SimdTier::Avx2Fma => "avx2+fma",
             SimdTier::Sse2 => "sse2",
+            SimdTier::Neon => "neon",
             SimdTier::Scalar => "scalar",
         }
     }
 
     /// Whether this host can execute the tier. `Scalar` always can;
-    /// `Sse2` is baseline on x86_64; AVX2 requires both `avx2` and `fma`
-    /// CPUID bits (the micro-kernel uses them together).
+    /// `Sse2` is baseline on x86_64 and `Neon` (ASIMD) on aarch64; AVX2
+    /// requires both `avx2` and `fma` CPUID bits (the micro-kernel uses
+    /// them together).
     pub fn is_available(&self) -> bool {
         match self {
             SimdTier::Scalar => true,
@@ -52,7 +65,10 @@ impl SimdTier {
                 std::arch::is_x86_feature_detected!("avx2")
                     && std::arch::is_x86_feature_detected!("fma")
             }
-            #[cfg(not(target_arch = "x86_64"))]
+            #[cfg(target_arch = "aarch64")]
+            SimdTier::Neon => true,
+            // tiers the target architecture does not compile
+            #[allow(unreachable_patterns)]
             _ => false,
         }
     }
@@ -68,23 +84,26 @@ impl FromStr for SimdTier {
     type Err = String;
 
     /// Parse a `DKKM_SIMD` value: "avx2" (or "avx2+fma"), "sse2",
-    /// "scalar".
+    /// "neon", "scalar".
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         match s.trim().to_ascii_lowercase().as_str() {
             "avx2" | "avx2+fma" | "avx2fma" => Ok(SimdTier::Avx2Fma),
             "sse2" => Ok(SimdTier::Sse2),
+            "neon" | "asimd" => Ok(SimdTier::Neon),
             "scalar" => Ok(SimdTier::Scalar),
             other => Err(format!(
-                "unknown SIMD tier '{other}' (expected avx2 | sse2 | scalar)"
+                "unknown SIMD tier '{other}' (expected avx2 | sse2 | neon | scalar)"
             )),
         }
     }
 }
 
-/// Best tier the host supports, by CPUID detection alone.
+/// Best tier the host supports, by feature detection alone.
 pub fn detect() -> SimdTier {
     if SimdTier::Avx2Fma.is_available() {
         SimdTier::Avx2Fma
+    } else if SimdTier::Neon.is_available() {
+        SimdTier::Neon
     } else if SimdTier::Sse2.is_available() {
         SimdTier::Sse2
     } else {
@@ -95,48 +114,110 @@ pub fn detect() -> SimdTier {
 /// Every tier this host can execute, best first (bench sweeps iterate
 /// this so `BENCH_gram.json` only reports tiers that actually ran).
 pub fn supported_tiers() -> Vec<SimdTier> {
-    [SimdTier::Avx2Fma, SimdTier::Sse2, SimdTier::Scalar]
-        .into_iter()
-        .filter(|t| t.is_available())
-        .collect()
+    [
+        SimdTier::Avx2Fma,
+        SimdTier::Neon,
+        SimdTier::Sse2,
+        SimdTier::Scalar,
+    ]
+    .into_iter()
+    .filter(|t| t.is_available())
+    .collect()
+}
+
+/// The outcome of tier selection: what `DKKM_SIMD` asked for (if
+/// anything), the tier the compute core actually dispatches to, and the
+/// reason whenever the two differ. `RunReport` JSON carries `used` under
+/// `"simd"` and `fallback` under `"simd_fallback"`, so a run on the
+/// wrong hardware can never silently masquerade as the requested tier.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierSelection {
+    /// Raw `DKKM_SIMD` value, when the variable was set.
+    pub requested: Option<String>,
+    /// Tier every micro-kernel call in this process dispatches to.
+    pub used: SimdTier,
+    /// Why the request was not honored (unknown name, or a tier this
+    /// host cannot execute). `None` when no request was made or it held.
+    pub fallback: Option<String>,
+}
+
+/// Resolve a `DKKM_SIMD` request against this host's capabilities. Pure
+/// (no environment access, no caching) so both architectures' fallback
+/// behaviour is unit-testable; [`active_selection`] feeds it the real
+/// environment exactly once per process.
+pub fn select_tier(request: Option<&str>) -> TierSelection {
+    match request {
+        None => TierSelection {
+            requested: None,
+            used: detect(),
+            fallback: None,
+        },
+        Some(raw) => match raw.parse::<SimdTier>() {
+            Ok(tier) if tier.is_available() => TierSelection {
+                requested: Some(raw.to_string()),
+                used: tier,
+                fallback: None,
+            },
+            Ok(tier) => TierSelection {
+                requested: Some(raw.to_string()),
+                used: detect(),
+                fallback: Some(format!(
+                    "requested tier '{tier}' is not executable on this host \
+                     ({arch}); fell back to detection",
+                    arch = std::env::consts::ARCH
+                )),
+            },
+            Err(e) => TierSelection {
+                requested: Some(raw.to_string()),
+                used: detect(),
+                fallback: Some(e),
+            },
+        },
+    }
+}
+
+/// The process-wide tier selection, resolved once from `DKKM_SIMD` (or
+/// detection) on first use. Any fallback is logged here — once — and
+/// stays queryable for reports.
+pub fn active_selection() -> &'static TierSelection {
+    static SEL: OnceLock<TierSelection> = OnceLock::new();
+    SEL.get_or_init(|| {
+        let sel = select_tier(std::env::var("DKKM_SIMD").ok().as_deref());
+        if let Some(reason) = &sel.fallback {
+            eprintln!("dkkm: ignoring DKKM_SIMD: {reason}");
+        }
+        sel
+    })
 }
 
 /// The tier the compute core dispatches to, selected once per process:
-/// `DKKM_SIMD` when set (and executable on this host), CPUID detection
+/// `DKKM_SIMD` when set (and executable on this host), feature detection
 /// otherwise.
 pub fn active_tier() -> SimdTier {
-    static TIER: OnceLock<SimdTier> = OnceLock::new();
-    *TIER.get_or_init(|| match std::env::var("DKKM_SIMD") {
-        Ok(raw) => match raw.parse::<SimdTier>() {
-            Ok(tier) if tier.is_available() => tier,
-            Ok(tier) => {
-                eprintln!(
-                    "dkkm: DKKM_SIMD={tier} is not executable on this host; \
-                     falling back to detection"
-                );
-                detect()
-            }
-            Err(e) => {
-                eprintln!("dkkm: ignoring DKKM_SIMD: {e}");
-                detect()
-            }
-        },
-        Err(_) => detect(),
-    })
+    active_selection().used
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    const ALL: [SimdTier; 4] = [
+        SimdTier::Avx2Fma,
+        SimdTier::Sse2,
+        SimdTier::Neon,
+        SimdTier::Scalar,
+    ];
+
     #[test]
     fn parse_roundtrip() {
         assert_eq!("avx2".parse::<SimdTier>().unwrap(), SimdTier::Avx2Fma);
         assert_eq!("AVX2+FMA".parse::<SimdTier>().unwrap(), SimdTier::Avx2Fma);
         assert_eq!("sse2".parse::<SimdTier>().unwrap(), SimdTier::Sse2);
+        assert_eq!("neon".parse::<SimdTier>().unwrap(), SimdTier::Neon);
+        assert_eq!("ASIMD".parse::<SimdTier>().unwrap(), SimdTier::Neon);
         assert_eq!("scalar".parse::<SimdTier>().unwrap(), SimdTier::Scalar);
-        assert!("neon".parse::<SimdTier>().is_err());
-        for t in [SimdTier::Avx2Fma, SimdTier::Sse2, SimdTier::Scalar] {
+        assert!("avx512".parse::<SimdTier>().is_err());
+        for t in ALL {
             assert_eq!(t.name().parse::<SimdTier>().unwrap(), t);
         }
     }
@@ -155,9 +236,62 @@ mod tests {
     }
 
     #[test]
+    fn tier_availability_matches_architecture() {
+        #[cfg(target_arch = "x86_64")]
+        {
+            assert!(SimdTier::Sse2.is_available());
+            assert!(!SimdTier::Neon.is_available());
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            assert!(SimdTier::Neon.is_available());
+            assert!(!SimdTier::Sse2.is_available());
+            assert!(!SimdTier::Avx2Fma.is_available());
+            assert_eq!(detect(), SimdTier::Neon);
+        }
+    }
+
+    #[test]
+    fn select_tier_honors_available_requests() {
+        let none = select_tier(None);
+        assert_eq!(none.used, detect());
+        assert!(none.requested.is_none() && none.fallback.is_none());
+
+        let scalar = select_tier(Some("scalar"));
+        assert_eq!(scalar.used, SimdTier::Scalar);
+        assert_eq!(scalar.requested.as_deref(), Some("scalar"));
+        assert!(scalar.fallback.is_none());
+    }
+
+    #[test]
+    fn select_tier_records_fallback_for_foreign_architecture() {
+        // the tier that exists only on the *other* architecture must
+        // parse, fall back to detection, and say why — on both arches
+        #[cfg(target_arch = "x86_64")]
+        let foreign = "neon";
+        #[cfg(target_arch = "aarch64")]
+        let foreign = "avx2";
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        let foreign = "avx2";
+        let sel = select_tier(Some(foreign));
+        assert_eq!(sel.used, detect());
+        assert_eq!(sel.requested.as_deref(), Some(foreign));
+        let reason = sel.fallback.expect("foreign tier must record a fallback");
+        assert!(reason.contains("not executable"), "{reason}");
+    }
+
+    #[test]
+    fn select_tier_records_fallback_for_unknown_names() {
+        let sel = select_tier(Some("avx512"));
+        assert_eq!(sel.used, detect());
+        assert!(sel.fallback.unwrap().contains("unknown SIMD tier"));
+    }
+
+    #[test]
     fn active_tier_is_stable_and_available() {
         let a = active_tier();
         assert!(a.is_available());
         assert_eq!(a, active_tier(), "tier must be selected once");
+        assert_eq!(a, active_selection().used);
     }
 }

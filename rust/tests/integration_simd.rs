@@ -6,8 +6,9 @@
 //! under threading and tiling, since whole-vs-tiled and serial-vs-shard
 //! equivalence throughout the crate relies on per-row determinism.
 use dkkm::cluster::assign::{self, ClusterStats};
+use dkkm::data::CsrMat;
 use dkkm::kernels::microkernel::{self, PackedPanel};
-use dkkm::kernels::{GramSource, GramView, KernelFn, VecGram};
+use dkkm::kernels::{vexp, GramSource, GramView, KernelFn, VecGram};
 use dkkm::linalg::{row_sq_norms, simd, Mat, SimdTier};
 use dkkm::util::rng::Rng;
 
@@ -240,6 +241,200 @@ fn view_iteration_matches_whole_across_tile_widths() {
 }
 
 #[test]
+fn csr_tiers_match_scalar_reference_across_awkward_shapes() {
+    // the sparse twin of the dense awkward-shape sweep: every tier's CSR
+    // fill must match the scalar CSR fill and the dense dot4 oracle,
+    // across depths/column counts straddling the vector width, single
+    // rows, and all-zero (empty) rows
+    let mut rng = Rng::new(7);
+    for &d in &[1usize, 3, 8, 9, 17, 65] {
+        for &(nrows, ncols) in &[(1usize, 1usize), (1, 9), (5, 7), (13, 31)] {
+            let n = nrows.max(ncols) + 9;
+            // sparse-ish data with whole rows zeroed (empty documents)
+            let mut zero_row = vec![false; n];
+            for i in (0..n).step_by(4) {
+                zero_row[i] = true;
+            }
+            let x = Mat::from_fn(n, d, |r, _| {
+                if zero_row[r] || rng.f64() < 0.7 {
+                    0.0
+                } else {
+                    rng.normal32(0.0, 1.0)
+                }
+            });
+            let csr = CsrMat::from_dense(&x);
+            let rows: Vec<usize> = (0..nrows).map(|i| (i * 3) % n).collect();
+            let cols: Vec<usize> = (0..ncols).map(|j| (j * 5 + 1) % n).collect();
+            let xn = row_sq_norms(&x);
+            let yn: Vec<f32> = cols.iter().map(|&j| xn[j]).collect();
+            let packed = PackedPanel::pack_gather_csr(&csr, &cols);
+            for kernel in kernels() {
+                let mut oracle = vec![0.0f32; nrows * ncols];
+                microkernel::fill_block_dot4(&x, &rows, &cols, kernel, &mut oracle);
+                let mut scalar = vec![0.0f32; nrows * ncols];
+                microkernel::fill_gram_rows_csr(
+                    SimdTier::Scalar,
+                    &csr,
+                    &rows,
+                    &packed,
+                    &xn,
+                    &yn,
+                    kernel,
+                    &mut scalar,
+                );
+                for tier in simd::supported_tiers() {
+                    let mut got = vec![0.0f32; nrows * ncols];
+                    microkernel::fill_gram_rows_csr(
+                        tier, &csr, &rows, &packed, &xn, &yn, kernel, &mut got,
+                    );
+                    for (i, ((g, s), o)) in
+                        got.iter().zip(&scalar).zip(&oracle).enumerate()
+                    {
+                        assert!(
+                            (g - s).abs() < 1e-4,
+                            "csr {tier} vs scalar {kernel:?} d={d} [{i}]: {g} vs {s}"
+                        );
+                        assert!(
+                            (g - o).abs() < 1e-4,
+                            "csr {tier} vs dot4 {kernel:?} d={d} [{i}]: {g} vs {o}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// |got − want| must be within 4 ULP of `want` or 1e-6 absolute — the
+/// vector-exp accuracy contract from the epilogue design.
+fn assert_exp_close(got: f32, want: f32, ctx: &str) {
+    let abs = (got - want).abs();
+    let ulp = 4.0 * f32::EPSILON * want.abs().max(f32::MIN_POSITIVE);
+    assert!(
+        abs <= 1e-6 || abs <= ulp,
+        "{ctx}: got {got:e}, want {want:e} (|diff| = {abs:e})"
+    );
+}
+
+#[test]
+fn vector_exp_accuracy_across_argument_regimes() {
+    // sweep gamma·d2 through every regime the RBF epilogue can see:
+    // exactly 0 (the Gram diagonal), vanishingly small, ordinary,
+    // near the flush boundary, subnormal-producing (true exp(-88) is
+    // subnormal), past the clamp, and astronomically large. The fill is
+    // driven end to end: d=1 samples at distance sqrt(d2), one full
+    // 8-lane panel plus a 6-column tail so both the vector lanes and the
+    // scalar tail emulation are exercised — on every tier.
+    let d2_targets: [f32; 14] = [
+        0.0, 1.0e-30, 0.25, 1.0, 4.0, 20.0, 80.0, 87.0, // full panel
+        87.33, 88.0, 88.5, 100.0, 1000.0, 1.0e8, // tail panel
+    ];
+    let n = d2_targets.len() + 1;
+    // row 0 is the origin; row 1+t sits at distance sqrt(d2_targets[t])
+    let x = Mat::from_fn(n, 1, |r, _| {
+        if r == 0 {
+            0.0
+        } else {
+            d2_targets[r - 1].sqrt()
+        }
+    });
+    let rows = [0usize];
+    let cols: Vec<usize> = (1..n).collect();
+    let xn = row_sq_norms(&x);
+    let yn: Vec<f32> = cols.iter().map(|&j| xn[j]).collect();
+    let packed = PackedPanel::pack_gather(&x, &cols);
+    let kernel = KernelFn::Rbf { gamma: 1.0 };
+    for tier in simd::supported_tiers() {
+        let mut got = vec![0.0f32; cols.len()];
+        microkernel::fill_gram_rows(tier, &x, &rows, &packed, &xn, &yn, kernel, &mut got);
+        for (t, &g) in got.iter().enumerate() {
+            // the d² the fill assembles: 0 + yn[t] − 2·0, clamped
+            let d2 = yn[t].max(0.0);
+            let want = (-d2).exp();
+            assert_exp_close(g, want, &format!("{tier} d2≈{}", d2_targets[t]));
+            assert!((0.0..=1.0).contains(&g), "{tier}: exp out of range: {g}");
+        }
+        // the diagonal contract: d2 = 0 must give exactly 1.0
+        let mut diag = vec![0.0f32; 1];
+        let diag_packed = PackedPanel::pack_gather(&x, &[0]);
+        microkernel::fill_gram_rows(
+            tier,
+            &x,
+            &rows,
+            &diag_packed,
+            &xn,
+            &[0.0],
+            kernel,
+            &mut diag,
+        );
+        assert_eq!(diag[0].to_bits(), 1.0f32.to_bits(), "{tier}: exp(0) != 1");
+    }
+    // the shared scalar polynomial obeys the same bound on a dense sweep
+    let mut a = 0.0f32;
+    while a > -87.0 {
+        assert_exp_close(vexp::exp_approx(a), a.exp(), "exp_approx sweep");
+        a -= 0.013;
+    }
+}
+
+#[test]
+fn tier_choice_never_changes_labels_on_separated_fit() {
+    // labels (not bits) must agree across every executable tier: run the
+    // landmark assignment loop to a fixed point per tier on three
+    // well-separated blobs and compare the final labelings
+    let mut rng = Rng::new(8);
+    let n = 60;
+    let per = n / 3;
+    let centers = [(0.0f32, 0.0f32), (10.0, 0.0), (0.0, 10.0)];
+    let x = Mat::from_fn(n, 2, |r, c| {
+        let (cx, cy) = centers[r / per];
+        let base = if c == 0 { cx } else { cy };
+        base + rng.normal32(0.0, 0.5)
+    });
+    let rows: Vec<usize> = (0..n).collect();
+    let lms: Vec<usize> = (0..n).step_by(5).collect();
+    let xn = row_sq_norms(&x);
+    let kernel = KernelFn::Rbf { gamma: 0.1 };
+    let packed_lms = PackedPanel::pack_gather(&x, &lms);
+    let yn: Vec<f32> = lms.iter().map(|&j| xn[j]).collect();
+    let mut per_tier: Vec<(SimdTier, Vec<usize>)> = Vec::new();
+    for tier in simd::supported_tiers() {
+        let mut knl = vec![0.0f32; n * lms.len()];
+        microkernel::fill_gram_rows(tier, &x, &rows, &packed_lms, &xn, &yn, kernel, &mut knl);
+        let mut kll = vec![0.0f32; lms.len() * lms.len()];
+        microkernel::fill_gram_rows(tier, &x, &lms, &packed_lms, &xn, &yn, kernel, &mut kll);
+        let k_nl = Mat::from_fn(n, lms.len(), |r, c| knl[r * lms.len() + c]);
+        let k_ll = Mat::from_fn(lms.len(), lms.len(), |r, c| kll[r * lms.len() + c]);
+        // deliberately scrambled init, identical across tiers
+        let mut lm_labels: Vec<usize> = (0..lms.len()).map(|m| (m * 7 + 1) % 3).collect();
+        let mut labels = Vec::new();
+        for _ in 0..50 {
+            let (new_labels, _) = assign::inner_iteration(&k_nl, &k_ll, &lm_labels, 3);
+            let new_lm: Vec<usize> = lms.iter().map(|&j| new_labels[j]).collect();
+            let done = new_lm == lm_labels;
+            lm_labels = new_lm;
+            labels = new_labels;
+            if done {
+                break;
+            }
+        }
+        per_tier.push((tier, labels));
+    }
+    let (first_tier, first) = &per_tier[0];
+    for (tier, labels) in &per_tier[1..] {
+        assert_eq!(
+            labels, first,
+            "tier {tier} labels a separated fit differently than {first_tier}"
+        );
+    }
+    // sanity: the fit actually found the three blobs
+    for b in 0..3 {
+        let blob = &first[b * per..(b + 1) * per];
+        assert!(blob.iter().all(|&u| u == blob[0]), "blob {b} split");
+    }
+}
+
+#[test]
 fn simd_tier_parse_and_detection_are_consistent() {
     // every supported tier round-trips through the DKKM_SIMD syntax and
     // is actually executable; the active tier is one of them
@@ -250,4 +445,27 @@ fn simd_tier_parse_and_detection_are_consistent() {
         assert_eq!(t.name().parse::<SimdTier>().unwrap(), *t);
     }
     assert!(tiers.contains(&simd::active_tier()));
+    // the DKKM_SIMD=neon syntax must parse everywhere; whether it is
+    // executable is an architecture fact
+    assert_eq!("neon".parse::<SimdTier>().unwrap(), SimdTier::Neon);
+    #[cfg(target_arch = "aarch64")]
+    {
+        assert!(tiers.contains(&SimdTier::Neon));
+        assert!(!tiers.contains(&SimdTier::Sse2));
+        assert!(!tiers.contains(&SimdTier::Avx2Fma));
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert!(tiers.contains(&SimdTier::Sse2));
+        assert!(!tiers.contains(&SimdTier::Neon));
+    }
+    // a request for the other architecture's tier must fall back with a
+    // recorded reason, never dispatch illegal instructions
+    #[cfg(target_arch = "x86_64")]
+    let foreign = "neon";
+    #[cfg(not(target_arch = "x86_64"))]
+    let foreign = "avx2";
+    let sel = simd::select_tier(Some(foreign));
+    assert!(sel.used.is_available());
+    assert!(sel.fallback.is_some());
 }
