@@ -1,0 +1,162 @@
+//! bench-json harness: measured TCP collective costs.
+//!
+//! Runs the same mini-batch workload through the in-process sharded
+//! backend (the bit-identity oracle) and the real multi-process TCP
+//! transport at p ∈ {2, 4, 8}, records per-operation allreduce and
+//! allgather wall-clock/bytes from the coordinator's wire counters, and
+//! fits the alpha-beta model (`t = alpha + beta * bytes`) to the
+//! measured points by least squares. The fit lands in
+//! `BENCH_net.json` under `"fitted"`, which is exactly what the
+//! `measured` scaling topology (`dkkm scaling --topology measured`)
+//! loads — so the strong-scaling study can swap its guessed BG/Q and
+//! InfiniBand parameters for numbers observed on this host.
+//!
+//! Every TCP run is equivalence-asserted against the in-process and
+//! serial references: the wire must change the timings, never the
+//! labels.
+//!
+//!     cargo bench --bench net_json
+//!
+//! Knobs: `DKKM_SCALE` multiplies N, `DKKM_BENCH_OUT` overrides the
+//! output path.
+use std::path::PathBuf;
+
+use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
+use dkkm::coordinator::{build_dataset, gamma_for, DatasetSpec};
+use dkkm::distributed::{NetModel, ShardedBackend, TcpShardedBackend, Topology};
+use dkkm::kernels::{KernelFn, VecGram};
+use dkkm::util::json::Json;
+use dkkm::util::stats::{bench_scale, Table, Timer};
+
+/// Least-squares fit of `t = alpha + beta * x` over (bytes, seconds)
+/// points, clamped to the physical range (non-negative latency and
+/// inverse bandwidth).
+fn fit_alpha_beta(points: &[(f64, f64)]) -> (f64, f64) {
+    let n = points.len() as f64;
+    let sx: f64 = points.iter().map(|p| p.0).sum();
+    let sy: f64 = points.iter().map(|p| p.1).sum();
+    let sxx: f64 = points.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = points.iter().map(|p| p.0 * p.1).sum();
+    let denom = n * sxx - sx * sx;
+    let beta = if denom.abs() > f64::EPSILON { (n * sxy - sx * sy) / denom } else { 0.0 };
+    let alpha = (sy - beta * sx) / n;
+    (alpha.max(0.0), beta.max(0.0))
+}
+
+fn main() {
+    let n = ((1_200.0 * bench_scale()) as usize).max(300);
+    let b = 3usize;
+    let c = 8usize;
+    println!("== net bench: synthetic MNIST N={n}, B={b}, C={c}, localhost TCP ==\n");
+
+    let (data, _) = build_dataset(&DatasetSpec::Mnist { train: n, test: 0 }, 23);
+    let gamma = gamma_for(&data, 4.0, 23);
+    let source = VecGram::new(data.x.clone(), KernelFn::Rbf { gamma }, 1);
+    let cfg = MiniBatchConfig::new(c, b);
+    let worker_bin = PathBuf::from(env!("CARGO_BIN_EXE_dkkm"));
+
+    let t = Timer::start();
+    let reference = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&source).unwrap();
+    let serial_s = t.elapsed_s();
+
+    let mut table = Table::new(&[
+        "p",
+        "threads s",
+        "tcp s",
+        "allreduce us/op",
+        "allgather us/op",
+        "allgather B/op",
+    ]);
+    let mut rows = Vec::new();
+    let mut points = Vec::new(); // (bytes, seconds) per collective op
+    for p in [2usize, 4, 8] {
+        // in-process baseline: same collective schedule, zero wire cost
+        let threads = ShardedBackend::new(p);
+        let t = Timer::start();
+        let base = MiniBatchKernelKMeans::new(cfg.clone(), &threads).run(&source).unwrap();
+        let threads_s = t.elapsed_s();
+        assert_eq!(reference.labels, base.labels, "in-process diverged at p={p}");
+
+        let tcp = TcpShardedBackend::new(p).with_worker_bin(worker_bin.clone());
+        let t = Timer::start();
+        let run = MiniBatchKernelKMeans::new(cfg.clone(), &tcp).run(&source).unwrap();
+        let tcp_s = t.elapsed_s();
+        assert_eq!(reference.labels, run.labels, "tcp transport diverged at p={p}");
+        let rep = tcp.report();
+        tcp.shutdown();
+        assert!(rep.allreduce_ops > 0 && rep.allgather_ops > 0, "no collectives recorded");
+        assert_eq!(rep.protocol_errors, 0, "clean run hit protocol errors at p={p}");
+
+        let ar_s = rep.allreduce_seconds / rep.allreduce_ops as f64;
+        let ar_b = rep.allreduce_bytes as f64 / rep.allreduce_ops as f64;
+        let ag_s = rep.allgather_seconds / rep.allgather_ops as f64;
+        let ag_b = rep.allgather_bytes as f64 / rep.allgather_ops as f64;
+        points.push((ar_b, ar_s));
+        points.push((ag_b, ag_s));
+
+        // what the guessed topologies would have predicted per op
+        let model = |t: Topology| NetModel::new(t).allgather(p, (ag_b / p as f64) as usize);
+        let bgq = model(Topology::BgqTorus5D);
+        let ib = model(Topology::InfinibandQdr);
+
+        table.row(&[
+            format!("{p}"),
+            format!("{threads_s:.3}"),
+            format!("{tcp_s:.3}"),
+            format!("{:.1}", ar_s * 1e6),
+            format!("{:.1}", ag_s * 1e6),
+            format!("{ag_b:.0}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("p", Json::num(p as f64)),
+            ("workers", Json::num(rep.workers as f64)),
+            ("threads_seconds", Json::num(threads_s)),
+            ("tcp_seconds", Json::num(tcp_s)),
+            ("allreduce_ops", Json::num(rep.allreduce_ops as f64)),
+            ("allreduce_seconds_per_op", Json::num(ar_s)),
+            ("allreduce_bytes_per_op", Json::num(ar_b)),
+            ("allgather_ops", Json::num(rep.allgather_ops as f64)),
+            ("allgather_seconds_per_op", Json::num(ag_s)),
+            ("allgather_bytes_per_op", Json::num(ag_b)),
+            ("bytes_sent", Json::num(rep.bytes_sent as f64)),
+            ("bytes_recv", Json::num(rep.bytes_recv as f64)),
+            ("reconnects", Json::num(rep.reconnects as f64)),
+            ("model_allgather_s", Json::obj(vec![
+                ("bgq", Json::num(bgq)),
+                ("infiniband", Json::num(ib)),
+                ("measured_minus_bgq", Json::num(ag_s - bgq)),
+                ("measured_minus_infiniband", Json::num(ag_s - ib)),
+            ])),
+        ]));
+    }
+    println!("{}", table.render());
+
+    let (alpha, beta) = fit_alpha_beta(&points);
+    println!(
+        "fitted: alpha = {:.2} us, beta = {:.4} ns/byte (over {} measured ops)",
+        alpha * 1e6,
+        beta * 1e9,
+        points.len()
+    );
+    println!("serial reference: {serial_s:.3}s");
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("net")),
+        ("n", Json::num(n as f64)),
+        ("b", Json::num(b as f64)),
+        ("c", Json::num(c as f64)),
+        ("serial_seconds", Json::num(serial_s)),
+        ("results", Json::arr(rows)),
+        (
+            "fitted",
+            Json::obj(vec![
+                ("alpha_s", Json::num(alpha)),
+                ("beta_s_per_byte", Json::num(beta)),
+                ("points", Json::num(points.len() as f64)),
+            ]),
+        ),
+    ]);
+    let out = std::env::var("DKKM_BENCH_OUT").unwrap_or_else(|_| "BENCH_net.json".into());
+    std::fs::write(&out, report.to_string()).expect("write bench json");
+    println!("\nwrote {out}");
+}

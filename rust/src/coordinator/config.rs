@@ -210,9 +210,16 @@ pub struct RunConfig {
     /// run's (seed, C, B, N) fingerprint.
     pub resume: bool,
     /// Deterministic fault-injection spec
-    /// (`kill:r@k | delay:r@k:ms | spill:n | interrupt:e | deadline:ms`,
-    /// `;`-separated); the `DKKM_FAULT` env var overrides it.
+    /// (`kill:r@k | delay:r@k:ms | drop:r@k | stall:r@k:ms | garble:r@k
+    /// | spill:n | interrupt:e | deadline:ms`, `;`-separated); the
+    /// `DKKM_FAULT` env var overrides it. Wire classes need
+    /// `transport: "tcp"`.
     pub fault: Option<String>,
+    /// How `sharded:<p>` runs its collectives: `"threads"` (default,
+    /// in-process, the bit-identity oracle) or `"tcp"` (p OS worker
+    /// processes over localhost sockets). The `DKKM_TRANSPORT` env var
+    /// overrides it.
+    pub transport: Option<String>,
     /// Directory to write a servable model snapshot into after a
     /// successful fit (`manifest.json` + `model.json`); `None` skips it.
     /// Vector workloads only — validated at `build()` for MD specs.
@@ -239,6 +246,7 @@ impl RunConfig {
             checkpoint: None,
             resume: false,
             fault: None,
+            transport: None,
             snapshot: None,
         }
     }
@@ -290,7 +298,7 @@ impl RunConfig {
         const KNOWN: &[&str] = &[
             "dataset", "c", "b", "s", "sampling", "backend", "threads", "seed",
             "restarts", "sigma_factor", "gamma", "track_cost", "offload",
-            "memory_budget", "checkpoint", "resume", "fault", "snapshot",
+            "memory_budget", "checkpoint", "resume", "fault", "transport", "snapshot",
         ];
         for key in obj.keys() {
             if !KNOWN.contains(&key.as_str()) {
@@ -402,6 +410,19 @@ impl RunConfig {
                 ),
             };
         }
+        if let Some(v) = j.get("transport") {
+            cfg.transport = match v {
+                Json::Null => None,
+                other => Some(
+                    other
+                        .as_str()
+                        .ok_or_else(|| {
+                            Error::Config("'transport' must be 'threads'|'tcp' or null".into())
+                        })?
+                        .to_string(),
+                ),
+            };
+        }
         if let Some(v) = j.get("snapshot") {
             cfg.snapshot = match v {
                 Json::Null => None,
@@ -452,6 +473,10 @@ impl RunConfig {
             (
                 "fault",
                 self.fault.as_deref().map(Json::str).unwrap_or(Json::Null),
+            ),
+            (
+                "transport",
+                self.transport.as_deref().map(Json::str).unwrap_or(Json::Null),
             ),
             (
                 "snapshot",
@@ -695,6 +720,20 @@ mod tests {
         let j = Json::parse(r#"{"dataset": "md:100", "snapshot": "/tmp/snap"}"#).unwrap();
         let err = RunConfig::from_json(&j).unwrap_err();
         assert!(err.to_string().contains("vector"), "{err}");
+    }
+
+    #[test]
+    fn from_json_transport_field() {
+        let j = Json::parse(r#"{"dataset": "toy2d:100", "transport": "tcp"}"#).unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.transport.as_deref(), Some("tcp"));
+        // null clears, echo round-trips, bad type rejected
+        let j = Json::parse(r#"{"dataset": "toy2d:100", "transport": null}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().transport, None);
+        let echoed = Json::parse(&cfg.to_json().to_string()).unwrap();
+        assert_eq!(RunConfig::from_json(&echoed).unwrap().transport, cfg.transport);
+        let j = Json::parse(r#"{"dataset": "toy2d", "transport": 6}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -18,7 +18,9 @@ use std::sync::{Arc, OnceLock};
 
 use crate::cluster::minibatch::{NativeBackend, StepBackend};
 use crate::data::CsrMat;
-use crate::distributed::{FaultSession, ShardedBackend};
+use crate::distributed::{
+    FaultSession, ShardedBackend, TcpShardedBackend, TransportMode, TransportReport,
+};
 use crate::kernels::{GramSource, KernelFn, RmsdGram, VecGram};
 use crate::linalg::{Frame, Mat};
 use crate::runtime::{Manifest, PjrtGram, PjrtRuntime};
@@ -108,6 +110,13 @@ pub trait Engine: Send + Sync {
     /// are a structured config error, never silently ignored.
     fn supports_offload(&self) -> bool {
         true
+    }
+
+    /// Wire accounting for engines whose collectives cross a real
+    /// socket (`RunReport.transport`). `None` everywhere else, so a
+    /// populated report is proof the run left the process.
+    fn transport(&self) -> Option<TransportReport> {
+        None
     }
 }
 
@@ -260,6 +269,55 @@ impl Engine for ShardedEngine {
     }
 }
 
+/// Row-sharded engine over `p` OS worker processes speaking the TCP
+/// transport (`DKKM_TRANSPORT=tcp`). Same math and reduction order as
+/// [`ShardedEngine`] — results are bit-identical — but the collectives
+/// cross real sockets, so [`Engine::transport`] reports wire traffic.
+pub struct TcpShardedEngine {
+    name: String,
+    step: TcpShardedBackend,
+}
+
+impl TcpShardedEngine {
+    pub fn new(nodes: usize) -> TcpShardedEngine {
+        TcpShardedEngine {
+            name: format!("sharded:{nodes}"),
+            step: TcpShardedBackend::new(nodes),
+        }
+    }
+
+    /// TCP engine with a fault session; the plan (wire classes
+    /// included) is forwarded to the spawned workers via `--fault`.
+    pub fn with_faults(nodes: usize, faults: Arc<FaultSession>) -> TcpShardedEngine {
+        TcpShardedEngine {
+            name: format!("sharded:{nodes}"),
+            step: TcpShardedBackend::new(nodes).with_faults(faults),
+        }
+    }
+}
+
+impl Engine for TcpShardedEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn vec_gram(&self, x: Mat, gamma: f32, threads: usize) -> GramBuild {
+        GramBuild::direct(Box::new(VecGram::new(x, KernelFn::Rbf { gamma }, threads)))
+    }
+
+    fn step(&self) -> &dyn StepBackend {
+        &self.step
+    }
+
+    fn supports_offload(&self) -> bool {
+        false
+    }
+
+    fn transport(&self) -> Option<TransportReport> {
+        Some(self.step.report())
+    }
+}
+
 /// Engine registry. `native` and `sharded:<p>` always construct;
 /// `pjrt` requires the artifact manifest (an actionable `Runtime` error
 /// otherwise — run `make artifacts` or set `DKKM_ARTIFACTS`).
@@ -275,6 +333,18 @@ pub fn create_engine_with(
     choice: &BackendChoice,
     faults: Option<Arc<FaultSession>>,
 ) -> Result<Box<dyn Engine>> {
+    create_engine_for(choice, faults, TransportMode::InProcess)
+}
+
+/// [`create_engine_with`] plus the transport decision: under
+/// [`TransportMode::Tcp`] the sharded choice constructs the
+/// process-backed [`TcpShardedEngine`]; other choices reject TCP at
+/// [`super::Experiment::build`] before reaching here.
+pub fn create_engine_for(
+    choice: &BackendChoice,
+    faults: Option<Arc<FaultSession>>,
+    transport: TransportMode,
+) -> Result<Box<dyn Engine>> {
     match choice {
         BackendChoice::Native => Ok(Box::new(NativeEngine::new())),
         BackendChoice::Pjrt => Ok(Box::new(PjrtEngine::new(shared_pjrt()?))),
@@ -284,10 +354,14 @@ pub fn create_engine_with(
                     "sharded engine needs at least 1 node (sharded:<p>, p >= 1)".into(),
                 ));
             }
-            Ok(Box::new(match faults {
-                Some(f) => ShardedEngine::with_faults(*p, f),
-                None => ShardedEngine::new(*p),
-            }))
+            Ok(match (transport, faults) {
+                (TransportMode::Tcp, Some(f)) => Box::new(TcpShardedEngine::with_faults(*p, f)),
+                (TransportMode::Tcp, None) => Box::new(TcpShardedEngine::new(*p)),
+                (TransportMode::InProcess, Some(f)) => {
+                    Box::new(ShardedEngine::with_faults(*p, f))
+                }
+                (TransportMode::InProcess, None) => Box::new(ShardedEngine::new(*p)),
+            })
         }
     }
 }
@@ -357,6 +431,32 @@ mod tests {
         // engines without fault sites accept and ignore the session
         let n = create_engine_with(&BackendChoice::Native, Some(FaultSession::clean())).unwrap();
         assert_eq!(n.name(), "native");
+    }
+
+    #[test]
+    fn tcp_sharded_engine_reports_transport() {
+        let e = TcpShardedEngine::new(3);
+        assert_eq!(e.name(), "sharded:3");
+        assert_eq!(e.step().name(), "sharded-tcp");
+        assert!(!e.supports_offload());
+        // constructed lazily — no workers spawned yet, counters empty
+        let report = e.transport().expect("tcp engine must expose wire accounting");
+        assert_eq!(report.bytes_sent, 0);
+        // thread engines never report transport
+        assert!(ShardedEngine::new(3).transport().is_none());
+        assert!(NativeEngine::new().transport().is_none());
+    }
+
+    #[test]
+    fn registry_selects_transport_mode() {
+        let e = create_engine_for(&BackendChoice::Sharded(2), None, TransportMode::Tcp).unwrap();
+        assert_eq!(e.step().name(), "sharded-tcp");
+        let e =
+            create_engine_for(&BackendChoice::Sharded(2), None, TransportMode::InProcess).unwrap();
+        assert_eq!(e.step().name(), "sharded");
+        // native ignores the mode (build() rejects tcp+native earlier)
+        let e = create_engine_for(&BackendChoice::Native, None, TransportMode::Tcp).unwrap();
+        assert_eq!(e.name(), "native");
     }
 
     #[test]

@@ -14,11 +14,11 @@
 use std::sync::Arc;
 
 use crate::data::Sampling;
-use crate::distributed::{FaultPlan, FaultSession};
+use crate::distributed::{FaultPlan, FaultSession, TransportMode};
 use crate::util::error::{Error, Result};
 
 use super::config::{BackendChoice, DatasetSpec, RunConfig};
-use super::engine::create_engine_with;
+use super::engine::create_engine_for;
 use super::session::Session;
 
 /// Kernel selection for the builder.
@@ -207,11 +207,23 @@ impl Experiment {
     }
 
     /// Deterministic fault-injection spec (`kill:r@k`, `delay:r@k:ms`,
-    /// `spill:n`, `interrupt:e`, `deadline:ms`; `;`-separated). Parsed
-    /// — and rejected with a message — at `build()`. The `DKKM_FAULT`
-    /// environment variable overrides this value.
+    /// `drop:r@k`, `stall:r@k:ms`, `garble:r@k`, `spill:n`,
+    /// `interrupt:e`, `deadline:ms`; `;`-separated). Parsed — and
+    /// rejected with a message — at `build()`. The `DKKM_FAULT`
+    /// environment variable overrides this value. The wire classes act
+    /// only under the TCP transport.
     pub fn fault(mut self, spec: &str) -> Experiment {
         self.cfg.fault = Some(spec.to_string());
+        self
+    }
+
+    /// How `sharded:<p>` runs its collectives: `"threads"` (default,
+    /// in-process, the bit-identity oracle) or `"tcp"` (p OS worker
+    /// processes over localhost sockets). Parsed — and rejected — at
+    /// `build()`; `"tcp"` with a non-sharded engine is a config error.
+    /// The `DKKM_TRANSPORT` environment variable overrides this value.
+    pub fn transport(mut self, mode: &str) -> Experiment {
+        self.cfg.transport = Some(mode.to_string());
         self
     }
 
@@ -242,7 +254,18 @@ impl Experiment {
                 "resume needs a checkpoint directory (set checkpoint_dir)".into(),
             ));
         }
-        let engine = create_engine_with(&self.cfg.backend, Some(faults.clone()))?;
+        // transport resolves before engine creation; the env var
+        // overrides the config the same way DKKM_FAULT does
+        let transport = TransportMode::resolve(self.cfg.transport.as_deref())?;
+        if transport == TransportMode::Tcp
+            && !matches!(self.cfg.backend, BackendChoice::Sharded(_))
+        {
+            return Err(Error::Config(format!(
+                "transport 'tcp' needs the sharded engine (sharded:<p>), not '{}'",
+                self.cfg.backend
+            )));
+        }
+        let engine = create_engine_for(&self.cfg.backend, Some(faults.clone()), transport)?;
         // the budget must admit at least 1-row tiles for the largest
         // panel the plan will produce (one tile per pipeline slot). The
         // slot count depends on the engine: offload-capable engines run
@@ -420,6 +443,21 @@ mod tests {
         assert_eq!(cfg.fault.as_deref(), Some("kill:1@0"));
         assert_eq!(cfg.checkpoint.as_deref(), Some(std::path::Path::new("/tmp/ck")));
         assert!(cfg.resume);
+    }
+
+    #[test]
+    fn transport_validated_at_build() {
+        // unknown mode fails with the grammar in the message
+        let err = toy().backend("sharded:2").transport("carrier-pigeon").build().unwrap_err();
+        assert!(err.to_string().contains("transport"), "{err}");
+        // tcp composes only with the sharded engine
+        let err = toy().transport("tcp").build().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("tcp") && msg.contains("sharded"), "{msg}");
+        // threads is the default and composes with everything
+        assert!(toy().transport("threads").build().is_ok());
+        let session = toy().backend("sharded:2").transport("tcp").build().unwrap();
+        assert_eq!(session.engine().used, "sharded:2");
     }
 
     #[test]

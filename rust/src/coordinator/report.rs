@@ -1,6 +1,7 @@
 //! Experiment reports: metrics, timings, and honest engine provenance.
 use crate::cluster::MiniBatchResult;
 use crate::distributed::fault::FaultReport;
+use crate::distributed::TransportReport;
 use crate::kernels::PipelineStats;
 use crate::util::json::Json;
 
@@ -63,6 +64,11 @@ pub struct RunReport {
     /// Fault-injection and recovery accounting for the fit. Honestly
     /// all-zero on clean runs — the counters record real events only.
     pub faults: FaultReport,
+    /// Wire accounting when the collectives crossed real sockets
+    /// (`DKKM_TRANSPORT=tcp`): bytes/messages per collective class,
+    /// retries, reconnects, protocol errors. `None` for in-process
+    /// runs, so a populated report is proof the run left the process.
+    pub transport: Option<TransportReport>,
     pub result: MiniBatchResult,
 }
 
@@ -103,6 +109,10 @@ impl RunReport {
             ("pipeline", pipeline_json(&self.pipeline)),
             ("faults", faults_json(&self.faults)),
             (
+                "transport",
+                self.transport.as_ref().map(transport_json).unwrap_or(Json::Null),
+            ),
+            (
                 "outer_iterations",
                 Json::num(self.result.history.len() as f64),
             ),
@@ -134,6 +144,28 @@ pub fn faults_json(f: &FaultReport) -> Json {
             "resumed_from_epoch",
             f.resumed_from_epoch.map(|e| Json::num(e as f64)).unwrap_or(Json::Null),
         ),
+    ])
+}
+
+/// Machine-readable echo of the wire accounting.
+pub fn transport_json(t: &TransportReport) -> Json {
+    Json::obj(vec![
+        ("workers", Json::num(t.workers as f64)),
+        ("bytes_sent", Json::num(t.bytes_sent as f64)),
+        ("bytes_recv", Json::num(t.bytes_recv as f64)),
+        ("msgs_sent", Json::num(t.msgs_sent as f64)),
+        ("msgs_recv", Json::num(t.msgs_recv as f64)),
+        ("work_bytes", Json::num(t.work_bytes as f64)),
+        ("allreduce_bytes", Json::num(t.allreduce_bytes as f64)),
+        ("allreduce_ops", Json::num(t.allreduce_ops as f64)),
+        ("allreduce_seconds", Json::num(t.allreduce_seconds)),
+        ("allgather_bytes", Json::num(t.allgather_bytes as f64)),
+        ("allgather_ops", Json::num(t.allgather_ops as f64)),
+        ("allgather_seconds", Json::num(t.allgather_seconds)),
+        ("control_bytes", Json::num(t.control_bytes as f64)),
+        ("retries", Json::num(t.retries as f64)),
+        ("reconnects", Json::num(t.reconnects as f64)),
+        ("protocol_errors", Json::num(t.protocol_errors as f64)),
     ])
 }
 
@@ -203,6 +235,36 @@ mod tests {
         assert_eq!(j.get("resumed_from_epoch").and_then(|v| v.as_usize()), Some(2));
         let rs = j.get("recovery_seconds").and_then(|v| v.as_f64()).unwrap();
         assert!((rs - 0.125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn transport_json_carries_wire_counters() {
+        let t = TransportReport {
+            workers: 3,
+            bytes_sent: 1000,
+            bytes_recv: 900,
+            msgs_sent: 12,
+            msgs_recv: 11,
+            work_bytes: 700,
+            allreduce_bytes: 120,
+            allreduce_ops: 2,
+            allreduce_seconds: 0.5,
+            allgather_bytes: 80,
+            allgather_ops: 2,
+            allgather_seconds: 0.25,
+            control_bytes: 100,
+            retries: 1,
+            reconnects: 1,
+            protocol_errors: 1,
+        };
+        let j = transport_json(&t);
+        assert_eq!(j.get("workers").and_then(|v| v.as_usize()), Some(3));
+        assert_eq!(j.get("bytes_sent").and_then(|v| v.as_usize()), Some(1000));
+        assert_eq!(j.get("allreduce_ops").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("reconnects").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("protocol_errors").and_then(|v| v.as_usize()), Some(1));
+        let s = j.get("allgather_seconds").and_then(|v| v.as_f64()).unwrap();
+        assert!((s - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -235,6 +235,7 @@ impl Session {
             storage: self.storage.to_string(),
             pipeline: result.pipeline.clone(),
             faults: self.faults.report(),
+            transport: self.engine.transport(),
             result,
         };
         if let Some(dir) = &self.cfg.snapshot {

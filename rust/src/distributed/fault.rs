@@ -13,10 +13,20 @@
 //! ```text
 //! kill:r@k        panic rank r at its k-th collective (0-based)
 //! delay:r@k:ms    sleep rank r for ms milliseconds before collective k
+//! drop:r@k        reset rank r's connection at collective k (TCP only)
+//! stall:r@k:ms    stall rank r's frame mid-write for ms ms (TCP only)
+//! garble:r@k      corrupt rank r's frame at collective k (TCP only)
 //! spill:n         fail the next n spill-file reads with an I/O error
 //! interrupt:e     stop the run with Error::Interrupted at epoch e
 //! deadline:ms     override the collective deadline (milliseconds)
 //! ```
+//!
+//! The wire classes (`drop`/`stall`/`garble`) are keyed on rank +
+//! collective seq exactly like kill/delay, but they only act when the
+//! collectives run over the real TCP transport
+//! ([`crate::distributed::transport`], `DKKM_TRANSPORT=tcp`); under the
+//! default in-process threads they are documented no-ops, so a plan can
+//! be shared between both modes.
 //!
 //! A [`FaultSession`] pairs a plan with atomic counters (injected /
 //! detected / recovered, reshard events, spill retries, recovery time,
@@ -38,6 +48,18 @@ pub enum Fault {
     /// Sleep rank `rank` for `ms` milliseconds before its `at`-th
     /// collective (exercises the deadline path).
     Delay { rank: usize, at: u64, ms: u64 },
+    /// Reset rank `rank`'s connection at its `at`-th collective
+    /// (TCP transport only; the worker closes its socket mid-protocol
+    /// and reconnects with backoff).
+    Drop { rank: usize, at: u64 },
+    /// Stall rank `rank`'s frame mid-write for `ms` milliseconds at its
+    /// `at`-th collective (TCP transport only; exercises the read
+    /// deadline on the coordinator side).
+    Stall { rank: usize, at: u64, ms: u64 },
+    /// Corrupt the body of rank `rank`'s frame at its `at`-th collective
+    /// (TCP transport only; the coordinator's checksum rejects it as a
+    /// Protocol error).
+    Garble { rank: usize, at: u64 },
     /// Fail the next `n` spill-file reads (tile ring + disk cache).
     Spill { n: usize },
     /// Interrupt the mini-batch run at epoch `epoch` with a structured
@@ -54,7 +76,7 @@ pub struct FaultPlan {
 }
 
 fn bad(spec: &str, why: &str) -> Error {
-    Error::Config(format!("bad fault spec '{spec}': {why} (grammar: kill:r@k | delay:r@k:ms | spill:n | interrupt:e | deadline:ms)"))
+    Error::Config(format!("bad fault spec '{spec}': {why} (grammar: kill:r@k | delay:r@k:ms | drop:r@k | stall:r@k:ms | garble:r@k | spill:n | interrupt:e | deadline:ms)"))
 }
 
 fn parse_at(spec: &str, body: &str) -> Result<(usize, u64)> {
@@ -91,6 +113,21 @@ impl FaultPlan {
                     let ms = ms.trim().parse().map_err(|_| bad(item, "ms not a number"))?;
                     Fault::Delay { rank, at, ms }
                 }
+                "drop" => {
+                    let (rank, at) = parse_at(item, body)?;
+                    Fault::Drop { rank, at }
+                }
+                "stall" => {
+                    let (head, ms) =
+                        body.rsplit_once(':').ok_or_else(|| bad(item, "expected r@k:ms"))?;
+                    let (rank, at) = parse_at(item, head)?;
+                    let ms = ms.trim().parse().map_err(|_| bad(item, "ms not a number"))?;
+                    Fault::Stall { rank, at, ms }
+                }
+                "garble" => {
+                    let (rank, at) = parse_at(item, body)?;
+                    Fault::Garble { rank, at }
+                }
                 "spill" => {
                     let n = body.trim().parse().map_err(|_| bad(item, "count not a number"))?;
                     Fault::Spill { n }
@@ -125,6 +162,27 @@ impl FaultPlan {
         }
     }
 
+    /// Serialize back to the grammar this module parses. Round trips
+    /// through [`FaultPlan::parse`]; the TCP coordinator uses it to
+    /// forward the plan to spawned worker processes via `--fault`.
+    pub fn to_spec(&self) -> String {
+        let items: Vec<String> = self
+            .faults
+            .iter()
+            .map(|f| match *f {
+                Fault::Kill { rank, at } => format!("kill:{rank}@{at}"),
+                Fault::Delay { rank, at, ms } => format!("delay:{rank}@{at}:{ms}"),
+                Fault::Drop { rank, at } => format!("drop:{rank}@{at}"),
+                Fault::Stall { rank, at, ms } => format!("stall:{rank}@{at}:{ms}"),
+                Fault::Garble { rank, at } => format!("garble:{rank}@{at}"),
+                Fault::Spill { n } => format!("spill:{n}"),
+                Fault::Interrupt { epoch } => format!("interrupt:{epoch}"),
+                Fault::Deadline { ms } => format!("deadline:{ms}"),
+            })
+            .collect();
+        items.join("; ")
+    }
+
     /// Collective-deadline override, if the plan carries one.
     pub fn deadline_override(&self) -> Option<Duration> {
         self.faults.iter().find_map(|f| match f {
@@ -140,6 +198,21 @@ impl FaultPlan {
             _ => None,
         })
     }
+}
+
+/// A wire fault due at one (rank, collective) point, consumed by the
+/// TCP transport's send path. Inert under in-process threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFault {
+    /// Close the connection instead of sending the frame.
+    Drop,
+    /// Send the frame split in two with a sleep in between.
+    Stall {
+        /// Mid-write stall duration in milliseconds.
+        ms: u64,
+    },
+    /// Send the frame with a corrupted body (checksum kept stale).
+    Garble,
 }
 
 /// Snapshot of fault accounting for one fit — all zero on clean runs.
@@ -285,6 +358,56 @@ impl FaultSession {
         }
     }
 
+    /// Consume the wire fault (if any) due at `orig_rank`'s collective
+    /// `k`. Fires once per plan entry, like kill/delay. Only the TCP
+    /// transport's worker send path calls this; under in-process
+    /// threads wire faults never fire.
+    pub fn take_wire_fault(&self, orig_rank: usize, k: u64) -> Option<WireFault> {
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            let hit = match *f {
+                Fault::Drop { rank, at } if rank == orig_rank && at == k => Some(WireFault::Drop),
+                Fault::Stall { rank, at, ms } if rank == orig_rank && at == k => {
+                    Some(WireFault::Stall { ms })
+                }
+                Fault::Garble { rank, at } if rank == orig_rank && at == k => {
+                    Some(WireFault::Garble)
+                }
+                _ => None,
+            };
+            if let Some(w) = hit {
+                if !self.fired[i].swap(true, Ordering::SeqCst) {
+                    self.injected.fetch_add(1, Ordering::SeqCst);
+                    return Some(w);
+                }
+            }
+        }
+        None
+    }
+
+    /// Coordinator-side inference for worker processes that died before
+    /// reporting: if the plan holds an unfired `kill` for `rank`, mark
+    /// it fired and count it injected. Returns whether one was claimed.
+    /// (A worker that panics on its own injected kill exits before it
+    /// can piggyback the injection count back over the wire.)
+    pub fn infer_killed(&self, orig_rank: usize) -> bool {
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if let Fault::Kill { rank, .. } = *f {
+                if rank == orig_rank && !self.fired[i].swap(true, Ordering::SeqCst) {
+                    self.injected.fetch_add(1, Ordering::SeqCst);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Fold in `n` injections reported by a remote worker process (the
+    /// TCP transport piggybacks each worker's cumulative injected count
+    /// on its frames and forwards deltas here).
+    pub fn note_injected(&self, n: usize) {
+        self.injected.fetch_add(n, Ordering::SeqCst);
+    }
+
     /// Consume one spill-read fault if the budget allows; returns the
     /// error the read should fail with.
     pub fn spill_read_fault(&self) -> Option<std::io::Error> {
@@ -392,6 +515,61 @@ mod tests {
     }
 
     #[test]
+    fn parses_wire_fault_classes() {
+        let p = FaultPlan::parse("drop:1@2; stall:2@4:250; garble:3@1").unwrap();
+        assert_eq!(
+            p.faults,
+            vec![
+                Fault::Drop { rank: 1, at: 2 },
+                Fault::Stall { rank: 2, at: 4, ms: 250 },
+                Fault::Garble { rank: 3, at: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn to_spec_round_trips() {
+        let spec = "kill:1@3; delay:0@2:50; drop:1@2; stall:2@4:250; garble:3@1; spill:2; interrupt:1; deadline:250";
+        let p = FaultPlan::parse(spec).unwrap();
+        assert_eq!(p.to_spec(), spec);
+        assert_eq!(FaultPlan::parse(&p.to_spec()).unwrap(), p);
+        assert_eq!(FaultPlan::none().to_spec(), "");
+    }
+
+    #[test]
+    fn wire_faults_fire_once_at_rank_and_seq() {
+        let s = FaultSession::new(FaultPlan::parse("drop:1@2; stall:1@3:40; garble:2@2").unwrap());
+        // wrong rank / wrong collective: nothing
+        assert_eq!(s.take_wire_fault(0, 2), None);
+        assert_eq!(s.take_wire_fault(1, 1), None);
+        // right spots, each exactly once
+        assert_eq!(s.take_wire_fault(1, 2), Some(WireFault::Drop));
+        assert_eq!(s.take_wire_fault(1, 2), None);
+        assert_eq!(s.take_wire_fault(1, 3), Some(WireFault::Stall { ms: 40 }));
+        assert_eq!(s.take_wire_fault(2, 2), Some(WireFault::Garble));
+        assert_eq!(s.report().injected, 3);
+        // wire classes never act through the thread-mode hook
+        s.before_collective(1, 2);
+    }
+
+    #[test]
+    fn infer_killed_claims_unfired_kills_once() {
+        let s = FaultSession::new(FaultPlan::parse("kill:2@5").unwrap());
+        assert!(!s.infer_killed(1));
+        assert!(s.infer_killed(2));
+        assert!(!s.infer_killed(2));
+        assert_eq!(s.report().injected, 1);
+    }
+
+    #[test]
+    fn note_injected_folds_remote_deltas() {
+        let s = FaultSession::clean();
+        s.note_injected(2);
+        s.note_injected(1);
+        assert_eq!(s.report().injected, 3);
+    }
+
+    #[test]
     fn empty_and_whitespace_specs_are_empty_plans() {
         assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::none());
         assert_eq!(FaultPlan::parse(" ; , ").unwrap(), FaultPlan::none());
@@ -399,7 +577,18 @@ mod tests {
 
     #[test]
     fn rejects_malformed_specs() {
-        for bad in ["kill", "kill:x@1", "kill:1", "delay:1@2", "spill:x", "launch:1", "interrupt:"] {
+        for bad in [
+            "kill",
+            "kill:x@1",
+            "kill:1",
+            "delay:1@2",
+            "drop:1",
+            "stall:1@2",
+            "garble:x@1",
+            "spill:x",
+            "launch:1",
+            "interrupt:",
+        ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad} should fail");
         }
     }

@@ -3,25 +3,36 @@
 //! iteration — allreduce(sum) of the C-vector `g` and allgather of the
 //! label slices. Kernel matrix elements never cross the network.
 //!
-//! Two execution modes:
+//! Three execution modes:
 //! * [`ShardedBackend`] — real OS threads, one per node, exchanging data
 //!   through the in-process [`comm`] collectives; numerically identical
 //!   to the serial backend (tested), used to validate the distribution
-//!   strategy end-to-end.
+//!   strategy end-to-end. The default, and the bit-identity oracle for
+//!   the TCP mode below.
+//! * [`TcpShardedBackend`] — real OS processes (`dkkm worker` children)
+//!   exchanging the same collectives over a length-prefixed TCP
+//!   protocol ([`transport`], `DKKM_TRANSPORT=tcp`), with wire-level
+//!   fault tolerance: heartbeats, bounded reconnect, survivor re-shard.
 //! * [`ScalingSimulator`] — per-shard compute is *measured*, network time
-//!   is *modeled* ([`netmodel`], alpha-beta with per-topology parameters),
-//!   so the Fig.6 strong-scaling curves extend to P = 1024 nodes on a
-//!   single machine (DESIGN.md §3 substitutions).
+//!   is *modeled* ([`netmodel`], alpha-beta with per-topology parameters;
+//!   the `measured` topology loads localhost parameters fitted from
+//!   `BENCH_net.json`), so the Fig.6 strong-scaling curves extend to
+//!   P = 1024 nodes on a single machine (DESIGN.md §3 substitutions).
 pub mod comm;
 pub mod fault;
 pub mod netmodel;
 pub mod shard;
 pub mod sharded;
 pub mod scaling;
+pub mod transport;
 
 pub use comm::{CollectiveError, Communicator, DEFAULT_DEADLINE};
-pub use fault::{Fault, FaultPlan, FaultReport, FaultSession};
+pub use fault::{Fault, FaultPlan, FaultReport, FaultSession, WireFault};
 pub use netmodel::{NetModel, Topology};
 pub use shard::row_shards;
 pub use sharded::ShardedBackend;
 pub use scaling::{ScalingReport, ScalingSimulator};
+pub use transport::{
+    config_fingerprint, run_worker, TcpShardedBackend, TransportMode, TransportReport,
+    WorkerOptions,
+};

@@ -7,6 +7,11 @@
 //! parameters (DESIGN.md §3). What must survive the substitution is the
 //! scaling *shape*: near-ideal mid-range, Amdahl flattening when the
 //! serial fraction and collective latency dominate.
+//!
+//! Since PR 9 the guessed parameters can be replaced with *measured*
+//! ones: `benches/net_json.rs` times the real TCP collectives on
+//! localhost and writes fitted alpha/beta into `BENCH_net.json`, which
+//! the `measured` topology loads (path override via `DKKM_NET_JSON`).
 use std::str::FromStr;
 
 /// Interconnect topology with alpha-beta parameters.
@@ -18,6 +23,16 @@ pub enum Topology {
     /// InfiniBand 4x QDR fat tree (NeXtScale): 32 Gbit/s, ~1.3 us MPI
     /// latency, tree collectives.
     InfinibandQdr,
+    /// Parameters fitted from real localhost TCP timings
+    /// (`BENCH_net.json`, written by `benches/net_json.rs`). Parse
+    /// `"measured"` to load them, or construct directly via
+    /// [`Topology::measured_from_file`].
+    Measured {
+        /// Fitted per-hop latency (seconds).
+        alpha: f64,
+        /// Fitted per-byte transfer time (seconds/byte).
+        beta: f64,
+    },
 }
 
 impl Topology {
@@ -26,6 +41,7 @@ impl Topology {
         match self {
             Topology::BgqTorus5D => 2.5e-6,
             Topology::InfinibandQdr => 1.3e-6,
+            Topology::Measured { alpha, .. } => *alpha,
         }
     }
 
@@ -34,17 +50,40 @@ impl Topology {
         match self {
             Topology::BgqTorus5D => 1.0 / 2.0e9,
             Topology::InfinibandQdr => 1.0 / 4.0e9, // 32 Gb/s
+            Topology::Measured { beta, .. } => *beta,
         }
     }
 
     /// Collective tree depth for `p` nodes: the 5D torus has a slightly
-    /// higher effective depth constant than a fat-tree.
+    /// higher effective depth constant than a fat-tree; the measured
+    /// localhost star behaves like a flat tree.
     pub fn depth(&self, p: usize) -> f64 {
         let lg = (p.max(1) as f64).log2().ceil().max(1.0);
         match self {
             Topology::BgqTorus5D => 1.25 * lg,
-            Topology::InfinibandQdr => lg,
+            Topology::InfinibandQdr | Topology::Measured { .. } => lg,
         }
+    }
+
+    /// Load the fitted alpha/beta recorded by `benches/net_json.rs`.
+    /// Expects `{"fitted": {"alpha_s": ..., "beta_s_per_byte": ...}}`
+    /// (extra keys ignored).
+    pub fn measured_from_file(path: &str) -> Result<Topology, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read measured net parameters from {path}: {e}"))?;
+        let json = crate::util::json::Json::parse(&text)
+            .map_err(|e| format!("{path} is not valid JSON: {e}"))?;
+        let fitted = json
+            .get("fitted")
+            .ok_or_else(|| format!("{path} has no 'fitted' object (rerun bench net_json)"))?;
+        let field = |key: &str| -> Result<f64, String> {
+            fitted
+                .get(key)
+                .and_then(|v| v.as_f64())
+                .filter(|v| v.is_finite() && *v >= 0.0)
+                .ok_or_else(|| format!("{path}: fitted.{key} missing or not a number"))
+        };
+        Ok(Topology::Measured { alpha: field("alpha_s")?, beta: field("beta_s_per_byte")? })
     }
 }
 
@@ -55,7 +94,14 @@ impl FromStr for Topology {
         match s {
             "bgq" => Ok(Topology::BgqTorus5D),
             "infiniband" | "ib" => Ok(Topology::InfinibandQdr),
-            other => Err(format!("unknown topology '{other}' (bgq|infiniband)")),
+            // path override for the scaling CLI; default matches the
+            // bench output location
+            "measured" => {
+                let path = std::env::var("DKKM_NET_JSON")
+                    .unwrap_or_else(|_| "BENCH_net.json".to_string());
+                Topology::measured_from_file(&path)
+            }
+            other => Err(format!("unknown topology '{other}' (bgq|infiniband|measured)")),
         }
     }
 }
@@ -147,5 +193,39 @@ mod tests {
         assert_eq!("bgq".parse::<Topology>().unwrap(), Topology::BgqTorus5D);
         assert_eq!("ib".parse::<Topology>().unwrap(), Topology::InfinibandQdr);
         assert!("x".parse::<Topology>().is_err());
+        let err = "x".parse::<Topology>().unwrap_err();
+        assert!(err.contains("measured"), "error should advertise all variants: {err}");
+    }
+
+    #[test]
+    fn measured_loads_fitted_parameters() {
+        let dir = std::env::temp_dir().join("dkkm_netmodel_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_net_ok.json");
+        std::fs::write(
+            &path,
+            r#"{"fitted": {"alpha_s": 2e-5, "beta_s_per_byte": 1e-9}, "extra": 1}"#,
+        )
+        .unwrap();
+        let t = Topology::measured_from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(t, Topology::Measured { alpha: 2e-5, beta: 1e-9 });
+        assert!((t.alpha() - 2e-5).abs() < 1e-12);
+        assert!((t.beta() - 1e-9).abs() < 1e-15);
+        // usable by the model like any other topology
+        let m = NetModel::new(t);
+        assert!(m.allreduce(4, 1024) > 0.0);
+        assert_eq!(m.allreduce(1, 1024), 0.0);
+    }
+
+    #[test]
+    fn measured_rejects_missing_or_bad_files() {
+        let e = Topology::measured_from_file("/nonexistent/BENCH_net.json").unwrap_err();
+        assert!(e.contains("cannot read"), "{e}");
+        let dir = std::env::temp_dir().join("dkkm_netmodel_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_net_bad.json");
+        std::fs::write(&path, r#"{"results": []}"#).unwrap();
+        let e = Topology::measured_from_file(path.to_str().unwrap()).unwrap_err();
+        assert!(e.contains("fitted"), "{e}");
     }
 }

@@ -27,6 +27,12 @@
 //! function of `(K_nl, K_ll, lm_labels)`, the recovered result is
 //! bit-identical to a fault-free run at any node count. Failures change
 //! the schedule, not the math.
+//!
+//! The per-shard math lives in the free helpers below
+//! ([`landmark_stats`], [`g_partial_from_rows`], [`labels_for_block`]):
+//! [`crate::distributed::transport`] runs the same helpers in worker OS
+//! processes over TCP (`DKKM_TRANSPORT=tcp`), which is what keeps the
+//! wire mode bit-identical to these threads.
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -68,6 +74,70 @@ enum AttemptFailure {
     Dead { slots: Vec<usize>, seq: u64, msg: String },
     /// Not survivable by re-sharding.
     Hard(Error),
+}
+
+/// Landmark cluster sizes and their inverses, derived locally from the
+/// label vector (the paper ships labels, not counts). Shared by the
+/// in-process nodes, the TCP coordinator, and the worker processes so
+/// every party derives bit-identical statistics.
+pub(crate) fn landmark_stats(lm_labels: &[usize], c: usize) -> (Vec<usize>, Vec<f32>) {
+    let mut counts = vec![0usize; c];
+    for &u in lm_labels {
+        counts[u] += 1;
+    }
+    let inv: Vec<f32> = counts
+        .iter()
+        .map(|&s| if s > 0 { 1.0 / s as f32 } else { 0.0 })
+        .collect();
+    (counts, inv)
+}
+
+/// Partial compactness `g` from the landmark rows `[llo, lhi)`:
+/// g_j = inv_j^2 sum_{m in shard, n: u_n = u_m = j} K_mn
+/// = inv_j^2 * (K_ll[shard] · M_onehot)[m][u_m] summed.
+/// `kll_rows` holds exactly rows `llo..lhi` of K_ll (row-major, width
+/// `l`). One shard's worth of the allreduce contribution — identical
+/// code runs in the thread closures and in the TCP worker processes.
+pub(crate) fn g_partial_from_rows(
+    kll_rows: &[f32],
+    llo: usize,
+    lhi: usize,
+    lm_labels: &[usize],
+    c: usize,
+    inv: &[f32],
+    onehot: &Indicator,
+) -> Vec<f32> {
+    let mut g_partial = vec![0.0f32; c];
+    if lhi > llo {
+        let mut t = vec![0.0f32; (lhi - llo) * c];
+        onehot.apply_rows(kll_rows, &mut t);
+        for (r, m) in (llo..lhi).enumerate() {
+            let um = lm_labels[m];
+            g_partial[um] += t[r * c + um] * inv[um] * inv[um];
+        }
+    }
+    g_partial
+}
+
+/// Labels for one contiguous row block of K_nl: the f GEMM into the
+/// reused scratch buffer plus the branchless masked argmin, appending
+/// into `out`. `rows` is `nrows` rows of width L; `scratch` must hold at
+/// least `nrows * c` floats.
+pub(crate) fn labels_for_block(
+    rows: &[f32],
+    nrows: usize,
+    c: usize,
+    ind: &Indicator,
+    g_mask: &[f32],
+    scratch: &mut [f32],
+    out: &mut Vec<usize>,
+) {
+    if nrows == 0 {
+        return;
+    }
+    let f = &mut scratch[..nrows * c];
+    ind.apply_rows(rows, f);
+    argmin_rows_into(f, c, g_mask, out);
 }
 
 impl ShardedBackend {
@@ -137,18 +207,16 @@ impl ShardedBackend {
                     let faults = self.faults.as_deref();
                     handles.push(scope.spawn(move || {
                         let run = move || -> std::result::Result<(Vec<usize>, Vec<f32>), NodeError> {
-                            // --- partial g from this node's landmark rows:
-                            // g_j = inv_j^2 sum_{m in shard, n: u_n = u_m = j} K_mn
-                            // = inv_j^2 * (K_ll[shard] · M_onehot)[m][u_m] summed
-                            let mut g_partial = vec![0.0f32; c];
-                            if lhi > llo {
-                                let mut t = vec![0.0f32; (lhi - llo) * c];
-                                onehot.apply_rows(&k_ll.data()[llo * l..lhi * l], &mut t);
-                                for (r, m) in (llo..lhi).enumerate() {
-                                    let um = lm_labels[m];
-                                    g_partial[um] += t[r * c + um] * inv[um] * inv[um];
-                                }
-                            }
+                            // --- partial g from this node's landmark rows
+                            let g_partial = g_partial_from_rows(
+                                &k_ll.data()[llo * l..lhi * l],
+                                llo,
+                                lhi,
+                                lm_labels,
+                                c,
+                                inv,
+                                onehot,
+                            );
                             // --- collective 1: allreduce(sum) of g
                             if let Some(f) = faults {
                                 f.before_collective(orig, node.next_seq_id());
@@ -171,11 +239,15 @@ impl ShardedBackend {
                             let lo = match (&view, tile_shards) {
                                 (GramView::Whole(mat), _) => {
                                     let (lo, hi) = row_shards_whole[slot];
-                                    if hi > lo {
-                                        let f = &mut scratch[..(hi - lo) * c];
-                                        ind.apply_rows(&mat.data()[lo * l..hi * l], f);
-                                        argmin_rows_into(f, c, &g_mask, &mut local_labels);
-                                    }
+                                    labels_for_block(
+                                        &mat.data()[lo * l..hi * l],
+                                        hi - lo,
+                                        c,
+                                        ind,
+                                        &g_mask,
+                                        &mut scratch,
+                                        &mut local_labels,
+                                    );
                                     lo
                                 }
                                 (GramView::Tiled(_), Some(shards)) => {
@@ -186,9 +258,15 @@ impl ShardedBackend {
                                             let tile = view
                                                 .tile(t)
                                                 .map_err(|e| NodeError::Engine(e.to_string()))?;
-                                            let f = &mut scratch[..(rhi - rlo) * c];
-                                            ind.apply_rows(tile.mat().data(), f);
-                                            argmin_rows_into(f, c, &g_mask, &mut local_labels);
+                                            labels_for_block(
+                                                tile.mat().data(),
+                                                rhi - rlo,
+                                                c,
+                                                ind,
+                                                &g_mask,
+                                                &mut scratch,
+                                                &mut local_labels,
+                                            );
                                         }
                                         view.tile_range(tlo).0
                                     } else {
@@ -300,14 +378,7 @@ impl StepBackend for ShardedBackend {
 
         // landmark counts are cheap and label-only: every node derives
         // them locally (the paper ships labels, not counts)
-        let mut counts = vec![0usize; c];
-        for &u in lm_labels {
-            counts[u] += 1;
-        }
-        let inv: Vec<f32> = counts
-            .iter()
-            .map(|&s| if s > 0 { 1.0 / s as f32 } else { 0.0 })
-            .collect();
+        let (counts, inv) = landmark_stats(lm_labels, c);
 
         // the packed indicators are built once per iteration and shared
         // read-only by every node: the scaled one serves the f GEMMs,

@@ -1,0 +1,2167 @@
+//! Real TCP transport for `sharded:<p>`: the collectives of
+//! [`super::sharded`] run across p OS processes on localhost instead of
+//! p in-process threads (`DKKM_TRANSPORT=tcp`; threads remain the
+//! default and the bit-identity oracle).
+//!
+//! # Topology and protocol
+//!
+//! Rank 0 is the coordinator — the session process itself, which also
+//! does rank 0's share of the compute. Ranks 1..p are `dkkm worker`
+//! child processes that dial the coordinator's rendezvous listener and
+//! present a config fingerprint (crate version + protocol version +
+//! node count + fault plan); a mismatch is rejected with a structured
+//! error. Per inner-loop iteration the coordinator sends each worker a
+//! `Work` frame (labels + its K_ll/K_nl shard, tile boundaries
+//! preserved so the GEMM call shapes match thread mode exactly), then
+//! runs the two collectives of the paper's Alg. 1 over the wire:
+//!
+//!   1. allreduce(sum) of `g`: workers send `GPartial`, the coordinator
+//!      reduces in slot order (identical to [`super::comm`]'s rank-order
+//!      reduction) and broadcasts `GReduced`;
+//!   2. allgather of labels: workers send their contiguous `Labels`
+//!      slice, the coordinator validates coverage and broadcasts the
+//!      assembled vector as `LabelsDone`.
+//!
+//! Because the reduction order and the per-shard math
+//! ([`super::sharded::g_partial_from_rows`] /
+//! [`super::sharded::labels_for_block`]) are shared with thread mode,
+//! TCP results are bit-identical to the in-process and serial
+//! references.
+//!
+//! # Wire format
+//!
+//! Length-prefixed frames: `u32` payload length (little endian,
+//! bounded) followed by a 37-byte header — kind, rank, collective seq,
+//! attempt id, cumulative-injected info, FNV-1a body checksum — and the
+//! body. Every read and write carries a deadline; a truncated frame,
+//! an oversized length prefix, or a checksum mismatch surfaces as a
+//! structured error naming rank and seq, never a hang.
+//!
+//! # Fault tolerance
+//!
+//! The PR 6 guarantees, ported to the wire: worker liveness via
+//! heartbeat frames while idle, socket errors mapped onto the
+//! [`super::comm::CollectiveError`] taxonomy (reset → `NodeFailed`,
+//! deadline → `Timeout`, checksum → `Protocol`), and survivor re-shard
+//! recovery — a failed attempt first offers the rank a bounded
+//! reconnect window (the worker redials with exponential backoff and
+//! re-handshakes), then drops it and re-shards. The [`super::fault`]
+//! grammar gains wire classes (`drop:r@k`, `stall:r@k:ms`,
+//! `garble:r@k`) injected at the worker's send path and keyed on rank +
+//! collective seq like kill/delay. Workers count collectives
+//! monotonically across the fit (unlike thread mode, whose communicator
+//! is rebuilt per iteration), so `@k` addresses the k-th collective the
+//! worker ever enters. A worker process that dies stays dead for the
+//! rest of the fit; shards rebalance over the survivors, which changes
+//! the schedule, not the math.
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+use crate::cluster::assign::{masked_g, ClusterStats, Indicator};
+use crate::cluster::minibatch::StepBackend;
+use crate::kernels::GramView;
+use crate::linalg::Mat;
+use crate::util::error::{Error, Result};
+
+use super::comm::{CollectiveError, DEFAULT_DEADLINE};
+use super::fault::{FaultPlan, FaultSession, WireFault};
+use super::shard::row_shards;
+use super::sharded::{g_partial_from_rows, labels_for_block, landmark_stats};
+
+/// Wire protocol version, part of the handshake fingerprint.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Hard bound on one frame's payload (length-prefix sanity check).
+const MAX_FRAME: usize = 1 << 28; // 256 MiB
+
+/// kind + rank + seq + attempt + info + checksum.
+const HEADER_LEN: usize = 37;
+
+/// Idle read slice between worker heartbeats.
+const HEARTBEAT_EVERY: Duration = Duration::from_millis(500);
+
+/// How long a dialing side waits for the handshake reply.
+const HANDSHAKE_REPLY_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Rendezvous window for freshly spawned workers.
+const SPAWN_WINDOW: Duration = Duration::from_secs(20);
+
+/// Window in which a failed rank may redial before it is dropped.
+const RECONNECT_WINDOW: Duration = Duration::from_secs(5);
+
+/// Reconnects granted to one rank before it is declared dead.
+const RECONNECT_BUDGET: u32 = 3;
+
+/// Dial attempts in `connect_with_backoff` (25 ms * 2^i between tries).
+const CONNECT_TRIES: u32 = 7;
+
+/// Per-frame write deadline.
+const WRITE_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Grace between the `Shutdown` frame and `SIGKILL` at pool teardown.
+const SHUTDOWN_GRACE: Duration = Duration::from_secs(3);
+
+// Frame kinds.
+const K_HELLO: u8 = 1;
+const K_WELCOME: u8 = 2;
+const K_REJECT: u8 = 3;
+const K_WORK: u8 = 4;
+const K_GPART: u8 = 5;
+const K_GRED: u8 = 6;
+const K_LABELS: u8 = 7;
+const K_DONE: u8 = 8;
+const K_HEARTBEAT: u8 = 9;
+const K_SHUTDOWN: u8 = 10;
+
+/// FNV-1a 64-bit (body checksum + fingerprint hashing).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn unpoison<T>(r: std::result::Result<T, PoisonError<T>>) -> T {
+    r.unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One protocol frame.
+#[derive(Clone, Debug, PartialEq)]
+struct Frame {
+    kind: u8,
+    rank: u32,
+    seq: u64,
+    attempt: u64,
+    /// Worker → coordinator: cumulative faults injected by that worker
+    /// (piggybacked so remote injections reach `RunReport.faults`).
+    info: u64,
+    body: Vec<u8>,
+}
+
+impl Frame {
+    fn control(kind: u8, rank: u32, seq: u64, info: u64) -> Frame {
+        Frame { kind, rank, seq, attempt: 0, info, body: Vec::new() }
+    }
+}
+
+// --- little-endian body encoding helpers ---------------------------------
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_u32s(out: &mut Vec<u8>, xs: &[usize]) {
+    out.reserve(xs.len() * 4);
+    for &x in xs {
+        out.extend_from_slice(&(x as u32).to_le_bytes());
+    }
+}
+
+/// Bounds-checked reader over a frame body.
+struct Cursor<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(b: &'a [u8]) -> Cursor<'a> {
+        Cursor { b, off: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> std::result::Result<&'a [u8], String> {
+        if self.off + n > self.b.len() {
+            return Err(format!(
+                "body truncated: need {} bytes at offset {}, have {}",
+                n,
+                self.off,
+                self.b.len()
+            ));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> std::result::Result<u32, String> {
+        let s = self.bytes(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> std::result::Result<Vec<f32>, String> {
+        let s = self.bytes(n * 4)?;
+        Ok(s.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn u32s(&mut self, n: usize) -> std::result::Result<Vec<usize>, String> {
+        let s = self.bytes(n * 4)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]) as usize)
+            .collect())
+    }
+}
+
+// --- framed connection ---------------------------------------------------
+
+/// Why one `recv` failed; the caller maps this onto the
+/// [`CollectiveError`] taxonomy with the rank/seq it was expecting.
+#[derive(Debug)]
+enum RecvError {
+    /// EOF or reset: the peer is gone (or the stream is desynchronized
+    /// beyond repair and was closed).
+    Closed(String),
+    /// Deadline elapsed before a full frame arrived.
+    TimedOut { waited_ms: u64 },
+    /// The bytes arrived but are not a valid frame (oversized length
+    /// prefix, short header, checksum mismatch).
+    Corrupt(String),
+    /// Any other socket error.
+    Io(String),
+}
+
+impl RecvError {
+    fn describe(&self) -> String {
+        match self {
+            RecvError::Closed(m) => format!("connection closed: {m}"),
+            RecvError::TimedOut { waited_ms } => {
+                format!("no frame within deadline (waited {waited_ms} ms)")
+            }
+            RecvError::Corrupt(m) => format!("corrupt frame: {m}"),
+            RecvError::Io(m) => format!("socket error: {m}"),
+        }
+    }
+}
+
+fn map_io(e: &std::io::Error) -> RecvError {
+    use std::io::ErrorKind::*;
+    match e.kind() {
+        WouldBlock | TimedOut => RecvError::TimedOut { waited_ms: 0 },
+        UnexpectedEof | ConnectionReset | ConnectionAborted | BrokenPipe | NotConnected => {
+            RecvError::Closed(e.to_string())
+        }
+        _ => RecvError::Io(e.to_string()),
+    }
+}
+
+/// A TCP stream speaking length-prefixed frames with per-call read
+/// deadlines and a fixed write deadline.
+struct FramedConn {
+    stream: TcpStream,
+}
+
+impl FramedConn {
+    fn new(stream: TcpStream) -> std::io::Result<FramedConn> {
+        stream.set_nodelay(true)?;
+        stream.set_write_timeout(Some(WRITE_DEADLINE))?;
+        Ok(FramedConn { stream })
+    }
+
+    fn payload(f: &Frame) -> Vec<u8> {
+        let mut p = Vec::with_capacity(HEADER_LEN + f.body.len());
+        p.push(f.kind);
+        put_u32(&mut p, f.rank);
+        put_u64(&mut p, f.seq);
+        put_u64(&mut p, f.attempt);
+        put_u64(&mut p, f.info);
+        put_u64(&mut p, fnv1a(&f.body));
+        p.extend_from_slice(&f.body);
+        p
+    }
+
+    /// Send one frame; returns the wire bytes written.
+    fn send(&mut self, f: &Frame) -> std::io::Result<usize> {
+        let p = Self::payload(f);
+        self.stream.write_all(&(p.len() as u32).to_le_bytes())?;
+        self.stream.write_all(&p)?;
+        self.stream.flush()?;
+        Ok(4 + p.len())
+    }
+
+    /// `stall:r@k:ms` injection: write half the frame, sleep, write the
+    /// rest. The receiver either rides it out or times out mid-frame.
+    fn send_stalled(&mut self, f: &Frame, ms: u64) -> std::io::Result<usize> {
+        let p = Self::payload(f);
+        self.stream.write_all(&(p.len() as u32).to_le_bytes())?;
+        let half = p.len() / 2;
+        self.stream.write_all(&p[..half])?;
+        self.stream.flush()?;
+        std::thread::sleep(Duration::from_millis(ms));
+        self.stream.write_all(&p[half..])?;
+        self.stream.flush()?;
+        Ok(4 + p.len())
+    }
+
+    /// `garble:r@k` injection: compute the honest checksum, then flip
+    /// one payload byte so the receiver's verification fails.
+    fn send_garbled(&mut self, f: &Frame) -> std::io::Result<usize> {
+        let mut p = Self::payload(f);
+        let flip = if f.body.is_empty() { HEADER_LEN - 1 } else { p.len() - 1 };
+        p[flip] ^= 0xff;
+        self.stream.write_all(&(p.len() as u32).to_le_bytes())?;
+        self.stream.write_all(&p)?;
+        self.stream.flush()?;
+        Ok(4 + p.len())
+    }
+
+    fn read_exact_deadline(
+        &mut self,
+        buf: &mut [u8],
+        deadline_at: Instant,
+        started: Instant,
+    ) -> std::result::Result<(), RecvError> {
+        let mut filled = 0usize;
+        while filled < buf.len() {
+            let now = Instant::now();
+            if now >= deadline_at {
+                return Err(RecvError::TimedOut {
+                    waited_ms: now.duration_since(started).as_millis() as u64,
+                });
+            }
+            let remaining = deadline_at - now;
+            self.stream
+                .set_read_timeout(Some(remaining.max(Duration::from_millis(1))))
+                .map_err(|e| map_io(&e))?;
+            match self.stream.read(&mut buf[filled..]) {
+                Ok(0) => {
+                    return Err(RecvError::Closed(format!(
+                        "eof after {filled} of {} frame bytes (truncated frame)",
+                        buf.len()
+                    )))
+                }
+                Ok(k) => filled += k,
+                Err(e) => match map_io(&e) {
+                    RecvError::TimedOut { .. } => continue, // re-check deadline
+                    other => return Err(other),
+                },
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive one frame within `deadline`; returns it with the wire
+    /// bytes read. A timeout mid-frame desynchronizes the stream — the
+    /// caller must close the connection on any error.
+    fn recv(&mut self, deadline: Duration) -> std::result::Result<(Frame, usize), RecvError> {
+        let started = Instant::now();
+        let deadline_at = started + deadline;
+        let mut len4 = [0u8; 4];
+        self.read_exact_deadline(&mut len4, deadline_at, started)?;
+        let len = u32::from_le_bytes(len4) as usize;
+        if len > MAX_FRAME {
+            return Err(RecvError::Corrupt(format!(
+                "oversized length prefix: {len} bytes (max {MAX_FRAME})"
+            )));
+        }
+        if len < HEADER_LEN {
+            return Err(RecvError::Corrupt(format!(
+                "short frame: {len} bytes < {HEADER_LEN}-byte header"
+            )));
+        }
+        let mut p = vec![0u8; len];
+        self.read_exact_deadline(&mut p, deadline_at, started)?;
+        let kind = p[0];
+        let rank = u32::from_le_bytes(p[1..5].try_into().unwrap());
+        let seq = u64::from_le_bytes(p[5..13].try_into().unwrap());
+        let attempt = u64::from_le_bytes(p[13..21].try_into().unwrap());
+        let info = u64::from_le_bytes(p[21..29].try_into().unwrap());
+        let checksum = u64::from_le_bytes(p[29..37].try_into().unwrap());
+        let body = p.split_off(HEADER_LEN);
+        if fnv1a(&body) != checksum {
+            return Err(RecvError::Corrupt(format!(
+                "checksum mismatch on kind {kind} frame from rank {rank} at seq {seq}"
+            )));
+        }
+        Ok((Frame { kind, rank, seq, attempt, info, body }, 4 + len))
+    }
+
+    fn close(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+// --- transport accounting -------------------------------------------------
+
+/// Which accounting bucket a frame belongs to.
+#[derive(Clone, Copy, Debug)]
+enum FrameClass {
+    /// `Work` frames shipping labels + panel shards.
+    Work,
+    /// `GPartial` / `GReduced` (the allreduce collective).
+    Allreduce,
+    /// `Labels` / `LabelsDone` (the allgather collective).
+    Allgather,
+    /// Handshake, heartbeat, shutdown.
+    Control,
+}
+
+fn class_of(kind: u8) -> FrameClass {
+    match kind {
+        K_WORK => FrameClass::Work,
+        K_GPART | K_GRED => FrameClass::Allreduce,
+        K_LABELS | K_DONE => FrameClass::Allgather,
+        _ => FrameClass::Control,
+    }
+}
+
+/// Live wire counters for one TCP backend (coordinator side).
+#[derive(Debug, Default)]
+pub struct TransportStats {
+    workers: AtomicU64,
+    bytes_sent: AtomicU64,
+    bytes_recv: AtomicU64,
+    msgs_sent: AtomicU64,
+    msgs_recv: AtomicU64,
+    work_bytes: AtomicU64,
+    allreduce_bytes: AtomicU64,
+    allreduce_ops: AtomicU64,
+    allreduce_ns: AtomicU64,
+    allgather_bytes: AtomicU64,
+    allgather_ops: AtomicU64,
+    allgather_ns: AtomicU64,
+    control_bytes: AtomicU64,
+    retries: AtomicU64,
+    reconnects: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+impl TransportStats {
+    fn bucket(&self, class: FrameClass) -> &AtomicU64 {
+        match class {
+            FrameClass::Work => &self.work_bytes,
+            FrameClass::Allreduce => &self.allreduce_bytes,
+            FrameClass::Allgather => &self.allgather_bytes,
+            FrameClass::Control => &self.control_bytes,
+        }
+    }
+
+    fn on_sent(&self, bytes: usize, class: FrameClass) {
+        self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.bucket(class).fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    fn on_recv(&self, bytes: usize, class: FrameClass) {
+        self.bytes_recv.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.msgs_recv.fetch_add(1, Ordering::Relaxed);
+        self.bucket(class).fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Snapshot the counters.
+    pub fn report(&self) -> TransportReport {
+        TransportReport {
+            workers: self.workers.load(Ordering::Relaxed) as usize,
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
+            msgs_sent: self.msgs_sent.load(Ordering::Relaxed),
+            msgs_recv: self.msgs_recv.load(Ordering::Relaxed),
+            work_bytes: self.work_bytes.load(Ordering::Relaxed),
+            allreduce_bytes: self.allreduce_bytes.load(Ordering::Relaxed),
+            allreduce_ops: self.allreduce_ops.load(Ordering::Relaxed),
+            allreduce_seconds: self.allreduce_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            allgather_bytes: self.allgather_bytes.load(Ordering::Relaxed),
+            allgather_ops: self.allgather_ops.load(Ordering::Relaxed),
+            allgather_seconds: self.allgather_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            control_bytes: self.control_bytes.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Wire accounting snapshot for `RunReport.transport` — `None` on
+/// in-process runs, so a non-`None` value is proof the run crossed a
+/// real socket.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TransportReport {
+    /// Worker processes spawned by the pool.
+    pub workers: usize,
+    /// Total wire bytes written by the coordinator.
+    pub bytes_sent: u64,
+    /// Total wire bytes read by the coordinator.
+    pub bytes_recv: u64,
+    /// Frames written.
+    pub msgs_sent: u64,
+    /// Frames read.
+    pub msgs_recv: u64,
+    /// Bytes in `Work` frames (labels + panel shards).
+    pub work_bytes: u64,
+    /// Bytes exchanged by the g allreduce (both directions).
+    pub allreduce_bytes: u64,
+    /// Completed allreduce collectives.
+    pub allreduce_ops: u64,
+    /// Wall-clock seconds inside the allreduce phase.
+    pub allreduce_seconds: f64,
+    /// Bytes exchanged by the label allgather (both directions).
+    pub allgather_bytes: u64,
+    /// Completed allgather collectives.
+    pub allgather_ops: u64,
+    /// Wall-clock seconds inside the allgather phase.
+    pub allgather_seconds: f64,
+    /// Handshake/heartbeat/shutdown bytes.
+    pub control_bytes: u64,
+    /// Attempts re-run after a successful reconnect (no re-shard).
+    pub retries: u64,
+    /// Successful worker reconnects after a wire failure.
+    pub reconnects: u64,
+    /// Frames rejected by checksum/length validation.
+    pub protocol_errors: u64,
+}
+
+// --- mode selection -------------------------------------------------------
+
+/// How `sharded:<p>` runs its collectives.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportMode {
+    /// In-process threads over [`super::comm`] (the default and the
+    /// bit-identity oracle).
+    #[default]
+    InProcess,
+    /// p OS processes over the TCP transport in this module.
+    Tcp,
+}
+
+impl TransportMode {
+    /// Parse a config/CLI value (`threads` | `tcp`).
+    pub fn parse(s: &str) -> Result<TransportMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "" | "threads" | "thread" | "inprocess" | "in-process" => Ok(TransportMode::InProcess),
+            "tcp" => Ok(TransportMode::Tcp),
+            other => Err(Error::Config(format!(
+                "unknown transport '{other}' (threads|tcp; env DKKM_TRANSPORT overrides)"
+            ))),
+        }
+    }
+
+    /// Resolve from config + environment: `DKKM_TRANSPORT` (when set
+    /// and non-empty) overrides the config value — the same policy as
+    /// `DKKM_FAULT`.
+    pub fn resolve(config: Option<&str>) -> Result<TransportMode> {
+        if let Ok(env) = std::env::var("DKKM_TRANSPORT") {
+            if !env.trim().is_empty() {
+                return TransportMode::parse(&env);
+            }
+        }
+        TransportMode::parse(config.unwrap_or(""))
+    }
+}
+
+/// Handshake fingerprint: rejects workers built from a different crate
+/// or protocol version, sized for a different pool, or armed with a
+/// different fault plan.
+pub fn config_fingerprint(nodes: usize, plan: &FaultPlan) -> String {
+    format!(
+        "dkkm/{}+net{} p={} plan#{:016x}",
+        env!("CARGO_PKG_VERSION"),
+        PROTO_VERSION,
+        nodes,
+        fnv1a(plan.to_spec().as_bytes())
+    )
+}
+
+// --- work unit encoding ---------------------------------------------------
+
+/// One worker's decoded `Work` frame.
+struct WorkUnit {
+    c: usize,
+    n: usize,
+    lm_labels: Vec<usize>,
+    llo: usize,
+    lhi: usize,
+    kll_rows: Vec<f32>,
+    /// Contiguous row blocks `(lo, hi, rows)` of this worker's K_nl
+    /// shard — one per tile, so the worker's GEMM call shapes match the
+    /// thread-mode node exactly.
+    blocks: Vec<(usize, usize, Vec<f32>)>,
+}
+
+fn encode_work(
+    c: usize,
+    l: usize,
+    n: usize,
+    lm_labels: &[usize],
+    llo: usize,
+    lhi: usize,
+    kll_rows: &[f32],
+    blocks: &[(usize, usize, &[f32])],
+) -> Vec<u8> {
+    let block_floats: usize = blocks.iter().map(|(_, _, d)| d.len()).sum();
+    let mut b = Vec::with_capacity(28 + 4 * (l + kll_rows.len() + block_floats) + 12 * blocks.len());
+    put_u32(&mut b, c as u32);
+    put_u32(&mut b, l as u32);
+    put_u32(&mut b, n as u32);
+    put_u32s(&mut b, lm_labels);
+    put_u32(&mut b, llo as u32);
+    put_u32(&mut b, lhi as u32);
+    put_f32s(&mut b, kll_rows);
+    put_u32(&mut b, blocks.len() as u32);
+    for &(lo, hi, rows) in blocks {
+        put_u32(&mut b, lo as u32);
+        put_u32(&mut b, hi as u32);
+        put_f32s(&mut b, rows);
+    }
+    b
+}
+
+fn decode_work(body: &[u8]) -> std::result::Result<WorkUnit, String> {
+    let mut cur = Cursor::new(body);
+    let c = cur.u32()? as usize;
+    let l = cur.u32()? as usize;
+    let n = cur.u32()? as usize;
+    let lm_labels = cur.u32s(l)?;
+    let llo = cur.u32()? as usize;
+    let lhi = cur.u32()? as usize;
+    if lhi < llo || lhi > l {
+        return Err(format!("bad landmark shard [{llo}, {lhi}) of {l}"));
+    }
+    let kll_rows = cur.f32s((lhi - llo) * l)?;
+    let nblocks = cur.u32()? as usize;
+    let mut blocks = Vec::with_capacity(nblocks);
+    for _ in 0..nblocks {
+        let lo = cur.u32()? as usize;
+        let hi = cur.u32()? as usize;
+        if hi < lo || hi > n {
+            return Err(format!("bad row block [{lo}, {hi}) of {n}"));
+        }
+        let rows = cur.f32s((hi - lo) * l)?;
+        blocks.push((lo, hi, rows));
+    }
+    Ok(WorkUnit { c, n, lm_labels, llo, lhi, kll_rows, blocks })
+}
+
+// --- handshake ------------------------------------------------------------
+
+/// Accept one dialing worker on `listener` (which must be in
+/// non-blocking mode), verify its fingerprint, and welcome it. Returns
+/// `Ok(None)` when nobody dialed within `window`.
+fn accept_one_hello(
+    listener: &TcpListener,
+    want_fp: &str,
+    window: Duration,
+) -> Result<Option<(usize, FramedConn, u64)>> {
+    let deadline_at = Instant::now() + window;
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nonblocking(false).map_err(Error::Io)?;
+                let mut conn = FramedConn::new(stream).map_err(Error::Io)?;
+                let (hello, _) = match conn.recv(HANDSHAKE_REPLY_DEADLINE) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        // a dialer that never says Hello is not a worker;
+                        // drop it and keep listening
+                        conn.close();
+                        let _ = e;
+                        continue;
+                    }
+                };
+                if hello.kind != K_HELLO {
+                    conn.close();
+                    continue;
+                }
+                let got_fp = String::from_utf8_lossy(&hello.body).into_owned();
+                if got_fp != want_fp {
+                    let reject = Frame {
+                        kind: K_REJECT,
+                        rank: 0,
+                        seq: hello.seq,
+                        attempt: 0,
+                        info: 0,
+                        body: format!("fingerprint mismatch: got '{got_fp}', want '{want_fp}'")
+                            .into_bytes(),
+                    };
+                    let _ = conn.send(&reject);
+                    conn.close();
+                    return Err(Error::Node {
+                        rank: hello.rank as usize,
+                        seq: hello.seq,
+                        msg: format!(
+                            "handshake fingerprint mismatch from rank {}: got '{got_fp}', want '{want_fp}'",
+                            hello.rank
+                        ),
+                    });
+                }
+                let welcome = Frame::control(K_WELCOME, 0, hello.seq, 0);
+                conn.send(&welcome).map_err(|e| {
+                    Error::Runtime(format!("welcome to rank {} failed: {e}", hello.rank))
+                })?;
+                return Ok(Some((hello.rank as usize, conn, hello.info)));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline_at {
+                    return Ok(None);
+                }
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+    }
+}
+
+/// Worker side: dial the coordinator with bounded exponential backoff,
+/// present the fingerprint, and wait for the welcome. A `Reject` is a
+/// hard error (misconfiguration); refused/None replies retry.
+fn connect_with_backoff(
+    addr: &str,
+    rank: u32,
+    seq: u64,
+    fingerprint: &str,
+    injected: u64,
+) -> Result<FramedConn> {
+    let mut delay = Duration::from_millis(25);
+    let mut last = String::from("no attempt made");
+    for _ in 0..CONNECT_TRIES {
+        match TcpStream::connect(addr) {
+            Ok(stream) => match FramedConn::new(stream) {
+                Ok(mut conn) => {
+                    let hello = Frame {
+                        kind: K_HELLO,
+                        rank,
+                        seq,
+                        attempt: 0,
+                        info: injected,
+                        body: fingerprint.as_bytes().to_vec(),
+                    };
+                    if let Err(e) = conn.send(&hello) {
+                        last = format!("hello write failed: {e}");
+                    } else {
+                        match conn.recv(HANDSHAKE_REPLY_DEADLINE) {
+                            Ok((f, _)) if f.kind == K_WELCOME => return Ok(conn),
+                            Ok((f, _)) if f.kind == K_REJECT => {
+                                return Err(Error::Node {
+                                    rank: rank as usize,
+                                    seq,
+                                    msg: format!(
+                                        "handshake rejected: {}",
+                                        String::from_utf8_lossy(&f.body)
+                                    ),
+                                });
+                            }
+                            Ok((f, _)) => last = format!("unexpected handshake reply kind {}", f.kind),
+                            Err(e) => last = e.describe(),
+                        }
+                        conn.close();
+                    }
+                }
+                Err(e) => last = e.to_string(),
+            },
+            Err(e) => last = e.to_string(),
+        }
+        std::thread::sleep(delay);
+        delay *= 2;
+    }
+    Err(Error::Node {
+        rank: rank as usize,
+        seq,
+        msg: format!(
+            "cannot reach coordinator at {addr} after {CONNECT_TRIES} attempts: {last}"
+        ),
+    })
+}
+
+// --- worker pool (coordinator side) ---------------------------------------
+
+/// Which binary to spawn workers from: an explicit override (tests and
+/// benches pass `CARGO_BIN_EXE_dkkm`), the `DKKM_WORKER_BIN` variable,
+/// or this very executable (the CLI path).
+fn worker_binary(override_bin: Option<&PathBuf>) -> Result<PathBuf> {
+    if let Some(p) = override_bin {
+        return Ok(p.clone());
+    }
+    if let Ok(p) = std::env::var("DKKM_WORKER_BIN") {
+        if !p.trim().is_empty() {
+            return Ok(PathBuf::from(p));
+        }
+    }
+    std::env::current_exe()
+        .map_err(|e| Error::Runtime(format!("cannot locate worker binary: {e} (set DKKM_WORKER_BIN)")))
+}
+
+struct WorkerSlot {
+    rank: usize,
+    conn: Option<FramedConn>,
+    child: Option<Child>,
+    reconnects_left: u32,
+    /// Highest cumulative-injected count seen from this worker.
+    injected_seen: u64,
+    /// Permanently lost: process exited or reconnect budget exhausted.
+    /// A dead worker stays dead for the rest of the fit.
+    dead: bool,
+}
+
+/// The coordinator's set of spawned `dkkm worker` processes plus the
+/// rendezvous listener (kept open so failed ranks can redial).
+struct WorkerPool {
+    listener: TcpListener,
+    /// Indexed by `rank - 1`.
+    slots: Vec<WorkerSlot>,
+    fingerprint: String,
+    stats: Arc<TransportStats>,
+}
+
+impl WorkerPool {
+    /// Spawn `nodes - 1` worker processes and complete the rendezvous.
+    fn spawn(
+        nodes: usize,
+        plan: &FaultPlan,
+        bin_override: Option<&PathBuf>,
+        stats: Arc<TransportStats>,
+        faults: Option<&FaultSession>,
+    ) -> Result<WorkerPool> {
+        let listener = TcpListener::bind("127.0.0.1:0").map_err(Error::Io)?;
+        listener.set_nonblocking(true).map_err(Error::Io)?;
+        let addr = listener.local_addr().map_err(Error::Io)?;
+        let fingerprint = config_fingerprint(nodes, plan);
+        let bin = worker_binary(bin_override)?;
+        let spec = plan.to_spec();
+        let mut slots = Vec::new();
+        for rank in 1..nodes {
+            let mut cmd = Command::new(&bin);
+            cmd.arg("worker")
+                .arg("--connect")
+                .arg(addr.to_string())
+                .arg("--rank")
+                .arg(rank.to_string())
+                .arg("--fingerprint")
+                .arg(&fingerprint);
+            if !spec.is_empty() {
+                cmd.arg("--fault").arg(&spec);
+            }
+            // the plan travels via --fault; ambient env must not
+            // double-arm it or flip the child into tcp-engine mode
+            cmd.env_remove("DKKM_FAULT");
+            cmd.env_remove("DKKM_TRANSPORT");
+            cmd.stdin(Stdio::null());
+            let child = cmd.spawn().map_err(|e| {
+                Error::Runtime(format!("cannot spawn worker rank {rank} ({}): {e}", bin.display()))
+            })?;
+            slots.push(WorkerSlot {
+                rank,
+                conn: None,
+                child: Some(child),
+                reconnects_left: RECONNECT_BUDGET,
+                injected_seen: 0,
+                dead: false,
+            });
+        }
+        stats.workers.store(slots.len() as u64, Ordering::Relaxed);
+        let mut pool = WorkerPool { listener, slots, fingerprint, stats };
+        let mut missing: Vec<usize> = (1..nodes).collect();
+        let deadline_at = Instant::now() + SPAWN_WINDOW;
+        while !missing.is_empty() {
+            let window = deadline_at.saturating_duration_since(Instant::now());
+            if window.is_zero() {
+                return Err(Error::Runtime(format!(
+                    "worker ranks {missing:?} did not complete rendezvous within {SPAWN_WINDOW:?}"
+                )));
+            }
+            let fp = pool.fingerprint.clone();
+            if let Some((rank, conn, info)) = accept_one_hello(&pool.listener, &fp, window)? {
+                missing.retain(|&r| r != rank);
+                pool.install(rank, conn, info, faults);
+            }
+        }
+        Ok(pool)
+    }
+
+    fn install(&mut self, rank: usize, conn: FramedConn, info: u64, faults: Option<&FaultSession>) {
+        self.fold_info(rank, info, faults);
+        let slot = &mut self.slots[rank - 1];
+        if let Some(mut old) = slot.conn.take() {
+            old.close();
+        }
+        slot.conn = Some(conn);
+    }
+
+    /// Fold a worker's cumulative injected count into the shared fault
+    /// session (only deltas, so reconnects and retries never double
+    /// count).
+    fn fold_info(&mut self, rank: usize, info: u64, faults: Option<&FaultSession>) {
+        let slot = &mut self.slots[rank - 1];
+        if info > slot.injected_seen {
+            let delta = (info - slot.injected_seen) as usize;
+            slot.injected_seen = info;
+            if let Some(f) = faults {
+                f.note_injected(delta);
+            }
+        }
+    }
+
+    fn alive_ranks(&self) -> Vec<usize> {
+        self.slots.iter().filter(|s| !s.dead).map(|s| s.rank).collect()
+    }
+
+    fn pids(&self) -> Vec<u32> {
+        self.slots.iter().filter_map(|s| s.child.as_ref().map(|c| c.id())).collect()
+    }
+
+    /// Send one frame to `rank`; on error the connection is closed and
+    /// the message names the rank.
+    fn send_to(&mut self, rank: usize, frame: &Frame) -> std::result::Result<(), String> {
+        let stats = self.stats.clone();
+        let class = class_of(frame.kind);
+        let slot = &mut self.slots[rank - 1];
+        let conn = match slot.conn.as_mut() {
+            Some(c) => c,
+            None => return Err(format!("rank {rank}: no connection")),
+        };
+        match conn.send(frame) {
+            Ok(nb) => {
+                stats.on_sent(nb, class);
+                Ok(())
+            }
+            Err(e) => {
+                conn.close();
+                slot.conn = None;
+                Err(format!("rank {rank}: send failed: {e}"))
+            }
+        }
+    }
+
+    /// Receive the `want` frame for `attempt` from `rank`, skipping
+    /// heartbeats and stale frames from earlier attempts. Any error
+    /// closes the connection (a desynchronized stream cannot be
+    /// trusted); the worker notices and redials.
+    fn recv_expect(
+        &mut self,
+        rank: usize,
+        want: u8,
+        attempt: u64,
+        deadline_at: Instant,
+        started: Instant,
+        faults: Option<&FaultSession>,
+    ) -> std::result::Result<Frame, RecvError> {
+        let stats = self.stats.clone();
+        loop {
+            let remaining = deadline_at.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                self.close_rank(rank);
+                return Err(RecvError::TimedOut {
+                    waited_ms: started.elapsed().as_millis() as u64,
+                });
+            }
+            let slot = &mut self.slots[rank - 1];
+            let conn = match slot.conn.as_mut() {
+                Some(c) => c,
+                None => return Err(RecvError::Closed(format!("rank {rank}: no connection"))),
+            };
+            match conn.recv(remaining) {
+                Ok((f, nb)) => {
+                    stats.on_recv(nb, class_of(f.kind));
+                    if f.info > slot.injected_seen {
+                        let delta = (f.info - slot.injected_seen) as usize;
+                        slot.injected_seen = f.info;
+                        if let Some(fs) = faults {
+                            fs.note_injected(delta);
+                        }
+                    }
+                    if f.kind == want && f.attempt == attempt {
+                        return Ok(f);
+                    }
+                    // heartbeat or stale frame from a prior attempt
+                }
+                Err(RecvError::TimedOut { .. }) => {
+                    self.close_rank(rank);
+                    return Err(RecvError::TimedOut {
+                        waited_ms: started.elapsed().as_millis() as u64,
+                    });
+                }
+                Err(e) => {
+                    self.close_rank(rank);
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    fn close_rank(&mut self, rank: usize) {
+        let slot = &mut self.slots[rank - 1];
+        if let Some(mut c) = slot.conn.take() {
+            c.close();
+        }
+    }
+
+    /// Offer `rank` a redial window. True when the same worker process
+    /// re-handshakes in time; false when the process exited, the budget
+    /// is exhausted, or the window elapsed.
+    fn try_reconnect(&mut self, rank: usize, faults: Option<&FaultSession>) -> bool {
+        {
+            let slot = &mut self.slots[rank - 1];
+            if slot.dead || slot.reconnects_left == 0 {
+                return false;
+            }
+            match slot.child.as_mut() {
+                Some(child) => {
+                    if let Ok(Some(_)) = child.try_wait() {
+                        return false; // process exited; nothing to redial
+                    }
+                }
+                None => return false,
+            }
+            slot.reconnects_left -= 1;
+            if let Some(mut c) = slot.conn.take() {
+                c.close();
+            }
+        }
+        let fp = self.fingerprint.clone();
+        let deadline_at = Instant::now() + RECONNECT_WINDOW;
+        loop {
+            let window = deadline_at.saturating_duration_since(Instant::now());
+            if window.is_zero() {
+                return false;
+            }
+            match accept_one_hello(&self.listener, &fp, window) {
+                Ok(Some((r, conn, info))) => {
+                    self.install(r, conn, info, faults);
+                    if r == rank {
+                        self.stats.reconnects.fetch_add(1, Ordering::Relaxed);
+                        return true;
+                    }
+                    // another rank redialed first; keep waiting for ours
+                }
+                Ok(None) => return false,
+                Err(_) => return false, // fingerprint mismatch from a stranger
+            }
+        }
+    }
+
+    /// Permanently retire a rank: close its socket and reap (or kill)
+    /// its process.
+    fn mark_dead(&mut self, rank: usize) {
+        let slot = &mut self.slots[rank - 1];
+        slot.dead = true;
+        if let Some(mut c) = slot.conn.take() {
+            c.close();
+        }
+        if let Some(mut child) = slot.child.take() {
+            match child.try_wait() {
+                Ok(Some(_)) => {}
+                _ => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+            }
+        }
+    }
+
+    /// Graceful teardown: `Shutdown` frames, a bounded drain, then
+    /// `SIGKILL` for stragglers. Every child is reaped — no zombies.
+    fn shutdown_workers(&mut self) {
+        for i in 0..self.slots.len() {
+            let rank = self.slots[i].rank;
+            if self.slots[i].conn.is_some() {
+                let frame = Frame::control(K_SHUTDOWN, rank as u32, 0, 0);
+                let _ = self.send_to(rank, &frame);
+            }
+        }
+        for slot in &mut self.slots {
+            if let Some(mut child) = slot.child.take() {
+                let deadline_at = Instant::now() + SHUTDOWN_GRACE;
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline_at => {
+                            std::thread::sleep(Duration::from_millis(10))
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+            if let Some(mut c) = slot.conn.take() {
+                c.close();
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown_workers();
+    }
+}
+
+// --- coordinator backend --------------------------------------------------
+
+/// Why one TCP attempt failed.
+enum TcpAttemptFailure {
+    /// These original ranks failed; offer reconnects, then re-shard.
+    Failed { ranks: Vec<usize>, seq: u64, msg: String },
+    /// Not survivable by retrying on fewer nodes.
+    Hard(Error),
+}
+
+/// [`StepBackend`] that runs the sharded iteration over worker OS
+/// processes via TCP. Construct through `Experiment::transport("tcp")`
+/// / `DKKM_TRANSPORT=tcp`, or directly in tests. The worker pool is
+/// spawned lazily on the first iteration and torn down gracefully on
+/// drop (or via [`TcpShardedBackend::shutdown`]).
+pub struct TcpShardedBackend {
+    /// Total node count (rank 0 is the coordinator itself).
+    pub nodes: usize,
+    faults: Option<Arc<FaultSession>>,
+    deadline: Duration,
+    stats: Arc<TransportStats>,
+    pool: Mutex<Option<WorkerPool>>,
+    /// Coordinator-side collective counter (monotonic across the fit).
+    seq: AtomicU64,
+    /// Attempt ids, used to discard stale frames after recovery.
+    attempts: AtomicU64,
+    worker_bin: Option<PathBuf>,
+}
+
+impl TcpShardedBackend {
+    pub fn new(nodes: usize) -> TcpShardedBackend {
+        assert!(nodes > 0);
+        TcpShardedBackend {
+            nodes,
+            faults: None,
+            deadline: DEFAULT_DEADLINE,
+            stats: Arc::new(TransportStats::default()),
+            pool: Mutex::new(None),
+            seq: AtomicU64::new(0),
+            attempts: AtomicU64::new(0),
+            worker_bin: None,
+        }
+    }
+
+    /// Attach a fault session (same contract as
+    /// [`super::ShardedBackend::with_faults`]); the plan is forwarded to
+    /// the spawned workers via `--fault`.
+    pub fn with_faults(mut self, faults: Arc<FaultSession>) -> TcpShardedBackend {
+        if let Some(d) = faults.plan().deadline_override() {
+            self.deadline = d;
+        }
+        self.faults = Some(faults);
+        self
+    }
+
+    /// Override the per-collective deadline (default 30 s).
+    pub fn with_deadline(mut self, deadline: Duration) -> TcpShardedBackend {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Spawn workers from this binary instead of `DKKM_WORKER_BIN` /
+    /// `current_exe` (tests pass `CARGO_BIN_EXE_dkkm`).
+    pub fn with_worker_bin(mut self, bin: PathBuf) -> TcpShardedBackend {
+        self.worker_bin = Some(bin);
+        self
+    }
+
+    fn plan(&self) -> FaultPlan {
+        self.faults.as_ref().map(|f| f.plan().clone()).unwrap_or_default()
+    }
+
+    /// Snapshot the wire counters.
+    pub fn report(&self) -> TransportReport {
+        self.stats.report()
+    }
+
+    /// PIDs of the live worker processes (no-zombie tests).
+    pub fn worker_pids(&self) -> Vec<u32> {
+        unpoison(self.pool.lock()).as_ref().map(|p| p.pids()).unwrap_or_default()
+    }
+
+    /// Tear the worker pool down now (drop does the same).
+    pub fn shutdown(&self) {
+        *unpoison(self.pool.lock()) = None;
+    }
+
+    /// Run the coordinator's rank-0 fault hook; a `kill:0@k` panic is
+    /// converted into a hard structured error (the coordinator IS the
+    /// run — unlike thread mode, rank 0's death is not survivable over
+    /// TCP).
+    fn rank0_before_collective(&self, k: u64) -> std::result::Result<(), TcpAttemptFailure> {
+        if let Some(f) = &self.faults {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f.before_collective(0, k)
+            }));
+            if let Err(payload) = r {
+                return Err(TcpAttemptFailure::Hard(Error::Node {
+                    rank: 0,
+                    seq: k,
+                    msg: format!(
+                        "coordinator fault: {}",
+                        crate::kernels::tiles::panic_message(payload)
+                    ),
+                }));
+            }
+        }
+        Ok(())
+    }
+
+    /// Map one failed worker recv onto the [`CollectiveError`] taxonomy.
+    fn classify(&self, rank: usize, seq: u64, e: &RecvError) -> String {
+        let ce = match e {
+            RecvError::Closed(_) => CollectiveError::NodeFailed { rank, seq },
+            RecvError::TimedOut { waited_ms } => CollectiveError::Timeout {
+                rank: 0,
+                seq,
+                waited_ms: *waited_ms,
+                missing: vec![rank],
+            },
+            RecvError::Corrupt(m) => {
+                self.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                CollectiveError::Protocol { seq, msg: format!("rank {rank}: {m}") }
+            }
+            RecvError::Io(m) => {
+                CollectiveError::Protocol { seq, msg: format!("rank {rank}: {m}") }
+            }
+        };
+        format!("{ce} ({})", e.describe())
+    }
+
+    /// One attempt over `survivors` (original ranks; `survivors[0]` is
+    /// always the coordinator). Ships work, runs both collectives over
+    /// the wire, and computes rank 0's share locally with the exact
+    /// thread-mode helpers.
+    #[allow(clippy::too_many_arguments)]
+    fn attempt(
+        &self,
+        pool: &mut Option<WorkerPool>,
+        attempt_id: u64,
+        survivors: &[usize],
+        k_nl: &GramView<'_>,
+        k_ll: &Mat,
+        lm_labels: &[usize],
+        c: usize,
+        counts: &[usize],
+        inv: &[f32],
+        ind: &Indicator,
+        onehot: &Indicator,
+    ) -> std::result::Result<(Vec<usize>, Vec<f32>), TcpAttemptFailure> {
+        let n = k_nl.rows();
+        let l = lm_labels.len();
+        let p = survivors.len();
+        debug_assert_eq!(survivors.first(), Some(&0), "coordinator is always rank 0");
+        let tile_shards = match k_nl {
+            GramView::Whole(_) => None,
+            GramView::Tiled(_) => Some(row_shards(k_nl.n_tiles(), p)),
+        };
+        let row_shards_whole = row_shards(n, p);
+        let lm_shards = row_shards(l, p);
+        let faults = self.faults.as_deref();
+        let k0 = self.seq.fetch_add(1, Ordering::SeqCst);
+        let k1 = self.seq.fetch_add(1, Ordering::SeqCst);
+
+        // --- ship work to every worker slot (tile boundaries preserved
+        // so the worker's GEMM call shapes match thread mode exactly)
+        for (s, &orig) in survivors.iter().enumerate().skip(1) {
+            let pool = pool.as_mut().expect("worker ranks imply a pool");
+            let (llo, lhi) = lm_shards[s];
+            let kll_rows = &k_ll.data()[llo * l..lhi * l];
+            let blocks: Vec<(usize, usize, Vec<f32>)> = match (k_nl, tile_shards.as_deref()) {
+                (GramView::Whole(mat), _) => {
+                    let (lo, hi) = row_shards_whole[s];
+                    vec![(lo, hi, mat.data()[lo * l..hi * l].to_vec())]
+                }
+                (GramView::Tiled(_), Some(shards)) => {
+                    let (tlo, thi) = shards[s];
+                    let mut v = Vec::with_capacity(thi - tlo);
+                    for t in tlo..thi {
+                        let (rlo, rhi) = k_nl.tile_range(t);
+                        let tile = k_nl.tile(t).map_err(|e| {
+                            TcpAttemptFailure::Hard(Error::Runtime(e.to_string()))
+                        })?;
+                        v.push((rlo, rhi, tile.mat().data().to_vec()));
+                    }
+                    v
+                }
+                _ => unreachable!("tile shards computed above"),
+            };
+            let refs: Vec<(usize, usize, &[f32])> =
+                blocks.iter().map(|&(lo, hi, ref d)| (lo, hi, d.as_slice())).collect();
+            let body = encode_work(c, l, n, lm_labels, llo, lhi, kll_rows, &refs);
+            let frame =
+                Frame { kind: K_WORK, rank: orig as u32, seq: k0, attempt: attempt_id, info: 0, body };
+            if let Err(msg) = pool.send_to(orig, &frame) {
+                return Err(TcpAttemptFailure::Failed { ranks: vec![orig], seq: k0, msg });
+            }
+        }
+
+        // --- collective 1: allreduce(sum) of g over the wire
+        self.rank0_before_collective(k0)?;
+        let (llo0, lhi0) = lm_shards[0];
+        let g0 = g_partial_from_rows(
+            &k_ll.data()[llo0 * l..lhi0 * l],
+            llo0,
+            lhi0,
+            lm_labels,
+            c,
+            inv,
+            onehot,
+        );
+        let t_ar = Instant::now();
+        let ar_deadline = t_ar + self.deadline;
+        let mut contribs: Vec<Option<Vec<f32>>> = vec![None; p];
+        contribs[0] = Some(g0);
+        for (s, &orig) in survivors.iter().enumerate().skip(1) {
+            let pool = pool.as_mut().expect("worker ranks imply a pool");
+            match pool.recv_expect(orig, K_GPART, attempt_id, ar_deadline, t_ar, faults) {
+                Ok(f) => match Cursor::new(&f.body).f32s(c) {
+                    Ok(v) => contribs[s] = Some(v),
+                    Err(m) => {
+                        pool.close_rank(orig);
+                        let msg = self.classify(orig, k0, &RecvError::Corrupt(m));
+                        return Err(TcpAttemptFailure::Failed { ranks: vec![orig], seq: k0, msg });
+                    }
+                },
+                Err(e) => {
+                    let msg = self.classify(orig, k0, &e);
+                    return Err(TcpAttemptFailure::Failed { ranks: vec![orig], seq: k0, msg });
+                }
+            }
+        }
+        // reduce in slot order — identical to comm.rs's rank-order sum,
+        // so the f32 addition schedule matches thread mode bit for bit
+        let mut g = vec![0.0f32; c];
+        for v in contribs.iter().flatten() {
+            for (a, &x) in g.iter_mut().zip(v) {
+                *a += x;
+            }
+        }
+        for &orig in survivors.iter().skip(1) {
+            let pool = pool.as_mut().expect("worker ranks imply a pool");
+            let mut body = Vec::with_capacity(c * 4);
+            put_f32s(&mut body, &g);
+            let frame =
+                Frame { kind: K_GRED, rank: 0, seq: k0, attempt: attempt_id, info: 0, body };
+            if let Err(msg) = pool.send_to(orig, &frame) {
+                return Err(TcpAttemptFailure::Failed { ranks: vec![orig], seq: k0, msg });
+            }
+        }
+        self.stats.allreduce_ops.fetch_add(1, Ordering::Relaxed);
+        self.stats.allreduce_ns.fetch_add(t_ar.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
+        // --- rank 0's local labels (same helpers as the thread nodes)
+        let g_mask = masked_g(&g, counts);
+        let scratch_rows = match (k_nl, tile_shards.as_deref()) {
+            (GramView::Whole(_), _) => {
+                let (lo, hi) = row_shards_whole[0];
+                hi - lo
+            }
+            (GramView::Tiled(_), _) => k_nl.max_tile_rows(),
+        };
+        let mut scratch = vec![0.0f32; scratch_rows * c];
+        let mut local0 = Vec::new();
+        let lo0 = match (k_nl, tile_shards.as_deref()) {
+            (GramView::Whole(mat), _) => {
+                let (lo, hi) = row_shards_whole[0];
+                labels_for_block(
+                    &mat.data()[lo * l..hi * l],
+                    hi - lo,
+                    c,
+                    ind,
+                    &g_mask,
+                    &mut scratch,
+                    &mut local0,
+                );
+                lo
+            }
+            (GramView::Tiled(_), Some(shards)) => {
+                let (tlo, thi) = shards[0];
+                if thi > tlo {
+                    for t in tlo..thi {
+                        let (rlo, rhi) = k_nl.tile_range(t);
+                        let tile = k_nl.tile(t).map_err(|e| {
+                            TcpAttemptFailure::Hard(Error::Runtime(e.to_string()))
+                        })?;
+                        labels_for_block(
+                            tile.mat().data(),
+                            rhi - rlo,
+                            c,
+                            ind,
+                            &g_mask,
+                            &mut scratch,
+                            &mut local0,
+                        );
+                    }
+                    k_nl.tile_range(tlo).0
+                } else {
+                    n
+                }
+            }
+            _ => unreachable!("tile shards computed above"),
+        };
+
+        // --- collective 2: allgather of label slices
+        self.rank0_before_collective(k1)?;
+        let t_ag = Instant::now();
+        let ag_deadline = t_ag + self.deadline;
+        let mut out = vec![0usize; n];
+        let mut covered = vec![false; n];
+        for (i, &u) in local0.iter().enumerate() {
+            out[lo0 + i] = u;
+            covered[lo0 + i] = true;
+        }
+        for &orig in survivors.iter().skip(1) {
+            let pool = pool.as_mut().expect("worker ranks imply a pool");
+            match pool.recv_expect(orig, K_LABELS, attempt_id, ag_deadline, t_ag, faults) {
+                Ok(f) => {
+                    let parse = || -> std::result::Result<(usize, Vec<usize>), String> {
+                        let mut cur = Cursor::new(&f.body);
+                        let lo = cur.u32()? as usize;
+                        let cnt = cur.u32()? as usize;
+                        if lo + cnt > n {
+                            return Err(format!("label slice [{lo}, {}) out of {n}", lo + cnt));
+                        }
+                        Ok((lo, cur.u32s(cnt)?))
+                    };
+                    match parse() {
+                        Ok((lo, slice)) => {
+                            for (i, u) in slice.into_iter().enumerate() {
+                                out[lo + i] = u;
+                                covered[lo + i] = true;
+                            }
+                        }
+                        Err(m) => {
+                            pool.close_rank(orig);
+                            let msg = self.classify(orig, k1, &RecvError::Corrupt(m));
+                            return Err(TcpAttemptFailure::Failed {
+                                ranks: vec![orig],
+                                seq: k1,
+                                msg,
+                            });
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = self.classify(orig, k1, &e);
+                    return Err(TcpAttemptFailure::Failed { ranks: vec![orig], seq: k1, msg });
+                }
+            }
+        }
+        let gaps = covered.iter().filter(|&&b| !b).count();
+        if gaps > 0 {
+            // same contract violation comm.rs raises for a short allgather
+            let ce = CollectiveError::Protocol {
+                seq: k1,
+                msg: format!("allgather left {gaps} of {n} elements uncovered"),
+            };
+            return Err(TcpAttemptFailure::Hard(Error::Node {
+                rank: 0,
+                seq: k1,
+                msg: ce.to_string(),
+            }));
+        }
+        for &orig in survivors.iter().skip(1) {
+            let pool = pool.as_mut().expect("worker ranks imply a pool");
+            let mut body = Vec::with_capacity(8 + out.len() * 4);
+            put_u32(&mut body, 0);
+            put_u32(&mut body, out.len() as u32);
+            put_u32s(&mut body, &out);
+            let frame =
+                Frame { kind: K_DONE, rank: 0, seq: k1, attempt: attempt_id, info: 0, body };
+            if let Err(msg) = pool.send_to(orig, &frame) {
+                return Err(TcpAttemptFailure::Failed { ranks: vec![orig], seq: k1, msg });
+            }
+        }
+        self.stats.allgather_ops.fetch_add(1, Ordering::Relaxed);
+        self.stats.allgather_ns.fetch_add(t_ag.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok((out, g))
+    }
+}
+
+impl StepBackend for TcpShardedBackend {
+    fn iterate(
+        &self,
+        k_nl: &GramView<'_>,
+        k_ll: &Mat,
+        lm_labels: &[usize],
+        c: usize,
+    ) -> Result<(Vec<usize>, ClusterStats)> {
+        let n = k_nl.rows();
+        let l = lm_labels.len();
+        assert_eq!(k_nl.cols(), l, "K_nl columns must match landmark count");
+        assert_eq!(k_ll.cols(), l, "K_ll must be L x L");
+        assert!(n < u32::MAX as usize, "row count exceeds the wire format");
+        let p_eff = self.nodes.min(n.max(1));
+        let (counts, inv) = landmark_stats(lm_labels, c);
+        let ind = Indicator::scaled(lm_labels, &inv);
+        let onehot = Indicator::onehot(lm_labels, c);
+
+        let mut guard = unpoison(self.pool.lock());
+        if guard.is_none() && self.nodes > 1 {
+            *guard = Some(WorkerPool::spawn(
+                self.nodes,
+                &self.plan(),
+                self.worker_bin.as_ref(),
+                self.stats.clone(),
+                self.faults.as_deref(),
+            )?);
+        }
+
+        // recovery loop: a failed rank first gets a bounded reconnect
+        // window (retry on the SAME survivor set), then is dropped and
+        // the panel re-shards over the remainder — exactly the thread
+        // backend's loop with reconnection layered in front
+        let mut survivors: Vec<usize> = std::iter::once(0)
+            .chain(
+                guard
+                    .as_ref()
+                    .map(|pool| pool.alive_ranks())
+                    .unwrap_or_default()
+                    .into_iter()
+                    .filter(|&r| r < p_eff),
+            )
+            .collect();
+        let mut resharded = false;
+        let mut retried = false;
+        let mut recovery_timer: Option<Instant> = None;
+        let mut last_failure = String::new();
+        let mut last_seq = 0u64;
+        let max_attempts = p_eff * (RECONNECT_BUDGET as usize + 1) + 1;
+        for _ in 0..max_attempts {
+            let attempt_id = self.attempts.fetch_add(1, Ordering::SeqCst);
+            match self.attempt(
+                &mut guard, attempt_id, &survivors, k_nl, k_ll, lm_labels, c, &counts, &inv,
+                &ind, &onehot,
+            ) {
+                Ok((labels, g)) => {
+                    if resharded || retried {
+                        if let Some(f) = &self.faults {
+                            f.note_recovered();
+                            if let Some(t0) = recovery_timer {
+                                f.note_recovery_time(t0.elapsed());
+                            }
+                        }
+                    }
+                    let stats = ClusterStats { counts, inv, g };
+                    return Ok((labels, stats));
+                }
+                Err(TcpAttemptFailure::Hard(e)) => return Err(e),
+                Err(TcpAttemptFailure::Failed { ranks, seq, msg }) => {
+                    if let Some(f) = &self.faults {
+                        f.note_detected();
+                    }
+                    if recovery_timer.is_none() {
+                        recovery_timer = Some(Instant::now());
+                    }
+                    last_failure = msg;
+                    last_seq = seq;
+                    let pool = guard.as_mut().expect("worker failures imply a pool");
+                    let mut lost = Vec::new();
+                    for &r in &ranks {
+                        if pool.try_reconnect(r, self.faults.as_deref()) {
+                            retried = true;
+                        } else {
+                            lost.push(r);
+                        }
+                    }
+                    if lost.is_empty() {
+                        self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        for &r in &lost {
+                            pool.mark_dead(r);
+                            if let Some(f) = &self.faults {
+                                f.infer_killed(r);
+                            }
+                        }
+                        survivors.retain(|r| !lost.contains(r));
+                        if let Some(f) = &self.faults {
+                            f.note_reshard();
+                        }
+                        resharded = true;
+                    }
+                }
+            }
+        }
+        Err(Error::Node {
+            rank: 0,
+            seq: last_seq,
+            msg: format!("tcp sharded recovery did not converge: {last_failure}"),
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded-tcp"
+    }
+}
+
+// --- worker process (dkkm worker) -----------------------------------------
+
+/// Options for [`run_worker`], parsed from the `dkkm worker` CLI flags.
+pub struct WorkerOptions {
+    /// Coordinator rendezvous address (`--connect host:port`).
+    pub connect: String,
+    /// This worker's original rank (`--rank`, 1-based; 0 is the
+    /// coordinator).
+    pub rank: usize,
+    /// Expected config fingerprint (`--fingerprint`); the coordinator
+    /// rejects mismatches at handshake.
+    pub fingerprint: String,
+    /// Fault plan forwarded by the coordinator (`--fault`).
+    pub plan: FaultPlan,
+}
+
+fn injected_count(faults: &FaultSession) -> u64 {
+    faults.report().injected as u64
+}
+
+enum WorkerEvent {
+    Frame(Frame),
+    Shutdown,
+    ConnLost,
+}
+
+enum ServeOutcome {
+    Done,
+    /// A newer `Work` frame preempted this attempt (recovery re-shard).
+    Preempted(Frame),
+    Shutdown,
+    ConnLost,
+}
+
+/// Receive the next frame, emitting heartbeats while idle. Any socket
+/// error (including a read timeout — the stream may be desynchronized
+/// mid-frame) maps to `ConnLost`; the caller redials.
+fn recv_or_heartbeat(
+    conn: &mut FramedConn,
+    rank: usize,
+    seq: u64,
+    faults: &FaultSession,
+) -> WorkerEvent {
+    loop {
+        match conn.recv(HEARTBEAT_EVERY) {
+            Ok((f, _)) => {
+                if f.kind == K_SHUTDOWN {
+                    return WorkerEvent::Shutdown;
+                }
+                return WorkerEvent::Frame(f);
+            }
+            Err(RecvError::TimedOut { .. }) => {
+                let hb = Frame::control(K_HEARTBEAT, rank as u32, seq, injected_count(faults));
+                if conn.send(&hb).is_err() {
+                    conn.close();
+                    return WorkerEvent::ConnLost;
+                }
+            }
+            Err(_) => {
+                conn.close();
+                return WorkerEvent::ConnLost;
+            }
+        }
+    }
+}
+
+/// Send `frame`, first consuming any wire fault armed for (`rank`,
+/// `k`): `drop` resets the connection instead of sending, `stall`
+/// half-writes then sleeps, `garble` flips a payload byte while keeping
+/// the stale checksum. Returns false when the connection is lost.
+fn send_with_wire_fault(
+    conn: &mut FramedConn,
+    frame: &Frame,
+    rank: usize,
+    k: u64,
+    faults: &FaultSession,
+) -> bool {
+    let sent = match faults.take_wire_fault(rank, k) {
+        Some(WireFault::Drop) => {
+            conn.close();
+            return false;
+        }
+        Some(WireFault::Stall { ms }) => conn.send_stalled(frame, ms).map(|_| ()),
+        Some(WireFault::Garble) => conn.send_garbled(frame).map(|_| ()),
+        None => conn.send(frame).map(|_| ()),
+    };
+    if sent.is_err() {
+        conn.close();
+        return false;
+    }
+    true
+}
+
+enum WaitResult {
+    Got(Frame),
+    /// A newer `Work` frame preempted this attempt.
+    Preempted(Frame),
+    Shutdown,
+    ConnLost,
+}
+
+/// Wait for `want` at `attempt`, heartbeating while idle. Newer `Work`
+/// frames preempt (the coordinator re-sharded); stale frames are
+/// skipped.
+fn await_reply(
+    conn: &mut FramedConn,
+    want: u8,
+    attempt: u64,
+    rank: usize,
+    seq: u64,
+    faults: &FaultSession,
+) -> WaitResult {
+    loop {
+        match conn.recv(HEARTBEAT_EVERY) {
+            Ok((f, _)) => {
+                if f.kind == K_SHUTDOWN {
+                    return WaitResult::Shutdown;
+                }
+                if f.kind == K_WORK && f.attempt > attempt {
+                    return WaitResult::Preempted(f);
+                }
+                if f.kind == want && f.attempt == attempt {
+                    return WaitResult::Got(f);
+                }
+            }
+            Err(RecvError::TimedOut { .. }) => {
+                let hb = Frame::control(K_HEARTBEAT, rank as u32, seq, injected_count(faults));
+                if conn.send(&hb).is_err() {
+                    conn.close();
+                    return WaitResult::ConnLost;
+                }
+            }
+            Err(_) => {
+                conn.close();
+                return WaitResult::ConnLost;
+            }
+        }
+    }
+}
+
+/// Execute one `Work` frame: compute the g partial, participate in both
+/// wire collectives, and apply any armed fault hooks at the exact
+/// (rank, seq) the plan names. An injected `kill` panics here and takes
+/// the process down — the coordinator observes the connection reset.
+fn serve_work(
+    conn: &mut FramedConn,
+    work: Frame,
+    rank: usize,
+    seq: &mut u64,
+    faults: &FaultSession,
+) -> ServeOutcome {
+    let attempt = work.attempt;
+    let wu = match decode_work(&work.body) {
+        Ok(wu) => wu,
+        Err(_) => {
+            // a corrupt Work frame means the stream cannot be trusted
+            conn.close();
+            return ServeOutcome::ConnLost;
+        }
+    };
+    let c = wu.c;
+    let (counts, inv) = landmark_stats(&wu.lm_labels, c);
+    let ind = Indicator::scaled(&wu.lm_labels, &inv);
+    let onehot = Indicator::onehot(&wu.lm_labels, c);
+
+    // collective 1: contribute the landmark-shard g partial
+    let g_partial =
+        g_partial_from_rows(&wu.kll_rows, wu.llo, wu.lhi, &wu.lm_labels, c, &inv, &onehot);
+    let k0 = *seq;
+    *seq += 1;
+    faults.before_collective(rank, k0); // kill panics, delay sleeps
+    let mut body = Vec::with_capacity(c * 4);
+    put_f32s(&mut body, &g_partial);
+    let gpart = Frame {
+        kind: K_GPART,
+        rank: rank as u32,
+        seq: k0,
+        attempt,
+        info: injected_count(faults),
+        body,
+    };
+    if !send_with_wire_fault(conn, &gpart, rank, k0, faults) {
+        return ServeOutcome::ConnLost;
+    }
+    let g = match await_reply(conn, K_GRED, attempt, rank, k0, faults) {
+        WaitResult::Got(f) => match Cursor::new(&f.body).f32s(c) {
+            Ok(g) => g,
+            Err(_) => {
+                conn.close();
+                return ServeOutcome::ConnLost;
+            }
+        },
+        WaitResult::Preempted(f) => return ServeOutcome::Preempted(f),
+        WaitResult::Shutdown => return ServeOutcome::Shutdown,
+        WaitResult::ConnLost => return ServeOutcome::ConnLost,
+    };
+
+    // local labels over this worker's row blocks
+    let g_mask = masked_g(&g, &counts);
+    let max_rows = wu.blocks.iter().map(|b| b.1 - b.0).max().unwrap_or(0);
+    let mut scratch = vec![0.0f32; max_rows * c];
+    let mut labels = Vec::new();
+    for (lo, hi, rows) in &wu.blocks {
+        labels_for_block(rows, hi - lo, c, &ind, &g_mask, &mut scratch, &mut labels);
+    }
+    let lo = wu.blocks.first().map(|b| b.0).unwrap_or(wu.n);
+
+    // collective 2: send the label slice, wait for the gathered result
+    let k1 = *seq;
+    *seq += 1;
+    faults.before_collective(rank, k1);
+    let mut body = Vec::with_capacity(8 + labels.len() * 4);
+    put_u32(&mut body, lo as u32);
+    put_u32(&mut body, labels.len() as u32);
+    put_u32s(&mut body, &labels);
+    let lab = Frame {
+        kind: K_LABELS,
+        rank: rank as u32,
+        seq: k1,
+        attempt,
+        info: injected_count(faults),
+        body,
+    };
+    if !send_with_wire_fault(conn, &lab, rank, k1, faults) {
+        return ServeOutcome::ConnLost;
+    }
+    match await_reply(conn, K_DONE, attempt, rank, k1, faults) {
+        WaitResult::Got(_) => ServeOutcome::Done,
+        WaitResult::Preempted(f) => ServeOutcome::Preempted(f),
+        WaitResult::Shutdown => ServeOutcome::Shutdown,
+        WaitResult::ConnLost => ServeOutcome::ConnLost,
+    }
+}
+
+/// Entry point for the `dkkm worker` subcommand: dial the coordinator,
+/// serve `Work` frames until a `Shutdown` frame arrives (drain and
+/// return `Ok` — exit code 0), redialing with bounded backoff when the
+/// connection is lost. The collective counter is monotonic for the
+/// lifetime of the process, which is what makes `drop:1@2`-style specs
+/// addressable on the wire.
+pub fn run_worker(opts: WorkerOptions) -> Result<()> {
+    let faults = FaultSession::new(opts.plan);
+    let mut seq: u64 = 0;
+    let mut conn = connect_with_backoff(
+        &opts.connect,
+        opts.rank as u32,
+        seq,
+        &opts.fingerprint,
+        injected_count(&faults),
+    )?;
+    let mut pending: Option<Frame> = None;
+    loop {
+        let frame = match pending.take() {
+            Some(f) => f,
+            None => match recv_or_heartbeat(&mut conn, opts.rank, seq, &faults) {
+                WorkerEvent::Frame(f) => f,
+                WorkerEvent::Shutdown => return Ok(()),
+                WorkerEvent::ConnLost => {
+                    conn = connect_with_backoff(
+                        &opts.connect,
+                        opts.rank as u32,
+                        seq,
+                        &opts.fingerprint,
+                        injected_count(&faults),
+                    )?;
+                    continue;
+                }
+            },
+        };
+        if frame.kind != K_WORK {
+            continue; // stale reply from an abandoned attempt
+        }
+        match serve_work(&mut conn, frame, opts.rank, &mut seq, &faults) {
+            ServeOutcome::Done => {}
+            ServeOutcome::Preempted(f) => pending = Some(f),
+            ServeOutcome::Shutdown => return Ok(()),
+            ServeOutcome::ConnLost => {
+                conn = connect_with_backoff(
+                    &opts.connect,
+                    opts.rank as u32,
+                    seq,
+                    &opts.fingerprint,
+                    injected_count(&faults),
+                )?;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Raw localhost stream pair (server side first).
+    fn raw_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dial = std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (server, _) = listener.accept().unwrap();
+        (server, dial.join().unwrap())
+    }
+
+    fn framed_pair() -> (FramedConn, FramedConn) {
+        let (s, c) = raw_pair();
+        (FramedConn::new(s).unwrap(), FramedConn::new(c).unwrap())
+    }
+
+    fn sample_frame() -> Frame {
+        Frame {
+            kind: K_GPART,
+            rank: 2,
+            seq: 7,
+            attempt: 3,
+            info: 1,
+            body: vec![1, 2, 3, 4, 5],
+        }
+    }
+
+    #[test]
+    fn frame_round_trips_over_a_socket() {
+        let (mut server, mut client) = framed_pair();
+        let f = sample_frame();
+        let sent = client.send(&f).unwrap();
+        let (got, recvd) = server.recv(Duration::from_secs(5)).unwrap();
+        assert_eq!(got, f);
+        assert_eq!(sent, recvd);
+        assert_eq!(sent, 4 + HEADER_LEN + f.body.len());
+    }
+
+    #[test]
+    fn empty_body_frame_round_trips() {
+        let (mut server, mut client) = framed_pair();
+        let f = Frame::control(K_HEARTBEAT, 1, 9, 4);
+        client.send(&f).unwrap();
+        let (got, _) = server.recv(Duration::from_secs(5)).unwrap();
+        assert_eq!(got, f);
+    }
+
+    #[test]
+    fn truncated_frame_is_a_closed_error_not_a_hang() {
+        let (server, mut client) = raw_pair();
+        let mut server = FramedConn::new(server).unwrap();
+        // length prefix promises 100 bytes; deliver 10 and hang up
+        let mut bytes = Vec::new();
+        put_u32(&mut bytes, 100);
+        bytes.extend_from_slice(&[0u8; 10]);
+        client.write_all(&bytes).unwrap();
+        drop(client);
+        let t0 = Instant::now();
+        match server.recv(Duration::from_secs(5)) {
+            Err(RecvError::Closed(m)) => assert!(m.contains("truncated"), "{m}"),
+            other => panic!("expected Closed(truncated), got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_a_corrupt_error() {
+        let (server, mut client) = raw_pair();
+        let mut server = FramedConn::new(server).unwrap();
+        client.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        match server.recv(Duration::from_secs(5)) {
+            Err(RecvError::Corrupt(m)) => assert!(m.contains("oversized length prefix"), "{m}"),
+            other => panic!("expected Corrupt(oversized), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn short_frame_is_a_corrupt_error() {
+        let (server, mut client) = raw_pair();
+        let mut server = FramedConn::new(server).unwrap();
+        let mut bytes = Vec::new();
+        put_u32(&mut bytes, 4); // below HEADER_LEN
+        bytes.extend_from_slice(&[0u8; 4]);
+        client.write_all(&bytes).unwrap();
+        match server.recv(Duration::from_secs(5)) {
+            Err(RecvError::Corrupt(m)) => assert!(m.contains("short frame"), "{m}"),
+            other => panic!("expected Corrupt(short frame), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbled_payload_fails_the_checksum() {
+        let (mut server, mut client) = framed_pair();
+        client.send_garbled(&sample_frame()).unwrap();
+        match server.recv(Duration::from_secs(5)) {
+            Err(RecvError::Corrupt(m)) => {
+                // the error names the frame's rank and seq for reports
+                assert!(m.contains("checksum mismatch"), "{m}");
+                assert!(m.contains("rank 2"), "{m}");
+                assert!(m.contains("seq 7"), "{m}");
+            }
+            other => panic!("expected Corrupt(checksum), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbled_empty_body_frame_also_fails_the_checksum() {
+        let (mut server, mut client) = framed_pair();
+        client.send_garbled(&Frame::control(K_HEARTBEAT, 1, 3, 0)).unwrap();
+        assert!(matches!(
+            server.recv(Duration::from_secs(5)),
+            Err(RecvError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn stalled_send_still_arrives_intact() {
+        let (mut server, mut client) = framed_pair();
+        let f = sample_frame();
+        let writer = std::thread::spawn(move || {
+            client.send_stalled(&f, 60).unwrap();
+            client
+        });
+        let (got, _) = server.recv(Duration::from_secs(5)).unwrap();
+        assert_eq!(got, sample_frame());
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn recv_deadline_never_hangs() {
+        let (mut server, _client) = framed_pair();
+        let t0 = Instant::now();
+        match server.recv(Duration::from_millis(120)) {
+            Err(RecvError::TimedOut { waited_ms }) => assert!(waited_ms >= 100),
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        assert!(t0.elapsed() < Duration::from_secs(3), "recv must respect the deadline");
+    }
+
+    #[test]
+    fn handshake_welcomes_a_matching_fingerprint() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let dial = std::thread::spawn(move || connect_with_backoff(&addr, 2, 0, "fp-ok", 4));
+        let got = accept_one_hello(&listener, "fp-ok", Duration::from_secs(10)).unwrap();
+        let (rank, _conn, info) = got.expect("worker should arrive within the window");
+        assert_eq!(rank, 2);
+        assert_eq!(info, 4, "hello carries the worker's injected count");
+        dial.join().unwrap().expect("client side should be welcomed");
+    }
+
+    #[test]
+    fn handshake_fingerprint_mismatch_is_a_structured_error_on_both_sides() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let dial = std::thread::spawn(move || connect_with_backoff(&addr, 3, 7, "fp-bad", 0));
+        let err = accept_one_hello(&listener, "fp-good", Duration::from_secs(10))
+            .expect_err("mismatch must be an error");
+        match &err {
+            Error::Node { rank, seq, msg } => {
+                assert_eq!(*rank, 3);
+                assert_eq!(*seq, 7);
+                assert!(msg.contains("fingerprint mismatch"), "{msg}");
+                assert!(msg.contains("'fp-bad'") && msg.contains("'fp-good'"), "{msg}");
+            }
+            other => panic!("expected Error::Node, got {other:?}"),
+        }
+        let client_err = dial.join().unwrap().expect_err("client must see the Reject");
+        match &client_err {
+            Error::Node { rank, msg, .. } => {
+                assert_eq!(*rank, 3);
+                assert!(msg.contains("rejected"), "{msg}");
+            }
+            other => panic!("expected Error::Node on the client, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn accept_returns_none_when_nobody_dials() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let t0 = Instant::now();
+        let got = accept_one_hello(&listener, "fp", Duration::from_millis(80)).unwrap();
+        assert!(got.is_none());
+        assert!(t0.elapsed() < Duration::from_secs(3));
+    }
+
+    #[test]
+    fn connect_retries_after_a_dropped_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // drop the first dial without a handshake — the worker
+            // must back off and redial
+            let (first, _) = listener.accept().unwrap();
+            drop(first);
+            let (second, _) = listener.accept().unwrap();
+            let mut conn = FramedConn::new(second).unwrap();
+            let (hello, _) = conn.recv(Duration::from_secs(10)).unwrap();
+            assert_eq!(hello.kind, K_HELLO);
+            conn.send(&Frame::control(K_WELCOME, 0, hello.seq, 0)).unwrap();
+        });
+        let conn = connect_with_backoff(&addr, 1, 0, "fp", 0);
+        assert!(conn.is_ok(), "second dial must succeed: {:?}", conn.err());
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn work_unit_round_trips_with_multiple_blocks() {
+        let lm_labels = vec![0usize, 1, 2, 0];
+        let kll_rows: Vec<f32> = (0..8).map(|i| i as f32 * 0.5).collect();
+        let b0: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let b1: Vec<f32> = (0..4).map(|i| 10.0 + i as f32).collect();
+        let blocks = [(2usize, 4usize, b0.as_slice()), (4, 5, b1.as_slice())];
+        let body = encode_work(3, 4, 6, &lm_labels, 1, 3, &kll_rows, &blocks);
+        let wu = decode_work(&body).unwrap();
+        assert_eq!(wu.c, 3);
+        assert_eq!(wu.n, 6);
+        assert_eq!(wu.lm_labels, lm_labels);
+        assert_eq!((wu.llo, wu.lhi), (1, 3));
+        assert_eq!(wu.kll_rows, kll_rows);
+        assert_eq!(wu.blocks.len(), 2);
+        assert_eq!(wu.blocks[0], (2, 4, b0));
+        assert_eq!(wu.blocks[1], (4, 5, b1));
+    }
+
+    #[test]
+    fn decode_work_rejects_inconsistent_shards() {
+        let body = encode_work(2, 2, 4, &[0, 1], 0, 2, &[0.0; 4], &[(0, 4, &[0.0; 8])]);
+        assert!(decode_work(&body).is_ok());
+        assert!(decode_work(&body[..body.len() - 4]).is_err(), "truncated body");
+        let mut bad = body.clone();
+        bad[4] = 0xff; // landmark count explodes past the payload
+        assert!(decode_work(&bad).is_err());
+    }
+
+    #[test]
+    fn transport_mode_parses_known_names() {
+        assert_eq!(TransportMode::parse("").unwrap(), TransportMode::InProcess);
+        assert_eq!(TransportMode::parse("threads").unwrap(), TransportMode::InProcess);
+        assert_eq!(TransportMode::parse("tcp").unwrap(), TransportMode::Tcp);
+        let err = TransportMode::parse("carrier-pigeon").unwrap_err();
+        assert!(err.to_string().contains("transport"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_nodes_and_plan() {
+        let none = FaultPlan::default();
+        let drop1: FaultPlan = "drop:1@2".parse().unwrap();
+        let a = config_fingerprint(4, &none);
+        assert_eq!(a, config_fingerprint(4, &none), "deterministic");
+        assert_ne!(a, config_fingerprint(8, &none), "node count matters");
+        assert_ne!(a, config_fingerprint(4, &drop1), "fault plan matters");
+    }
+
+    #[test]
+    fn transport_stats_bucket_per_frame_class() {
+        let stats = TransportStats::default();
+        stats.on_sent(100, FrameClass::Work);
+        stats.on_sent(50, FrameClass::Allreduce);
+        stats.on_recv(30, FrameClass::Allgather);
+        stats.on_recv(7, FrameClass::Control);
+        let r = stats.report();
+        assert_eq!(r.bytes_sent, 150);
+        assert_eq!(r.bytes_recv, 37);
+        assert_eq!(r.msgs_sent, 2);
+        assert_eq!(r.msgs_recv, 2);
+        assert_eq!(r.work_bytes, 100);
+        assert_eq!(r.allreduce_bytes, 50);
+        assert_eq!(r.allgather_bytes, 30);
+        assert_eq!(r.control_bytes, 7);
+    }
+}

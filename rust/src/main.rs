@@ -9,6 +9,7 @@
 //!   md        MD trajectory clustering + Fig.7 medoid RMSD matrix
 //!   snapshot  fit, persist a servable model, verify the reload
 //!   serve     serve assignments from a snapshot through the serve loop
+//!   worker    TCP worker process for `sharded:<p>` (DKKM_TRANSPORT=tcp)
 //!   info      artifact manifest summary
 //!
 //! Every clustering command goes through the `Experiment` builder:
@@ -20,7 +21,7 @@ use dkkm::coordinator::{
     b_min, build_dataset, build_sparse_rcv1, footprint_bytes, gamma_for, paper_b_min,
     run_lloyd_baseline, shared_pjrt, DatasetSpec, Experiment, RcvStorage, RunConfig, Session,
 };
-use dkkm::distributed::{NetModel, ScalingSimulator, Topology};
+use dkkm::distributed::{run_worker, FaultPlan, NetModel, ScalingSimulator, Topology, WorkerOptions};
 use dkkm::kernels::VecGram;
 use dkkm::metrics::{accuracy, nmi};
 use dkkm::serve::{RowBlock, ServeLoop, ServeOptions, SnapshotReader};
@@ -59,6 +60,7 @@ Commands:
   md        MD clustering + Fig.7 medoid RMSD matrix
   snapshot  fit + persist a servable model snapshot (verified reload)
   serve     serve assignments from a snapshot (micro-batched loop)
+  worker    TCP collective worker (spawned by `run` under DKKM_TRANSPORT=tcp)
   info      artifact manifest summary
 ";
 
@@ -77,6 +79,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "md" => cmd_md(rest),
         "snapshot" => cmd_snapshot(rest),
         "serve" => cmd_serve(rest),
+        "worker" => cmd_worker(rest),
         "info" => cmd_info(rest),
         "--help" | "-h" | "help" => {
             println!("{USAGE}");
@@ -112,7 +115,8 @@ fn parse_run_experiment(rest: &[String]) -> Result<(Experiment, bool)> {
         .opt("sigma-factor", "4.0", "sigma = factor * d_max (paper: 4)")
         .opt("memory-budget-mb", "0", "resident K_nl MiB for the tile pipeline (0 = whole panels)")
         .opt("checkpoint-dir", "", "write per-epoch checkpoints here")
-        .opt("fault", "", "fault-injection spec (kill:r@k; delay:r@k:ms; spill:n; interrupt:e; deadline:ms)")
+        .opt("fault", "", "fault-injection spec (kill:r@k; delay:r@k:ms; drop:r@k; stall:r@k:ms; garble:r@k; spill:n; interrupt:e; deadline:ms)")
+        .opt("transport", "", "sharded collectives: threads | tcp (DKKM_TRANSPORT overrides)")
         .flag("resume", "resume from checkpoint files (needs --checkpoint-dir)")
         .flag("track-cost", "record Fig.4 cost observables")
         .flag("offload", "Fig.3 producer-consumer pipeline")
@@ -144,6 +148,9 @@ fn parse_run_experiment(rest: &[String]) -> Result<(Experiment, bool)> {
     if !p.str("fault").is_empty() {
         exp = exp.fault(p.str("fault"));
     }
+    if !p.str("transport").is_empty() {
+        exp = exp.transport(p.str("transport"));
+    }
     if p.get_bool("resume") {
         exp = exp.resume(true);
     }
@@ -164,6 +171,7 @@ fn apply_run_flags(mut exp: Experiment, rest: &[String]) -> Result<(Experiment, 
         .opt("memory-budget-mb", "", "override tile-pipeline budget (MiB)")
         .opt("checkpoint-dir", "", "override checkpoint directory")
         .opt("fault", "", "override fault-injection spec")
+        .opt("transport", "", "override sharded collectives: threads | tcp")
         .flag("resume", "resume from checkpoint files")
         .flag("offload", "enable offload")
         .flag("json", "emit machine-readable report")
@@ -207,6 +215,9 @@ fn apply_run_flags(mut exp: Experiment, rest: &[String]) -> Result<(Experiment, 
     }
     if !p.str("fault").is_empty() {
         exp = exp.fault(p.str("fault"));
+    }
+    if !p.str("transport").is_empty() {
+        exp = exp.transport(p.str("transport"));
     }
     if p.get_bool("resume") {
         exp = exp.resume(true);
@@ -264,6 +275,19 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         if let Some(e) = f.resumed_from_epoch {
             println!("  resumed from epoch {e} ({} checkpoints written)", f.checkpoints_written);
         }
+    }
+    if let Some(t) = &report.transport {
+        println!(
+            "transport       : tcp, {} workers, {:.1} KiB sent / {:.1} KiB recv \
+             ({} allreduce + {} allgather ops, {} reconnects, {} retries)",
+            t.workers,
+            t.bytes_sent as f64 / 1024.0,
+            t.bytes_recv as f64 / 1024.0,
+            t.allreduce_ops,
+            t.allgather_ops,
+            t.reconnects,
+            t.retries
+        );
     }
     if report.pipeline.budget_bytes.is_some() {
         let p = &report.pipeline;
@@ -345,7 +369,7 @@ fn cmd_scaling(rest: &[String]) -> Result<()> {
         .opt("n", "60000", "dataset size N (MNIST-like)")
         .opt("c", "10", "clusters")
         .opt("iters", "20", "inner iterations")
-        .opt("topology", "bgq", "bgq | infiniband")
+        .opt("topology", "bgq", "bgq | infiniband | measured (BENCH_net.json / DKKM_NET_JSON)")
         .opt("nodes", "16,32,64,128,256,512,1024", "node counts")
         .opt("probe", "1024", "calibration probe edge")
         .opt("seed", "42", "rng seed")
@@ -656,6 +680,29 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         snap.busy_s
     );
     Ok(())
+}
+
+fn cmd_worker(rest: &[String]) -> Result<()> {
+    let p = Cli::new(
+        "dkkm worker — TCP collective worker (normally spawned by the coordinator, \
+         not by hand)",
+    )
+    .req("connect", "coordinator rendezvous address (host:port)")
+    .req("rank", "this worker's original rank (1-based)")
+    .opt("fingerprint", "", "expected config fingerprint (handshake check)")
+    .opt("fault", "", "fault plan forwarded by the coordinator")
+    .parse(rest)?;
+    let plan = if p.str("fault").is_empty() {
+        FaultPlan::default()
+    } else {
+        FaultPlan::parse(p.str("fault"))?
+    };
+    run_worker(WorkerOptions {
+        connect: p.str("connect").to_string(),
+        rank: p.get("rank")?,
+        fingerprint: p.str("fingerprint").to_string(),
+        plan,
+    })
 }
 
 fn cmd_info(rest: &[String]) -> Result<()> {

@@ -1,0 +1,293 @@
+//! Multi-process transport equivalence suite: `sharded:<p>` over real
+//! TCP sockets must be bit-identical to the in-process and serial
+//! references — on clean runs, and after recovering from every wire
+//! fault class (dropped connection, stalled frame past the deadline,
+//! garbled payload, node death). Each test spawns real `dkkm worker`
+//! OS processes via `CARGO_BIN_EXE_dkkm` and must also leave no
+//! zombies behind.
+//!
+//! Every transport primitive has its own deadline (connect backoff,
+//! recv, spawn window), so no failure mode here can hang the suite —
+//! CI additionally wraps the whole binary in a hard `timeout`.
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dkkm::cluster::minibatch::{MiniBatchConfig, MiniBatchKernelKMeans, NativeBackend};
+use dkkm::coordinator::{DatasetSpec, Experiment};
+use dkkm::distributed::{FaultPlan, FaultSession, ShardedBackend, TcpShardedBackend};
+use dkkm::kernels::{KernelFn, VecGram};
+use dkkm::util::error::Error;
+use dkkm::util::rng::Rng;
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_dkkm"))
+}
+
+/// Point the engine registry's worker spawns at the real `dkkm` binary
+/// (`current_exe()` inside a test harness is the test binary, which has
+/// no `worker` subcommand). Always the same value, so concurrent tests
+/// racing on the env var are harmless.
+fn set_worker_bin() {
+    std::env::set_var("DKKM_WORKER_BIN", env!("CARGO_BIN_EXE_dkkm"));
+}
+
+fn tcp(p: usize) -> TcpShardedBackend {
+    TcpShardedBackend::new(p).with_worker_bin(worker_bin())
+}
+
+fn toy_source(seed: u64, per_cluster: usize) -> VecGram {
+    let mut rng = Rng::new(seed);
+    let d = dkkm::data::toy2d(&mut rng, per_cluster);
+    VecGram::new(d.x, KernelFn::Rbf { gamma: 20.0 }, 2)
+}
+
+fn session(spec: &str) -> Arc<FaultSession> {
+    Arc::new(FaultSession::new(FaultPlan::parse(spec).unwrap()))
+}
+
+#[test]
+fn tcp_matches_serial_and_inprocess_references() {
+    let g = toy_source(0, 60); // n = 240
+    let cfg = MiniBatchConfig::new(4, 2);
+    let reference = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
+    for p in [2usize, 3, 4] {
+        let threads = ShardedBackend::new(p);
+        let base = MiniBatchKernelKMeans::new(cfg.clone(), &threads).run(&g).unwrap();
+        assert_eq!(reference.labels, base.labels, "in-process diverged at p={p}");
+
+        let backend = tcp(p);
+        let run = MiniBatchKernelKMeans::new(cfg.clone(), &backend).run(&g).unwrap();
+        assert_eq!(reference.labels, run.labels, "tcp labels diverge at p={p}");
+        assert_eq!(reference.medoids, run.medoids, "tcp medoids diverge at p={p}");
+        assert_eq!(reference.counts, run.counts, "tcp counts diverge at p={p}");
+        let rep = backend.report();
+        backend.shutdown();
+        assert_eq!(rep.workers, p - 1, "p={p}: {rep:?}");
+        assert!(rep.allreduce_ops > 0 && rep.allgather_ops > 0, "p={p}: {rep:?}");
+        assert!(rep.bytes_sent > 0 && rep.bytes_recv > 0, "p={p}: {rep:?}");
+        assert_eq!(rep.protocol_errors, 0, "clean run, p={p}: {rep:?}");
+        assert_eq!(rep.reconnects, 0, "clean run, p={p}: {rep:?}");
+    }
+}
+
+#[test]
+fn wire_faults_recover_bit_identically() {
+    let g = toy_source(1, 60);
+    let cfg = MiniBatchConfig::new(4, 2);
+    let reference = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
+    // (spec, expects_reconnect, expects_protocol_error)
+    let cases = [
+        ("drop:1@2", true, false),
+        ("stall:1@2:2000; deadline:500", true, false),
+        ("garble:1@3", true, true),
+    ];
+    for (spec, wants_reconnect, wants_protocol) in cases {
+        let faults = session(spec);
+        let backend = tcp(3).with_faults(faults.clone());
+        let run = MiniBatchKernelKMeans::new(cfg.clone(), &backend).run(&g).unwrap();
+        assert_eq!(reference.labels, run.labels, "'{spec}' diverged");
+        assert_eq!(reference.medoids, run.medoids, "'{spec}' diverged");
+        let wire = backend.report();
+        backend.shutdown();
+        let rep = faults.report();
+        assert!(rep.injected >= 1, "'{spec}' never fired: {rep:?}");
+        assert!(rep.detected >= 1, "'{spec}' undetected: {rep:?}");
+        assert!(rep.recovered >= 1, "'{spec}' unrecovered: {rep:?}");
+        if wants_reconnect {
+            assert!(wire.reconnects >= 1, "'{spec}': {wire:?}");
+        }
+        if wants_protocol {
+            assert!(wire.protocol_errors >= 1, "'{spec}': {wire:?}");
+        }
+    }
+}
+
+#[test]
+fn node_death_over_tcp_reshards_onto_survivors() {
+    let g = toy_source(2, 60);
+    let cfg = MiniBatchConfig::new(4, 2);
+    let reference = MiniBatchKernelKMeans::new(cfg.clone(), &NativeBackend).run(&g).unwrap();
+    let faults = session("kill:1@0");
+    let backend = tcp(3).with_faults(faults.clone());
+    let run = MiniBatchKernelKMeans::new(cfg.clone(), &backend).run(&g).unwrap();
+    assert_eq!(reference.labels, run.labels);
+    assert_eq!(reference.medoids, run.medoids);
+    backend.shutdown();
+    let rep = faults.report();
+    assert_eq!(rep.injected, 1, "{rep:?}");
+    assert!(rep.detected >= 1, "{rep:?}");
+    assert!(rep.recovered >= 1, "{rep:?}");
+    assert!(rep.reshard_events >= 1, "{rep:?}");
+}
+
+#[test]
+fn experiment_level_tcp_fit_reports_transport() {
+    set_worker_bin();
+    let exp = || {
+        Experiment::on(DatasetSpec::Toy2d { per_cluster: 100 })
+            .clusters(4)
+            .batches(2)
+            .sigma_factor(0.1)
+    };
+    let native = exp().build().unwrap().fit().unwrap();
+    assert!(native.transport.is_none(), "in-process run claims a wire: {:?}", native.transport);
+    assert!(native.to_json().get("transport").unwrap().as_f64().is_none());
+
+    let report = exp().backend("sharded:3").transport("tcp").build().unwrap().fit().unwrap();
+    assert_eq!(native.result.labels, report.result.labels);
+    assert_eq!(native.result.medoids, report.result.medoids);
+    let t = report.transport.as_ref().expect("tcp run must report transport");
+    assert_eq!(t.workers, 2, "{t:?}");
+    assert!(t.bytes_sent > 0 && t.msgs_recv > 0, "{t:?}");
+    let j = report.to_json();
+    let tj = j.get("transport").expect("transport block");
+    assert_eq!(tj.get("workers").and_then(|v| v.as_usize()), Some(2));
+    assert!(tj.get("bytes_sent").and_then(|v| v.as_f64()).unwrap() > 0.0);
+}
+
+#[test]
+fn tcp_transport_rejects_non_sharded_backends() {
+    let err = Experiment::on(DatasetSpec::Toy2d { per_cluster: 20 })
+        .clusters(4)
+        .batches(2)
+        .transport("tcp")
+        .build()
+        .unwrap_err();
+    let msg = format!("{err:?}");
+    assert!(msg.contains("tcp") && msg.contains("sharded"), "{msg}");
+}
+
+#[test]
+fn interrupted_tcp_fit_leaves_no_zombies_and_resumes() {
+    set_worker_bin();
+    let dir = std::env::temp_dir().join(format!("dkkm_net_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let exp = || {
+        Experiment::on(DatasetSpec::Toy2d { per_cluster: 100 })
+            .clusters(4)
+            .batches(4)
+            .sigma_factor(0.1)
+    };
+    let clean = exp().build().unwrap().fit().unwrap();
+
+    // interrupt mid-fit: the session drops its engine, which must drain
+    // and reap every spawned worker process
+    let err = exp()
+        .backend("sharded:3")
+        .transport("tcp")
+        .checkpoint_dir(&dir)
+        .fault("interrupt:2")
+        .build()
+        .unwrap()
+        .fit()
+        .unwrap_err();
+    assert!(matches!(err, Error::Interrupted { epoch: 2 }), "{err:?}");
+    assert!(std::fs::read_dir(&dir).unwrap().count() >= 1, "no checkpoint written");
+    assert_no_worker_children();
+
+    // the checkpoint is resumable — back over TCP — to the same answer
+    let resumed = exp()
+        .backend("sharded:3")
+        .transport("tcp")
+        .checkpoint_dir(&dir)
+        .resume(true)
+        .build()
+        .unwrap()
+        .fit()
+        .unwrap();
+    assert_eq!(clean.result.labels, resumed.result.labels);
+    assert_eq!(clean.result.medoids, resumed.result.medoids);
+    assert_eq!(resumed.faults.resumed_from_epoch, Some(2), "{:?}", resumed.faults);
+    assert_no_worker_children();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shutdown_reaps_every_worker_pid() {
+    let g = toy_source(3, 40);
+    let cfg = MiniBatchConfig::new(4, 2);
+    let backend = tcp(4);
+    let run = MiniBatchKernelKMeans::new(cfg, &backend).run(&g).unwrap();
+    assert_eq!(run.labels.len(), 160);
+    let pids = backend.worker_pids();
+    assert_eq!(pids.len(), 3, "expected one pid per worker: {pids:?}");
+    backend.shutdown();
+    for pid in pids {
+        assert!(
+            wait_gone(pid, Duration::from_secs(10)),
+            "worker pid {pid} survived shutdown"
+        );
+    }
+}
+
+/// True once `pid` no longer exists (reaped — a lingering zombie entry
+/// in `/proc` counts as a failure, not as gone).
+#[cfg(target_os = "linux")]
+fn wait_gone(pid: u32, patience: Duration) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < patience {
+        match std::fs::read_to_string(format!("/proc/{pid}/stat")) {
+            Err(_) => return true,
+            Ok(stat) => {
+                // the state letter follows the parenthesized comm name
+                let zombie = stat
+                    .rsplit(')')
+                    .next()
+                    .map(|rest| rest.trim_start().starts_with('Z'))
+                    .unwrap_or(false);
+                if zombie {
+                    return false;
+                }
+            }
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    false
+}
+
+#[cfg(not(target_os = "linux"))]
+fn wait_gone(_pid: u32, _patience: Duration) -> bool {
+    true // no /proc to inspect; the Drop/wait contract is linux-verified
+}
+
+/// Assert this test process has no live `worker` child processes left.
+#[cfg(target_os = "linux")]
+fn assert_no_worker_children() {
+    let me = std::process::id().to_string();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let mut stray = Vec::new();
+        for entry in std::fs::read_dir("/proc").into_iter().flatten().flatten() {
+            let name = entry.file_name();
+            let Some(pid) = name.to_str().filter(|s| s.bytes().all(|b| b.is_ascii_digit()))
+            else {
+                continue;
+            };
+            let Ok(status) = std::fs::read_to_string(format!("/proc/{pid}/status")) else {
+                continue;
+            };
+            let is_child = status
+                .lines()
+                .any(|l| l.strip_prefix("PPid:").map(str::trim) == Some(me.as_str()));
+            if !is_child {
+                continue;
+            }
+            let cmdline =
+                std::fs::read_to_string(format!("/proc/{pid}/cmdline")).unwrap_or_default();
+            if cmdline.contains("worker") {
+                stray.push(pid.to_string());
+            }
+        }
+        if stray.is_empty() {
+            return;
+        }
+        if Instant::now() >= deadline {
+            panic!("worker children not reaped: pids {stray:?}");
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn assert_no_worker_children() {}
