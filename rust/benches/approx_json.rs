@@ -1,0 +1,147 @@
+//! bench-json harness: approximation engines vs the exact kernel path.
+//!
+//! Fits toy2d at three sizes of N on the `native` engine and on the
+//! `nystrom:<rank>` / `rff:<d>` approximation engines at two ranks/D
+//! each, recording the final clustering cost (all engines score the
+//! same `cost_vs_medoids` observable in the *exact* kernel space, so
+//! costs are directly comparable), embed time and fit time — the
+//! cost-vs-time curves of the approximation family. Emits
+//! `BENCH_approx.json` (override the path with `DKKM_BENCH_OUT`).
+//!
+//! The bench doubles as a smoke test: at the largest rank/D both
+//! approximations must land within 1.05x of the native final cost at
+//! every N, or the harness panics.
+//!
+//!     cargo bench --bench approx_json
+//!
+//! Knobs: `DKKM_SCALE` multiplies the dataset sizes, `DKKM_REPEATS`
+//! sets timing repeats per (engine, N) cell.
+use dkkm::coordinator::{DatasetSpec, EngineSpec, Experiment, RunReport};
+use dkkm::util::json::Json;
+use dkkm::util::stats::{bench_repeats, bench_scale, Table, Timer};
+
+const C: usize = 4;
+const SEED: u64 = 47;
+const RANKS: [usize; 2] = [16, 64];
+const DIMS: [usize; 2] = [64, 256];
+const COST_TOLERANCE: f64 = 1.05;
+
+/// One fitted cell: the report of the first fit (fits are
+/// deterministic, so repeats only tighten the timing) and the best
+/// wall time across repeats.
+fn fit_cell(per_cluster: usize, spec: EngineSpec, repeats: usize) -> (RunReport, f64) {
+    let mut wall = f64::INFINITY;
+    let mut report = None;
+    for _ in 0..repeats {
+        let session = Experiment::on(DatasetSpec::Toy2d { per_cluster })
+            .clusters(C)
+            .batches(4)
+            .restarts(2)
+            .seed(SEED)
+            .engine(spec)
+            .build()
+            .expect("build session");
+        let t = Timer::start();
+        let r = session.fit().expect("fit");
+        wall = wall.min(t.elapsed_s());
+        report.get_or_insert(r);
+    }
+    (report.expect("repeats >= 1"), wall)
+}
+
+fn cell_json(spec: EngineSpec, report: &RunReport, wall: f64, ratio: f64) -> Json {
+    let (embed_s, rank, reconstruction) = report
+        .approx
+        .as_ref()
+        .map(|a| (a.embed_seconds, a.rank as f64, a.reconstruction))
+        .unwrap_or((0.0, 0.0, 0.0));
+    Json::obj(vec![
+        ("engine", Json::str(&spec.to_string())),
+        ("cost", Json::num(report.best_cost)),
+        ("cost_vs_native", Json::num(ratio)),
+        ("train_accuracy", Json::num(report.train_accuracy)),
+        ("fit_s", Json::num(wall)),
+        ("embed_s", Json::num(embed_s)),
+        ("rank_used", Json::num(rank)),
+        ("reconstruction", Json::num(reconstruction)),
+    ])
+}
+
+fn main() {
+    // three sizes of N; the floor keeps the largest Nystrom rank
+    // feasible (rank <= 4 * per_cluster train rows) even under tiny
+    // DKKM_SCALE, without collapsing the sizes into one N
+    let sizes: Vec<usize> = [100usize, 200, 400]
+        .iter()
+        .map(|&pc| ((pc as f64 * bench_scale()) as usize).max(RANKS[RANKS.len() - 1] / 4))
+        .collect();
+    let repeats = bench_repeats();
+    println!(
+        "== approx bench: toy2d N = {:?}, C={C}, ranks {RANKS:?}, D {DIMS:?} ==\n",
+        sizes.iter().map(|pc| pc * 4).collect::<Vec<_>>()
+    );
+
+    let mut table = Table::new(&["n", "engine", "cost", "x native", "embed s", "fit s"]);
+    let mut size_rows = Vec::new();
+    for &per_cluster in &sizes {
+        let n = per_cluster * 4;
+        let mut specs = vec![EngineSpec::Native];
+        specs.extend(RANKS.iter().map(|&rank| EngineSpec::Nystrom { rank }));
+        specs.extend(DIMS.iter().map(|&d| EngineSpec::Rff { d }));
+
+        let mut native_cost = f64::NAN;
+        let mut curves = Vec::new();
+        for &spec in &specs {
+            let (report, wall) = fit_cell(per_cluster, spec, repeats);
+            if matches!(spec, EngineSpec::Native) {
+                native_cost = report.best_cost;
+            }
+            let ratio = report.best_cost / native_cost;
+            let embed_s = report.approx.as_ref().map_or(0.0, |a| a.embed_seconds);
+            table.row(&[
+                format!("{n}"),
+                spec.to_string(),
+                format!("{:.4}", report.best_cost),
+                format!("{ratio:.3}"),
+                format!("{embed_s:.3}"),
+                format!("{wall:.3}"),
+            ]);
+            // the smoke-test teeth: the richest approximation of each
+            // family must match the exact engine's final cost
+            let (last_rank, last_d) = (RANKS[RANKS.len() - 1], DIMS[DIMS.len() - 1]);
+            let richest = matches!(spec, EngineSpec::Nystrom { rank } if rank == last_rank)
+                || matches!(spec, EngineSpec::Rff { d } if d == last_d);
+            if richest {
+                assert!(
+                    ratio <= COST_TOLERANCE,
+                    "{spec} cost {:.4} exceeds {COST_TOLERANCE}x native {native_cost:.4} at n={n}",
+                    report.best_cost
+                );
+            }
+            curves.push(cell_json(spec, &report, wall, ratio));
+        }
+        size_rows.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("per_cluster", Json::num(per_cluster as f64)),
+            ("curves", Json::arr(curves)),
+        ]));
+    }
+    println!("{}", table.render());
+
+    let report_json = Json::obj(vec![
+        ("bench", Json::str("approx")),
+        ("c", Json::num(C as f64)),
+        ("repeats", Json::num(repeats as f64)),
+        ("ranks", Json::arr(RANKS.iter().map(|&r| Json::num(r as f64)))),
+        ("dims", Json::arr(DIMS.iter().map(|&d| Json::num(d as f64)))),
+        ("cost_tolerance", Json::num(COST_TOLERANCE)),
+        (
+            "equivalence",
+            Json::str("largest rank/D within 1.05x native cost at every N (asserted)"),
+        ),
+        ("sizes", Json::arr(size_rows)),
+    ]);
+    let out = std::env::var("DKKM_BENCH_OUT").unwrap_or_else(|_| "BENCH_approx.json".into());
+    std::fs::write(&out, report_json.to_string()).expect("write bench json");
+    println!("\nwrote {out}");
+}

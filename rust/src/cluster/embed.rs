@@ -1,0 +1,713 @@
+//! Embed-then-cluster: the approximation engines' fit path.
+//!
+//! Two explicit feature maps reduce kernel k-means to *linear* k-means:
+//!
+//! * **Nyström** (Chitta et al., "Approximate Kernel k-means"): sample
+//!   L landmarks, factor W = K_ll = U Λ Uᵀ ([`crate::linalg::jacobi_eigh`])
+//!   and map every row through Φ = K_nl · U Λ^{-1/2}, so Φ Φᵀ ≈
+//!   K_nl W⁻¹ K_nlᵀ. `K_nl` streams through the memory-budgeted tile
+//!   pipeline ([`crate::kernels::run_pipeline`]) — the budget binds the
+//!   embed exactly as it binds the exact-kernel fit.
+//! * **Random Fourier features** (Elgohary et al., "Embed and Conquer"):
+//!   draw D frequencies from the RBF spectral density N(0, 2γI) and
+//!   embed z(x) = √(2/D)·cos(Ωᵀx + b), bypassing the Gram entirely.
+//!   Dense and CSR rows ride the same packed micro-kernel (`Ω` is packed
+//!   once; the projection is a linear-kernel Gram fill).
+//!
+//! Clustering then runs as mini-batch k-means in the feature space —
+//! B disjoint batches, per-batch inner loop to a label fixed point,
+//! convex merge weighted by accumulated counts (the Alg.1 shape, with
+//! centroids living in R^r instead of the landmark span) — on the SIMD
+//! d² core ([`fill_d2_rows`] + scalar argmin). The result is reported as
+//! a [`MiniBatchResult`] whose medoids are the training rows nearest
+//! each final centroid, so serving, snapshots and kernel-space cost
+//! audits work unchanged.
+use std::sync::Arc;
+
+use crate::data::{minibatch_indices, CsrMat, Sampling};
+use crate::distributed::fault::FaultSession;
+use crate::kernels::microkernel::{
+    fill_d2_rows, fill_gram_rows, fill_gram_rows_csr, matmul_rows,
+};
+use crate::kernels::{
+    run_pipeline, GramSource, KernelFn, PackedPanel, PanelSpec, PipelineConfig, PipelineStats,
+};
+use crate::linalg::{jacobi_eigh, row_sq_norms, simd, Mat};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+use crate::util::stats::Timer;
+
+use super::minibatch::{MiniBatchResult, OuterRecord};
+
+/// Row chunk for streamed embeds/assigns: big enough to amortize the
+/// packed-panel reuse, small enough to stay cache- and budget-friendly.
+const EMBED_CHUNK: usize = 512;
+
+/// Eigenvalues below `λ_max * RANK_EPS` are dropped from the Nyström
+/// factorization — their Λ^{-1/2} would amplify f32 noise unboundedly.
+const RANK_EPS: f32 = 1e-6;
+
+/// Borrowed training rows for an embedding — dense or CSR through the
+/// same packed micro-kernel path.
+#[derive(Clone, Copy)]
+pub enum EmbedData<'a> {
+    Dense(&'a Mat),
+    Csr(&'a CsrMat),
+}
+
+impl EmbedData<'_> {
+    pub fn rows(&self) -> usize {
+        match self {
+            EmbedData::Dense(m) => m.rows(),
+            EmbedData::Csr(m) => m.rows(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            EmbedData::Dense(m) => m.cols(),
+            EmbedData::Csr(m) => m.cols(),
+        }
+    }
+}
+
+/// What an embedding run produced, for `RunReport.approx`.
+#[derive(Clone, Debug)]
+pub struct EmbedInfo {
+    /// `"nystrom"` or `"rff"`.
+    pub method: &'static str,
+    /// Requested rank (landmarks) or feature count D.
+    pub requested: usize,
+    /// Effective feature dimension after dropping near-null directions
+    /// (always == requested for rff).
+    pub rank: usize,
+    /// Wall seconds spent building the feature matrix.
+    pub embed_seconds: f64,
+    /// Relative Frobenius error `‖K_ss − Z_s Z_sᵀ‖_F / ‖K_ss‖_F` on a
+    /// sampled probe block — the reconstruction proxy.
+    pub reconstruction: f64,
+}
+
+// --- Nyström -------------------------------------------------------------
+
+/// Build rank-`rank` Nyström features for all `n` rows of `source`.
+/// `K_nl` streams through the tile pipeline under `budget`, so peak
+/// resident bytes honor the same contract as the exact fit; the returned
+/// [`PipelineStats`] carry the honest accounting.
+pub fn nystrom_features(
+    source: &dyn GramSource,
+    rank: usize,
+    seed: u64,
+    budget: Option<usize>,
+    workers: usize,
+    faults: Option<Arc<FaultSession>>,
+) -> Result<(Mat, EmbedInfo, PipelineStats)> {
+    let n = source.n();
+    if rank == 0 || rank > n {
+        return Err(Error::Config(format!(
+            "nystrom rank {rank} out of [1, {n}] for this source"
+        )));
+    }
+    let timer = Timer::start();
+    let mut rng = Rng::new(seed).fork(0x4E59_5354); // "NYST"
+    let mut landmarks = rng.sample_indices(n, rank);
+    landmarks.sort_unstable();
+    let rows_all: Vec<usize> = (0..n).collect();
+    // rows are the identity, so landmark positions == landmark indices
+    let spec = PanelSpec::new(&rows_all, &landmarks);
+    let cfg = PipelineConfig { budget, workers, faults };
+    let tier = simd::active_tier();
+
+    let (built, stats) = run_pipeline(source, std::slice::from_ref(&spec), &cfg, |feed| {
+        let (panel, k_ll) = feed.next_panel()?;
+        // W = U Λ Uᵀ; keep the numerically meaningful spectrum
+        let eig = jacobi_eigh(&k_ll);
+        let lead = eig.values.first().copied().unwrap_or(0.0).max(0.0);
+        let r_eff = eig.values.iter().take_while(|&&w| w > lead * RANK_EPS).count();
+        if r_eff == 0 {
+            return Err(Error::Runtime(
+                "nystrom factorization collapsed: K_ll has no positive spectrum \
+                 (degenerate landmarks or kernel)"
+                    .into(),
+            ));
+        }
+        // projection P = U_r Λ_r^{-1/2}  (L x r_eff)
+        let proj = Mat::from_fn(rank, r_eff, |l, j| {
+            eig.vectors.at(l, j) / eig.values[j].sqrt()
+        });
+        let packed = PackedPanel::pack_mat(&proj);
+        let mut z = Mat::zeros(n, r_eff);
+        let view = panel.view();
+        for t in 0..view.n_tiles() {
+            let (lo, hi) = view.tile_range(t);
+            let tile = view.tile(t)?;
+            matmul_rows(
+                tier,
+                tile.mat().data(),
+                hi - lo,
+                rank,
+                &packed,
+                &mut z.data_mut()[lo * r_eff..hi * r_eff],
+            );
+        }
+        Ok(z)
+    });
+    let z = built?;
+    let rank_eff = z.cols();
+    let reconstruction = reconstruction_proxy(source, &z, &mut rng);
+    let info = EmbedInfo {
+        method: "nystrom",
+        requested: rank,
+        rank: rank_eff,
+        embed_seconds: timer.elapsed_s(),
+        reconstruction,
+    };
+    Ok((z, info, stats))
+}
+
+// --- random Fourier features ---------------------------------------------
+
+/// A drawn RFF map: `z(x) = scale · cos(Ωᵀx + b)`.
+pub struct RffMap {
+    omega: Mat,
+    bias: Vec<f32>,
+    scale: f32,
+}
+
+impl RffMap {
+    /// Draw D frequencies from the spectral density of
+    /// `exp(-γ‖x−y‖²)`, which is N(0, 2γ·I) — Bochner's theorem.
+    pub fn draw(dim: usize, d: usize, gamma: f32, rng: &mut Rng) -> RffMap {
+        let std = (2.0 * gamma).sqrt();
+        let omega = Mat::from_fn(dim, d, |_, _| rng.normal32(0.0, std));
+        let bias: Vec<f32> =
+            (0..d).map(|_| (rng.f64() * std::f64::consts::TAU) as f32).collect();
+        RffMap { omega, bias, scale: (2.0 / d as f64).sqrt() as f32 }
+    }
+
+    pub fn d(&self) -> usize {
+        self.omega.cols()
+    }
+
+    /// Embed every row of `data` (dense or CSR): the projection is a
+    /// linear-kernel Gram fill against the packed `Ω` panel, then the
+    /// cosine epilogue.
+    pub fn embed(&self, data: &EmbedData<'_>) -> Mat {
+        let (n, d) = (data.rows(), self.d());
+        assert_eq!(
+            data.dim(),
+            self.omega.rows(),
+            "rff map drawn for dim {}, data has {}",
+            self.omega.rows(),
+            data.dim()
+        );
+        let tier = simd::active_tier();
+        let packed = PackedPanel::pack_mat(&self.omega);
+        // the linear epilogue ignores the norm caches; zero-filled slices
+        // keep the shared fill signature honest (xn is indexed by global
+        // row id inside the fill, so it spans all n rows)
+        let yn = vec![0.0f32; d];
+        let xn = vec![0.0f32; n];
+        let mut z = Mat::zeros(n, d);
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + EMBED_CHUNK).min(n);
+            let rows: Vec<usize> = (lo..hi).collect();
+            let out = &mut z.data_mut()[lo * d..hi * d];
+            match data {
+                EmbedData::Dense(x) => {
+                    fill_gram_rows(tier, x, &rows, &packed, &xn, &yn, KernelFn::Linear, out)
+                }
+                EmbedData::Csr(x) => {
+                    fill_gram_rows_csr(tier, x, &rows, &packed, &xn, &yn, KernelFn::Linear, out)
+                }
+            }
+            lo = hi;
+        }
+        // cosine epilogue over the whole projection
+        for r in 0..n {
+            let row = z.row_mut(r);
+            for (v, &b) in row.iter_mut().zip(&self.bias) {
+                *v = (*v + b).cos() * self.scale;
+            }
+        }
+        z
+    }
+}
+
+/// Draw + embed + probe in one call, mirroring [`nystrom_features`].
+pub fn rff_features(
+    data: &EmbedData<'_>,
+    d: usize,
+    gamma: f32,
+    seed: u64,
+    source: &dyn GramSource,
+) -> Result<(Mat, EmbedInfo)> {
+    if d == 0 {
+        return Err(Error::Config("rff needs >= 1 random feature".into()));
+    }
+    let timer = Timer::start();
+    let mut rng = Rng::new(seed).fork(0x5246_4600); // "RFF"
+    let map = RffMap::draw(data.dim(), d, gamma, &mut rng);
+    let z = map.embed(data);
+    let reconstruction = reconstruction_proxy(source, &z, &mut rng);
+    let info = EmbedInfo {
+        method: "rff",
+        requested: d,
+        rank: d,
+        embed_seconds: timer.elapsed_s(),
+        reconstruction,
+    };
+    Ok((z, info))
+}
+
+/// Relative Frobenius error of `Z_s Z_sᵀ` against the exact kernel block
+/// on a sampled probe set — cheap (≤128² kernel evaluations) and honest
+/// about how well the feature space reproduces the kernel.
+pub fn reconstruction_proxy(source: &dyn GramSource, z: &Mat, rng: &mut Rng) -> f64 {
+    let n = source.n();
+    if n == 0 || z.cols() == 0 {
+        return 1.0;
+    }
+    let m = n.min(128);
+    let idx = rng.sample_indices(n, m);
+    let exact = source.block_mat(&idx, &idx);
+    let zs = z.gather(&idx);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for r in 0..m {
+        for c in 0..m {
+            let approx: f32 = zs.row(r).iter().zip(zs.row(c)).map(|(a, b)| a * b).sum();
+            let k = exact.at(r, c);
+            num += ((k - approx) as f64).powi(2);
+            den += (k as f64).powi(2);
+        }
+    }
+    if den <= 0.0 {
+        return 1.0;
+    }
+    (num / den).sqrt()
+}
+
+// --- feature-space mini-batch k-means ------------------------------------
+
+/// Knobs for the linear mini-batch loop (the Alg.1 shape in R^r).
+#[derive(Clone, Debug)]
+pub struct FeatureKMeansConfig {
+    pub c: usize,
+    pub b: usize,
+    pub sampling: Sampling,
+    pub max_inner: usize,
+    pub seed: u64,
+    pub track_cost: bool,
+}
+
+/// Mini-batch k-means over the rows of `z`: per-batch inner loop to a
+/// label fixed point on the SIMD d² core, convex merge into running
+/// centroids weighted by accumulated counts, then one full assignment
+/// pass that also extracts the training row nearest each centroid as its
+/// medoid. Per-row math is chunk-independent, so labels do not depend on
+/// the streaming granularity.
+pub fn minibatch_feature_kmeans(
+    z: &Mat,
+    cfg: &FeatureKMeansConfig,
+) -> Result<MiniBatchResult> {
+    let (n, r) = (z.rows(), z.cols());
+    let c = cfg.c;
+    if c == 0 || cfg.b == 0 || cfg.b * c > n {
+        return Err(Error::Config(format!(
+            "feature k-means: B={} C={c} infeasible for N={n}",
+            cfg.b
+        )));
+    }
+    let timer = Timer::start();
+    let tier = simd::active_tier();
+    let zn = row_sq_norms(z);
+    let mut rng = Rng::new(cfg.seed);
+    let mut centroids = Mat::zeros(c, r);
+    let mut weights = vec![0usize; c];
+    let mut history = Vec::with_capacity(cfg.b);
+
+    for batch in 0..cfg.b {
+        let t_batch = Timer::start();
+        let rows = minibatch_indices(n, cfg.b, batch, cfg.sampling);
+        let nb = rows.len();
+        if nb == 0 {
+            continue;
+        }
+        let zb = z.gather(&rows);
+        let bn: Vec<f32> = rows.iter().map(|&i| zn[i]).collect();
+        if batch == 0 {
+            centroids = plus_plus_features(&zb, &bn, c, &mut rng);
+        }
+
+        let mut labels = vec![usize::MAX; nb];
+        let mut d2 = vec![0.0f32; nb * c];
+        let mut partial_cost = Vec::new();
+        let mut inner = 0usize;
+        let mut converged = false;
+        let mut merged = centroids.clone();
+        let all_c: Vec<usize> = (0..c).collect();
+        while inner < cfg.max_inner {
+            inner += 1;
+            let packed = PackedPanel::pack_gather(&merged, &all_c);
+            let cn = row_sq_norms(&merged);
+            fill_d2_rows(tier, zb.data(), nb, r, &bn, &packed, &cn, &mut d2);
+            let mut changed = false;
+            for i in 0..nb {
+                let row = &d2[i * c..(i + 1) * c];
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v < row[best] {
+                        best = j;
+                    }
+                }
+                if labels[i] != best {
+                    labels[i] = best;
+                    changed = true;
+                }
+            }
+            if cfg.track_cost {
+                let sse: f64 =
+                    (0..nb).map(|i| d2[i * c + labels[i]].max(0.0) as f64).sum();
+                partial_cost.push(sse);
+            }
+            if !changed {
+                converged = true;
+                break;
+            }
+            // candidate centroids: convex merge of the accumulated
+            // prototype with this batch's member mean (Eq.11-13 in R^r)
+            merged = merge_centroids(&centroids, &weights, &zb, &labels, c);
+        }
+
+        // commit the merge and the batch counts
+        let new_centroids = merge_centroids(&centroids, &weights, &zb, &labels, c);
+        let displacement = mean_displacement(&centroids, &new_centroids);
+        for &l in &labels {
+            weights[l] += 1;
+        }
+        centroids = new_centroids;
+
+        let global_cost = if cfg.track_cost {
+            sampled_cost(z, &zn, &centroids, tier)
+        } else {
+            0.0
+        };
+        history.push(OuterRecord {
+            batch_size: nb,
+            landmarks: r,
+            inner_iterations: inner,
+            converged,
+            partial_cost,
+            global_cost,
+            medoid_displacement: displacement,
+            seconds: t_batch.elapsed_s(),
+        });
+    }
+
+    // final assignment sweep: labels for every row, counts, and the
+    // nearest-row medoid per centroid (members preferred, any row as the
+    // empty-cluster fallback)
+    let idx: Vec<usize> = (0..c).collect();
+    let packed = PackedPanel::pack_gather(&centroids, &idx);
+    let cn = row_sq_norms(&centroids);
+    let mut labels = vec![0usize; n];
+    let mut counts = vec![0usize; c];
+    let mut member_best = vec![(f32::INFINITY, usize::MAX); c];
+    let mut any_best = vec![(f32::INFINITY, 0usize); c];
+    let mut d2 = vec![0.0f32; EMBED_CHUNK * c];
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + EMBED_CHUNK).min(n);
+        let rows = hi - lo;
+        fill_d2_rows(
+            tier,
+            &z.data()[lo * r..hi * r],
+            rows,
+            r,
+            &zn[lo..hi],
+            &packed,
+            &cn,
+            &mut d2[..rows * c],
+        );
+        for i in 0..rows {
+            let row = &d2[i * c..(i + 1) * c];
+            let mut best = 0usize;
+            for (j, &v) in row.iter().enumerate() {
+                if v < row[best] {
+                    best = j;
+                }
+                if v < any_best[j].0 {
+                    any_best[j] = (v, lo + i);
+                }
+            }
+            labels[lo + i] = best;
+            counts[best] += 1;
+            if row[best] < member_best[best].0 {
+                member_best[best] = (row[best], lo + i);
+            }
+        }
+        lo = hi;
+    }
+    let medoids: Vec<usize> = (0..c)
+        .map(|j| {
+            if member_best[j].1 != usize::MAX {
+                member_best[j].1
+            } else {
+                any_best[j].1
+            }
+        })
+        .collect();
+
+    Ok(MiniBatchResult {
+        medoids,
+        labels,
+        counts,
+        history,
+        seconds: timer.elapsed_s(),
+        overlap: None,
+        pipeline: PipelineStats::default(),
+    })
+}
+
+/// k-means++ over the batch rows in feature space: first center uniform,
+/// the rest d²-weighted (Arthur–Vassilvitskii).
+fn plus_plus_features(zb: &Mat, bn: &[f32], c: usize, rng: &mut Rng) -> Mat {
+    let (nb, r) = (zb.rows(), zb.cols());
+    let mut centers = Mat::zeros(c, r);
+    let first = rng.below(nb);
+    centers.row_mut(0).copy_from_slice(zb.row(first));
+    let mut d2 = vec![f32::INFINITY; nb];
+    for k in 1..c {
+        let prev = centers.row(k - 1).to_vec();
+        let pn: f32 = prev.iter().map(|v| v * v).sum();
+        for i in 0..nb {
+            let dot: f32 = zb.row(i).iter().zip(&prev).map(|(a, b)| a * b).sum();
+            let dist = (bn[i] + pn - 2.0 * dot).max(0.0);
+            if dist < d2[i] {
+                d2[i] = dist;
+            }
+        }
+        let weights: Vec<f64> = d2.iter().map(|&v| v as f64).collect();
+        let pick = rng.weighted(&weights);
+        centers.row_mut(k).copy_from_slice(zb.row(pick));
+    }
+    centers
+}
+
+/// Convex merge: `(w_j·c_j + Σ_{i∈j} z_i) / (w_j + n_j)`; empty batch
+/// clusters keep the accumulated prototype (alpha = 0).
+fn merge_centroids(
+    centroids: &Mat,
+    weights: &[usize],
+    zb: &Mat,
+    labels: &[usize],
+    c: usize,
+) -> Mat {
+    let r = centroids.cols();
+    let mut sums = vec![0.0f64; c * r];
+    let mut counts = vec![0usize; c];
+    for (i, &l) in labels.iter().enumerate() {
+        counts[l] += 1;
+        let row = zb.row(i);
+        let acc = &mut sums[l * r..(l + 1) * r];
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += v as f64;
+        }
+    }
+    Mat::from_fn(c, r, |j, k| {
+        let total = weights[j] + counts[j];
+        if counts[j] == 0 || total == 0 {
+            centroids.at(j, k)
+        } else {
+            ((weights[j] as f64 * centroids.at(j, k) as f64 + sums[j * r + k]) / total as f64)
+                as f32
+        }
+    })
+}
+
+fn mean_displacement(old: &Mat, new: &Mat) -> f64 {
+    let c = old.rows();
+    if c == 0 {
+        return 0.0;
+    }
+    (0..c)
+        .map(|j| {
+            old.row(j)
+                .iter()
+                .zip(new.row(j))
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .sum::<f64>()
+        / c as f64
+}
+
+/// Feature-space SSE on a deterministic stride sample (the track-cost
+/// observable; cheap at ≤1024 rows).
+fn sampled_cost(z: &Mat, zn: &[f32], centroids: &Mat, tier: simd::SimdTier) -> f64 {
+    let n = z.rows();
+    let (c, r) = (centroids.rows(), centroids.cols());
+    let m = n.min(1024);
+    let stride = n.div_ceil(m).max(1);
+    let rows: Vec<usize> = (0..n).step_by(stride).collect();
+    let zs = z.gather(&rows);
+    let sn: Vec<f32> = rows.iter().map(|&i| zn[i]).collect();
+    let idx: Vec<usize> = (0..c).collect();
+    let packed = PackedPanel::pack_gather(centroids, &idx);
+    let cn = row_sq_norms(centroids);
+    let mut d2 = vec![0.0f32; rows.len() * c];
+    fill_d2_rows(tier, zs.data(), rows.len(), r, &sn, &packed, &cn, &mut d2);
+    (0..rows.len())
+        .map(|i| {
+            let row = &d2[i * c..(i + 1) * c];
+            row.iter().cloned().fold(f32::INFINITY, f32::min).max(0.0) as f64
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::toy2d;
+    use crate::kernels::VecGram;
+    use crate::metrics::accuracy;
+
+    fn toy(seed: u64, per: usize) -> (Mat, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let d = toy2d(&mut rng, per);
+        (d.x, d.y)
+    }
+
+    #[test]
+    fn rff_inner_products_approach_the_kernel() {
+        let (x, _) = toy(5, 40);
+        let gamma = 8.0f32;
+        let mut rng = Rng::new(9);
+        let map = RffMap::draw(2, 4096, gamma, &mut rng);
+        let z = map.embed(&EmbedData::Dense(&x));
+        let kernel = KernelFn::Rbf { gamma };
+        let mut worst = 0.0f32;
+        for (a, b) in [(0usize, 1usize), (3, 77), (10, 150), (42, 42)] {
+            let exact = kernel.eval(x.row(a), x.row(b));
+            let approx: f32 = z.row(a).iter().zip(z.row(b)).map(|(p, q)| p * q).sum();
+            worst = worst.max((exact - approx).abs());
+        }
+        // Monte Carlo rate ~ 1/sqrt(D); 4096 features keep it small
+        assert!(worst < 0.08, "worst |K - zᵀz| = {worst}");
+    }
+
+    #[test]
+    fn rff_dense_and_csr_embeddings_agree() {
+        let (x, _) = toy(11, 25);
+        let csr = CsrMat::from_dense(&x);
+        let gamma = 4.0f32;
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let m1 = RffMap::draw(2, 64, gamma, &mut r1);
+        let m2 = RffMap::draw(2, 64, gamma, &mut r2);
+        let zd = m1.embed(&EmbedData::Dense(&x));
+        let zs = m2.embed(&EmbedData::Csr(&csr));
+        for r in 0..zd.rows() {
+            for c in 0..zd.cols() {
+                let (a, b) = (zd.at(r, c), zs.at(r, c));
+                assert!((a - b).abs() < 1e-5, "({r},{c}): {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn nystrom_full_rank_reproduces_the_kernel_on_landmarks() {
+        let (x, _) = toy(7, 10); // n = 40
+        let gamma = 8.0f32;
+        let gram = VecGram::new(x, KernelFn::Rbf { gamma }, 1);
+        let (z, info, _stats) =
+            nystrom_features(&gram, 40, 123, None, 0, None).expect("embed");
+        assert_eq!(info.method, "nystrom");
+        assert_eq!(info.requested, 40);
+        assert!(info.rank >= 1 && info.rank <= 40);
+        // full-rank Nyström is exact: Z Zᵀ == K up to the dropped tail
+        assert!(
+            info.reconstruction < 0.05,
+            "full-rank reconstruction proxy {}",
+            info.reconstruction
+        );
+        assert_eq!(z.rows(), 40);
+    }
+
+    #[test]
+    fn nystrom_budgeted_and_whole_panel_features_agree() {
+        let (x, _) = toy(13, 16); // n = 64
+        let gram = VecGram::new(x, KernelFn::Rbf { gamma: 6.0 }, 1);
+        let rank = 16;
+        let (z0, _, s0) = nystrom_features(&gram, rank, 99, None, 0, None).unwrap();
+        let budget = crate::kernels::tiles::min_pipeline_budget(rank, 1);
+        let (z1, _, s1) = nystrom_features(&gram, rank, 99, Some(budget), 1, None).unwrap();
+        assert_eq!(z0.rows(), z1.rows());
+        assert_eq!(z0.cols(), z1.cols());
+        for (a, b) in z0.data().iter().zip(z1.data()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        assert!(s1.tiles >= s0.tiles, "budget must tile at least as much");
+        assert_eq!(s1.budget_bytes, Some(budget), "stats must echo the budget");
+    }
+
+    #[test]
+    fn feature_kmeans_recovers_separated_clusters() {
+        let (x, truth) = toy(21, 50); // 4 well-separated 2-D blobs
+        let cfg = FeatureKMeansConfig {
+            c: 4,
+            b: 2,
+            sampling: Sampling::Stride,
+            max_inner: 50,
+            seed: 7,
+            track_cost: true,
+        };
+        // raw 2-D coordinates are already a fine linear space for toy2d
+        let res = minibatch_feature_kmeans(&x, &cfg).expect("kmeans");
+        assert_eq!(res.labels.len(), 200);
+        assert_eq!(res.medoids.len(), 4);
+        let acc = accuracy(&res.labels, &truth);
+        assert!(acc > 0.9, "accuracy {acc}");
+        assert_eq!(res.history.len(), 2);
+        assert!(res.history.iter().all(|h| h.inner_iterations >= 1));
+        // medoids label-consistent: each medoid row carries its cluster
+        for (j, &m) in res.medoids.iter().enumerate() {
+            assert_eq!(res.labels[m], j, "medoid {m} of cluster {j}");
+        }
+        assert_eq!(res.counts.iter().sum::<usize>(), 200);
+    }
+
+    #[test]
+    fn feature_kmeans_is_deterministic() {
+        let (x, _) = toy(33, 30);
+        let cfg = FeatureKMeansConfig {
+            c: 4,
+            b: 3,
+            sampling: Sampling::Stride,
+            max_inner: 40,
+            seed: 5,
+            track_cost: false,
+        };
+        let a = minibatch_feature_kmeans(&x, &cfg).unwrap();
+        let b = minibatch_feature_kmeans(&x, &cfg).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.medoids, b.medoids);
+    }
+
+    #[test]
+    fn feature_kmeans_rejects_infeasible_plans() {
+        let (x, _) = toy(1, 2); // n = 8
+        let cfg = FeatureKMeansConfig {
+            c: 5,
+            b: 2,
+            sampling: Sampling::Stride,
+            max_inner: 10,
+            seed: 1,
+            track_cost: false,
+        };
+        assert!(minibatch_feature_kmeans(&x, &cfg).is_err());
+    }
+}

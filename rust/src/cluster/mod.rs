@@ -10,13 +10,21 @@
 //! * [`assign`] — shared label-update math (f, g, argmin) used by the
 //!   serial driver, the distributed runtime, and the PJRT path.
 //! * [`elbow`] — the elbow criterion used to pick C in §4.4/4.5.
+//! * [`embed`] — embed-then-cluster approximations (Nyström features,
+//!   random Fourier features) plus the linear mini-batch k-means that
+//!   the `nystrom:<rank>` / `rff:<d>` engines run in feature space.
 pub mod assign;
 pub mod elbow;
+pub mod embed;
 pub mod full;
 pub mod init;
 pub mod minibatch;
 
 pub use assign::ClusterStats;
+pub use embed::{
+    minibatch_feature_kmeans, nystrom_features, rff_features, EmbedData, EmbedInfo,
+    FeatureKMeansConfig, RffMap,
+};
 pub use full::{full_kernel_kmeans, FullResult};
 pub use init::kernel_kmeans_pp;
 pub use minibatch::{

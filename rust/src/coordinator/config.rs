@@ -135,44 +135,71 @@ impl FromStr for DatasetSpec {
     }
 }
 
-/// Which execution engine runs the Gram pipeline / inner loop. Parsed
-/// from the registry names `native`, `pjrt`, `sharded:<p>`; resolved to
-/// an [`super::Engine`] at `Experiment::build()` time.
+/// Which execution engine runs the fit. The typed form of the registry
+/// names `native`, `pjrt`, `sharded:<p>`, `nystrom:<rank>`, `rff:<d>`;
+/// `Display -> FromStr` round-trips every variant, and the registry
+/// resolves a spec to an [`super::Engine`] in one match at
+/// `Experiment::build()` time — adding an engine means adding a variant
+/// here and an arm there, nowhere else.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum BackendChoice {
-    /// Native multithreaded CPU path.
+pub enum EngineSpec {
+    /// Native multithreaded CPU path (exact kernel, the test oracle).
     Native,
     /// PJRT artifacts (Pallas-lowered) for Gram blocks + inner iteration.
     Pjrt,
-    /// Row-sharded across `p` in-process nodes (native math).
-    Sharded(usize),
+    /// Row-sharded across `p` nodes (native math; threads or TCP).
+    Sharded { p: usize },
+    /// Rank-`rank` Nyström factorization: K ≈ K_nl W⁻¹ K_nlᵀ over `rank`
+    /// sampled landmarks, then linear k-means in the rank-L feature
+    /// space (Chitta et al., "Approximate Kernel k-means").
+    Nystrom { rank: usize },
+    /// `d` random Fourier features drawn from the RBF spectral density,
+    /// then linear k-means on the embedding — no Gram at all
+    /// (Elgohary et al., "Embed and Conquer").
+    Rff { d: usize },
 }
 
-impl fmt::Display for BackendChoice {
+/// Former name of [`EngineSpec`], kept so `BackendChoice`-typed callers
+/// keep compiling.
+pub type BackendChoice = EngineSpec;
+
+impl fmt::Display for EngineSpec {
     /// Canonical engine name; `display -> parse` round-trips.
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            BackendChoice::Native => write!(f, "native"),
-            BackendChoice::Pjrt => write!(f, "pjrt"),
-            BackendChoice::Sharded(p) => write!(f, "sharded:{p}"),
+            EngineSpec::Native => write!(f, "native"),
+            EngineSpec::Pjrt => write!(f, "pjrt"),
+            EngineSpec::Sharded { p } => write!(f, "sharded:{p}"),
+            EngineSpec::Nystrom { rank } => write!(f, "nystrom:{rank}"),
+            EngineSpec::Rff { d } => write!(f, "rff:{d}"),
         }
     }
 }
 
-impl FromStr for BackendChoice {
+impl FromStr for EngineSpec {
     type Err = String;
 
     fn from_str(s: &str) -> std::result::Result<Self, String> {
+        let count = |v: &str, what: &str| -> std::result::Result<usize, String> {
+            match v.parse::<usize>() {
+                Ok(0) | Err(_) => Err(format!("bad {what} '{v}' (positive integer)")),
+                Ok(n) => Ok(n),
+            }
+        };
         if s == "native" {
-            Ok(BackendChoice::Native)
+            Ok(EngineSpec::Native)
         } else if s == "pjrt" {
-            Ok(BackendChoice::Pjrt)
+            Ok(EngineSpec::Pjrt)
         } else if let Some(p) = s.strip_prefix("sharded:") {
-            p.parse()
-                .map(BackendChoice::Sharded)
-                .map_err(|_| format!("bad node count '{p}'"))
+            Ok(EngineSpec::Sharded { p: count(p, "node count")? })
+        } else if let Some(rank) = s.strip_prefix("nystrom:") {
+            Ok(EngineSpec::Nystrom { rank: count(rank, "rank")? })
+        } else if let Some(d) = s.strip_prefix("rff:") {
+            Ok(EngineSpec::Rff { d: count(d, "feature count")? })
         } else {
-            Err(format!("unknown backend '{s}' (native|pjrt|sharded:<p>)"))
+            Err(format!(
+                "unknown backend '{s}' (native|pjrt|sharded:<p>|nystrom:<rank>|rff:<d>)"
+            ))
         }
     }
 }
@@ -186,7 +213,7 @@ pub struct RunConfig {
     pub b: usize,
     pub s: f64,
     pub sampling: Sampling,
-    pub backend: BackendChoice,
+    pub backend: EngineSpec,
     pub threads: usize,
     pub seed: u64,
     /// k-means++ restarts, keeping the minimum-cost solution (§4.5 uses 5).
@@ -234,7 +261,7 @@ impl RunConfig {
             b: 4,
             s: 1.0,
             sampling: Sampling::Stride,
-            backend: BackendChoice::Native,
+            backend: EngineSpec::Native,
             threads: crate::util::threadpool::default_threads(),
             seed: 42,
             restarts: 1,
@@ -275,6 +302,37 @@ impl RunConfig {
             return Err(Error::Config(
                 "memory_budget must be > 0 bytes (omit it for whole panels)".into(),
             ));
+        }
+        match self.backend {
+            EngineSpec::Sharded { p: 0 } => {
+                return Err(Error::Config("sharded engine needs >= 1 node".into()));
+            }
+            EngineSpec::Nystrom { rank: 0 } => {
+                return Err(Error::Config("nystrom engine needs rank >= 1".into()));
+            }
+            EngineSpec::Nystrom { rank } if rank > self.dataset.train_len() => {
+                return Err(Error::Config(format!(
+                    "backend: nystrom:{rank} samples more landmarks than the \
+                     {} training rows of dataset: {} (lower the rank)",
+                    self.dataset.train_len(),
+                    self.dataset
+                )));
+            }
+            EngineSpec::Rff { d: 0 } => {
+                return Err(Error::Config(
+                    "rff engine needs >= 1 random feature (d = 0 embeds nothing)".into(),
+                ));
+            }
+            EngineSpec::Rff { .. } => {
+                if matches!(self.dataset, DatasetSpec::Md { .. }) {
+                    return Err(Error::Config(
+                        "backend: rff:<d> needs vector features to embed; the MD \
+                         workload (dataset: md:<frames>) only exposes a kernel"
+                            .into(),
+                    ));
+                }
+            }
+            _ => {}
         }
         if self.snapshot.is_some() {
             if let DatasetSpec::Md { .. } = self.dataset {
@@ -582,32 +640,72 @@ mod tests {
     }
 
     #[test]
-    fn backend_parsing() {
-        assert_eq!("native".parse::<BackendChoice>().unwrap(), BackendChoice::Native);
-        assert_eq!("pjrt".parse::<BackendChoice>().unwrap(), BackendChoice::Pjrt);
+    fn engine_spec_parsing() {
+        assert_eq!("native".parse::<EngineSpec>().unwrap(), EngineSpec::Native);
+        assert_eq!("pjrt".parse::<EngineSpec>().unwrap(), EngineSpec::Pjrt);
         assert_eq!(
-            "sharded:8".parse::<BackendChoice>().unwrap(),
-            BackendChoice::Sharded(8)
+            "sharded:8".parse::<EngineSpec>().unwrap(),
+            EngineSpec::Sharded { p: 8 }
         );
-        assert!("sharded:x".parse::<BackendChoice>().is_err());
+        assert_eq!(
+            "nystrom:64".parse::<EngineSpec>().unwrap(),
+            EngineSpec::Nystrom { rank: 64 }
+        );
+        assert_eq!("rff:256".parse::<EngineSpec>().unwrap(), EngineSpec::Rff { d: 256 });
+        assert!("sharded:x".parse::<EngineSpec>().is_err());
+        assert!("nystrom:".parse::<EngineSpec>().is_err());
+        assert!("nystrom:0".parse::<EngineSpec>().is_err());
+        assert!("rff:0".parse::<EngineSpec>().is_err());
+        assert!("rff:-4".parse::<EngineSpec>().is_err());
     }
 
     #[test]
-    fn backend_display_round_trip() {
-        for b in [BackendChoice::Native, BackendChoice::Pjrt, BackendChoice::Sharded(16)] {
-            assert_eq!(b.to_string().parse::<BackendChoice>().unwrap(), b);
+    fn engine_spec_display_round_trip() {
+        // every variant of the registry round-trips Display -> FromStr
+        for b in [
+            EngineSpec::Native,
+            EngineSpec::Pjrt,
+            EngineSpec::Sharded { p: 16 },
+            EngineSpec::Nystrom { rank: 64 },
+            EngineSpec::Rff { d: 256 },
+        ] {
+            assert_eq!(b.to_string().parse::<EngineSpec>().unwrap(), b);
         }
     }
 
     #[test]
-    fn backend_error_lists_registry_names() {
-        let err = "gpu".parse::<BackendChoice>().unwrap_err();
+    fn engine_spec_error_lists_registry_names() {
+        let err = "gpu".parse::<EngineSpec>().unwrap_err();
         assert!(
-            err.contains("gpu") && err.contains("native|pjrt|sharded:<p>"),
+            err.contains("gpu")
+                && err.contains("native|pjrt|sharded:<p>|nystrom:<rank>|rff:<d>"),
             "{err}"
         );
-        let err = "sharded:many".parse::<BackendChoice>().unwrap_err();
+        let err = "sharded:many".parse::<EngineSpec>().unwrap_err();
         assert!(err.contains("many"), "{err}");
+        let err = "nystrom:0".parse::<EngineSpec>().unwrap_err();
+        assert!(err.contains("rank"), "{err}");
+    }
+
+    #[test]
+    fn validation_rejects_bad_approx_shapes() {
+        // nystrom rank can't exceed the training rows it samples from
+        let mut cfg = RunConfig::new(DatasetSpec::Toy2d { per_cluster: 10 });
+        cfg.backend = EngineSpec::Nystrom { rank: 41 };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("nystrom:41") && err.contains("40"), "{err}");
+        cfg.backend = EngineSpec::Nystrom { rank: 40 };
+        assert!(cfg.validate().is_ok());
+        // directly-constructed degenerate specs fail validate too
+        cfg.backend = EngineSpec::Rff { d: 0 };
+        assert!(cfg.validate().is_err());
+        cfg.backend = EngineSpec::Sharded { p: 0 };
+        assert!(cfg.validate().is_err());
+        // rff needs vector features; the MD workload has none
+        let mut cfg = RunConfig::new(DatasetSpec::Md { frames: 100 });
+        cfg.backend = EngineSpec::Rff { d: 16 };
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("rff") && err.contains("md"), "{err}");
     }
 
     #[test]
@@ -639,7 +737,7 @@ mod tests {
         assert_eq!(cfg.b, 8);
         assert_eq!(cfg.s, 0.5);
         assert_eq!(cfg.sampling, Sampling::Block);
-        assert_eq!(cfg.backend, BackendChoice::Sharded(4));
+        assert_eq!(cfg.backend, EngineSpec::Sharded { p: 4 });
         assert_eq!(cfg.threads, 2);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.restarts, 3);

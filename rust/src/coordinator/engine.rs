@@ -10,9 +10,12 @@
 //! schedule, medoid merge, metrics) is substrate-independent and lives
 //! in [`super::Session`].
 //!
-//! Registry names: `native`, `pjrt`, `sharded:<p>`. Adding an engine
-//! means implementing the trait and extending [`create_engine`] — no
-//! other file changes.
+//! Registry names: `native`, `pjrt`, `sharded:<p>`, `nystrom:<rank>`,
+//! `rff:<d>`. Adding an engine means implementing the trait and
+//! extending [`create_engine`] — no other file changes. The two
+//! approximation engines additionally advertise an [`ApproxPlan`], which
+//! reroutes the session's fit through the embed-then-cluster path
+//! ([`crate::cluster::embed`]) instead of the exact Alg.1 loop.
 use std::path::PathBuf;
 use std::sync::{Arc, OnceLock};
 
@@ -26,7 +29,7 @@ use crate::linalg::{Frame, Mat};
 use crate::runtime::{Manifest, PjrtGram, PjrtRuntime};
 use crate::util::error::{Error, Result};
 
-use super::config::BackendChoice;
+use super::config::EngineSpec;
 
 /// Shared PJRT runtime (device thread) for the whole process.
 pub fn shared_pjrt() -> Result<Arc<PjrtRuntime>> {
@@ -73,11 +76,25 @@ impl GramBuild {
     }
 }
 
+/// How an approximation engine wants the fit executed: instead of the
+/// exact kernel-space Alg.1 loop, embed every row into an explicit
+/// feature space and run linear mini-batch k-means there.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApproxPlan {
+    /// Nyström: sample `rank` landmarks, factor `K_ll`, map rows through
+    /// the tiled `K_nl` pipeline into rank-space.
+    Nystrom { rank: usize },
+    /// Random Fourier features: `d` frequencies from the RBF spectral
+    /// density; the Gram matrix is never formed for the fit.
+    Rff { d: usize },
+}
+
 /// One execution substrate: Gram-block evaluation + inner-loop step.
 ///
 /// Object-safe so sessions can hold `Box<dyn Engine>` from the registry.
 pub trait Engine: Send + Sync {
-    /// Registry name (`native`, `pjrt`, `sharded:<p>`).
+    /// Registry name (`native`, `pjrt`, `sharded:<p>`, `nystrom:<rank>`,
+    /// `rff:<d>`).
     fn name(&self) -> &str;
 
     /// Gram source over vector-space data with the RBF kernel.
@@ -116,6 +133,14 @@ pub trait Engine: Send + Sync {
     /// socket (`RunReport.transport`). `None` everywhere else, so a
     /// populated report is proof the run left the process.
     fn transport(&self) -> Option<TransportReport> {
+        None
+    }
+
+    /// Approximation plan, when this engine clusters in an explicit
+    /// feature space instead of the exact kernel space. `None` (the
+    /// default) keeps the session on the Alg.1 loop; `Some` reroutes
+    /// `Session::fit` through the embed-then-cluster path.
+    fn approx(&self) -> Option<ApproxPlan> {
         None
     }
 }
@@ -318,10 +343,93 @@ impl Engine for TcpShardedEngine {
     }
 }
 
-/// Engine registry. `native` and `sharded:<p>` always construct;
-/// `pjrt` requires the artifact manifest (an actionable `Runtime` error
-/// otherwise — run `make artifacts` or set `DKKM_ARTIFACTS`).
-pub fn create_engine(choice: &BackendChoice) -> Result<Box<dyn Engine>> {
+/// Nyström approximation engine (`nystrom:<rank>`): the session embeds
+/// all rows into the rank-space of a sampled landmark kernel block and
+/// clusters there. Gram construction stays native — the source is still
+/// needed for the landmark panel, the reconstruction probe and the
+/// kernel-space cost audit — but no N×N block is ever materialized by
+/// the fit.
+pub struct NystromEngine {
+    name: String,
+    rank: usize,
+    step: NativeBackend,
+}
+
+impl NystromEngine {
+    pub fn new(rank: usize) -> NystromEngine {
+        NystromEngine { name: format!("nystrom:{rank}"), rank, step: NativeBackend }
+    }
+}
+
+impl Engine for NystromEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn vec_gram(&self, x: Mat, gamma: f32, threads: usize) -> GramBuild {
+        GramBuild::direct(Box::new(VecGram::new(x, KernelFn::Rbf { gamma }, threads)))
+    }
+
+    fn step(&self) -> &dyn StepBackend {
+        &self.step
+    }
+
+    /// The embed already streams `K_nl` through the budgeted tile
+    /// pipeline; a second producer thread has nothing to overlap with.
+    fn supports_offload(&self) -> bool {
+        false
+    }
+
+    fn approx(&self) -> Option<ApproxPlan> {
+        Some(ApproxPlan::Nystrom { rank: self.rank })
+    }
+}
+
+/// Random-Fourier-features engine (`rff:<d>`): the fit bypasses the
+/// Gram entirely — rows are embedded once through `d` sampled
+/// frequencies and clustered linearly. The Gram source it builds serves
+/// only evaluation (reconstruction probe, kernel-space cost audit, test
+/// assignment), never the fit itself.
+pub struct RffEngine {
+    name: String,
+    d: usize,
+    step: NativeBackend,
+}
+
+impl RffEngine {
+    pub fn new(d: usize) -> RffEngine {
+        RffEngine { name: format!("rff:{d}"), d, step: NativeBackend }
+    }
+}
+
+impl Engine for RffEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn vec_gram(&self, x: Mat, gamma: f32, threads: usize) -> GramBuild {
+        GramBuild::direct(Box::new(VecGram::new(x, KernelFn::Rbf { gamma }, threads)))
+    }
+
+    fn step(&self) -> &dyn StepBackend {
+        &self.step
+    }
+
+    /// No Gram blocks feed the fit, so there is nothing to offload.
+    fn supports_offload(&self) -> bool {
+        false
+    }
+
+    fn approx(&self) -> Option<ApproxPlan> {
+        Some(ApproxPlan::Rff { d: self.d })
+    }
+}
+
+/// Engine registry. `native`, `sharded:<p>` and the approximation
+/// engines always construct; `pjrt` requires the artifact manifest (an
+/// actionable `Runtime` error otherwise — run `make artifacts` or set
+/// `DKKM_ARTIFACTS`).
+pub fn create_engine(choice: &EngineSpec) -> Result<Box<dyn Engine>> {
     create_engine_with(choice, None)
 }
 
@@ -330,10 +438,10 @@ pub fn create_engine(choice: &BackendChoice) -> Result<Box<dyn Engine>> {
 /// Engines without fault sites ignore the session; their runs simply
 /// never report injections.
 pub fn create_engine_with(
-    choice: &BackendChoice,
+    choice: &EngineSpec,
     faults: Option<Arc<FaultSession>>,
 ) -> Result<Box<dyn Engine>> {
-    create_engine_for(choice, faults, TransportMode::InProcess)
+    create_engine_for(choice, faults, TransportMode::Threads)
 }
 
 /// [`create_engine_with`] plus the transport decision: under
@@ -341,34 +449,49 @@ pub fn create_engine_with(
 /// process-backed [`TcpShardedEngine`]; other choices reject TCP at
 /// [`super::Experiment::build`] before reaching here.
 pub fn create_engine_for(
-    choice: &BackendChoice,
+    choice: &EngineSpec,
     faults: Option<Arc<FaultSession>>,
     transport: TransportMode,
 ) -> Result<Box<dyn Engine>> {
-    match choice {
-        BackendChoice::Native => Ok(Box::new(NativeEngine::new())),
-        BackendChoice::Pjrt => Ok(Box::new(PjrtEngine::new(shared_pjrt()?))),
-        BackendChoice::Sharded(p) => {
-            if *p == 0 {
+    match *choice {
+        EngineSpec::Native => Ok(Box::new(NativeEngine::new())),
+        EngineSpec::Pjrt => Ok(Box::new(PjrtEngine::new(shared_pjrt()?))),
+        EngineSpec::Sharded { p } => {
+            if p == 0 {
                 return Err(Error::Config(
                     "sharded engine needs at least 1 node (sharded:<p>, p >= 1)".into(),
                 ));
             }
             Ok(match (transport, faults) {
-                (TransportMode::Tcp, Some(f)) => Box::new(TcpShardedEngine::with_faults(*p, f)),
-                (TransportMode::Tcp, None) => Box::new(TcpShardedEngine::new(*p)),
-                (TransportMode::InProcess, Some(f)) => {
-                    Box::new(ShardedEngine::with_faults(*p, f))
-                }
-                (TransportMode::InProcess, None) => Box::new(ShardedEngine::new(*p)),
+                (TransportMode::Tcp, Some(f)) => Box::new(TcpShardedEngine::with_faults(p, f)),
+                (TransportMode::Tcp, None) => Box::new(TcpShardedEngine::new(p)),
+                (TransportMode::Threads, Some(f)) => Box::new(ShardedEngine::with_faults(p, f)),
+                (TransportMode::Threads, None) => Box::new(ShardedEngine::new(p)),
             })
+        }
+        EngineSpec::Nystrom { rank } => {
+            if rank == 0 {
+                return Err(Error::Config(
+                    "nystrom engine needs at least 1 landmark (nystrom:<rank>, rank >= 1)".into(),
+                ));
+            }
+            Ok(Box::new(NystromEngine::new(rank)))
+        }
+        EngineSpec::Rff { d } => {
+            if d == 0 {
+                return Err(Error::Config(
+                    "rff engine needs at least 1 random feature (rff:<d>, d >= 1)".into(),
+                ));
+            }
+            Ok(Box::new(RffEngine::new(d)))
         }
     }
 }
 
-/// Registry lookup by name string (`native` | `pjrt` | `sharded:<p>`).
+/// Registry lookup by name string
+/// (`native` | `pjrt` | `sharded:<p>` | `nystrom:<rank>` | `rff:<d>`).
 pub fn engine_for_name(name: &str) -> Result<Box<dyn Engine>> {
-    let choice: BackendChoice = name.parse().map_err(Error::Config)?;
+    let choice: EngineSpec = name.parse().map_err(Error::Config)?;
     create_engine(&choice)
 }
 
@@ -419,18 +542,51 @@ mod tests {
 
     #[test]
     fn registry_rejects_zero_nodes() {
-        assert!(create_engine(&BackendChoice::Sharded(0)).is_err());
-        assert!(create_engine(&BackendChoice::Sharded(2)).is_ok());
+        assert!(create_engine(&EngineSpec::Sharded { p: 0 }).is_err());
+        assert!(create_engine(&EngineSpec::Sharded { p: 2 }).is_ok());
+    }
+
+    #[test]
+    fn registry_rejects_degenerate_approx_specs() {
+        assert!(create_engine(&EngineSpec::Nystrom { rank: 0 }).is_err());
+        assert!(create_engine(&EngineSpec::Rff { d: 0 }).is_err());
     }
 
     #[test]
     fn registry_wires_fault_session_into_sharded() {
         let faults = FaultSession::clean();
-        let e = create_engine_with(&BackendChoice::Sharded(2), Some(faults)).unwrap();
+        let e = create_engine_with(&EngineSpec::Sharded { p: 2 }, Some(faults)).unwrap();
         assert_eq!(e.name(), "sharded:2");
         // engines without fault sites accept and ignore the session
-        let n = create_engine_with(&BackendChoice::Native, Some(FaultSession::clean())).unwrap();
+        let n = create_engine_with(&EngineSpec::Native, Some(FaultSession::clean())).unwrap();
         assert_eq!(n.name(), "native");
+    }
+
+    #[test]
+    fn approx_engines_advertise_their_plan() {
+        let ny = create_engine(&EngineSpec::Nystrom { rank: 64 }).unwrap();
+        assert_eq!(ny.name(), "nystrom:64");
+        assert_eq!(ny.approx(), Some(ApproxPlan::Nystrom { rank: 64 }));
+        assert!(!ny.supports_offload());
+        assert_eq!(ny.step().name(), "native");
+        let rf = create_engine(&EngineSpec::Rff { d: 256 }).unwrap();
+        assert_eq!(rf.name(), "rff:256");
+        assert_eq!(rf.approx(), Some(ApproxPlan::Rff { d: 256 }));
+        assert!(!rf.supports_offload());
+        // exact engines have no plan
+        assert_eq!(NativeEngine::new().approx(), None);
+        assert_eq!(ShardedEngine::new(2).approx(), None);
+    }
+
+    #[test]
+    fn approx_engines_build_native_gram_sources() {
+        let e = NystromEngine::new(8);
+        let build = e.vec_gram(random_mat(3, 12, 3), 0.5, 1);
+        assert!(build.fallback.is_none());
+        assert_eq!(build.source.n(), 12);
+        // CSR rides the default storage-generic path
+        let sparse = CsrMat::from_rows(50, (0..20).map(|r| vec![(r, 1.0f32)]).collect());
+        assert_eq!(RffEngine::new(16).sparse_gram(sparse, 0.5, 1).storage, "csr");
     }
 
     #[test]
@@ -449,13 +605,13 @@ mod tests {
 
     #[test]
     fn registry_selects_transport_mode() {
-        let e = create_engine_for(&BackendChoice::Sharded(2), None, TransportMode::Tcp).unwrap();
+        let spec = EngineSpec::Sharded { p: 2 };
+        let e = create_engine_for(&spec, None, TransportMode::Tcp).unwrap();
         assert_eq!(e.step().name(), "sharded-tcp");
-        let e =
-            create_engine_for(&BackendChoice::Sharded(2), None, TransportMode::InProcess).unwrap();
+        let e = create_engine_for(&spec, None, TransportMode::Threads).unwrap();
         assert_eq!(e.step().name(), "sharded");
         // native ignores the mode (build() rejects tcp+native earlier)
-        let e = create_engine_for(&BackendChoice::Native, None, TransportMode::Tcp).unwrap();
+        let e = create_engine_for(&EngineSpec::Native, None, TransportMode::Tcp).unwrap();
         assert_eq!(e.name(), "native");
     }
 
@@ -463,6 +619,8 @@ mod tests {
     fn registry_by_name() {
         assert_eq!(engine_for_name("native").unwrap().name(), "native");
         assert_eq!(engine_for_name("sharded:3").unwrap().name(), "sharded:3");
+        assert_eq!(engine_for_name("nystrom:32").unwrap().name(), "nystrom:32");
+        assert_eq!(engine_for_name("rff:128").unwrap().name(), "rff:128");
         assert!(engine_for_name("warp-drive").is_err());
     }
 

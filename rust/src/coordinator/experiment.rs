@@ -17,8 +17,8 @@ use crate::data::Sampling;
 use crate::distributed::{FaultPlan, FaultSession, TransportMode};
 use crate::util::error::{Error, Result};
 
-use super::config::{BackendChoice, DatasetSpec, RunConfig};
-use super::engine::create_engine_for;
+use super::config::{DatasetSpec, EngineSpec, RunConfig};
+use super::engine::{create_engine_for, ApproxPlan};
 use super::session::Session;
 
 /// Kernel selection for the builder.
@@ -121,13 +121,27 @@ impl Experiment {
         self
     }
 
+    /// Execution engine, typed. The five registry variants are
+    /// [`EngineSpec::Native`], [`EngineSpec::Pjrt`],
+    /// [`EngineSpec::Sharded`], [`EngineSpec::Nystrom`] and
+    /// [`EngineSpec::Rff`]; shape errors (zero nodes, rank larger than
+    /// the dataset, ...) still surface at `build()` via
+    /// `RunConfig::validate`.
+    pub fn engine(mut self, spec: EngineSpec) -> Experiment {
+        self.cfg.backend = spec;
+        // a typed spec supersedes any pending string from backend()
+        self.backend_raw = None;
+        self
+    }
+
     /// Execution engine by registry name: `native`, `pjrt`,
-    /// `sharded:<p>`. Unknown names fail at `build()`.
+    /// `sharded:<p>`, `nystrom:<rank>`, `rff:<d>`. Thin parse wrapper
+    /// over [`Experiment::engine`]; unknown names fail at `build()`.
     pub fn backend(mut self, name: &str) -> Experiment {
         // reflect valid names into the staged config immediately so
         // `config()` echoes honestly; invalid ones are kept raw and
         // rejected with their message at build()
-        if let Ok(choice) = name.parse::<BackendChoice>() {
+        if let Ok(choice) = name.parse::<EngineSpec>() {
             self.cfg.backend = choice;
         }
         self.backend_raw = Some(name.to_string());
@@ -217,11 +231,20 @@ impl Experiment {
         self
     }
 
-    /// How `sharded:<p>` runs its collectives: `"threads"` (default,
-    /// in-process, the bit-identity oracle) or `"tcp"` (p OS worker
-    /// processes over localhost sockets). Parsed — and rejected — at
-    /// `build()`; `"tcp"` with a non-sharded engine is a config error.
-    /// The `DKKM_TRANSPORT` environment variable overrides this value.
+    /// How `sharded:<p>` runs its collectives, typed:
+    /// [`TransportMode::Threads`] (default, in-process, the bit-identity
+    /// oracle) or [`TransportMode::Tcp`] (p OS worker processes over
+    /// localhost sockets). [`TransportMode::Tcp`] with a non-sharded
+    /// engine is a config error at `build()`. The `DKKM_TRANSPORT`
+    /// environment variable still overrides this value.
+    pub fn transport_mode(mut self, mode: TransportMode) -> Experiment {
+        self.cfg.transport = Some(mode.to_string());
+        self
+    }
+
+    /// [`Experiment::transport_mode`] by name — a thin parse wrapper.
+    /// Parsed — and rejected with the grammar in the message — at
+    /// `build()`.
     pub fn transport(mut self, mode: &str) -> Experiment {
         self.cfg.transport = Some(mode.to_string());
         self
@@ -231,7 +254,7 @@ impl Experiment {
     /// the dataset + Gram source into a reusable [`Session`].
     pub fn build(mut self) -> Result<Session> {
         if let Some(raw) = &self.backend_raw {
-            self.cfg.backend = raw.parse::<BackendChoice>().map_err(Error::Config)?;
+            self.cfg.backend = raw.parse::<EngineSpec>().map_err(Error::Config)?;
         }
         self.cfg.validate()?;
         // infeasible (B, C, N) combinations die here, not as a panic in
@@ -258,10 +281,11 @@ impl Experiment {
         // overrides the config the same way DKKM_FAULT does
         let transport = TransportMode::resolve(self.cfg.transport.as_deref())?;
         if transport == TransportMode::Tcp
-            && !matches!(self.cfg.backend, BackendChoice::Sharded(_))
+            && !matches!(self.cfg.backend, EngineSpec::Sharded { .. })
         {
             return Err(Error::Config(format!(
-                "transport 'tcp' needs the sharded engine (sharded:<p>), not '{}'",
+                "transport: tcp needs the sharded engine (sharded:<p>), but backend: {} \
+                 runs in-process; set backend: sharded:<p> or drop the transport",
                 self.cfg.backend
             )));
         }
@@ -271,31 +295,45 @@ impl Experiment {
         // slot count depends on the engine: offload-capable engines run
         // one async producer, the rest produce inline.
         if let Some(mb) = self.cfg.memory_budget {
-            let n = self.cfg.dataset.train_len();
-            let nb_max = n.div_ceil(self.cfg.b);
-            let mut l_max = ((self.cfg.s * nb_max as f64).round() as usize).clamp(1, nb_max);
-            match self.cfg.c {
-                // the plan takes at least C landmarks per batch
-                Some(c) => l_max = l_max.max(c.min(nb_max)),
-                // elbow-selected C can reach 40 (both scan ranges cap there)
-                None => l_max = l_max.max(40.min(nb_max)),
-            }
-            let workers = usize::from(engine.supports_offload());
-            let min = crate::kernels::tiles::min_pipeline_budget(l_max, workers);
-            if mb < min {
-                return Err(Error::Config(format!(
-                    "memory_budget {mb} B cannot hold the pipeline for B={}, s={} on \
-                     '{}': the largest panel has L={l_max} landmark columns and needs \
-                     at least {min} B (one 1-row tile per pipeline slot)",
-                    self.cfg.b, self.cfg.s, self.cfg.dataset
-                )));
+            // what the pipeline streams depends on the fit path: the
+            // exact loop tiles per-batch K_nl panels (L landmark
+            // columns), the Nyström embed tiles one N x rank panel, and
+            // the rff embed never forms a panel at all
+            let l_max = match engine.approx() {
+                Some(ApproxPlan::Nystrom { rank }) => Some(rank),
+                Some(ApproxPlan::Rff { .. }) => None,
+                None => {
+                    let n = self.cfg.dataset.train_len();
+                    let nb_max = n.div_ceil(self.cfg.b);
+                    let mut l =
+                        ((self.cfg.s * nb_max as f64).round() as usize).clamp(1, nb_max);
+                    match self.cfg.c {
+                        // the plan takes at least C landmarks per batch
+                        Some(c) => l = l.max(c.min(nb_max)),
+                        // elbow-selected C can reach 40 (both scan ranges cap there)
+                        None => l = l.max(40.min(nb_max)),
+                    }
+                    Some(l)
+                }
+            };
+            if let Some(l_max) = l_max {
+                let workers = usize::from(engine.supports_offload());
+                let min = crate::kernels::tiles::min_pipeline_budget(l_max, workers);
+                if mb < min {
+                    return Err(Error::Config(format!(
+                        "memory_budget {mb} B cannot hold the pipeline for B={}, s={} on \
+                         '{}': the largest panel has L={l_max} landmark columns and needs \
+                         at least {min} B (one 1-row tile per pipeline slot)",
+                        self.cfg.b, self.cfg.s, self.cfg.dataset
+                    )));
+                }
             }
         }
         if self.cfg.offload && !engine.supports_offload() {
             return Err(Error::Config(format!(
-                "engine '{}' does not support the offload pipeline (its node \
-                 threads already saturate the host); drop offload or use \
-                 native/pjrt",
+                "engine '{}' does not support the offload pipeline (sharded node \
+                 threads already saturate the host; approximation engines stream \
+                 their own embed); drop offload or use native/pjrt",
                 engine.name()
             )));
         }
@@ -321,7 +359,7 @@ mod tests {
         assert_eq!(cfg.b, 4);
         assert_eq!(cfg.c, None);
         assert_eq!(cfg.restarts, 1);
-        assert_eq!(cfg.backend, BackendChoice::Native);
+        assert_eq!(cfg.backend, EngineSpec::Native);
     }
 
     #[test]
@@ -344,11 +382,64 @@ mod tests {
     #[test]
     fn backend_setter_reflects_into_config_echo() {
         let exp = toy().backend("sharded:8");
-        assert_eq!(exp.config().backend, BackendChoice::Sharded(8));
+        assert_eq!(exp.config().backend, EngineSpec::Sharded { p: 8 });
         // invalid names stay pending (default echo) and fail at build
         let exp = toy().backend("gpu");
-        assert_eq!(exp.config().backend, BackendChoice::Native);
+        assert_eq!(exp.config().backend, EngineSpec::Native);
         assert!(exp.build().is_err());
+    }
+
+    #[test]
+    fn typed_engine_setter_supersedes_pending_backend_string() {
+        // a bad string followed by a typed spec must build: the typed
+        // call clears the raw name instead of letting it fail later
+        let exp = toy().backend("gpu").engine(EngineSpec::Sharded { p: 2 });
+        assert_eq!(exp.config().backend, EngineSpec::Sharded { p: 2 });
+        let session = exp.build().unwrap();
+        assert_eq!(session.engine().used, "sharded:2");
+        // and the typed setter needs no string round-trip at all
+        assert!(toy().engine(EngineSpec::Nystrom { rank: 16 }).build().is_ok());
+    }
+
+    #[test]
+    fn typed_transport_setter_matches_string_form() {
+        let a = toy().backend("sharded:2").transport_mode(TransportMode::Tcp);
+        assert_eq!(a.config().transport.as_deref(), Some("tcp"));
+        let b = toy().backend("sharded:2").transport_mode(TransportMode::Threads);
+        assert_eq!(b.config().transport.as_deref(), Some("threads"));
+        assert!(b.build().is_ok());
+    }
+
+    #[test]
+    fn approx_shape_errors_surface_at_build() {
+        // rank exceeding the training rows names both numbers
+        let err = toy().engine(EngineSpec::Nystrom { rank: 500 }).build().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("nystrom:500") && msg.contains("200"), "{msg}");
+        // zero-shaped specs are rejected by validate()
+        assert!(toy().engine(EngineSpec::Rff { d: 0 }).build().is_err());
+        // offload cannot compose with the approximation engines
+        let err = toy().engine(EngineSpec::Nystrom { rank: 16 }).offload(true).build();
+        let msg = err.unwrap_err().to_string();
+        assert!(msg.contains("nystrom:16") && msg.contains("offload"), "{msg}");
+        let err = toy().engine(EngineSpec::Rff { d: 32 }).offload(true).build();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn nystrom_memory_budget_binds_the_embed_panel() {
+        // the embed pipeline streams an N x rank panel; 16 B cannot hold
+        // even one 1-row tile of rank 16, a workable budget builds fine
+        let err =
+            toy().engine(EngineSpec::Nystrom { rank: 16 }).memory_budget(16).build().unwrap_err();
+        assert!(err.to_string().contains("memory_budget"), "{err}");
+        assert!(toy()
+            .engine(EngineSpec::Nystrom { rank: 16 })
+            .memory_budget(16 * 1024)
+            .build()
+            .is_ok());
+        // rff never forms a panel, so any budget is acceptable
+        assert!(toy().engine(EngineSpec::Rff { d: 32 }).memory_budget(16).build().is_ok());
     }
 
     #[test]
@@ -450,10 +541,14 @@ mod tests {
         // unknown mode fails with the grammar in the message
         let err = toy().backend("sharded:2").transport("carrier-pigeon").build().unwrap_err();
         assert!(err.to_string().contains("transport"), "{err}");
-        // tcp composes only with the sharded engine
+        // tcp composes only with the sharded engine; the error names
+        // both offending fields
         let err = toy().transport("tcp").build().unwrap_err();
         let msg = err.to_string();
-        assert!(msg.contains("tcp") && msg.contains("sharded"), "{msg}");
+        assert!(
+            msg.contains("transport") && msg.contains("backend") && msg.contains("sharded"),
+            "{msg}"
+        );
         // threads is the default and composes with everything
         assert!(toy().transport("threads").build().is_ok());
         let session = toy().backend("sharded:2").transport("tcp").build().unwrap();

@@ -14,13 +14,14 @@ pub mod memory;
 pub mod report;
 pub mod session;
 
-pub use config::{BackendChoice, DatasetSpec, RcvStorage, RunConfig};
+pub use config::{BackendChoice, DatasetSpec, EngineSpec, RcvStorage, RunConfig};
 pub use engine::{
-    create_engine, create_engine_with, engine_for_name, shared_pjrt, Engine, GramBuild,
+    create_engine, create_engine_with, engine_for_name, shared_pjrt, ApproxPlan, Engine,
+    GramBuild,
 };
 pub use experiment::{Experiment, KernelSpec};
 pub use memory::{b_min, footprint_bytes, paper_b_min};
-pub use report::{faults_json, pipeline_json, EngineReport, RunReport};
+pub use report::{faults_json, pipeline_json, ApproxReport, EngineReport, RunReport};
 pub use session::{
     assign_test_set, assign_test_set_reference, assign_test_set_sparse,
     assign_test_set_sparse_reference, build_dataset, build_sparse_rcv1, gamma_for,

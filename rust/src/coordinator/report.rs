@@ -34,6 +34,40 @@ impl EngineReport {
     }
 }
 
+/// What an approximation engine's embed stage did (`nystrom:<rank>` /
+/// `rff:<d>`): the requested vs effective feature dimension, the embed
+/// wall time, and a reconstruction proxy tying the feature space back to
+/// the exact kernel. `None` on exact engines, so a populated block is
+/// proof the fit ran embed-then-cluster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ApproxReport {
+    /// `"nystrom"` or `"rff"`.
+    pub method: String,
+    /// Requested rank / feature count from the spec.
+    pub requested: usize,
+    /// Effective feature dimension after dropping near-null eigen
+    /// directions (always == requested for rff).
+    pub rank: usize,
+    /// Wall seconds spent building the feature matrix (once per fit;
+    /// restarts reuse it).
+    pub embed_seconds: f64,
+    /// Relative Frobenius error `‖K_ss − Z_s Z_sᵀ‖_F / ‖K_ss‖_F` on a
+    /// sampled probe block.
+    pub reconstruction: f64,
+}
+
+impl ApproxReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("method", Json::str(&self.method)),
+            ("requested", Json::num(self.requested as f64)),
+            ("rank", Json::num(self.rank as f64)),
+            ("embed_seconds", Json::num(self.embed_seconds)),
+            ("reconstruction", Json::num(self.reconstruction)),
+        ])
+    }
+}
+
 /// Everything a bench or the CLI needs from one experiment.
 #[derive(Clone, Debug)]
 pub struct RunReport {
@@ -69,6 +103,9 @@ pub struct RunReport {
     /// retries, reconnects, protocol errors. `None` for in-process
     /// runs, so a populated report is proof the run left the process.
     pub transport: Option<TransportReport>,
+    /// Embed accounting when an approximation engine ran the fit
+    /// (`nystrom:<rank>` / `rff:<d>`); `None` on exact engines.
+    pub approx: Option<ApproxReport>,
     pub result: MiniBatchResult,
 }
 
@@ -111,6 +148,10 @@ impl RunReport {
             (
                 "transport",
                 self.transport.as_ref().map(transport_json).unwrap_or(Json::Null),
+            ),
+            (
+                "approx",
+                self.approx.as_ref().map(ApproxReport::to_json).unwrap_or(Json::Null),
             ),
             (
                 "outer_iterations",
@@ -265,6 +306,23 @@ mod tests {
         assert_eq!(j.get("protocol_errors").and_then(|v| v.as_usize()), Some(1));
         let s = j.get("allgather_seconds").and_then(|v| v.as_f64()).unwrap();
         assert!((s - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn approx_report_json_carries_embed_accounting() {
+        let a = ApproxReport {
+            method: "nystrom".into(),
+            requested: 64,
+            rank: 61,
+            embed_seconds: 0.125,
+            reconstruction: 0.03,
+        };
+        let j = a.to_json();
+        assert_eq!(j.get("method").and_then(|v| v.as_str()), Some("nystrom"));
+        assert_eq!(j.get("requested").and_then(|v| v.as_usize()), Some(64));
+        assert_eq!(j.get("rank").and_then(|v| v.as_usize()), Some(61));
+        let r = j.get("reconstruction").and_then(|v| v.as_f64()).unwrap();
+        assert!((r - 0.03).abs() < 1e-12);
     }
 
     #[test]

@@ -16,6 +16,10 @@ use crate::cluster::{
     minibatch::NativeBackend, minibatch::StepBackend, MiniBatchConfig,
     MiniBatchKernelKMeans, MiniBatchResult,
 };
+use crate::cluster::{
+    minibatch_feature_kmeans, nystrom_features, rff_features, EmbedData, EmbedInfo,
+    FeatureKMeansConfig,
+};
 use crate::data::{
     noisy_mnist, synthetic_mnist, synthetic_rcv1, synthetic_rcv1_sparse, toy2d, Dataset,
     SparseDataset,
@@ -31,8 +35,8 @@ use crate::util::rng::Rng;
 use crate::util::stats::Timer;
 
 use super::config::{DatasetSpec, RcvStorage, RunConfig};
-use super::engine::{Engine, GramBuild};
-use super::report::{EngineReport, RunReport};
+use super::engine::{ApproxPlan, Engine, GramBuild};
+use super::report::{ApproxReport, EngineReport, RunReport};
 
 /// What a dataset spec materialized into. Vector workloads carry the
 /// train/test split and the kernel used for held-out assignment; frame
@@ -180,32 +184,52 @@ impl Session {
         // the plan takes L = max(round(s*nb), C) landmarks per batch, so
         // a C larger than build() anticipated can outgrow the memory
         // budget; fail structurally instead of tripping the pipeline's
-        // runtime assert
+        // runtime assert. Approximation engines stream a fixed-width
+        // panel (rank columns for nystrom, none for rff), so C does not
+        // move their budget floor — build() already validated it.
         if let Some(mb) = self.cfg.memory_budget {
-            let nb_max = n.div_ceil(self.cfg.b);
-            let l_max = ((self.cfg.s * nb_max as f64).round() as usize)
-                .clamp(c.min(nb_max), nb_max);
-            let workers = usize::from(self.engine.supports_offload());
-            let min = crate::kernels::tiles::min_pipeline_budget(l_max, workers);
-            if mb < min {
-                return Err(Error::Config(format!(
-                    "memory_budget {mb} B cannot hold the pipeline at C={c}: the \
-                     largest panel has L={l_max} landmark columns and needs at \
-                     least {min} B"
-                )));
+            if self.engine.approx().is_none() {
+                let nb_max = n.div_ceil(self.cfg.b);
+                let l_max = ((self.cfg.s * nb_max as f64).round() as usize)
+                    .clamp(c.min(nb_max), nb_max);
+                let workers = usize::from(self.engine.supports_offload());
+                let min = crate::kernels::tiles::min_pipeline_budget(l_max, workers);
+                if mb < min {
+                    return Err(Error::Config(format!(
+                        "memory_budget {mb} B cannot hold the pipeline at C={c}: the \
+                         largest panel has L={l_max} landmark columns and needs at \
+                         least {min} B"
+                    )));
+                }
             }
         }
         // per-fit fault accounting starts clean; one-shot injections
         // re-arm so repeated fits stay deterministic
         self.faults.reset();
-        let (result, best_cost, restart_seconds) = run_restarts(
-            self.source.as_ref(),
-            &self.cfg,
-            c,
-            self.engine.step(),
-            self.engine.supports_offload(),
-            &self.faults,
-        )?;
+        let (result, best_cost, restart_seconds, approx) = match self.engine.approx() {
+            Some(plan) => {
+                let (result, cost, times, info) = self.run_approx_restarts(c, plan)?;
+                let approx = ApproxReport {
+                    method: info.method.to_string(),
+                    requested: info.requested,
+                    rank: info.rank,
+                    embed_seconds: info.embed_seconds,
+                    reconstruction: info.reconstruction,
+                };
+                (result, cost, times, Some(approx))
+            }
+            None => {
+                let (result, cost, times) = run_restarts(
+                    self.source.as_ref(),
+                    &self.cfg,
+                    c,
+                    self.engine.step(),
+                    self.engine.supports_offload(),
+                    &self.faults,
+                )?;
+                (result, cost, times, None)
+            }
+        };
         let truth = self.truth();
         let train_accuracy = accuracy(&result.labels, truth);
         let train_nmi = nmi(&result.labels, truth);
@@ -236,6 +260,7 @@ impl Session {
             pipeline: result.pipeline.clone(),
             faults: self.faults.report(),
             transport: self.engine.transport(),
+            approx,
             result,
         };
         if let Some(dir) = &self.cfg.snapshot {
@@ -244,6 +269,77 @@ impl Session {
             eprintln!("dkkm: model snapshot written to {}", path.display());
         }
         Ok(report)
+    }
+
+    /// The embed-then-cluster fit path of the approximation engines:
+    /// build the feature matrix once with the base seed (restarts vary
+    /// only the k-means init), run linear mini-batch k-means per
+    /// restart, and keep the restart whose medoids minimize the cost in
+    /// the *exact* kernel space — the same `cost_vs_medoids` observable
+    /// the exact engines report, so costs are comparable across engines.
+    fn run_approx_restarts(
+        &self,
+        c: usize,
+        plan: ApproxPlan,
+    ) -> Result<(MiniBatchResult, f64, Vec<f64>, EmbedInfo)> {
+        let (z, info, embed_stats) = match plan {
+            ApproxPlan::Nystrom { rank } => {
+                let (z, info, stats) = nystrom_features(
+                    self.source.as_ref(),
+                    rank,
+                    self.cfg.seed,
+                    self.cfg.memory_budget,
+                    0,
+                    Some(self.faults.clone()),
+                )?;
+                (z, info, Some(stats))
+            }
+            ApproxPlan::Rff { d } => {
+                let data = match &self.workload {
+                    Workload::Vectors { train, .. } => EmbedData::Dense(&train.x),
+                    Workload::SparseVectors { train, .. } => EmbedData::Csr(&train.x),
+                    Workload::Frames { .. } => {
+                        return Err(Error::Config(
+                            "rff:<d> needs vector features to embed; the MD workload \
+                             only exposes a kernel"
+                                .into(),
+                        ));
+                    }
+                };
+                let (z, info) =
+                    rff_features(&data, d, self.gamma, self.cfg.seed, self.source.as_ref())?;
+                (z, info, None)
+            }
+        };
+        let n = self.source.n();
+        let mut eval_rng = Rng::new(self.cfg.seed ^ 0xE7A1);
+        let sample = eval_rng.sample_indices(n, n.min(2048));
+        let mut best: Option<(MiniBatchResult, f64)> = None;
+        let mut times = Vec::with_capacity(self.cfg.restarts);
+        for r in 0..self.cfg.restarts {
+            let kcfg = FeatureKMeansConfig {
+                c,
+                b: self.cfg.b,
+                sampling: self.cfg.sampling,
+                max_inner: 100,
+                seed: self.cfg.seed.wrapping_add(r as u64 * 7919),
+                track_cost: self.cfg.track_cost,
+            };
+            let timer = Timer::start();
+            let mut result = minibatch_feature_kmeans(&z, &kcfg)?;
+            times.push(timer.elapsed_s());
+            // the fit's streaming really happened in the embed; surface
+            // its accounting instead of the default zeros
+            if let Some(stats) = &embed_stats {
+                result.pipeline = stats.clone();
+            }
+            let cost = cost_vs_medoids(self.source.as_ref(), &sample, &result.medoids);
+            if best.as_ref().map_or(true, |(_, bc)| cost < *bc) {
+                best = Some((result, cost));
+            }
+        }
+        let (result, cost) = best.expect("restarts >= 1");
+        Ok((result, cost, times, info))
     }
 
     /// Freeze the fitted model into a servable form: medoid feature
@@ -586,30 +682,52 @@ fn run_restarts(
     Ok((result, cost, times))
 }
 
+/// The single held-out assignment path: freeze the medoid features into
+/// an ad-hoc [`ServeModel`] and route the query block through
+/// [`ServeModel::assign_rows`] — the same entry point the serve loop and
+/// reloaded snapshots use, so held-out metrics, live queries and
+/// restored models agree by construction. Dense and CSR differ only in
+/// the [`RowBlock`] variant they wrap.
+fn assign_via_serve(
+    features: RowBlock,
+    storage: &'static str,
+    train_n: usize,
+    medoids: &[usize],
+    kernel: KernelFn,
+    queries: &RowBlock,
+) -> Vec<usize> {
+    let c = medoids.len();
+    let model = ServeModel::from_features(
+        features,
+        kernel,
+        vec![1; c],
+        medoids.to_vec(),
+        SnapshotFingerprint::adhoc(storage, c, train_n),
+    )
+    .expect("medoids from a fitted session are a well-formed model");
+    model
+        .assign_rows(queries)
+        .expect("a held-out split shares the training dimension")
+}
+
 /// Assign held-out vector samples to the trained medoids, through the
 /// serve subsystem's shared batched-assign helper (packed-panel GEMM +
-/// branchless argmin). The same [`ServeModel`] path serves snapshots
-/// and the serve loop, so held-out metrics, reloaded models and live
-/// queries agree by construction. The pre-serve scalar path survives
-/// as [`assign_test_set_reference`], the test oracle.
+/// branchless argmin). The pre-serve scalar path survives as
+/// [`assign_test_set_reference`], the test oracle.
 pub fn assign_test_set(
     test: &Dataset,
     train: &Dataset,
     medoids: &[usize],
     kernel: KernelFn,
 ) -> Vec<usize> {
-    let c = medoids.len();
-    let model = ServeModel::from_features(
+    assign_via_serve(
         RowBlock::Dense(train.x.gather(medoids)),
+        "dense",
+        train.n(),
+        medoids,
         kernel,
-        vec![1; c],
-        medoids.to_vec(),
-        SnapshotFingerprint::adhoc("dense", c, train.n()),
+        &RowBlock::Dense(test.x.clone()),
     )
-    .expect("medoids from a fitted session are a well-formed model");
-    model
-        .assign_dense(&test.x)
-        .expect("a held-out split shares the training dimension")
 }
 
 /// Assign held-out CSR samples to the trained medoids: the sparse twin
@@ -622,18 +740,14 @@ pub fn assign_test_set_sparse(
     medoids: &[usize],
     kernel: KernelFn,
 ) -> Vec<usize> {
-    let c = medoids.len();
-    let model = ServeModel::from_features(
+    assign_via_serve(
         RowBlock::Csr(train.x.gather(medoids)),
+        "csr",
+        train.n(),
+        medoids,
         kernel,
-        vec![1; c],
-        medoids.to_vec(),
-        SnapshotFingerprint::adhoc("csr", c, train.n()),
+        &RowBlock::Csr(test.x.clone()),
     )
-    .expect("medoids from a fitted session are a well-formed model");
-    model
-        .assign_csr(&test.x)
-        .expect("a held-out split shares the training dimension")
 }
 
 /// Serial per-row oracle for [`assign_test_set`]: direct kernel
@@ -799,6 +913,84 @@ mod tests {
         assert_eq!(native.result.labels, sharded.result.labels);
         assert_eq!(native.result.medoids, sharded.result.medoids);
         assert_eq!(sharded.engine.used, "sharded:3");
+    }
+
+    #[test]
+    fn nystrom_engine_fits_toy_end_to_end() {
+        let report = toy_exp().backend("nystrom:64").build().unwrap().fit().unwrap();
+        assert!(report.train_accuracy > 0.8, "acc {}", report.train_accuracy);
+        assert_eq!(report.engine.used, "nystrom:64");
+        let a = report.approx.as_ref().expect("approx engines report their embed");
+        assert_eq!(a.method, "nystrom");
+        assert_eq!(a.requested, 64);
+        assert!(a.rank >= 1 && a.rank <= 64, "rank {}", a.rank);
+        assert!(a.reconstruction.is_finite() && a.reconstruction >= 0.0);
+        assert!(a.embed_seconds >= 0.0);
+        // the machine-readable report carries the block; exact engines
+        // serialize null there
+        let j = report.to_json();
+        assert_eq!(
+            j.get("approx").and_then(|a| a.get("method")).and_then(|v| v.as_str()),
+            Some("nystrom")
+        );
+        let exact = toy_exp().build().unwrap().fit().unwrap();
+        assert!(exact.approx.is_none());
+        assert_eq!(exact.to_json().get("approx"), Some(&crate::util::json::Json::Null));
+    }
+
+    #[test]
+    fn rff_engine_fits_toy_end_to_end() {
+        let report = toy_exp().backend("rff:256").build().unwrap().fit().unwrap();
+        assert!(report.train_accuracy > 0.8, "acc {}", report.train_accuracy);
+        assert_eq!(report.engine.used, "rff:256");
+        let a = report.approx.as_ref().expect("approx block");
+        assert_eq!(a.method, "rff");
+        assert_eq!(a.requested, 256);
+        assert_eq!(a.rank, 256);
+    }
+
+    #[test]
+    fn approx_fits_are_deterministic_and_repeatable() {
+        let session = toy_exp().backend("nystrom:32").build().unwrap();
+        let a = session.fit().unwrap();
+        let b = session.fit().unwrap();
+        assert_eq!(a.result.labels, b.result.labels);
+        assert_eq!(a.result.medoids, b.result.medoids);
+        assert_eq!(a.best_cost, b.best_cost);
+    }
+
+    #[test]
+    fn nystrom_embed_respects_the_memory_budget() {
+        let budget = 64 * 1024;
+        let report = toy_exp()
+            .backend("nystrom:32")
+            .memory_budget(budget)
+            .build()
+            .unwrap()
+            .fit()
+            .unwrap();
+        // the embed pipeline's accounting flows into the report
+        assert_eq!(report.pipeline.budget_bytes, Some(budget));
+        assert!(
+            report.pipeline.peak_resident_bytes <= budget,
+            "peak {} over budget {budget}",
+            report.pipeline.peak_resident_bytes
+        );
+        assert!(report.pipeline.tiles >= 1);
+        assert!(report.train_accuracy > 0.8, "acc {}", report.train_accuracy);
+    }
+
+    #[test]
+    fn nystrom_serves_snapshots_like_exact_engines() {
+        // approx medoids are real training rows, so the serve path works
+        // unchanged
+        let session = toy_exp().backend("nystrom:48").build().unwrap();
+        let report = session.fit().unwrap();
+        let model = session.serve_model(&report).unwrap();
+        assert_eq!(model.c(), report.c_used);
+        let train = session.train().unwrap();
+        let labels = model.assign_dense(&train.x).unwrap();
+        assert_eq!(labels.len(), train.n());
     }
 
     #[test]

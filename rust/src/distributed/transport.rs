@@ -527,22 +527,33 @@ pub struct TransportReport {
 
 // --- mode selection -------------------------------------------------------
 
-/// How `sharded:<p>` runs its collectives.
+/// How `sharded:<p>` runs its collectives. The typed form of the
+/// `transport` config field (`threads` | `tcp`); `Display -> parse`
+/// round-trips, and `Experiment::transport_mode` takes it directly.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum TransportMode {
     /// In-process threads over [`super::comm`] (the default and the
     /// bit-identity oracle).
     #[default]
-    InProcess,
+    Threads,
     /// p OS processes over the TCP transport in this module.
     Tcp,
+}
+
+impl std::fmt::Display for TransportMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportMode::Threads => write!(f, "threads"),
+            TransportMode::Tcp => write!(f, "tcp"),
+        }
+    }
 }
 
 impl TransportMode {
     /// Parse a config/CLI value (`threads` | `tcp`).
     pub fn parse(s: &str) -> Result<TransportMode> {
         match s.trim().to_ascii_lowercase().as_str() {
-            "" | "threads" | "thread" | "inprocess" | "in-process" => Ok(TransportMode::InProcess),
+            "" | "threads" | "thread" | "inprocess" | "in-process" => Ok(TransportMode::Threads),
             "tcp" => Ok(TransportMode::Tcp),
             other => Err(Error::Config(format!(
                 "unknown transport '{other}' (threads|tcp; env DKKM_TRANSPORT overrides)"
@@ -2130,9 +2141,12 @@ mod tests {
 
     #[test]
     fn transport_mode_parses_known_names() {
-        assert_eq!(TransportMode::parse("").unwrap(), TransportMode::InProcess);
-        assert_eq!(TransportMode::parse("threads").unwrap(), TransportMode::InProcess);
+        assert_eq!(TransportMode::parse("").unwrap(), TransportMode::Threads);
+        assert_eq!(TransportMode::parse("threads").unwrap(), TransportMode::Threads);
         assert_eq!(TransportMode::parse("tcp").unwrap(), TransportMode::Tcp);
+        for mode in [TransportMode::Threads, TransportMode::Tcp] {
+            assert_eq!(TransportMode::parse(&mode.to_string()).unwrap(), mode);
+        }
         let err = TransportMode::parse("carrier-pigeon").unwrap_err();
         assert!(err.to_string().contains("transport"), "{err}");
     }

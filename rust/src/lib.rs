@@ -24,8 +24,10 @@
 //! execution substrates. The API mirrors that: a staged
 //! [`Experiment`](coordinator::Experiment) builder describes *what* to
 //! cluster, an [`Engine`](coordinator::Engine) (registry names `native`,
-//! `pjrt`, `sharded:<p>`) decides *where* the Gram blocks and inner
-//! iterations run, and [`build()`](coordinator::Experiment::build)
+//! `pjrt`, `sharded:<p>`, `nystrom:<rank>`, `rff:<d>` — or typed via
+//! [`EngineSpec`](coordinator::EngineSpec)) decides *where* and *how*
+//! the Gram blocks and inner iterations run, and
+//! [`build()`](coordinator::Experiment::build)
 //! materializes dataset + Gram source + engine into a reusable
 //! [`Session`](coordinator::Session):
 //!
@@ -72,10 +74,11 @@ pub use util::error::{Error, Result};
 /// One-import surface for driving experiments.
 pub mod prelude {
     pub use crate::coordinator::{
-        BackendChoice, DatasetSpec, Engine, EngineReport, Experiment, KernelSpec,
-        RcvStorage, RunConfig, RunReport, Session,
+        ApproxPlan, ApproxReport, BackendChoice, DatasetSpec, Engine, EngineReport,
+        EngineSpec, Experiment, KernelSpec, RcvStorage, RunConfig, RunReport, Session,
     };
     pub use crate::data::{CsrMat, Sampling, SparseDataset};
+    pub use crate::distributed::TransportMode;
     pub use crate::kernels::{GramSource, KernelFn, PipelineStats};
     pub use crate::linalg::SimdTier;
     pub use crate::metrics::{accuracy, nmi};

@@ -1,0 +1,220 @@
+//! Dependency-free symmetric eigendecomposition via cyclic Jacobi
+//! rotations, the factorization behind the `nystrom:<rank>` engine:
+//! W = K_ll = U Λ Uᵀ gives the rank-L feature map
+//! Φ = K_nl · U · Λ^{-1/2} with Φ Φᵀ ≈ K (Chitta et al.).
+//!
+//! Landmark counts are small (L ≤ a few thousand), so the O(L³) Jacobi
+//! sweep is cheap next to the O(N·L·d) `K_nl` fill it enables, and the
+//! rotations are unconditionally stable on the symmetric PSD-ish inputs
+//! kernel matrices produce. Accumulation runs in f64; results are
+//! returned in the crate's f32 [`Mat`].
+use crate::linalg::Mat;
+
+/// Hard cap on full Jacobi sweeps; cyclic Jacobi converges
+/// quadratically, so real inputs finish in well under 20.
+const MAX_SWEEPS: usize = 64;
+
+/// Eigendecomposition of a symmetric matrix.
+#[derive(Clone, Debug)]
+pub struct EigH {
+    /// Eigenvalues, sorted descending.
+    pub values: Vec<f32>,
+    /// Orthonormal eigenvectors; column `j` pairs with `values[j]`.
+    pub vectors: Mat,
+}
+
+/// Factor a symmetric `a` as `U Λ Uᵀ` with cyclic Jacobi rotations.
+/// Only the lower/upper mean is read, so mildly asymmetric inputs
+/// (accumulated f32 round-off in a Gram block) are symmetrized for free.
+///
+/// # Panics
+/// On a non-square input.
+pub fn jacobi_eigh(a: &Mat) -> EigH {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "jacobi_eigh needs a square matrix, got {}x{}", n, a.cols());
+    if n == 0 {
+        return EigH { values: Vec::new(), vectors: Mat::zeros(0, 0) };
+    }
+    // symmetrized f64 working copy + accumulated rotations
+    let mut m = vec![0.0f64; n * n];
+    for r in 0..n {
+        for c in 0..n {
+            m[r * n + c] = 0.5 * (a.at(r, c) as f64 + a.at(c, r) as f64);
+        }
+    }
+    let mut v = vec![0.0f64; n * n];
+    for d in 0..n {
+        v[d * n + d] = 1.0;
+    }
+
+    let scale: f64 = m.iter().map(|x| x * x).sum::<f64>().max(f64::MIN_POSITIVE);
+    for _ in 0..MAX_SWEEPS {
+        let off: f64 = (0..n)
+            .flat_map(|p| ((p + 1)..n).map(move |q| (p, q)))
+            .map(|(p, q)| m[p * n + q] * m[p * n + q])
+            .sum();
+        // ~1e-11 relative per element — far below f32 output precision
+        if off <= 1e-22 * scale {
+            break;
+        }
+        for p in 0..n - 1 {
+            for q in p + 1..n {
+                let mpq = m[p * n + q];
+                if mpq == 0.0 {
+                    continue;
+                }
+                // rotation angle that zeroes m[p][q] (Golub & Van Loan):
+                // t is the smaller root of t² + 2θt − 1 = 0
+                let theta = (m[q * n + q] - m[p * n + p]) / (2.0 * mpq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // M <- Gᵀ M G, columns first then rows
+                for k in 0..n {
+                    let (mkp, mkq) = (m[k * n + p], m[k * n + q]);
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let (mpk, mqk) = (m[p * n + k], m[q * n + k]);
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // V <- V G (eigenvectors accumulate as columns)
+                for k in 0..n {
+                    let (vkp, vkq) = (v[k * n + p], v[k * n + q]);
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // sort descending by eigenvalue, reordering the vector columns
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| {
+        m[j * n + j].partial_cmp(&m[i * n + i]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let values: Vec<f32> = order.iter().map(|&i| m[i * n + i] as f32).collect();
+    let vectors = Mat::from_fn(n, n, |r, c| v[r * n + order[c]] as f32);
+    EigH { values, vectors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mat_from(rows: usize, cols: usize, xs: &[f32]) -> Mat {
+        Mat::from_vec(rows, cols, xs.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn diagonal_matrix_is_already_factored() {
+        let a = mat_from(3, 3, &[3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let e = jacobi_eigh(&a);
+        assert_eq!(e.values, vec![3.0, 2.0, 1.0]);
+        // columns are the (permuted, possibly sign-flipped) basis vectors
+        for c in 0..3 {
+            let col: Vec<f32> = (0..3).map(|r| e.vectors.at(r, c).abs()).collect();
+            assert_eq!(col.iter().filter(|&&x| (x - 1.0).abs() < 1e-6).count(), 1);
+        }
+    }
+
+    #[test]
+    fn two_by_two_known_eigenvalues() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1
+        let a = mat_from(2, 2, &[2.0, 1.0, 1.0, 2.0]);
+        let e = jacobi_eigh(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-5, "{:?}", e.values);
+        assert!((e.values[1] - 1.0).abs() < 1e-5, "{:?}", e.values);
+    }
+
+    #[test]
+    fn reconstructs_random_symmetric_matrices() {
+        let mut rng = Rng::new(7);
+        for n in [1usize, 2, 5, 17, 40] {
+            let mut a = Mat::zeros(n, n);
+            for r in 0..n {
+                for c in r..n {
+                    let x = rng.normal32(0.0, 1.0);
+                    a.set(r, c, x);
+                    a.set(c, r, x);
+                }
+            }
+            let e = jacobi_eigh(&a);
+            // A ?= U Λ Uᵀ, elementwise
+            for r in 0..n {
+                for c in 0..n {
+                    let mut acc = 0.0f64;
+                    for k in 0..n {
+                        acc += e.vectors.at(r, k) as f64
+                            * e.values[k] as f64
+                            * e.vectors.at(c, k) as f64;
+                    }
+                    assert!(
+                        (acc as f32 - a.at(r, c)).abs() < 1e-3,
+                        "n={n} ({r},{c}): {} vs {}",
+                        acc,
+                        a.at(r, c)
+                    );
+                }
+            }
+            // descending order
+            for w in e.values.windows(2) {
+                assert!(w[0] >= w[1] - 1e-6, "{:?}", e.values);
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_are_orthonormal() {
+        let mut rng = Rng::new(11);
+        let n = 23;
+        let mut a = Mat::zeros(n, n);
+        for r in 0..n {
+            for c in r..n {
+                let x = rng.normal32(0.0, 1.0);
+                a.set(r, c, x);
+                a.set(c, r, x);
+            }
+        }
+        let e = jacobi_eigh(&a);
+        for i in 0..n {
+            for j in 0..n {
+                let dot: f64 = (0..n)
+                    .map(|k| e.vectors.at(k, i) as f64 * e.vectors.at(k, j) as f64)
+                    .sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-4, "({i},{j}): {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn gram_like_psd_input_has_nonnegative_spectrum() {
+        // X Xᵀ is PSD; the small negative round-off the solver may emit
+        // must stay within f32 noise of zero
+        let mut rng = Rng::new(3);
+        let (n, d) = (12, 4);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal32(0.0, 1.0));
+        let mut a = Mat::zeros(n, n);
+        for r in 0..n {
+            for c in 0..n {
+                let dot: f32 = x.row(r).iter().zip(x.row(c)).map(|(p, q)| p * q).sum();
+                a.set(r, c, dot);
+            }
+        }
+        let e = jacobi_eigh(&a);
+        for &w in &e.values {
+            assert!(w > -1e-3, "PSD spectrum went negative: {:?}", e.values);
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let e = jacobi_eigh(&Mat::zeros(0, 0));
+        assert!(e.values.is_empty());
+        assert_eq!(e.vectors.rows(), 0);
+    }
+}

@@ -1,12 +1,16 @@
 //! Dense row-major matrices + the linear algebra the pipeline needs:
 //! blocked pairwise squared distances, small matmuls for one-hot products,
-//! Kabsch/QCP RMSD for roto-translationally invariant MD kernels, and the
-//! CPU-feature dispatch ([`simd`]) behind the packed Gram micro-kernel.
+//! symmetric eigendecomposition ([`jacobi_eigh`]) for the Nyström
+//! landmark factorization, Kabsch/QCP RMSD for roto-translationally
+//! invariant MD kernels, and the CPU-feature dispatch ([`simd`]) behind
+//! the packed Gram micro-kernel.
+mod eig;
 mod mat;
 mod pairwise;
 mod rmsd;
 pub mod simd;
 
+pub use eig::{jacobi_eigh, EigH};
 pub use mat::Mat;
 pub use pairwise::{row_sq_norms, sq_dists_block, sq_dists_block_into, sq_dists_block_reference};
 pub use rmsd::{centroid, kabsch_rmsd, qcp_rmsd, Frame};

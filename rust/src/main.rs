@@ -108,7 +108,7 @@ fn parse_run_experiment(rest: &[String]) -> Result<(Experiment, bool)> {
         .opt("b", "4", "number of mini-batches B")
         .opt("s", "1.0", "landmark fraction s (Eq.18)")
         .opt("sampling", "stride", "stride | block (Fig.1b)")
-        .opt("backend", "native", "native | pjrt | sharded:<p>")
+        .opt("backend", "native", "native | pjrt | sharded:<p> | nystrom:<rank> | rff:<d>")
         .opt("threads", "0", "worker threads (0 = auto)")
         .opt("seed", "42", "rng seed")
         .opt("restarts", "1", "k-means++ restarts, keep min cost")
@@ -165,7 +165,7 @@ fn apply_run_flags(mut exp: Experiment, rest: &[String]) -> Result<(Experiment, 
         .opt("b", "", "override B")
         .opt("s", "", "override landmark fraction")
         .opt("sampling", "", "override sampling")
-        .opt("backend", "", "override backend")
+        .opt("backend", "", "override backend (native | pjrt | sharded:<p> | nystrom:<rank> | rff:<d>)")
         .opt("seed", "", "override seed")
         .opt("restarts", "", "override restarts")
         .opt("memory-budget-mb", "", "override tile-pipeline budget (MiB)")
@@ -247,6 +247,13 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         println!("  (requested '{}': {reason})", report.engine.requested);
     }
     println!("clusters        : {} (gamma={:.3e})", report.c_used, report.gamma);
+    if let Some(a) = &report.approx {
+        println!(
+            "approximation   : {} rank {} (requested {}), embed {:.2}s, \
+             reconstruction err {:.3}",
+            a.method, a.rank, a.requested, a.embed_seconds, a.reconstruction
+        );
+    }
     println!("train accuracy  : {:.2}%", report.train_accuracy * 100.0);
     println!("train NMI       : {:.4}", report.train_nmi);
     if let Some(a) = report.test_accuracy {

@@ -1,0 +1,161 @@
+//! Public-API contract tests for the approximation engine family:
+//! the typed `EngineSpec`, the `nystrom:<rank>` / `rff:<d>` engines,
+//! and the embed accounting they surface through `RunReport.approx`.
+use dkkm::prelude::*;
+
+fn toy() -> Experiment {
+    Experiment::on(DatasetSpec::Toy2d { per_cluster: 60 })
+        .clusters(4)
+        .batches(2)
+        .sigma_factor(0.1) // tighter kernel for the tiny toy set
+        .seed(11)
+}
+
+#[test]
+fn engine_specs_round_trip_for_all_five_variants() {
+    let specs = [
+        EngineSpec::Native,
+        EngineSpec::Pjrt,
+        EngineSpec::Sharded { p: 3 },
+        EngineSpec::Nystrom { rank: 64 },
+        EngineSpec::Rff { d: 256 },
+    ];
+    for spec in specs {
+        let echoed: EngineSpec = spec.to_string().parse().expect("parse own display");
+        assert_eq!(echoed, spec, "display->parse must round-trip");
+    }
+    assert_eq!(EngineSpec::Nystrom { rank: 64 }.to_string(), "nystrom:64");
+    assert_eq!(EngineSpec::Rff { d: 256 }.to_string(), "rff:256");
+}
+
+#[test]
+fn approx_build_failures_are_structured_config_errors() {
+    // rank above the training-row count names both numbers
+    let err = toy().engine(EngineSpec::Nystrom { rank: 500 }).build().unwrap_err();
+    match err {
+        Error::Config(msg) => {
+            assert!(msg.contains("500") && msg.contains("240"), "unhelpful: {msg}")
+        }
+        other => panic!("wrong error kind: {other:?}"),
+    }
+    // a zero-dimensional RFF embed is rejected up front
+    let err = toy().engine(EngineSpec::Rff { d: 0 }).build().unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "wrong error kind: {err:?}");
+    // the approximation engines stream their own embed; no offload
+    let err = toy()
+        .engine(EngineSpec::Nystrom { rank: 16 })
+        .offload(true)
+        .build()
+        .unwrap_err();
+    match err {
+        Error::Config(msg) => {
+            assert!(msg.contains("offload"), "unhelpful: {msg}")
+        }
+        other => panic!("wrong error kind: {other:?}"),
+    }
+}
+
+#[test]
+fn string_backend_and_typed_engine_agree() {
+    let via_str = toy().backend("nystrom:32").build().expect("string spec");
+    let via_typed = toy().engine(EngineSpec::Nystrom { rank: 32 }).build().expect("typed spec");
+    assert_eq!(via_str.engine().requested, "nystrom:32");
+    assert_eq!(via_typed.engine().requested, "nystrom:32");
+    let a = via_str.fit().expect("fit");
+    let b = via_typed.fit().expect("fit");
+    assert_eq!(a.result.labels, b.result.labels, "same spec, same fit");
+}
+
+#[test]
+fn nystrom_fit_reports_embed_accounting() {
+    let report = toy()
+        .engine(EngineSpec::Nystrom { rank: 48 })
+        .build()
+        .unwrap()
+        .fit()
+        .unwrap();
+    assert_eq!(report.engine.used, "nystrom:48");
+    assert!(report.train_accuracy > 0.8, "accuracy {}", report.train_accuracy);
+    let approx = report.approx.as_ref().expect("approx block on nystrom fit");
+    assert_eq!(approx.method, "nystrom");
+    assert_eq!(approx.requested, 48);
+    assert!(approx.rank >= 1 && approx.rank <= 48, "rank {}", approx.rank);
+    assert!(approx.embed_seconds >= 0.0);
+    assert!(
+        approx.reconstruction.is_finite() && approx.reconstruction < 0.5,
+        "reconstruction {}",
+        approx.reconstruction
+    );
+}
+
+#[test]
+fn rff_with_huge_d_approaches_the_exact_kernel_labels() {
+    // Monte Carlo error ~ 1/sqrt(D): at D=2048 the randomized feature
+    // space is close enough to the exact RBF space that the two engines
+    // must agree on (almost) every toy2d label
+    let exact = toy().build().unwrap().fit().unwrap();
+    let approx = toy().engine(EngineSpec::Rff { d: 2048 }).build().unwrap().fit().unwrap();
+    assert!(approx.train_accuracy > 0.9, "accuracy {}", approx.train_accuracy);
+    let agreement = accuracy(&approx.result.labels, &exact.result.labels);
+    assert!(agreement > 0.9, "rff:2048 agrees with native only {agreement}");
+    let block = approx.approx.as_ref().expect("approx block on rff fit");
+    assert_eq!(block.method, "rff");
+    assert_eq!(block.rank, 2048);
+    // and the approximate cost lands near the exact one (same
+    // cost_vs_medoids observable in the exact kernel space)
+    assert!(
+        approx.best_cost <= exact.best_cost * 1.05,
+        "rff cost {} vs native {}",
+        approx.best_cost,
+        exact.best_cost
+    );
+}
+
+#[test]
+fn approx_fits_are_deterministic() {
+    for spec in [EngineSpec::Nystrom { rank: 32 }, EngineSpec::Rff { d: 128 }] {
+        let a = toy().engine(spec).build().unwrap().fit().unwrap();
+        let b = toy().engine(spec).build().unwrap().fit().unwrap();
+        assert_eq!(a.result.labels, b.result.labels, "{spec}: labels drifted");
+        assert_eq!(a.result.medoids, b.result.medoids, "{spec}: medoids drifted");
+        assert_eq!(a.best_cost, b.best_cost, "{spec}: cost drifted");
+    }
+}
+
+#[test]
+fn nystrom_embed_respects_the_memory_budget() {
+    let budget = 64 << 10;
+    let report = toy()
+        .engine(EngineSpec::Nystrom { rank: 48 })
+        .memory_budget(budget)
+        .build()
+        .unwrap()
+        .fit()
+        .unwrap();
+    assert_eq!(report.pipeline.budget_bytes, Some(budget), "stats echo the budget");
+    assert!(
+        report.pipeline.peak_resident_bytes <= budget,
+        "peak {} over budget {budget}",
+        report.pipeline.peak_resident_bytes
+    );
+    assert!(report.pipeline.tiles >= 1, "embed must stream tiles");
+    assert!(report.train_accuracy > 0.8, "accuracy {}", report.train_accuracy);
+}
+
+#[test]
+fn transport_tcp_is_rejected_on_approx_engines() {
+    let err = toy()
+        .engine(EngineSpec::Rff { d: 64 })
+        .transport_mode(TransportMode::Tcp)
+        .build()
+        .unwrap_err();
+    match err {
+        Error::Config(msg) => {
+            assert!(
+                msg.contains("transport") && msg.contains("backend"),
+                "error must name both fields: {msg}"
+            )
+        }
+        other => panic!("wrong error kind: {other:?}"),
+    }
+}
